@@ -1,0 +1,59 @@
+//! Quickstart: load the AOT-compiled Performer, fill masked residues in a
+//! protein sequence through the serving coordinator.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use performer::configx::ServeConfig;
+use performer::coordinator::Coordinator;
+use performer::protein::vocab::{self, BOS, EOS, MASK};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::EngineActor;
+
+fn main() -> Result<()> {
+    // 1. the engine actor owns the PJRT CPU client + compile cache
+    let actor = EngineActor::spawn("artifacts")?;
+
+    // 2. a coordinator pool serving the tiny Performer-ReLU MLM
+    let cfg = ServeConfig { artifact: "tiny_relu_bid".into(), ..Default::default() };
+    let mut coord = Coordinator::new(actor.handle());
+    coord.start_pool(&cfg, None)?;
+
+    // 3. mask a few residues of a synthetic protein and ask the model
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let mut rng = Pcg64::new(7);
+    let (family, seq) = corpus.sample_iid(&mut rng);
+    let mut tokens = vec![BOS];
+    tokens.extend(seq.iter().take(40));
+    tokens.push(EOS);
+    let original = tokens.clone();
+    for i in [5usize, 12, 23, 31] {
+        tokens[i] = MASK;
+    }
+
+    println!("family   : {family}");
+    println!("original : {}", vocab::decode(&original));
+    println!("masked   : {}", vocab::decode(&tokens));
+
+    let resp = coord.fill_mask(&cfg.artifact, tokens)?;
+    println!("filled   : {}", vocab::decode(&resp.filled));
+    for (pos, tok, p) in &resp.predictions {
+        let truth = vocab::token_letter(original[*pos]);
+        let guess = vocab::token_letter(*tok);
+        println!(
+            "  pos {pos:>2}: predicted {guess} (p={p:.3}), original {truth} {}",
+            if guess == truth { "✓" } else { " " }
+        );
+    }
+    println!("latency  : {:?}", resp.latency);
+
+    let metrics = coord.metrics(&cfg.artifact).unwrap();
+    println!("metrics  : {}", metrics.summary());
+    coord.shutdown();
+    drop(actor);
+    let _ = Arc::strong_count(&metrics);
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Serving load test: start the coordinator, fire concurrent fill-mask
+//! requests from client threads, and report latency/throughput — the
+//! serving-side counterpart of the paper's efficiency claims.
+//!
+//!   make artifacts && cargo run --release --example serve_proteins
+//!
+//! Environment: SERVE_REQUESTS (default 128), SERVE_CLIENTS (default 4),
+//! SERVE_ARTIFACT (default tiny_relu_bid).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use performer::configx::ServeConfig;
+use performer::coordinator::Coordinator;
+use performer::protein::vocab::{AA_BASE, MASK};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::EngineActor;
+
+fn main() -> Result<()> {
+    let n_requests: usize = std::env::var("SERVE_REQUESTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128);
+    let n_clients: usize = std::env::var("SERVE_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let artifact =
+        std::env::var("SERVE_ARTIFACT").unwrap_or_else(|_| "tiny_relu_bid".to_string());
+
+    let actor = EngineActor::spawn("artifacts")?;
+    let cfg = ServeConfig { artifact: artifact.clone(), max_batch: 8, max_wait_ms: 4, workers: 1, seed: 0 };
+    let mut coord = Coordinator::new(actor.handle());
+    coord.start_pool(&cfg, None)?;
+    let coord = Arc::new(coord);
+
+    let l = actor.handle().meta(&format!("{artifact}_fwd"))?.config.max_len;
+    println!("serving {artifact} (L={l}); {n_clients} clients x {} requests", n_requests / n_clients);
+
+    // warm the executable before timing
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    {
+        let mut rng = Pcg64::new(99);
+        let toks = corpus.window(&corpus.sample_iid(&mut rng).1, l);
+        coord.fill_mask(&artifact, toks)?;
+    }
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let coord = coord.clone();
+        let corpus = corpus.clone();
+        let artifact = artifact.clone();
+        let per_client = n_requests / n_clients;
+        clients.push(std::thread::spawn(move || -> Result<(usize, f64)> {
+            let mut rng = Pcg64::new(1000 + c as u64);
+            let mut filled = 0usize;
+            let mut latency_sum = 0.0f64;
+            for _ in 0..per_client {
+                let (_, seq) = corpus.sample_iid(&mut rng);
+                let mut toks = corpus.window(&seq, l);
+                for t in toks.iter_mut() {
+                    if *t >= AA_BASE && rng.uniform() < 0.15 {
+                        *t = MASK;
+                    }
+                }
+                let resp = coord.fill_mask(&artifact, toks)?;
+                filled += resp.predictions.len();
+                latency_sum += resp.latency.as_secs_f64();
+            }
+            Ok((filled, latency_sum / per_client as f64))
+        }));
+    }
+    let mut total_filled = 0;
+    for c in clients {
+        let (filled, mean_lat) = c.join().expect("client panicked")?;
+        total_filled += filled;
+        println!("client mean latency: {:.1}ms", mean_lat * 1e3);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = coord.metrics(&artifact).unwrap();
+    println!("\n== load test ==");
+    println!("requests        : {n_requests} in {wall:.2}s -> {:.1} req/s", n_requests as f64 / wall);
+    println!("masks filled    : {total_filled}");
+    println!("tokens/s        : {:.0}", (n_requests * l) as f64 / wall);
+    println!("pool metrics    : {}", m.summary());
+    println!(
+        "batching amortization: mean batch {:.2} (1.0 = no batching win)",
+        m.mean_batch_size()
+    );
+
+    Arc::try_unwrap(coord).ok().map(|mut c| c.shutdown());
+    Ok(())
+}

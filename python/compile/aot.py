@@ -1,0 +1,467 @@
+"""AOT compiler: lower every (model, task) the rust runtime needs to HLO
+*text* + a .meta.json I/O contract, under artifacts/.
+
+HLO text (NOT HloModuleProto.serialize()) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Artifact kinds:
+  fwd        (params.., features.., tokens)                   -> (logits,)
+  train_step (params.., m.., v.., step, features.., tokens,
+              targets, weights) -> (params'.., m'.., v'.., step', loss, acc)
+  eval_step  (params.., features.., tokens, targets, weights) -> (loss, acc)
+  attn_op    (q, k, v[, w, b])                                -> (out,)
+             and _bwd variants returning input gradients, for the Fig. 1/
+             14/15 timing benches.
+
+Run `python -m compile.aot` from python/ (the Makefile does). Emits
+artifacts/index.json describing everything written.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels import favor as favor_k
+from compile.kernels import orf
+
+
+# ---------------------------------------------------------------------------
+# Lowering helpers
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides
+    # big constants (positional encodings, tril masks) as "{...}", which
+    # xla_extension 0.5.1's text parser silently reads back as ZEROS.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _paths(tree):
+    """Stable flattened (path-string, leaf) pairs for a params pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out.append((name, leaf))
+    return out
+
+
+def _dtype_name(x):
+    return {"float32": "f32", "int32": "i32"}[str(x.dtype)]
+
+
+def _spec(x):
+    return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+
+def _input_entry(name, role, leaf):
+    return {"name": name, "role": role, "shape": list(leaf.shape),
+            "dtype": _dtype_name(leaf)}
+
+
+# ---------------------------------------------------------------------------
+# Named model configurations (scaled-down per DESIGN.md §Substitutions)
+# ---------------------------------------------------------------------------
+
+def cfg(**kw):
+    return M.ModelConfig(**kw)
+
+
+# batch size baked into each artifact (PJRT executables are shape-static)
+CONFIGS = {
+    # testing / quickstart
+    "tiny": (cfg(d_model=64, n_heads=2, n_layers=2, d_ff=128, max_len=64,
+                 n_features=32), 4),
+    # the repo's workhorse protein-MLM model
+    "base": (cfg(d_model=128, n_heads=4, n_layers=3, d_ff=512, max_len=128,
+                 n_features=64), 8),
+    # long-context concatenated-protein model (paper L=8192, scaled)
+    "long": (cfg(d_model=128, n_heads=4, n_layers=2, d_ff=512, max_len=1024,
+                 n_features=64), 1),
+}
+
+
+def variant(base_cfg: M.ModelConfig, attention: str, unidirectional: bool,
+            use_pallas=None) -> M.ModelConfig:
+    if use_pallas is None:
+        # Pallas on the FAVOR/exact hot paths; jnp for the rest
+        use_pallas = attention.startswith("favor") or attention == "exact"
+    return dataclasses.replace(base_cfg, attention=attention,
+                               unidirectional=unidirectional,
+                               use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Artifact emission
+# ---------------------------------------------------------------------------
+
+class Emitter:
+    def __init__(self, out_dir, force=False, only=None):
+        self.out_dir = out_dir
+        self.force = force
+        self.only = only
+        self.index = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _skip(self, name):
+        if self.only and self.only not in name:
+            return True
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        return (not self.force) and os.path.exists(path)
+
+    def _write(self, name, hlo, meta):
+        with open(os.path.join(self.out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(hlo)
+        with open(os.path.join(self.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f, indent=1)
+        print(f"  wrote {name}: {len(hlo)/1e6:.2f} MB hlo, "
+              f"{len(meta['inputs'])} inputs")
+
+    def _record(self, name, meta):
+        self.index.append({"name": name, "kind": meta["kind"],
+                           "config": meta.get("config")})
+
+    def model_artifacts(self, tag, mcfg: M.ModelConfig, batch, kinds):
+        # Pallas (interpret-mode) lowers to grid loops that xla_extension
+        # 0.5.1's CPU backend executes ~500x slower than the fused-jnp
+        # formulation of the same math (see EXPERIMENTS.md §Perf). The
+        # serving fwd keeps the Pallas kernels (the L1 composition proof);
+        # train/eval use the identical-math jnp path for throughput.
+        mcfg_train = dataclasses.replace(mcfg, use_pallas=False)
+        params = M.init_params(mcfg, seed=0)
+        feats = M.init_features(mcfg, seed=0)
+        p_flat = _paths(params)
+        f_flat = _paths(feats)
+        l = mcfg.max_len
+        tok_spec = jax.ShapeDtypeStruct((batch, l), jnp.int32)
+        f32_bl = jax.ShapeDtypeStruct((batch, l), jnp.float32)
+
+        cfg_meta = {**dataclasses.asdict(mcfg), "batch": batch,
+                    "param_count": M.count_params(params)}
+
+        def p_specs():
+            return [ _spec(x) for _, x in p_flat ]
+
+        def f_specs():
+            return [ _spec(x) for _, x in f_flat ]
+
+        treedef_p = jax.tree_util.tree_structure(params)
+        treedef_f = jax.tree_util.tree_structure(feats)
+
+        def unflat_p(xs):
+            return jax.tree_util.tree_unflatten(treedef_p, list(xs))
+
+        def unflat_f(xs):
+            return jax.tree_util.tree_unflatten(treedef_f, list(xs))
+
+        if "fwd" in kinds:
+            name = f"{tag}_fwd"
+            if not self._skip(name):
+                n_p, n_f = len(p_flat), len(f_flat)
+
+                def fwd_fn(*args):
+                    p = unflat_p(args[:n_p])
+                    f = unflat_f(args[n_p:n_p + n_f])
+                    tokens = args[n_p + n_f]
+                    return (M.forward(mcfg, p, f, tokens),)
+
+                lowered = jax.jit(fwd_fn).lower(*p_specs(), *f_specs(), tok_spec)
+                meta = {
+                    "kind": "fwd", "config": cfg_meta,
+                    "inputs": [_input_entry(n, "param", x) for n, x in p_flat]
+                    + [_input_entry(n, "feature", x) for n, x in f_flat]
+                    + [{"name": "tokens", "role": "tokens",
+                        "shape": [batch, l], "dtype": "i32"}],
+                    "outputs": [{"name": "logits",
+                                 "shape": [batch, l, mcfg.vocab_size],
+                                 "dtype": "f32"}],
+                }
+                self._write(name, to_hlo_text(lowered), meta)
+            self._record(name, {"kind": "fwd", "config": cfg_meta})
+
+        if "train" in kinds:
+            name = f"{tag}_train"
+            if not self._skip(name):
+                n_p, n_f = len(p_flat), len(f_flat)
+                step_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+                def train_fn(*args):
+                    i = 0
+                    p = unflat_p(args[i:i + n_p]); i += n_p
+                    m = unflat_p(args[i:i + n_p]); i += n_p
+                    v = unflat_p(args[i:i + n_p]); i += n_p
+                    step = args[i]; i += 1
+                    f = unflat_f(args[i:i + n_f]); i += n_f
+                    tokens, targets, weights = args[i], args[i + 1], args[i + 2]
+                    opt = {"m": m, "v": v, "step": step}
+                    p2, opt2, loss, acc = M.train_step(
+                        mcfg_train, p, opt, f, tokens, targets, weights)
+                    return (*jax.tree_util.tree_leaves(p2),
+                            *jax.tree_util.tree_leaves(opt2["m"]),
+                            *jax.tree_util.tree_leaves(opt2["v"]),
+                            opt2["step"], loss, acc)
+
+                lowered = jax.jit(train_fn).lower(
+                    *p_specs(), *p_specs(), *p_specs(), step_spec,
+                    *f_specs(), tok_spec,
+                    jax.ShapeDtypeStruct((batch, l), jnp.int32), f32_bl)
+                meta = {
+                    "kind": "train_step", "config": cfg_meta,
+                    "inputs":
+                        [_input_entry(n, "param", x) for n, x in p_flat]
+                        + [_input_entry(n, "opt_m", x) for n, x in p_flat]
+                        + [_input_entry(n, "opt_v", x) for n, x in p_flat]
+                        + [{"name": "step", "role": "opt_step", "shape": [],
+                            "dtype": "f32"}]
+                        + [_input_entry(n, "feature", x) for n, x in f_flat]
+                        + [{"name": "tokens", "role": "tokens",
+                            "shape": [batch, l], "dtype": "i32"},
+                           {"name": "targets", "role": "targets",
+                            "shape": [batch, l], "dtype": "i32"},
+                           {"name": "weights", "role": "weights",
+                            "shape": [batch, l], "dtype": "f32"}],
+                    "outputs":
+                        [{"name": n, "role": "param", "shape": list(x.shape),
+                          "dtype": "f32"} for n, x in p_flat]
+                        + [{"name": n, "role": "opt_m", "shape": list(x.shape),
+                            "dtype": "f32"} for n, x in p_flat]
+                        + [{"name": n, "role": "opt_v", "shape": list(x.shape),
+                            "dtype": "f32"} for n, x in p_flat]
+                        + [{"name": "step", "role": "opt_step", "shape": [],
+                            "dtype": "f32"},
+                           {"name": "loss", "role": "loss", "shape": [],
+                            "dtype": "f32"},
+                           {"name": "acc", "role": "acc", "shape": [],
+                            "dtype": "f32"}],
+                }
+                self._write(name, to_hlo_text(lowered), meta)
+            self._record(name, {"kind": "train_step", "config": cfg_meta})
+
+        if "eval" in kinds:
+            name = f"{tag}_eval"
+            if not self._skip(name):
+                n_p, n_f = len(p_flat), len(f_flat)
+
+                def eval_fn(*args):
+                    p = unflat_p(args[:n_p])
+                    f = unflat_f(args[n_p:n_p + n_f])
+                    tokens, targets, weights = args[n_p + n_f:]
+                    loss, acc = M.eval_step(mcfg_train, p, f, tokens, targets, weights)
+                    return (loss, acc)
+
+                lowered = jax.jit(eval_fn).lower(
+                    *p_specs(), *f_specs(), tok_spec,
+                    jax.ShapeDtypeStruct((batch, l), jnp.int32), f32_bl)
+                meta = {
+                    "kind": "eval_step", "config": cfg_meta,
+                    "inputs": [_input_entry(n, "param", x) for n, x in p_flat]
+                    + [_input_entry(n, "feature", x) for n, x in f_flat]
+                    + [{"name": "tokens", "role": "tokens",
+                        "shape": [batch, l], "dtype": "i32"},
+                       {"name": "targets", "role": "targets",
+                        "shape": [batch, l], "dtype": "i32"},
+                       {"name": "weights", "role": "weights",
+                        "shape": [batch, l], "dtype": "f32"}],
+                    "outputs": [
+                        {"name": "loss", "shape": [], "dtype": "f32"},
+                        {"name": "acc", "shape": [], "dtype": "f32"}],
+                }
+                self._write(name, to_hlo_text(lowered), meta)
+            self._record(name, {"kind": "eval_step", "config": cfg_meta})
+
+        # initial values for rust to bootstrap training (params + features):
+        # simple framed format (see rust/src/runtime/tensorfile.rs) —
+        # magic, u32 json header length, json manifest, raw LE f32 payload.
+        init_name = f"{tag}_init"
+        init_path = os.path.join(self.out_dir, f"{init_name}.bin")
+        if self.force or not os.path.exists(init_path):
+            arrs = [(f"param:{n}", np.asarray(x)) for n, x in p_flat]
+            arrs += [(f"feature:{n}", np.asarray(x)) for n, x in f_flat]
+            header, offset = [], 0
+            for n, x in arrs:
+                header.append({"name": n, "shape": list(x.shape),
+                               "dtype": "f32", "offset": offset})
+                offset += x.size * 4
+            hjson = json.dumps(header).encode()
+            with open(init_path, "wb") as f:
+                f.write(b"PFRMTENS")
+                f.write(np.uint32(len(hjson)).tobytes())
+                f.write(hjson)
+                for _, x in arrs:
+                    f.write(np.ascontiguousarray(x, np.float32).tobytes())
+        self._record(init_name, {"kind": "init", "config": cfg_meta})
+
+    def attention_op(self, name, l, dh, m_feats, mech, causal, bwd, bh=4):
+        """Attention-op-only artifacts for the timing figures."""
+        if self._skip(name):
+            self._record(name, {"kind": "attn_op", "config": {"l": l}})
+            return
+        q = jax.ShapeDtypeStruct((bh, l, dh), jnp.float32)
+        inputs = [{"name": t, "role": "input", "shape": [bh, l, dh],
+                   "dtype": "f32"} for t in ("q", "k", "v")]
+
+        if mech == "exact":
+            from compile.kernels import ref as ref_k
+
+            def op(q, k, v):
+                f = (ref_k.exact_attention_unidirectional if causal
+                     else ref_k.exact_attention_bidirectional)
+                return jax.vmap(f)(q, k, v)
+            args = (q, q, q)
+        elif mech == "favor_pallas":
+            # interpret-mode Pallas variant, kept to quantify the
+            # old-XLA interpret overhead (EXPERIMENTS.md §Perf)
+            w_np, b_np = orf.generalized_projection(m_feats, dh, seed=0)
+            w = jax.ShapeDtypeStruct(w_np.shape, jnp.float32)
+            b = jax.ShapeDtypeStruct(b_np.shape, jnp.float32)
+            inputs += [
+                {"name": "w", "role": "feature", "shape": list(w_np.shape),
+                 "dtype": "f32"},
+                {"name": "b", "role": "feature", "shape": list(b_np.shape),
+                 "dtype": "f32"}]
+
+            def op(q, k, v, w, b):
+                f = favor_k.make_favor_attention(
+                    f_name="relu", causal=causal, softmax_renorm=False,
+                    kernel_eps=1e-3)
+                return jax.vmap(lambda q_, k_, v_: f(q_, k_, v_, w, b))(q, k, v)
+            args = (q, q, q, w, b)
+        elif mech == "favor":
+            w_np, b_np = orf.generalized_projection(m_feats, dh, seed=0)
+            w = jax.ShapeDtypeStruct(w_np.shape, jnp.float32)
+            b = jax.ShapeDtypeStruct(b_np.shape, jnp.float32)
+            inputs += [
+                {"name": "w", "role": "feature", "shape": list(w_np.shape),
+                 "dtype": "f32"},
+                {"name": "b", "role": "feature", "shape": list(b_np.shape),
+                 "dtype": "f32"}]
+
+            from compile.kernels import ref as ref_k
+
+            def op(q, k, v, w, b):
+                def head(q_, k_, v_):
+                    qp = ref_k.generalized_feature_map(q_, w, "relu", kernel_eps=1e-3, b=b)
+                    kp = ref_k.generalized_feature_map(k_, w, "relu", kernel_eps=1e-3, b=b)
+                    if causal:
+                        return ref_k.favor_unidirectional_scan(qp, kp, v_)
+                    return ref_k.favor_bidirectional_linear(qp, kp, v_)
+                return jax.vmap(head)(q, k, v)
+            args = (q, q, q, w, b)
+        else:  # identity — "X (OPT)" in Fig. 1
+            def op(q, k, v):
+                # keep q, k alive in the graph (jit would prune unused
+                # args and break the I/O contract)
+                return v + 0.0 * q + 0.0 * k
+            args = (q, q, q)
+
+        if bwd:
+            def full(*a):
+                def scalar(*inner):
+                    out = op(*inner)
+                    return jnp.sum(out * out)
+                g = jax.grad(scalar, argnums=(0, 1, 2))(*a)
+                return g
+            outputs = [{"name": f"d{t}", "shape": [bh, l, dh], "dtype": "f32"}
+                       for t in ("q", "k", "v")]
+        else:
+            def full(*a):
+                return (op(*a),)
+            outputs = [{"name": "out", "shape": [bh, l, dh], "dtype": "f32"}]
+
+        lowered = jax.jit(full).lower(*args)
+        meta = {"kind": "attn_op",
+                "config": {"l": l, "d_head": dh, "m": m_feats, "mech": mech,
+                           "causal": causal, "bwd": bwd, "bh": bh},
+                "inputs": inputs, "outputs": outputs}
+        self._write(name, to_hlo_text(lowered), meta)
+        self._record(name, meta)
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "index.json"), "w") as f:
+            json.dump(self.index, f, indent=1)
+        print(f"index: {len(self.index)} artifacts")
+
+
+# ---------------------------------------------------------------------------
+# The manifest: everything the rust side loads
+# ---------------------------------------------------------------------------
+
+def emit_all(em: Emitter):
+    # quickstart + unit-test model
+    tiny, tb = CONFIGS["tiny"]
+    em.model_artifacts("tiny_relu_bid", variant(tiny, "favor-relu", False),
+                       tb, ("fwd", "train", "eval"))
+
+    # Fig. 4 (+Table 2): UNI and BID sweeps on the base model
+    base, bb = CONFIGS["base"]
+    for uni, utag in ((False, "bid"), (True, "uni")):
+        for attn in ("exact", "favor-relu", "favor-softmax", "lsh"):
+            atag = attn.replace("favor-", "perf_")
+            em.model_artifacts(f"base_{atag}_{utag}", variant(base, attn, uni),
+                               bb, ("fwd", "train", "eval"))
+
+    # Fig. 5: long-context concatenated proteins — Performer (full size)
+    # vs smaller exact Transformers (layer sweep), scaled from L=8192
+    long_cfg, lb = CONFIGS["long"]
+    em.model_artifacts("long_perf_relu_uni", variant(long_cfg, "favor-relu", True),
+                       lb, ("train", "eval"))
+    for n_layers in (1, 2):
+        small = dataclasses.replace(long_cfg, n_layers=n_layers, d_model=64,
+                                    n_heads=4, d_ff=256)
+        em.model_artifacts(f"long_exact_l{n_layers}_uni",
+                           variant(small, "exact", True), lb, ("train", "eval"))
+
+    # Fig. 12/13: generalized-attention kernel sweep (BID, short model)
+    sweep = dataclasses.replace(tiny, max_len=64)
+    for f_name in ("sigmoid", "exp", "relu", "abs", "gelu", "cos", "tanh",
+                   "identity"):
+        em.model_artifacts(f"ga_{f_name}_bid",
+                           variant(sweep, f"favor-{f_name}", False), tb,
+                           ("train", "eval"))
+
+    # Pallas-interpret overhead quantification (EXPERIMENTS.md §Perf)
+    for l in (256, 1024):
+        em.attention_op(f"attn_favor_pallas_fwd_L{l}", l, 64, 128,
+                        "favor_pallas", causal=False, bwd=False, bh=4)
+
+    # Fig. 1 / 14 / 15: attention-op timing artifacts
+    for l in (128, 256, 512, 1024, 2048, 4096):
+        for mech in ("exact", "favor", "identity"):
+            if mech == "exact" and l > 2048:
+                continue  # the point of the figure: exact stops scaling
+            for bwd in (False, True):
+                btag = "bwd" if bwd else "fwd"
+                em.attention_op(f"attn_{mech}_{btag}_L{l}", l, 64, 128,
+                                mech, causal=False, bwd=bwd, bh=4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    args = ap.parse_args()
+    em = Emitter(args.out, force=args.force, only=args.only)
+    emit_all(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

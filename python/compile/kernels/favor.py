@@ -1,0 +1,341 @@
+"""L1: Pallas kernels for FAVOR (Fast Attention Via Orthogonal Random
+features), the paper's compute hot-spot.
+
+Three kernels:
+  * feature_map_pallas      — phi(x) = scale * f(xW^T + b) (+renormalizer),
+                              blocked over rows (Eq. 9-11).
+  * favor_bidirectional_pallas — D^-1 (Q'((K')^T C)), Eq. (13), two-phase:
+                              phase 1 accumulates KV = (K')^T C over L
+                              blocks, phase 2 emits output row blocks.
+  * favor_unidirectional_pallas — Alg. 1 prefix-sum branch: a sequential
+                              grid over L blocks carrying the running
+                              G^PS = sum_j K'_j C_j^T in an accumulator
+                              output, with an in-block tril correction.
+
+All kernels are 2D (L x ...) — batch and head dims are vmapped by the
+caller (pallas_call has a batching rule). interpret=True everywhere: the
+CPU PJRT plugin cannot execute Mosaic custom-calls, so kernels lower to
+plain HLO (see DESIGN.md §Hardware-Adaptation for the TPU mapping:
+accumulators are the VMEM-resident M x (d+1) running state, row blocks are
+the HBM->VMEM schedule expressed by the BlockSpecs).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT: Mosaic custom-calls unavailable (see module doc)
+
+_F = {
+    "relu": lambda t: jnp.maximum(t, 0.0),
+    "sigmoid": lambda t: 1.0 / (1.0 + jnp.exp(-t)),
+    "exp": jnp.exp,
+    "abs": jnp.abs,
+    "gelu": lambda t: 0.5 * t * (1.0 + jnp.tanh(0.7978845608 * (t + 0.044715 * t**3))),
+    "cos": jnp.cos,
+    "tanh": jnp.tanh,
+    "identity": lambda t: t,
+}
+
+
+def _block(l, want):
+    """Largest divisor of l that is <= want (grid blocks must tile L)."""
+    b = min(want, l)
+    while l % b != 0:
+        b -= 1
+    return b
+
+
+# ---------------------------------------------------------------------------
+# Feature map kernel
+# ---------------------------------------------------------------------------
+
+def _feature_kernel(x_ref, w_ref, b_ref, o_ref, *, f_name, softmax_renorm, r, scale, eps):
+    x = x_ref[...]
+    z = x @ w_ref[...].T + b_ref[...][None, :]
+    feats = scale * _F[f_name](z) + eps
+    if softmax_renorm:
+        # D_Q / D_K diagonal renormalizer of Eq. (5)-(6): exp(||x||^2 / r)
+        diag = jnp.exp(jnp.sum(x * x, axis=-1, keepdims=True) / r)
+        feats = diag * feats
+    o_ref[...] = feats
+
+
+def feature_map_pallas(x, w, b, *, f_name="cos", softmax_renorm=True,
+                       kernel_eps=0.0, block_l=128):
+    """phi'(x) rows for all L tokens. x: (L, d), w: (M, d), b: (M,)."""
+    l, d = x.shape
+    m = w.shape[0]
+    blk = _block(l, block_l)
+    if softmax_renorm:
+        scale = float((2.0 / m) ** 0.5)
+    else:
+        scale = float(1.0 / m ** 0.5)
+    r = 2.0 * float(d) ** 0.5
+    kern = functools.partial(_feature_kernel, f_name=f_name,
+                             softmax_renorm=softmax_renorm, r=r,
+                             scale=scale, eps=kernel_eps)
+    return pl.pallas_call(
+        kern,
+        grid=(l // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, m), x.dtype),
+        interpret=INTERPRET,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Bidirectional FAVOR: Eq. (13)
+# ---------------------------------------------------------------------------
+
+def _kv_accum_kernel(kp_ref, c_ref, kv_ref):
+    """Phase 1: KV = (K')^T C accumulated over row blocks (constant out idx)."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        kv_ref[...] = jnp.zeros_like(kv_ref)
+
+    kv_ref[...] += kp_ref[...].T @ c_ref[...]
+
+
+def _bidir_out_kernel(qp_ref, kv_ref, o_ref, *, stabilizer):
+    """Phase 2: out block = (Q'_blk KV)[:, :d] / (Q'_blk KV)[:, d]."""
+    buf = qp_ref[...] @ kv_ref[...]                 # (blk, d+1)
+    denom = buf[:, -1:] + stabilizer
+    o_ref[...] = buf[:, :-1] / denom
+
+
+def favor_bidirectional_pallas(qp, kp, v, *, stabilizer=1e-6, block_l=128):
+    """Eq. (13): never materializes the L x L matrix. qp,kp: (L,M), v: (L,d)."""
+    l, m = qp.shape
+    d = v.shape[-1]
+    blk = _block(l, block_l)
+    c = jnp.concatenate([v, jnp.ones((l, 1), v.dtype)], axis=-1)  # C = [V 1]
+
+    kv = pl.pallas_call(
+        _kv_accum_kernel,
+        grid=(l // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, m), lambda i: (i, 0)),
+            pl.BlockSpec((blk, d + 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, d + 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d + 1), qp.dtype),
+        interpret=INTERPRET,
+    )(kp, c)
+
+    return pl.pallas_call(
+        functools.partial(_bidir_out_kernel, stabilizer=stabilizer),
+        grid=(l // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, d + 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, d), v.dtype),
+        interpret=INTERPRET,
+    )(qp, kv)
+
+
+# ---------------------------------------------------------------------------
+# Unidirectional FAVOR: Alg. 1 prefix-sum branch
+# ---------------------------------------------------------------------------
+
+def _unidir_kernel(qp_ref, kp_ref, c_ref, o_ref, carry_ref, *, stabilizer):
+    """Sequential grid over row blocks. carry_ref holds G^PS (M x (d+1)) of
+    all *previous* blocks; the current block's causal interior is handled
+    by an in-block tril correction:
+
+      out_blk = Q'_blk @ carry + tril(Q'_blk K'_blk^T) @ C_blk
+      carry  += K'_blk^T @ C_blk
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    qp = qp_ref[...]
+    kp = kp_ref[...]
+    c = c_ref[...]
+    blk = qp.shape[0]
+
+    inter = qp @ carry_ref[...]                                   # (blk, d+1)
+    scores = qp @ kp.T                                            # (blk, blk)
+    row = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (blk, blk), 1)
+    intra = jnp.where(row >= col, scores, 0.0) @ c                # tril part
+    buf = inter + intra
+    denom = buf[:, -1:] + stabilizer
+    o_ref[...] = buf[:, :-1] / denom
+    carry_ref[...] += kp.T @ c
+
+
+def favor_unidirectional_pallas(qp, kp, v, *, stabilizer=1e-6, block_l=128):
+    """Causal FAVOR without the L x M x (d+1) G^PS tensor: the running
+    prefix-sum lives in an M x (d+1) accumulator (the paper's Sec. 2.6
+    'simple aggregation' variant, blocked for parallel in-block work).
+    """
+    l, m = qp.shape
+    d = v.shape[-1]
+    blk = _block(l, block_l)
+    c = jnp.concatenate([v, jnp.ones((l, 1), v.dtype)], axis=-1)
+
+    out, _carry = pl.pallas_call(
+        functools.partial(_unidir_kernel, stabilizer=stabilizer),
+        grid=(l // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, m), lambda i: (i, 0)),
+            pl.BlockSpec((blk, m), lambda i: (i, 0)),
+            pl.BlockSpec((blk, d + 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((m, d + 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, d), v.dtype),
+            jax.ShapeDtypeStruct((m, d + 1), qp.dtype),
+        ],
+        interpret=INTERPRET,
+    )(qp, kp, c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Exact-attention Pallas baseline (flash-style row blocks)
+# ---------------------------------------------------------------------------
+
+def _exact_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, scale, block_l):
+    i = pl.program_id(0)
+    q = q_ref[...]
+    scores = q @ k_ref[...].T * scale                  # (blk, L)
+    if causal:
+        blk = q.shape[0]
+        l = scores.shape[1]
+        row = jax.lax.broadcasted_iota(jnp.int32, (blk, l), 0) + i * block_l
+        col = jax.lax.broadcasted_iota(jnp.int32, (blk, l), 1)
+        scores = jnp.where(row >= col, scores, -jnp.inf)
+    scores = scores - jnp.max(scores, axis=-1, keepdims=True)
+    a = jnp.exp(scores)
+    o_ref[...] = a @ v_ref[...] / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def exact_attention_pallas(q, k, v, *, causal=False, block_l=128):
+    """O(L^2) baseline with numerically-stable softmax, row-blocked."""
+    l, d = q.shape
+    blk = _block(l, block_l)
+    scale = 1.0 / float(d) ** 0.5
+    return pl.pallas_call(
+        functools.partial(_exact_kernel, causal=causal, scale=scale, block_l=blk),
+        grid=(l // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+            pl.BlockSpec((l, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((l, d), q.dtype),
+        interpret=INTERPRET,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers: Pallas forward + analytic linear-attention VJP
+# ---------------------------------------------------------------------------
+# pallas_call does not carry an autodiff rule. The backward pass is taken
+# through the mathematically identical fused-jnp formulation (ref.py):
+# same O(LMd) complexity, rematerialized (no residuals stored) — the
+# standard pairing for hand-written attention kernels.
+
+def _favor_ref(q, k, v, w, b, *, f_name, causal, softmax_renorm, kernel_eps,
+               stabilizer):
+    from compile.kernels import ref as ref_k
+    if softmax_renorm:
+        qp = ref_k.softmax_feature_map(q, w, b)
+        kp = ref_k.softmax_feature_map(k, w, b)
+    else:
+        qp = ref_k.generalized_feature_map(q, w, f_name, kernel_eps=kernel_eps, b=b)
+        kp = ref_k.generalized_feature_map(k, w, f_name, kernel_eps=kernel_eps, b=b)
+    if causal:
+        return ref_k.favor_unidirectional_scan(qp, kp, v, stabilizer=stabilizer)
+    return ref_k.favor_bidirectional_linear(qp, kp, v, stabilizer=stabilizer)
+
+
+def _exact_ref(q, k, v, *, causal):
+    from compile.kernels import ref as ref_k
+    if causal:
+        return ref_k.exact_attention_unidirectional(q, k, v)
+    return ref_k.exact_attention_bidirectional(q, k, v)
+
+
+@functools.lru_cache(maxsize=None)
+def make_favor_attention(f_name="cos", causal=False, softmax_renorm=True,
+                         kernel_eps=0.0, stabilizer=1e-6, block_l=128):
+    """Returns favor_attn(q, k, v, w, b): Pallas fwd, jnp-linear bwd."""
+    kw = dict(f_name=f_name, causal=causal, softmax_renorm=softmax_renorm,
+              kernel_eps=kernel_eps, stabilizer=stabilizer)
+
+    @jax.custom_vjp
+    def attn(q, k, v, w, b):
+        return favor_attention_pallas(q, k, v, w, b, block_l=block_l, **kw)
+
+    def fwd(q, k, v, w, b):
+        return attn(q, k, v, w, b), (q, k, v, w, b)
+
+    def bwd(res, g):
+        q, k, v, w, b = res
+        _, vjp = jax.vjp(lambda q_, k_, v_: _favor_ref(q_, k_, v_, w, b, **kw),
+                         q, k, v)
+        dq, dk, dv = vjp(g)
+        return dq, dk, dv, None, None  # W, b are non-trainable features
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+@functools.lru_cache(maxsize=None)
+def make_exact_attention(causal=False, block_l=128):
+    """Returns exact_attn(q, k, v): Pallas fwd, jnp bwd."""
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return exact_attention_pallas(q, k, v, causal=causal, block_l=block_l)
+
+    def fwd(q, k, v):
+        return attn(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        _, vjp = jax.vjp(lambda q_, k_, v_: _exact_ref(q_, k_, v_, causal=causal),
+                         q, k, v)
+        return vjp(g)
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+# ---------------------------------------------------------------------------
+# Convenience: full FAVOR attention (feature map + linear attention)
+# ---------------------------------------------------------------------------
+
+def favor_attention_pallas(q, k, v, w, b, *, f_name="cos", causal=False,
+                           softmax_renorm=True, kernel_eps=0.0,
+                           stabilizer=1e-6, block_l=128):
+    """phi-map Q and K, then apply linear attention. The composition the
+    Performer model calls per (batch, head)."""
+    qp = feature_map_pallas(q, w, b, f_name=f_name, softmax_renorm=softmax_renorm,
+                            kernel_eps=kernel_eps, block_l=block_l)
+    kp = feature_map_pallas(k, w, b, f_name=f_name, softmax_renorm=softmax_renorm,
+                            kernel_eps=kernel_eps, block_l=block_l)
+    if causal:
+        return favor_unidirectional_pallas(qp, kp, v, stabilizer=stabilizer, block_l=block_l)
+    return favor_bidirectional_pallas(qp, kp, v, stabilizer=stabilizer, block_l=block_l)

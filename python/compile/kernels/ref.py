@@ -1,0 +1,140 @@
+"""Pure-jnp correctness oracles for the FAVOR kernels.
+
+These implement the paper's equations directly, with explicit O(L^2)
+materialization where that is the clearest statement of the math. The
+Pallas kernels in favor.py are tested against these in python/tests/.
+
+Shapes follow the paper: Q, K, V in R^{L x d}; random features map to
+R^{L x M}. Batch/head dims are handled by the callers via vmap.
+"""
+
+import jax.numpy as jnp
+
+
+def exact_attention_bidirectional(q, k, v):
+    """Eq. (1): Att(Q,K,V) = D^-1 A V, A = exp(QK^T / sqrt(d))."""
+    d = q.shape[-1]
+    a = jnp.exp(q @ k.T / jnp.sqrt(jnp.float32(d)))
+    return a @ v / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def exact_attention_unidirectional(q, k, v):
+    """Eq. (2): causal attention via tril(A)."""
+    d = q.shape[-1]
+    a = jnp.exp(q @ k.T / jnp.sqrt(jnp.float32(d)))
+    a = jnp.tril(a)
+    return a @ v / jnp.sum(a, axis=-1, keepdims=True)
+
+
+def softmax_feature_map(x, w, b):
+    """Eq. (10)/(11) combined with the D_Q/D_K diagonal renormalizers of
+    Eq. (5)-(6): phi'(x) = exp(||x||^2 / r) * sqrt(2/M) cos(Wx + b),
+    with r = 2*sqrt(d) and W rows drawn N(0, sigma^2 I_d), sigma^2 =
+    sqrt(d) (the Gaussian kernel bandwidth sigma_B = d^{1/4} of Eq. (7)
+    enters through W's scale).
+
+    Returns the *renormalized* features Q' (or K') such that
+    E[phi'(q) . phi'(k)] = exp(q.k / sqrt(d)) = A_ij.
+    """
+    d = x.shape[-1]
+    m = w.shape[0]
+    r = 2.0 * jnp.sqrt(jnp.float32(d))
+    diag = jnp.exp(jnp.sum(x * x, axis=-1, keepdims=True) / r)
+    feats = jnp.sqrt(2.0 / m) * jnp.cos(x @ w.T + b)
+    return diag * feats
+
+
+def generalized_feature_map(x, w, f_name, kernel_eps=1e-3, b=None):
+    """Generalized attention features (Sec. 2.2): phi(x) = f(Wx + b)/sqrt(M)
+    (+ kernel_eps for numerical stability, per the paper's Appendix B.3
+    defaults: kernel = ReLU, kernel_epsilon = 1e-3). b is zero for GA but
+    kept in the graph so the AOT I/O contract matches the Pallas path.
+    """
+    m = w.shape[0]
+    z = x @ w.T
+    if b is not None:
+        z = z + b
+    f = {
+        "relu": lambda t: jnp.maximum(t, 0.0),
+        "sigmoid": lambda t: 1.0 / (1.0 + jnp.exp(-t)),
+        "exp": jnp.exp,
+        "abs": jnp.abs,
+        "gelu": lambda t: 0.5 * t * (1.0 + jnp.tanh(0.7978845608 * (t + 0.044715 * t**3))),
+        "cos": jnp.cos,
+        "tanh": jnp.tanh,
+        "identity": lambda t: t,
+    }[f_name]
+    return f(z) / jnp.sqrt(jnp.float32(m)) + kernel_eps
+
+
+def favor_bidirectional(qp, kp, v, stabilizer=1e-6):
+    """Eq. (13) with A-hat = Q'(K')^T materialized explicitly (oracle)."""
+    a = qp @ kp.T
+    denom = jnp.sum(a, axis=-1, keepdims=True) + stabilizer
+    return a @ v / denom
+
+
+def favor_unidirectional(qp, kp, v, stabilizer=1e-6):
+    """Eq. (14) oracle: tril(Q'(K')^T) applied to C = [V 1]."""
+    a = jnp.tril(qp @ kp.T)
+    denom = jnp.sum(a, axis=-1, keepdims=True) + stabilizer
+    return a @ v / denom
+
+
+def favor_bidirectional_linear(qp, kp, v, stabilizer=1e-6):
+    """Eq. (13) in linear time: D^-1 (Q'((K')^T V)) without the LxL matrix.
+
+    Identical math to favor_bidirectional (cross-checks the bracketing;
+    this is the computation the Pallas kernel blocks).
+    """
+    kv = kp.T @ v                               # (M, d)
+    ksum = jnp.sum(kp, axis=0)                  # (M,)
+    num = qp @ kv                               # (L, d)
+    denom = qp @ ksum[:, None] + stabilizer     # (L, 1)
+    return num / denom
+
+
+def favor_unidirectional_prefix(qp, kp, v, stabilizer=1e-6):
+    """Alg. 1 unidirectional branch: prefix sums of G_j = K'_j C_j^T.
+
+    Direct cumsum transcription of Eq. (14) — O(L·M·d) memory; kept as
+    the oracle. Production paths use favor_unidirectional_scan below:
+    xla_extension 0.5.1 (the AOT runtime) lowers cumsum to reduce-window,
+    which its CPU backend executes in O(L^2) — catastrophic at L=1024+.
+    """
+    g = kp[:, :, None] * v[:, None, :]          # (L, M, d)
+    gps = jnp.cumsum(g, axis=0)                 # (L, M, d)
+    num = jnp.einsum("lm,lmd->ld", qp, gps)
+    ksum = jnp.cumsum(kp, axis=0)               # (L, M)
+    denom = jnp.sum(qp * ksum, axis=-1, keepdims=True) + stabilizer
+    return num / denom
+
+
+def favor_unidirectional_scan(qp, kp, v, stabilizer=1e-6, block=128):
+    """Chunked lax.scan form of Eq. (14): the running M x (d+1) prefix
+    state is carried across row blocks (the paper's Sec. 2.6 'simple
+    aggregation'), with an in-block tril correction. Mathematically
+    identical to favor_unidirectional_prefix; lowers to a while-loop that
+    every XLA version executes in O(L·M·d)."""
+    import jax
+
+    l, m = qp.shape
+    d = v.shape[-1]
+    while l % block != 0:
+        block //= 2
+    c = jnp.concatenate([v, jnp.ones((l, 1), v.dtype)], axis=-1)  # (L, d+1)
+    qb = qp.reshape(l // block, block, m)
+    kb = kp.reshape(l // block, block, m)
+    cb = c.reshape(l // block, block, d + 1)
+    tril = jnp.tril(jnp.ones((block, block), qp.dtype))
+
+    def step(carry, inputs):
+        qblk, kblk, cblk = inputs
+        inter = qblk @ carry                            # (blk, d+1)
+        intra = (tril * (qblk @ kblk.T)) @ cblk         # causal interior
+        buf = inter + intra
+        return carry + kblk.T @ cblk, buf
+
+    _, bufs = jax.lax.scan(step, jnp.zeros((m, d + 1), qp.dtype), (qb, kb, cb))
+    buf = bufs.reshape(l, d + 1)
+    return buf[:, :d] / (buf[:, d:] + stabilizer)

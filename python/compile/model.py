@@ -1,0 +1,309 @@
+"""L2: the Performer / Transformer protein language model in JAX.
+
+A pre-LN Transformer whose attention is pluggable:
+
+  * "exact"          — Eq. (1)/(2) softmax attention (the baseline).
+  * "favor-softmax"  — FAVOR approximating softmax attention (Eq. 10/13).
+  * "favor-relu"     — Generalized Attention, f = ReLU (the paper's best
+                       protein configuration, Appendix B.3).
+  * "favor-<f>"      — other GA kernels (sigmoid/exp/abs/gelu/cos/tanh/
+                       identity) for the Fig. 12/13 kernel sweep.
+  * "lsh"            — simplified Reformer-style LSH attention baseline.
+  * "identity"       — attention returns V ("X (OPT)" line in Fig. 1).
+
+Both directions: bidirectional (masked LM, BERT-style) and unidirectional
+(causal next-token LM). train_step carries in-graph Adam with the paper's
+hyperparameters (Appendix B.1: lr 1e-3, beta1 .9, beta2 .98, eps 1e-9,
+grad clip 0.5, weight decay 0.1).
+
+Everything is pure functions over a params dict so the whole train step
+AOT-lowers to a single HLO module executed from rust.
+"""
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import favor as favor_k
+from compile.kernels import orf
+from compile.kernels import ref as ref_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 30          # 20 std + 5 anomalous AAs + specials
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 512
+    max_len: int = 128
+    attention: str = "favor-relu"
+    unidirectional: bool = False
+    n_features: int = 64          # M, the paper's default is 256 at d=512
+    orf_mechanism: str = "r-orf"  # iid | r-orf | h-orf | g-orf
+    use_pallas: bool = True       # False -> fused-jnp (same math) for speed
+    lsh_chunk: int = 32
+    dropout: float = 0.0          # paper trains with 0.1; eval/AOT path is 0
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """Nested dict of f32 arrays. 'features' holds the FAVOR projection
+    (W, b) — non-trainable, excluded from Adam, resampled from rust when
+    the paper's feature-resampling strategy is on."""
+    rng = np.random.default_rng(seed)
+    d, h, dh, ff = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff
+
+    def dense(n_in, n_out):
+        return {
+            "w": (rng.standard_normal((n_in, n_out)) / np.sqrt(n_in)).astype(np.float32),
+            "b": np.zeros(n_out, dtype=np.float32),
+        }
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "ln1": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+            "qkv": dense(d, 3 * d),
+            "proj": dense(d, d),
+            "ln2": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+            "ff1": dense(d, ff),
+            "ff2": dense(ff, d),
+        })
+    params = {
+        "embed": (rng.standard_normal((cfg.vocab_size, d)) * 0.02).astype(np.float32),
+        "lnf": {"g": np.ones(d, np.float32), "b": np.zeros(d, np.float32)},
+        "layers": layers,
+    }
+    return jax.tree_util.tree_map(jnp.asarray, params)
+
+
+def init_features(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    """FAVOR feature state: W (M, d_head) and b (M,) per the mechanism; for
+    LSH, the random rotation used for bucketing."""
+    if cfg.attention.startswith("favor-"):
+        f_name = cfg.attention.split("-", 1)[1]
+        if f_name == "softmax":
+            w, b = orf.softmax_projection(cfg.n_features, cfg.d_head,
+                                          mechanism=cfg.orf_mechanism, seed=seed)
+        else:
+            w, b = orf.generalized_projection(cfg.n_features, cfg.d_head,
+                                              mechanism=cfg.orf_mechanism, seed=seed)
+        return {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+    if cfg.attention == "lsh":
+        rng = np.random.default_rng(seed + 7)
+        n_buckets = max(2, cfg.max_len // cfg.lsh_chunk)
+        rot = rng.standard_normal((cfg.d_head, n_buckets // 2 + 1)).astype(np.float32)
+        return {"rot": jnp.asarray(rot)}
+    # exact/identity have no feature state — an unused placeholder input
+    # would be pruned by jax at lowering and break the I/O contract
+    return {}
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Attention mechanisms (per batch-and-head 2D inputs via vmap)
+# ---------------------------------------------------------------------------
+
+def _favor_head(q, k, v, w, b, *, f_name, causal, use_pallas):
+    if f_name == "softmax":
+        renorm, eps = True, 1e-6
+        fm = "cos"
+    else:
+        renorm, eps = False, 1e-3
+        fm = f_name
+    if use_pallas:
+        attn = favor_k.make_favor_attention(
+            f_name=fm, causal=causal, softmax_renorm=renorm, kernel_eps=eps)
+        return attn(q, k, v, w, b)
+    if renorm:
+        qp = ref_k.softmax_feature_map(q, w, b)
+        kp = ref_k.softmax_feature_map(k, w, b)
+    else:
+        qp = ref_k.generalized_feature_map(q, w, fm, kernel_eps=eps, b=b)
+        kp = ref_k.generalized_feature_map(k, w, fm, kernel_eps=eps, b=b)
+    if causal:
+        return ref_k.favor_unidirectional_scan(qp, kp, v)
+    return ref_k.favor_bidirectional_linear(qp, kp, v)
+
+
+def _exact_head(q, k, v, *, causal, use_pallas):
+    if use_pallas:
+        return favor_k.make_exact_attention(causal=causal)(q, k, v)
+    if causal:
+        return ref_k.exact_attention_unidirectional(q, k, v)
+    return ref_k.exact_attention_bidirectional(q, k, v)
+
+
+def _lsh_head(q, k, v, rot, *, causal, chunk):
+    """Simplified Reformer [29]: shared-QK LSH bucketing via random
+    rotations, sort by bucket, attend within chunk + previous chunk.
+    This is the paper's sparse-attention comparator (Fig. 4)."""
+    l, dh = q.shape
+    qk = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-6)  # shared QK
+    proj = qk @ rot                                               # (L, nb/2)
+    buckets = jnp.argmax(jnp.concatenate([proj, -proj], -1), -1)  # (L,)
+    order = jnp.argsort(buckets * l + jnp.arange(l))              # stable
+    undo = jnp.argsort(order)
+    qs, vs, pos = qk[order], v[order], order
+
+    n_chunks = l // chunk
+    qs = qs.reshape(n_chunks, chunk, dh)
+    vs = vs.reshape(n_chunks, chunk, dh)
+    pos = pos.reshape(n_chunks, chunk)
+    # keys = own chunk + previous chunk (Reformer's lookback)
+    ks_prev = jnp.roll(qs, 1, axis=0)
+    vs_prev = jnp.roll(vs, 1, axis=0)
+    pos_prev = jnp.roll(pos, 1, axis=0)
+    ks2 = jnp.concatenate([qs, ks_prev], axis=1)                  # (nc, 2c, dh)
+    vs2 = jnp.concatenate([vs, vs_prev], axis=1)
+    pos2 = jnp.concatenate([pos, pos_prev], axis=1)               # (nc, 2c)
+
+    scores = jnp.einsum("cqd,ckd->cqk", qs, ks2) * jnp.sqrt(jnp.float32(dh))
+    # no self-attention on own position (shared-QK convention), causal mask
+    self_mask = pos[:, :, None] == pos2[:, None, :]
+    scores = jnp.where(self_mask, -1e5, scores)
+    if causal:
+        scores = jnp.where(pos[:, :, None] >= pos2[:, None, :], scores, -1e9)
+    a = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("cqk,ckd->cqd", a, vs2).reshape(l, dh)
+    return out[undo]
+
+
+def multi_head_attention(cfg: ModelConfig, layer, feats, x, *, layer_idx):
+    """x: (B, L, d_model) -> (B, L, d_model)."""
+    b, l, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ layer["qkv"]["w"] + layer["qkv"]["b"]
+    qkv = qkv.reshape(b, l, 3, h, dh).transpose(2, 0, 3, 1, 4)  # (3,B,H,L,dh)
+    q, k, v = qkv[0], qkv[1], qkv[2]
+
+    flat = lambda t: t.reshape(b * h, l, dh)
+    q, k, v = flat(q), flat(k), flat(v)
+
+    if cfg.attention == "identity":
+        out = v
+    elif cfg.attention == "exact":
+        out = jax.vmap(functools.partial(_exact_head, causal=cfg.unidirectional,
+                                         use_pallas=cfg.use_pallas))(q, k, v)
+    elif cfg.attention == "lsh":
+        out = jax.vmap(functools.partial(_lsh_head, rot=feats["rot"],
+                                         causal=cfg.unidirectional,
+                                         chunk=cfg.lsh_chunk))(q, k, v)
+    elif cfg.attention.startswith("favor-"):
+        f_name = cfg.attention.split("-", 1)[1]
+        out = jax.vmap(functools.partial(
+            _favor_head, w=feats["w"], b=feats["b"], f_name=f_name,
+            causal=cfg.unidirectional, use_pallas=cfg.use_pallas))(q, k, v)
+    else:
+        raise ValueError(cfg.attention)
+
+    out = out.reshape(b, h, l, dh).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return out @ layer["proj"]["w"] + layer["proj"]["b"]
+
+
+# ---------------------------------------------------------------------------
+# Transformer body
+# ---------------------------------------------------------------------------
+
+def _layer_norm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return p["g"] * (x - mu) / jnp.sqrt(var + eps) + p["b"]
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x**3)))
+
+
+def sinusoidal_positions(l, d):
+    pos = np.arange(l)[:, None]
+    i = np.arange(d)[None, :]
+    angle = pos / np.power(10000.0, (2 * (i // 2)) / d)
+    enc = np.where(i % 2 == 0, np.sin(angle), np.cos(angle))
+    return jnp.asarray(enc, jnp.float32)
+
+
+def forward(cfg: ModelConfig, params, feats, tokens):
+    """tokens: (B, L) int32 -> logits (B, L, vocab)."""
+    b, l = tokens.shape
+    x = params["embed"][tokens] * jnp.sqrt(jnp.float32(cfg.d_model))
+    x = x + sinusoidal_positions(l, cfg.d_model)[None]
+    for i, layer in enumerate(params["layers"]):
+        x = x + multi_head_attention(cfg, layer, feats, _layer_norm(layer["ln1"], x),
+                                     layer_idx=i)
+        hmid = _gelu(_layer_norm(layer["ln2"], x) @ layer["ff1"]["w"] + layer["ff1"]["b"])
+        x = x + hmid @ layer["ff2"]["w"] + layer["ff2"]["b"]
+    x = _layer_norm(params["lnf"], x)
+    return x @ params["embed"].T  # weight-tied output head
+
+
+def loss_fn(cfg: ModelConfig, params, feats, tokens, targets, weights):
+    """Weighted CE. BID: tokens have [MASK]s, targets original AAs, weights
+    1 at masked positions. UNI: targets = next token, weights 1 everywhere
+    (minus padding)."""
+    logits = forward(cfg, params, feats, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    wsum = jnp.sum(weights) + 1e-9
+    loss = -jnp.sum(ll * weights) / wsum
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * weights) / wsum
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# In-graph Adam train step (paper Appendix B.1 hyperparameters)
+# ---------------------------------------------------------------------------
+
+ADAM = dict(lr=1e-3, b1=0.9, b2=0.98, eps=1e-9, clip=0.5, wd=0.1)
+
+
+def init_opt_state(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.float32)}
+
+
+def train_step(cfg: ModelConfig, params, opt, feats, tokens, targets, weights):
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, feats, tokens, targets, weights),
+        has_aux=True)(params)
+
+    # global-norm clip at 0.5
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+    scale = jnp.minimum(1.0, ADAM["clip"] / (gnorm + 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    step = opt["step"] + 1.0
+    b1, b2 = ADAM["b1"], ADAM["b2"]
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mhat_scale = 1.0 / (1.0 - b1 ** step)
+    vhat_scale = 1.0 / (1.0 - b2 ** step)
+
+    def upd(p, m_, v_):
+        u = (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + ADAM["eps"])
+        return p - ADAM["lr"] * (u + ADAM["wd"] * p)
+
+    params = jax.tree_util.tree_map(upd, params, m, v)
+    return params, {"m": m, "v": v, "step": step}, loss, acc
+
+
+def eval_step(cfg: ModelConfig, params, feats, tokens, targets, weights):
+    return loss_fn(cfg, params, feats, tokens, targets, weights)

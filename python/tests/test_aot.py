@@ -1,0 +1,105 @@
+"""AOT contract tests: the emitted metadata must exactly describe the
+lowered HLO's parameters, and the init tensor file must cover every
+param/feature slot. Runs against the real artifacts/ directory when
+present (`make artifacts` first), otherwise emits a throwaway tiny
+artifact into tmp_path."""
+
+import json
+import os
+import struct
+
+import pytest
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _artifact(tag):
+    meta_path = os.path.join(ARTIFACTS, f"{tag}.meta.json")
+    if not os.path.exists(meta_path):
+        pytest.skip(f"{tag} not built (run `make artifacts`)")
+    with open(meta_path) as f:
+        return json.load(f)
+
+
+def _read_tensorfile(path):
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        assert magic == b"PFRMTENS"
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        payload = f.read()
+    return header, payload
+
+
+def test_meta_parameter_count_matches_hlo():
+    meta = _artifact("tiny_relu_bid_train")
+    hlo_path = os.path.join(ARTIFACTS, "tiny_relu_bid_train.hlo.txt")
+    with open(hlo_path) as f:
+        hlo = f.read()
+    # count ENTRY computation parameters in the HLO text
+    entry = hlo[hlo.index("ENTRY"):]
+    n_params = entry.count("parameter(")
+    assert n_params == len(meta["inputs"]), (
+        f"HLO has {n_params} parameters, meta declares {len(meta['inputs'])}"
+    )
+
+
+def test_train_meta_roles_balanced():
+    meta = _artifact("tiny_relu_bid_train")
+    roles = {}
+    for i in meta["inputs"]:
+        roles[i["role"]] = roles.get(i["role"], 0) + 1
+    assert roles["param"] == roles["opt_m"] == roles["opt_v"]
+    assert roles["opt_step"] == 1
+    assert roles["tokens"] == roles["targets"] == roles["weights"] == 1
+    out_roles = {}
+    for o in meta["outputs"]:
+        out_roles[o.get("role", "")] = out_roles.get(o.get("role", ""), 0) + 1
+    assert out_roles["param"] == roles["param"]
+    assert out_roles["loss"] == out_roles["acc"] == 1
+
+
+def test_init_tensorfile_covers_all_slots():
+    meta = _artifact("tiny_relu_bid_train")
+    header, payload = _read_tensorfile(
+        os.path.join(ARTIFACTS, "tiny_relu_bid_init.bin"))
+    names = {h["name"] for h in header}
+    for i in meta["inputs"]:
+        if i["role"] in ("param", "feature"):
+            key = f"{i['role']}:{i['name']}"
+            assert key in names, f"init.bin missing {key}"
+    # payload length must cover every declared tensor
+    for h in header:
+        n = 1
+        for s in h["shape"]:
+            n *= s
+        assert h["offset"] + 4 * n <= len(payload)
+
+
+def test_shapes_in_meta_match_init_sizes():
+    meta = _artifact("tiny_relu_bid_train")
+    header, _ = _read_tensorfile(os.path.join(ARTIFACTS, "tiny_relu_bid_init.bin"))
+    by_name = {h["name"]: h for h in header}
+    for i in meta["inputs"]:
+        if i["role"] in ("param", "feature"):
+            h = by_name[f"{i['role']}:{i['name']}"]
+            assert h["shape"] == i["shape"], i["name"]
+
+
+def test_fwd_meta_outputs_logits():
+    meta = _artifact("tiny_relu_bid_fwd")
+    (out,) = meta["outputs"]
+    cfg = meta["config"]
+    assert out["shape"] == [cfg["batch"], cfg["max_len"], cfg["vocab_size"]]
+
+
+def test_index_lists_core_artifacts():
+    path = os.path.join(ARTIFACTS, "index.json")
+    if not os.path.exists(path):
+        pytest.skip("index.json not built")
+    with open(path) as f:
+        index = json.load(f)
+    names = {e["name"] for e in index}
+    for required in ["tiny_relu_bid_train", "base_perf_relu_bid_train",
+                     "base_exact_bid_train", "attn_favor_fwd_L1024"]:
+        assert required in names

@@ -1,0 +1,195 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+hypothesis sweeps shapes (L, d, M) and feature kinds; every property
+asserts allclose between the blocked Pallas implementation and the direct
+transcription of the paper's equations in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import favor, orf, ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(rng, *shape, scale=0.5):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@st.composite
+def qkv_dims(draw):
+    l = draw(st.sampled_from([16, 32, 48, 64, 128]))
+    d = draw(st.sampled_from([4, 8, 16]))
+    m = draw(st.sampled_from([8, 16, 32]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return l, d, m, seed
+
+
+@given(qkv_dims())
+@settings(**SETTINGS)
+def test_feature_map_softmax_matches_ref(dims):
+    l, d, m, seed = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, l, d)
+    w, b = orf.softmax_projection(m, d, seed=seed)
+    w, b = jnp.asarray(w), jnp.asarray(b)
+    got = favor.feature_map_pallas(x, w, b, f_name="cos", softmax_renorm=True, block_l=16)
+    want = ref.softmax_feature_map(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(qkv_dims(), st.sampled_from(["relu", "sigmoid", "abs", "gelu", "tanh", "identity"]))
+@settings(**SETTINGS)
+def test_feature_map_generalized_matches_ref(dims, f_name):
+    l, d, m, seed = dims
+    rng = np.random.default_rng(seed)
+    x = rand(rng, l, d)
+    w, b = orf.generalized_projection(m, d, seed=seed)
+    w, b = jnp.asarray(w), jnp.asarray(b)
+    got = favor.feature_map_pallas(x, w, b, f_name=f_name, softmax_renorm=False,
+                                   kernel_eps=1e-3, block_l=16)
+    want = ref.generalized_feature_map(x, w, f_name, kernel_eps=1e-3, b=b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(qkv_dims())
+@settings(**SETTINGS)
+def test_bidirectional_pallas_matches_oracle(dims):
+    l, d, m, seed = dims
+    rng = np.random.default_rng(seed)
+    qp = jnp.abs(rand(rng, l, m)) + 1e-3  # nonneg features, like ReLU/softmax
+    kp = jnp.abs(rand(rng, l, m)) + 1e-3
+    v = rand(rng, l, d, scale=1.0)
+    got = favor.favor_bidirectional_pallas(qp, kp, v, block_l=16)
+    want = ref.favor_bidirectional(qp, kp, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(qkv_dims())
+@settings(**SETTINGS)
+def test_unidirectional_pallas_matches_oracle(dims):
+    l, d, m, seed = dims
+    rng = np.random.default_rng(seed)
+    qp = jnp.abs(rand(rng, l, m)) + 1e-3
+    kp = jnp.abs(rand(rng, l, m)) + 1e-3
+    v = rand(rng, l, d, scale=1.0)
+    got = favor.favor_unidirectional_pallas(qp, kp, v, block_l=16)
+    want = ref.favor_unidirectional(qp, kp, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(qkv_dims())
+@settings(**SETTINGS)
+def test_unidirectional_scan_matches_oracle(dims):
+    l, d, m, seed = dims
+    rng = np.random.default_rng(seed)
+    qp = jnp.abs(rand(rng, l, m)) + 1e-3
+    kp = jnp.abs(rand(rng, l, m)) + 1e-3
+    v = rand(rng, l, d, scale=1.0)
+    got = ref.favor_unidirectional_scan(qp, kp, v, block=16)
+    want = ref.favor_unidirectional_prefix(qp, kp, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(qkv_dims(), st.booleans())
+@settings(**SETTINGS)
+def test_exact_attention_pallas_matches_ref(dims, causal):
+    l, d, _, seed = dims
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, l, d), rand(rng, l, d), rand(rng, l, d, scale=1.0)
+    got = favor.exact_attention_pallas(q, k, v, causal=causal, block_l=16)
+    want = (ref.exact_attention_unidirectional if causal
+            else ref.exact_attention_bidirectional)(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_favor_softmax_approximates_exact_attention():
+    """The headline estimator claim, at modest precision for small M."""
+    rng = np.random.default_rng(0)
+    l, d, m = 48, 8, 2048
+    q, k, v = rand(rng, l, d, scale=0.4), rand(rng, l, d, scale=0.4), rand(rng, l, d, scale=1.0)
+    w, b = orf.softmax_projection(m, d, mechanism="r-orf", seed=3)
+    w, b = jnp.asarray(w), jnp.asarray(b)
+    approx = favor.favor_attention_pallas(q, k, v, w, b, f_name="cos",
+                                          softmax_renorm=True, block_l=16)
+    exact = ref.exact_attention_bidirectional(q, k, v)
+    err = float(jnp.mean(jnp.abs(approx - exact)))
+    assert err < 0.05, f"approximation error {err}"
+
+
+def test_unbiasedness_attention_matrix():
+    """E[Q'(K')^T] = A: averaging independent feature draws converges."""
+    rng = np.random.default_rng(1)
+    l, d, m = 12, 8, 256
+    q, k = rand(rng, l, d, scale=0.4), rand(rng, l, d, scale=0.4)
+    a_exact = jnp.exp(q @ k.T / jnp.sqrt(jnp.float32(d)))
+    acc = jnp.zeros((l, l))
+    trials = 30
+    for s in range(trials):
+        w, b = orf.softmax_projection(m, d, mechanism="iid", seed=100 + s)
+        qp = ref.softmax_feature_map(q, jnp.asarray(w), jnp.asarray(b))
+        kp = ref.softmax_feature_map(k, jnp.asarray(w), jnp.asarray(b))
+        acc = acc + qp @ kp.T
+    est = acc / trials
+    rel = float(jnp.max(jnp.abs(est - a_exact) / a_exact))
+    assert rel < 0.15, f"max relative deviation {rel}"
+
+
+def test_custom_vjp_gradients_match_ref():
+    """Pallas fwd + ref bwd must equal pure-ref gradients."""
+    rng = np.random.default_rng(2)
+    l, d, m = 32, 8, 16
+    q, k, v = rand(rng, l, d), rand(rng, l, d), rand(rng, l, d, scale=1.0)
+    w, b = orf.generalized_projection(m, d, seed=5)
+    w, b = jnp.asarray(w), jnp.asarray(b)
+
+    attn = favor.make_favor_attention(f_name="relu", causal=False,
+                                      softmax_renorm=False, kernel_eps=1e-3)
+
+    def loss_pallas(q, k, v):
+        return jnp.sum(attn(q, k, v, w, b) ** 2)
+
+    def loss_ref(q, k, v):
+        qp = ref.generalized_feature_map(q, w, "relu", kernel_eps=1e-3, b=b)
+        kp = ref.generalized_feature_map(k, w, "relu", kernel_eps=1e-3, b=b)
+        return jnp.sum(ref.favor_bidirectional_linear(qp, kp, v) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-4)
+
+
+def test_causality_pallas():
+    """Future tokens must not influence past outputs (causal kernel)."""
+    rng = np.random.default_rng(3)
+    l, d, m = 32, 4, 8
+    qp = jnp.abs(rand(rng, l, m)) + 1e-3
+    kp = jnp.abs(rand(rng, l, m)) + 1e-3
+    v = rand(rng, l, d)
+    out1 = favor.favor_unidirectional_pallas(qp, kp, v, block_l=8)
+    kp2 = kp.at[-1].set(9.0)
+    v2 = v.at[-1].set(-9.0)
+    out2 = favor.favor_unidirectional_pallas(qp, kp2, v2, block_l=8)
+    np.testing.assert_allclose(out1[:-1], out2[:-1], rtol=1e-6, atol=1e-6)
+    assert float(jnp.max(jnp.abs(out1[-1] - out2[-1]))) > 1e-4
+
+
+@pytest.mark.parametrize("block_l", [8, 16, 32, 64])
+def test_block_size_invariance(block_l):
+    """The blocked kernels must be exact for any tiling."""
+    rng = np.random.default_rng(4)
+    l, d, m = 64, 8, 16
+    qp = jnp.abs(rand(rng, l, m)) + 1e-3
+    kp = jnp.abs(rand(rng, l, m)) + 1e-3
+    v = rand(rng, l, d)
+    want_b = ref.favor_bidirectional(qp, kp, v)
+    want_u = ref.favor_unidirectional(qp, kp, v)
+    got_b = favor.favor_bidirectional_pallas(qp, kp, v, block_l=block_l)
+    got_u = favor.favor_unidirectional_pallas(qp, kp, v, block_l=block_l)
+    np.testing.assert_allclose(got_b, want_b, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(got_u, want_u, rtol=2e-4, atol=2e-4)

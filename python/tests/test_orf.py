@@ -1,0 +1,79 @@
+"""Orthogonal random feature tests (Sec. 2.4): orthogonality, marginal
+distributions, and the variance-reduction claim."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import orf
+
+
+@pytest.mark.parametrize("mech", ["r-orf", "h-orf", "g-orf"])
+def test_block_rows_orthogonal(mech):
+    d = 16
+    w = orf.projection_matrix(d, d, mechanism=mech, seed=0, chi_norms=False)
+    gram = w @ w.T
+    off = gram - np.diag(np.diag(gram))
+    assert np.abs(off).max() < 1e-4, f"{mech} rows not orthogonal"
+
+
+@pytest.mark.parametrize("mech", ["iid", "r-orf", "h-orf", "g-orf"])
+def test_marginal_row_norms(mech):
+    """chi-rescaled rows match Gaussian expected squared norm (= d)."""
+    d = 16
+    w = orf.projection_matrix(512, d, mechanism=mech, seed=1)
+    sq = (w ** 2).sum(axis=1)
+    assert abs(sq.mean() - d) < 2.0, f"{mech}: E||w||^2 = {sq.mean()}"
+
+
+@given(st.integers(1, 64), st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_projection_shape(m, d):
+    w = orf.projection_matrix(m, d, mechanism="r-orf", seed=2)
+    assert w.shape == (m, d)
+    assert w.dtype == np.float32
+
+
+def test_softmax_projection_scale():
+    """Softmax features use sigma = d^{-1/4} (Gaussian kernel bandwidth)."""
+    d = 16
+    w, b = orf.softmax_projection(2048, d, mechanism="iid", seed=3)
+    var = w.var()
+    expect = 1.0 / np.sqrt(d)  # sigma^2 = 1/sqrt(d)
+    assert abs(var - expect) / expect < 0.1
+    assert (b >= 0).all() and (b <= 2 * np.pi).all()
+
+
+def test_orf_variance_reduction():
+    """Sec. 3: ORF softmax-kernel estimates beat iid at the same M."""
+    d, m = 8, 8
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal(d).astype(np.float32) * 0.5
+    k = rng.standard_normal(d).astype(np.float32) * 0.5
+    r = 2.0 * np.sqrt(d)
+    exact = np.exp(q @ k / np.sqrt(d))
+
+    def estimate(mech, seed):
+        w, b = orf.softmax_projection(m, d, mechanism=mech, seed=seed)
+        dq = np.exp((q @ q) / r)
+        dk = np.exp((k @ k) / r)
+        pq = dq * np.sqrt(2.0 / m) * np.cos(w @ q + b)
+        pk = dk * np.sqrt(2.0 / m) * np.cos(w @ k + b)
+        return pq @ pk
+
+    errs = {mech: np.array([estimate(mech, s) - exact for s in range(400)])
+            for mech in ("iid", "r-orf")}
+    assert (errs["r-orf"] ** 2).mean() < (errs["iid"] ** 2).mean()
+
+
+def test_hadamard_requires_power_of_two():
+    with pytest.raises(AssertionError):
+        orf.projection_matrix(8, 12, mechanism="h-orf", seed=0)
+
+
+def test_determinism():
+    a = orf.projection_matrix(32, 8, mechanism="r-orf", seed=7)
+    b = orf.projection_matrix(32, 8, mechanism="r-orf", seed=7)
+    np.testing.assert_array_equal(a, b)
+    c = orf.projection_matrix(32, 8, mechanism="r-orf", seed=8)
+    assert np.abs(a - c).max() > 1e-3

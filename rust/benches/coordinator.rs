@@ -1,0 +1,107 @@
+//! Coordinator micro-benchmarks: batcher overhead vs PJRT execute cost,
+//! and the latency/throughput trade-off across batching policies — the
+//! L3 profile that the §Perf pass iterates on.
+//!
+//! Run with `cargo bench --bench coordinator`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use performer::benchlib::{fmt_secs, Bench, Report};
+use performer::configx::ServeConfig;
+use performer::coordinator::Coordinator;
+use performer::protein::vocab::{AA_BASE, MASK};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::EngineActor;
+
+fn main() -> anyhow::Result<()> {
+    let artifact = "tiny_relu_bid";
+    let actor = EngineActor::spawn(
+        std::env::var("PERFORMER_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    )?;
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let bench = Bench { warmup: 1, samples: 5, max_total_secs: 20.0 };
+
+    // raw PJRT execute cost for the fwd artifact (the floor)
+    let handle = actor.handle();
+    let meta = handle.meta(&format!("{artifact}_fwd"))?;
+    let l = meta.config.max_len;
+    handle.warm(&format!("{artifact}_fwd"))?;
+    {
+        use performer::runtime::{HostValue, Role};
+        use performer::runtime::TensorFile;
+        let init = TensorFile::read(
+            &std::path::Path::new("artifacts").join(format!("{artifact}_init.bin")),
+        )?;
+        let mut inputs = Vec::new();
+        for slot in &meta.inputs {
+            inputs.push(match slot.role {
+                Role::Tokens => HostValue::I32(vec![AA_BASE as i32; slot.elements()]),
+                Role::Param => HostValue::F32(
+                    init.get(&format!("param:{}", slot.name)).unwrap().1.to_vec(),
+                ),
+                Role::Feature => HostValue::F32(
+                    init.get(&format!("feature:{}", slot.name)).unwrap().1.to_vec(),
+                ),
+                _ => unreachable!(),
+            });
+        }
+        let s = bench.run("raw_pjrt_fwd", || {
+            handle.exec(&format!("{artifact}_fwd"), inputs.clone()).expect("exec")
+        });
+        println!("raw PJRT fwd (batch={}): {}", meta.config.batch, fmt_secs(s.median()));
+    }
+
+    // batching-policy sweep: latency vs throughput
+    let mut rep = Report::new(
+        "Batching policy sweep (64 requests, 1 client thread pool)",
+        &["max_batch", "max_wait_ms", "wall", "req/s", "mean_batch", "p99_latency"],
+    );
+    for (max_batch, max_wait_ms) in [(1usize, 0u64), (2, 2), (4, 2), (4, 8), (8, 8)] {
+        let cfg = ServeConfig {
+            artifact: artifact.into(),
+            max_batch,
+            max_wait_ms,
+            workers: 1,
+            seed: 0,
+        };
+        let mut coord = Coordinator::new(actor.handle());
+        coord.start_pool(&cfg, None)?;
+        let mut rng = Pcg64::new(42);
+        // warm
+        coord.fill_mask(artifact, corpus.window(&corpus.sample_iid(&mut rng).1, l))?;
+
+        let n = 64;
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            let (_, seq) = corpus.sample_iid(&mut rng);
+            let mut toks = corpus.window(&seq, l);
+            for t in toks.iter_mut() {
+                if *t >= AA_BASE && rng.uniform() < 0.15 {
+                    *t = MASK;
+                }
+            }
+            pending.push(coord.submit(artifact, toks)?);
+        }
+        for rx in pending {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let m = coord.metrics(artifact).unwrap();
+        rep.row(vec![
+            max_batch.to_string(),
+            max_wait_ms.to_string(),
+            fmt_secs(wall),
+            format!("{:.1}", n as f64 / wall),
+            format!("{:.2}", m.mean_batch_size()),
+            format!("{:?}", m.latency_quantile(0.99)),
+        ]);
+        coord.shutdown();
+    }
+    println!("{}", rep.render());
+    rep.save_csv(std::path::Path::new("results/coordinator_bench.csv"))?;
+    let _ = Arc::strong_count(&Arc::new(()));
+    Ok(())
+}

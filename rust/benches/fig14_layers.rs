@@ -1,0 +1,101 @@
+//! Fig. 14 — (1) Performer wall time as layer count grows (the paper
+//! shows scaling "up to even 20 layers"); (2) attention-op time/space
+//! complexity comparison between standard attention and FAVOR, the
+//! paper's second 2x2 panel, here as native measurements plus explicit
+//! byte accounting.
+//!
+//! Run with `cargo bench --bench fig14_layers`.
+
+use performer::benchlib::{fmt_secs, Bench, Report};
+use performer::favor::{exact_attention, favor_attention, Direction, FeatureKind, FeatureMap};
+use performer::linalg::OrfMechanism;
+use performer::rng::Pcg64;
+use performer::tensor::Mat;
+
+/// A minimal multi-layer FAVOR stack: enough structure to measure layer
+/// scaling of the attention component without the (layer-count-fixed)
+/// MLP dominating.
+fn favor_stack(layers: usize, fm: &FeatureMap, x: &Mat) -> Mat {
+    let mut h = x.clone();
+    for _ in 0..layers {
+        let out = favor_attention(fm, &h, &h, &h, Direction::Bidirectional);
+        h.add_assign(&out);
+    }
+    h
+}
+
+fn exact_stack(layers: usize, x: &Mat) -> Mat {
+    let mut h = x.clone();
+    for _ in 0..layers {
+        let out = exact_attention(&h, &h, &h, Direction::Bidirectional);
+        h.add_assign(&out);
+    }
+    h
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench { warmup: 1, samples: 5, max_total_secs: 30.0 };
+    let d = 64;
+    let l = 1024;
+    let m_feats = 128;
+    let mut rng = Pcg64::new(0);
+    let fm = FeatureMap::sample(FeatureKind::Relu, m_feats, d, OrfMechanism::Regular, &mut rng);
+    let x = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+
+    // panel 1: layer scaling
+    let mut rep = Report::new(
+        &format!("Fig. 14a — layer scaling at L={l} (paper: linear in layers up to 20)"),
+        &["layers", "favor", "exact", "favor_per_layer"],
+    );
+    for layers in [1usize, 2, 6, 12, 20] {
+        let sf = bench.run(&format!("favor_{layers}l"), || favor_stack(layers, &fm, &x));
+        let se = if layers <= 6 {
+            fmt_secs(bench.run(&format!("exact_{layers}l"), || exact_stack(layers, &x)).median())
+        } else {
+            "skipped".into()
+        };
+        rep.row(vec![
+            layers.to_string(),
+            fmt_secs(sf.median()),
+            se,
+            fmt_secs(sf.median() / layers as f64),
+        ]);
+    }
+    println!("{}", rep.render());
+    rep.save_csv(std::path::Path::new("results/fig14_layers.csv"))?;
+
+    // panel 2: attention-op time + space accounting across L
+    let mut rep2 = Report::new(
+        "Fig. 14b — attention op time & space (native, bidirectional)",
+        &["L", "exact_time", "favor_time", "exact_bytes", "favor_bytes"],
+    );
+    for l in [256usize, 512, 1024, 2048, 4096] {
+        let q = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let k = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let te = if l <= 2048 {
+            fmt_secs(
+                bench
+                    .run(&format!("exact_L{l}"), || {
+                        exact_attention(&q, &k, &v, Direction::Bidirectional)
+                    })
+                    .median(),
+            )
+        } else {
+            "skipped".into()
+        };
+        let tf = bench.run(&format!("favor_L{l}"), || {
+            favor_attention(&fm, &q, &k, &v, Direction::Bidirectional)
+        });
+        rep2.row(vec![
+            l.to_string(),
+            te,
+            fmt_secs(tf.median()),
+            (4 * l * l).to_string(),
+            (4 * (l * m_feats + m_feats * (d + 1))).to_string(),
+        ]);
+    }
+    println!("{}", rep2.render());
+    rep2.save_csv(std::path::Path::new("results/fig14_ops.csv"))?;
+    Ok(())
+}

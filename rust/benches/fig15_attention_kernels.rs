@@ -1,0 +1,98 @@
+//! Fig. 15 — model-level forward/backward wall time for the "Small"
+//! (1, 6, 64, 64) and scaled-"Regular" configurations, Transformer vs
+//! Performer, measured on the AOT train-step artifacts (the closest
+//! production analogue of the paper's fwd+bwd timing), plus the
+//! Pallas-interpret overhead quantification.
+//!
+//! Run with `cargo bench --bench fig15_attention_kernels`.
+
+use std::path::PathBuf;
+
+use performer::benchlib::{fmt_secs, Bench, Report};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::{Engine, HostValue};
+use performer::train::{DataGen, Split, TrainState};
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("PERFORMER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench { warmup: 1, samples: 5, max_total_secs: 60.0 };
+    let engine = Arc::new(Engine::new(artifacts_dir())?);
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+
+    // full train-step (fwd+bwd+Adam) timing per model variant
+    let mut rep = Report::new(
+        "Fig. 15 — full train step (fwd+bwd+Adam) via PJRT",
+        &["artifact", "L", "batch", "params", "step_time", "tokens/s"],
+    );
+    for tag in [
+        "base_exact_bid",
+        "base_perf_relu_bid",
+        "base_perf_softmax_bid",
+        "base_lsh_bid",
+        "long_perf_relu_uni",
+        "long_exact_l1_uni",
+    ] {
+        if !engine.exists(&format!("{tag}_train")) {
+            continue;
+        }
+        let mut st = TrainState::new(engine.clone(), tag)?;
+        let cfg = st.train_exe.meta.config.clone();
+        let mut gen: DataGen = st.data_gen(corpus.clone(), 7);
+        let batch = gen.next_batch(Split::Train);
+        let s = bench.run(tag, || st.train_step(&batch).expect("step"));
+        let tokens = (cfg.batch * cfg.max_len) as f64;
+        rep.row(vec![
+            tag.into(),
+            cfg.max_len.to_string(),
+            cfg.batch.to_string(),
+            cfg.param_count.to_string(),
+            fmt_secs(s.median()),
+            format!("{:.0}", tokens / s.median()),
+        ]);
+    }
+    println!("{}", rep.render());
+    rep.save_csv(std::path::Path::new("results/fig15_trainstep.csv"))?;
+
+    // Pallas-interpret overhead on old XLA: jnp-formulated vs
+    // interpret-Pallas attention op, same math
+    let mut rep2 = Report::new(
+        "Pallas-interpret overhead on xla_extension 0.5.1 (same math, two lowerings)",
+        &["L", "favor_jnp", "favor_pallas", "overhead"],
+    );
+    for l in [256usize, 1024] {
+        let jnp_name = format!("attn_favor_fwd_L{l}");
+        let pallas_name = format!("attn_favor_pallas_fwd_L{l}");
+        if !engine.exists(&jnp_name) || !engine.exists(&pallas_name) {
+            continue;
+        }
+        let time_of = |name: &str| -> anyhow::Result<f64> {
+            let exe = engine.load(name)?;
+            let mut rng = Pcg64::new(l as u64);
+            let inputs: Vec<HostValue> = exe
+                .meta
+                .inputs
+                .iter()
+                .map(|slot| HostValue::F32(rng.gaussian_vec(slot.elements())))
+                .collect();
+            Ok(bench.run(name, || exe.run(&inputs).expect("exec")).median())
+        };
+        let tj = time_of(&jnp_name)?;
+        let tp = time_of(&pallas_name)?;
+        rep2.row(vec![
+            l.to_string(),
+            fmt_secs(tj),
+            fmt_secs(tp),
+            format!("{:.1}x", tp / tj),
+        ]);
+    }
+    println!("{}", rep2.render());
+    rep2.save_csv(std::path::Path::new("results/fig15_pallas_overhead.csv"))?;
+    Ok(())
+}

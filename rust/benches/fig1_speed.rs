@@ -1,0 +1,119 @@
+//! Fig. 1 — forward/backward attention speed vs sequence length L:
+//! Transformer (exact) vs Performer (FAVOR) vs "X (OPT)" (identity).
+//!
+//! Two measurement series per point:
+//!   * AOT/HLO — the attention-op artifacts executed through PJRT, i.e.
+//!     exactly what the production stack runs (includes the backward
+//!     pass via the *_bwd artifacts);
+//!   * native — the rust FAVOR/exact implementations, isolating
+//!     algorithmic scaling from XLA overheads.
+//!
+//! The paper's claim reproduced here is the *shape*: exact is ~quadratic
+//! in L and dies early; FAVOR is ~linear and tracks the identity "OPT"
+//! ceiling. Run with `cargo bench --bench fig1_speed`.
+
+use std::path::PathBuf;
+
+use performer::benchlib::{fmt_secs, loglog_slope, Bench, Report};
+use performer::favor::{exact_attention, favor_attention, Direction, FeatureKind, FeatureMap};
+use performer::linalg::OrfMechanism;
+use performer::rng::Pcg64;
+use performer::runtime::{Engine, HostValue};
+use performer::tensor::Mat;
+
+fn artifacts_dir() -> PathBuf {
+    std::env::var("PERFORMER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench { warmup: 1, samples: 5, max_total_secs: 25.0 };
+    let engine = Engine::new(artifacts_dir())?;
+
+    // --- series 1: AOT attention ops through PJRT ---------------------
+    let mut rep = Report::new(
+        "Fig. 1 — attention op wall time via PJRT (bh=4, d_head=64, M=128)",
+        &["L", "pass", "exact", "favor", "identity(OPT)"],
+    );
+    let mut series: std::collections::BTreeMap<(String, String), Vec<(f64, f64)>> =
+        Default::default();
+    for l in [128usize, 256, 512, 1024, 2048, 4096] {
+        for pass in ["fwd", "bwd"] {
+            let mut cells = vec![l.to_string(), pass.to_string()];
+            for mech in ["exact", "favor", "identity"] {
+                let name = format!("attn_{mech}_{pass}_L{l}");
+                if !engine.exists(&name) {
+                    cells.push("-".into());
+                    continue;
+                }
+                let exe = engine.load(&name)?;
+                let meta = &exe.meta;
+                let mut rng = Pcg64::new(l as u64);
+                let inputs: Vec<HostValue> = meta
+                    .inputs
+                    .iter()
+                    .map(|slot| HostValue::F32(rng.gaussian_vec(slot.elements())))
+                    .collect();
+                let s = bench.run(&name, || exe.run(&inputs).expect("exec"));
+                cells.push(fmt_secs(s.median()));
+                series
+                    .entry((mech.into(), pass.into()))
+                    .or_default()
+                    .push((l as f64, s.median()));
+            }
+            rep.row(cells);
+        }
+    }
+    println!("{}", rep.render());
+    rep.save_csv(std::path::Path::new("results/fig1_hlo.csv"))?;
+
+    println!("scaling exponents (log-log slope of median time vs L):");
+    for ((mech, pass), pts) in &series {
+        if pts.len() >= 3 {
+            let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+            let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+            println!("  {mech:>8} {pass}: {:.2}", loglog_slope(&xs, &ys));
+        }
+    }
+
+    // --- series 2: native implementations ------------------------------
+    let d = 64;
+    let mut rng = Pcg64::new(0);
+    let fm = FeatureMap::sample(FeatureKind::Relu, 128, d, OrfMechanism::Regular, &mut rng);
+    let mut rep2 = Report::new(
+        "Fig. 1 (native series) — rust implementations, bidirectional",
+        &["L", "exact", "favor", "ratio"],
+    );
+    let mut ls = Vec::new();
+    let mut favor_t = Vec::new();
+    let mut exact_t = Vec::new();
+    for l in [128usize, 256, 512, 1024, 2048] {
+        let q = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let k = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let se = bench.run(&format!("native_exact_{l}"), || {
+            exact_attention(&q, &k, &v, Direction::Bidirectional)
+        });
+        let sf = bench.run(&format!("native_favor_{l}"), || {
+            favor_attention(&fm, &q, &k, &v, Direction::Bidirectional)
+        });
+        ls.push(l as f64);
+        exact_t.push(se.median());
+        favor_t.push(sf.median());
+        rep2.row(vec![
+            l.to_string(),
+            fmt_secs(se.median()),
+            fmt_secs(sf.median()),
+            format!("{:.2}x", se.median() / sf.median()),
+        ]);
+    }
+    println!("{}", rep2.render());
+    println!(
+        "native exponents: exact {:.2} (expect ~2), favor {:.2} (expect ~1)",
+        loglog_slope(&ls, &exact_t),
+        loglog_slope(&ls, &favor_t)
+    );
+    rep2.save_csv(std::path::Path::new("results/fig1_native.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,232 @@
+//! Benchmark harness substrate (criterion is not in the offline
+//! registry). Provides warmup + repeated sampling with median/mean/σ,
+//! throughput accounting, and aligned table/CSV output — enough to
+//! regenerate every timing figure in the paper with honest statistics.
+
+use std::time::Instant;
+
+/// One benchmark measurement series.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// per-iteration wall times, seconds
+    pub times: Vec<f64>,
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        let mut t = self.times.clone();
+        t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if t.is_empty() {
+            return f64::NAN;
+        }
+        let n = t.len();
+        if n % 2 == 0 { (t[n / 2 - 1] + t[n / 2]) / 2.0 } else { t[n / 2] }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.times.iter().sum::<f64>() / self.times.len().max(1) as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        let m = self.mean();
+        (self.times.iter().map(|t| (t - m) * (t - m)).sum::<f64>()
+            / self.times.len().max(1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.times.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations then `samples` timed runs,
+/// with a wall-clock budget so quadratic baselines can't stall a sweep.
+pub struct Bench {
+    pub warmup: usize,
+    pub samples: usize,
+    pub max_total_secs: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, samples: 7, max_total_secs: 30.0 }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, samples: 3, max_total_secs: 10.0 }
+    }
+
+    /// Time `f` (which must perform one full iteration per call).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        let budget = Instant::now();
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+            if budget.elapsed().as_secs_f64() > self.max_total_secs {
+                break;
+            }
+        }
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+            if budget.elapsed().as_secs_f64() > self.max_total_secs {
+                break;
+            }
+        }
+        Sample { name: name.to_string(), times }
+    }
+}
+
+/// Accumulates rows of a figure/table and renders them.
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Report {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Aligned text table (what the xp harness prints).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV form (for plotting outside).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write CSV next to the experiment outputs.
+    pub fn save_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Format seconds human-readably (µs/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Least-squares slope of log(y) vs log(x): the empirical scaling
+/// exponent (Fig. 1's "linear vs quadratic" claim, quantified).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|v| v.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in lx.iter().zip(&ly) {
+        num += (x - mx) * (y - my);
+        den += (x - mx) * (x - mx);
+    }
+    num / den.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_stats() {
+        let s = Sample { name: "t".into(), times: vec![1.0, 2.0, 3.0, 4.0, 100.0] };
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert!((s.mean() - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bench { warmup: 1, samples: 5, max_total_secs: 5.0 };
+        let mut count = 0;
+        let s = b.run("noop", || {
+            count += 1;
+            count
+        });
+        assert_eq!(s.times.len(), 5);
+        assert_eq!(count, 6); // warmup + samples
+    }
+
+    #[test]
+    fn report_render_and_csv() {
+        let mut r = Report::new("Fig X", &["L", "time"]);
+        r.row(vec!["128".into(), "1.5ms".into()]);
+        r.row(vec!["4096".into(), "2.0ms".into()]);
+        let txt = r.render();
+        assert!(txt.contains("Fig X"));
+        assert!(txt.contains("4096"));
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+    }
+
+    #[test]
+    fn loglog_slope_detects_quadratic() {
+        let xs = [128.0, 256.0, 512.0, 1024.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x * x).collect();
+        let slope = loglog_slope(&xs, &ys);
+        assert!((slope - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loglog_slope_detects_linear() {
+        let xs = [128.0, 256.0, 512.0, 1024.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.5 * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 1.0).abs() < 1e-6);
+    }
+}

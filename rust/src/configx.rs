@@ -1,0 +1,221 @@
+//! Typed configuration system for the launcher.
+//!
+//! Configs load from JSON files (`--config path.json`) with CLI
+//! `key=value` overrides, mirroring what gin did for the paper's
+//! published training setup. Defaults reproduce the scaled-down "base"
+//! protein-MLM run from DESIGN.md.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::Json;
+use crate::protein::CorpusConfig;
+
+/// Training-run configuration (paper Appendix B.1 defaults where they
+/// transfer to this scale).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact tag, e.g. "base_perf_relu_bid"
+    pub artifact: String,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub seed: u64,
+    /// resample FAVOR features every N steps (0 = never) — the paper's
+    /// feature-redrawing strategy, Sec. 4.2
+    pub resample_every: usize,
+    pub checkpoint: Option<String>,
+    pub corpus: CorpusConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: "base_perf_relu_bid".into(),
+            steps: 200,
+            eval_every: 50,
+            eval_batches: 4,
+            log_every: 10,
+            seed: 0,
+            resample_every: 0,
+            checkpoint: None,
+            corpus: CorpusConfig::default(),
+        }
+    }
+}
+
+/// Serving configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifact: String,
+    /// max requests fused into one executable call (≤ compiled batch)
+    pub max_batch: usize,
+    /// how long the batcher waits to fill a batch
+    pub max_wait_ms: u64,
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifact: "base_perf_relu_bid".into(),
+            max_batch: 8,
+            max_wait_ms: 5,
+            workers: 1,
+            seed: 0,
+        }
+    }
+}
+
+fn apply_corpus_key(c: &mut CorpusConfig, key: &str, val: &Json) -> Result<bool> {
+    match key {
+        "n_families" => c.n_families = val.as_usize()?,
+        "n_ood_families" => c.n_ood_families = val.as_usize()?,
+        "sub_rate" => c.sub_rate = val.as_f64()?,
+        "indel_rate" => c.indel_rate = val.as_f64()?,
+        "corpus_seed" => c.seed = val.as_f64()? as u64,
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+impl TrainConfig {
+    pub fn apply_key(&mut self, key: &str, val: &Json) -> Result<()> {
+        match key {
+            "artifact" => self.artifact = val.as_str()?.to_string(),
+            "steps" => self.steps = val.as_usize()?,
+            "eval_every" => self.eval_every = val.as_usize()?,
+            "eval_batches" => self.eval_batches = val.as_usize()?,
+            "log_every" => self.log_every = val.as_usize()?,
+            "seed" => self.seed = val.as_f64()? as u64,
+            "resample_every" => self.resample_every = val.as_usize()?,
+            "checkpoint" => self.checkpoint = Some(val.as_str()?.to_string()),
+            _ => {
+                if !apply_corpus_key(&mut self.corpus, key, val)? {
+                    bail!("unknown train config key '{key}'");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn from_sources(file: Option<&Path>, overrides: &[String]) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::default();
+        if let Some(path) = file {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let j = Json::parse(&text)?;
+            if let Json::Obj(m) = &j {
+                for (k, v) in m {
+                    cfg.apply_key(k, v)?;
+                }
+            } else {
+                bail!("config file must be a JSON object");
+            }
+        }
+        for ov in overrides {
+            let (k, v) = parse_override(ov)?;
+            cfg.apply_key(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+impl ServeConfig {
+    pub fn apply_key(&mut self, key: &str, val: &Json) -> Result<()> {
+        match key {
+            "artifact" => self.artifact = val.as_str()?.to_string(),
+            "max_batch" => self.max_batch = val.as_usize()?,
+            "max_wait_ms" => self.max_wait_ms = val.as_f64()? as u64,
+            "workers" => self.workers = val.as_usize()?,
+            "seed" => self.seed = val.as_f64()? as u64,
+            _ => bail!("unknown serve config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    pub fn from_sources(file: Option<&Path>, overrides: &[String]) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(path) = file {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            if let Json::Obj(m) = Json::parse(&text)? {
+                for (k, v) in &m {
+                    cfg.apply_key(k, v)?;
+                }
+            }
+        }
+        for ov in overrides {
+            let (k, v) = parse_override(ov)?;
+            cfg.apply_key(&k, &v)?;
+        }
+        Ok(cfg)
+    }
+}
+
+/// Parse `key=value` where value is JSON if it parses, else a string.
+pub fn parse_override(s: &str) -> Result<(String, Json)> {
+    let (k, v) = s
+        .split_once('=')
+        .with_context(|| format!("override '{s}' must be key=value"))?;
+    let val = Json::parse(v).unwrap_or_else(|_| Json::Str(v.to_string()));
+    Ok((k.to_string(), val))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0);
+        assert_eq!(c.artifact, "base_perf_relu_bid");
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = TrainConfig::from_sources(
+            None,
+            &["steps=500".into(), "artifact=tiny_relu_bid".into(), "sub_rate=0.3".into()],
+        )
+        .unwrap();
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.artifact, "tiny_relu_bid");
+        assert!((cfg.corpus.sub_rate - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(TrainConfig::from_sources(None, &["bogus=1".into()]).is_err());
+    }
+
+    #[test]
+    fn file_then_override_precedence() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("performer_cfg_test.json");
+        std::fs::write(&p, r#"{"steps": 100, "seed": 7}"#).unwrap();
+        let cfg = TrainConfig::from_sources(Some(&p), &["steps=250".into()]).unwrap();
+        assert_eq!(cfg.steps, 250); // CLI wins
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn serve_config_parses() {
+        let cfg =
+            ServeConfig::from_sources(None, &["max_batch=16".into(), "max_wait_ms=2".into()])
+                .unwrap();
+        assert_eq!(cfg.max_batch, 16);
+        assert_eq!(cfg.max_wait_ms, 2);
+    }
+
+    #[test]
+    fn string_values_without_quotes() {
+        let (k, v) = parse_override("artifact=base_lsh_bid").unwrap();
+        assert_eq!(k, "artifact");
+        assert_eq!(v.as_str().unwrap(), "base_lsh_bid");
+    }
+}

@@ -1,0 +1,181 @@
+//! Dynamic batcher: fuses concurrent fill-mask requests into fixed-shape
+//! executable calls (the compiled artifacts are shape-static, so the
+//! batcher pads to the compiled batch size).
+//!
+//! Policy: block for the first request, then greedily drain the queue up
+//! to `max_batch` or until `max_wait` elapses — the standard
+//! latency/throughput knob in serving systems (vLLM-style).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::protein::vocab::{self, MASK, PAD};
+use crate::runtime::{ArtifactMeta, EngineHandle, HostValue, Role};
+
+use super::metrics::Metrics;
+
+/// A fill-mask request: a token sequence containing MASK tokens.
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<u8>,
+    pub respond: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The response: predictions + probabilities at each masked position.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// (position, predicted_token, probability)
+    pub predictions: Vec<(usize, u8, f32)>,
+    /// full filled sequence
+    pub filled: Vec<u8>,
+    pub latency: Duration,
+}
+
+/// Model state the batcher serves (params/features in artifact order).
+/// Execution goes through the engine actor handle, so this is Send.
+pub struct ModelState {
+    pub engine: EngineHandle,
+    pub artifact: String,
+    pub meta: ArtifactMeta,
+    pub params: Vec<Vec<f32>>,
+    pub features: Vec<Vec<f32>>,
+}
+
+impl ModelState {
+    /// Assemble the fwd input vector for a padded token batch.
+    fn build_inputs(&self, tokens: &[i32]) -> Result<Vec<HostValue>> {
+        let meta = &self.meta;
+        let mut p_it = self.params.iter();
+        let mut f_it = self.features.iter();
+        let mut inputs = Vec::with_capacity(meta.inputs.len());
+        for slot in &meta.inputs {
+            inputs.push(match slot.role {
+                Role::Param => HostValue::F32(p_it.next().unwrap().clone()),
+                Role::Feature => HostValue::F32(f_it.next().unwrap().clone()),
+                Role::Tokens => HostValue::I32(tokens.to_vec()),
+                other => anyhow::bail!("unexpected fwd input role {other:?}"),
+            });
+        }
+        Ok(inputs)
+    }
+}
+
+/// Drain policy output: the requests fused into one batch.
+pub fn collect_batch(
+    rx: &Receiver<Request>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> Option<Vec<Request>> {
+    // block for the first request (queue closed -> shut down)
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + max_wait;
+    let mut batch = vec![first];
+    while batch.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Run one fused batch through the model and answer every request.
+pub fn serve_batch(model: &ModelState, batch: Vec<Request>, metrics: &Metrics) -> Result<()> {
+    let meta = &model.meta;
+    let (b, l) = (meta.config.batch, meta.config.max_len);
+    let vocab_size = meta.outputs[0].shape[2];
+    assert!(batch.len() <= b, "batcher overfilled: {} > {b}", batch.len());
+
+    // pad into the compiled (b, l) token grid
+    let mut tokens = vec![PAD as i32; b * l];
+    for (row, req) in batch.iter().enumerate() {
+        for (col, &t) in req.tokens.iter().take(l).enumerate() {
+            tokens[row * l + col] = t as i32;
+        }
+    }
+
+    let inputs = model.build_inputs(&tokens)?;
+    let outputs = model.engine.exec(&model.artifact, inputs)?;
+    let logits = outputs[0].as_f32()?;
+    metrics.observe_batch(batch.len(), batch.iter().map(|r| r.tokens.len()).sum());
+
+    for (row, req) in batch.into_iter().enumerate() {
+        let mut predictions = Vec::new();
+        let mut filled = req.tokens.clone();
+        for (col, &t) in req.tokens.iter().enumerate().take(l) {
+            if t == MASK {
+                let base = (row * l + col) * vocab_size;
+                let row_logits = &logits[base..base + vocab_size];
+                // softmax argmax over amino-acid tokens only
+                let mx = row_logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0.0f32;
+                for &v in row_logits {
+                    denom += (v - mx).exp();
+                }
+                let (best, best_logit) = row_logits
+                    .iter()
+                    .enumerate()
+                    .skip(vocab::AA_BASE as usize)
+                    .take(vocab::N_AA)
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap();
+                let prob = (best_logit - mx).exp() / denom;
+                predictions.push((col, best as u8, prob));
+                filled[col] = best as u8;
+            }
+        }
+        let latency = req.submitted.elapsed();
+        metrics.observe_latency(latency);
+        // receiver may have hung up; that's fine
+        let _ = req.respond.send(Response { id: req.id, predictions, filled, latency });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collect_batch_respects_max() {
+        let (tx, rx) = channel();
+        for i in 0..5u64 {
+            let (rtx, _rrx) = channel();
+            tx.send(Request { id: i, tokens: vec![MASK], respond: rtx, submitted: Instant::now() })
+                .unwrap();
+        }
+        let batch = collect_batch(&rx, 3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = collect_batch(&rx, 3, Duration::from_millis(1)).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn collect_batch_times_out_quickly() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(Request { id: 0, tokens: vec![MASK], respond: rtx, submitted: Instant::now() })
+            .unwrap();
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn collect_batch_none_when_closed() {
+        let (tx, rx) = channel::<Request>();
+        drop(tx);
+        assert!(collect_batch(&rx, 4, Duration::from_millis(1)).is_none());
+    }
+}

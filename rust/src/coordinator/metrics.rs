@@ -1,0 +1,126 @@
+//! Serving metrics: request counters, latency histogram, batch-size
+//! distribution — what the paper's throughput claims are measured with
+//! on this testbed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Lock-free latency histogram with exponential buckets (µs scale).
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub tokens: AtomicU64,
+    pub errors: AtomicU64,
+    /// bucket i counts latencies in [2^i, 2^{i+1}) microseconds
+    buckets: [AtomicU64; 32],
+    total_latency_us: AtomicU64,
+    batch_size_sum: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            tokens: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            total_latency_us: AtomicU64::new(0),
+            batch_size_sum: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn observe_latency(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let bucket = (63 - us.leading_zeros() as usize).min(31);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
+        self.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_batch(&self, size: usize, tokens: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
+        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        let n = self.requests.load(Ordering::Relaxed).max(1);
+        Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+    }
+
+    /// Approximate latency quantile from the histogram (upper bound of
+    /// the bucket containing the q-quantile).
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1 << 31)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} mean_latency={:?} p50<={:?} p99<={:?} errors={}",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.mean_latency(),
+            self.latency_quantile(0.5),
+            self.latency_quantile(0.99),
+            self.errors.load(Ordering::Relaxed),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accumulates() {
+        let m = Metrics::default();
+        m.observe_latency(Duration::from_micros(100));
+        m.observe_latency(Duration::from_micros(300));
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        let mean = m.mean_latency();
+        assert!(mean >= Duration::from_micros(190) && mean <= Duration::from_micros(210));
+    }
+
+    #[test]
+    fn quantile_ordering() {
+        let m = Metrics::default();
+        for _ in 0..90 {
+            m.observe_latency(Duration::from_micros(10));
+        }
+        for _ in 0..10 {
+            m.observe_latency(Duration::from_micros(10_000));
+        }
+        assert!(m.latency_quantile(0.5) < m.latency_quantile(0.99));
+        assert!(m.latency_quantile(0.99) >= Duration::from_micros(8_000));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let m = Metrics::default();
+        m.observe_batch(4, 512);
+        m.observe_batch(8, 1024);
+        assert_eq!(m.mean_batch_size(), 6.0);
+        assert_eq!(m.tokens.load(Ordering::Relaxed), 1536);
+    }
+}

@@ -1,0 +1,11 @@
+//! L3 serving coordinator: request router, dynamic batcher and metrics
+//! in front of the AOT-compiled Performer executables. Python is never
+//! on this path — requests hit compiled HLO through PJRT directly.
+
+pub mod batcher;
+pub mod metrics;
+pub mod service;
+
+pub use batcher::{Request, Response};
+pub use metrics::Metrics;
+pub use service::Coordinator;

@@ -1,0 +1,185 @@
+//! The serving coordinator: a router in front of per-model worker
+//! threads, all executing through the single PJRT engine actor.
+//!
+//! Architecture (std threads; the registry has no tokio):
+//!
+//!   clients ──submit()──▶ router ──mpsc──▶ worker(model A) ─┐
+//!                                 └─mpsc──▶ worker(model B) ─┼─▶ engine
+//!                                                            │   actor
+//!                                                            └──▶ PJRT
+//!
+//! Each worker runs the dynamic batcher loop: block on first request,
+//! drain up to max_batch within max_wait, pad, execute, respond.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::configx::ServeConfig;
+use crate::runtime::{EngineHandle, Role, TensorFile};
+
+use super::batcher::{collect_batch, serve_batch, ModelState, Request, Response};
+use super::metrics::Metrics;
+
+/// Handle to a running model pool.
+struct Pool {
+    tx: Sender<Request>,
+    metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+/// The coordinator: owns the engine handle and all model pools.
+pub struct Coordinator {
+    engine: EngineHandle,
+    pools: HashMap<String, Pool>,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    pub fn new(engine: EngineHandle) -> Coordinator {
+        Coordinator { engine, pools: HashMap::new(), next_id: AtomicU64::new(1) }
+    }
+
+    /// Start a model pool serving `{artifact}_fwd` with weights from
+    /// `{artifact}_init.bin`, optionally overlaid with a checkpoint.
+    pub fn start_pool(&mut self, cfg: &ServeConfig, checkpoint: Option<&str>) -> Result<()> {
+        let tag = cfg.artifact.clone();
+        let fwd_name = format!("{tag}_fwd");
+        let meta = self.engine.meta(&fwd_name)?;
+        self.engine.warm(&fwd_name)?; // compile before serving traffic
+
+        // load weights: init.bin, then optionally overlay a checkpoint
+        let init = TensorFile::read(
+            &self.engine.artifacts_dir().join(format!("{tag}_init.bin")),
+        )
+        .with_context(|| format!("weights for {tag}"))?;
+        let overlay = match checkpoint {
+            Some(p) => Some(TensorFile::read(std::path::Path::new(p))?),
+            None => None,
+        };
+        let fetch = |prefix: &str, name: &str, elements: usize| -> Result<Vec<f32>> {
+            let key = format!("{prefix}:{name}");
+            let data = overlay
+                .as_ref()
+                .and_then(|tf| tf.get(&key))
+                .or_else(|| init.get(&key))
+                .map(|(_, d)| d.to_vec())
+                .ok_or_else(|| anyhow!("missing weight {key}"))?;
+            anyhow::ensure!(data.len() == elements, "weight {key} wrong size");
+            Ok(data)
+        };
+        let mut params = Vec::new();
+        let mut features = Vec::new();
+        for slot in &meta.inputs {
+            match slot.role {
+                Role::Param => params.push(fetch("param", &slot.name, slot.elements())?),
+                Role::Feature => features.push(fetch("feature", &slot.name, slot.elements())?),
+                _ => {}
+            }
+        }
+
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(std::sync::Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let max_batch = cfg.max_batch.min(meta.config.batch.max(1));
+        let max_wait = Duration::from_millis(cfg.max_wait_ms);
+
+        let state = Arc::new(ModelState {
+            engine: self.engine.clone(),
+            artifact: fwd_name,
+            meta,
+            params,
+            features,
+        });
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let state = state.clone();
+            let metrics = metrics.clone();
+            let tag2 = tag.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-{tag}-{w}"))
+                    .spawn(move || {
+                        worker_loop(rx, state, metrics, max_batch, max_wait, &tag2);
+                    })?,
+            );
+        }
+        self.pools.insert(tag, Pool { tx, metrics, workers });
+        Ok(())
+    }
+
+    /// Submit a fill-mask request; returns the receiver for the response.
+    pub fn submit(&self, model: &str, tokens: Vec<u8>) -> Result<Receiver<Response>> {
+        let pool = self.pools.get(model).ok_or_else(|| anyhow!("no pool '{model}'"))?;
+        let (rtx, rrx) = channel();
+        pool.tx
+            .send(Request {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                tokens,
+                respond: rtx,
+                submitted: Instant::now(),
+            })
+            .map_err(|_| anyhow!("pool '{model}' shut down"))?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait.
+    pub fn fill_mask(&self, model: &str, tokens: Vec<u8>) -> Result<Response> {
+        let rx = self.submit(model, tokens)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped response"))
+    }
+
+    pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
+        self.pools.get(model).map(|p| p.metrics.clone())
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.pools.keys().cloned().collect()
+    }
+
+    /// Shut down all pools and join workers.
+    pub fn shutdown(&mut self) {
+        let pools = std::mem::take(&mut self.pools);
+        for (_, pool) in pools {
+            drop(pool.tx);
+            for w in pool.workers {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    rx: Arc<std::sync::Mutex<Receiver<Request>>>,
+    state: Arc<ModelState>,
+    metrics: Arc<Metrics>,
+    max_batch: usize,
+    max_wait: Duration,
+    tag: &str,
+) {
+    loop {
+        // one worker drains at a time per pool; execution is serialized
+        // on the engine actor anyway on this single-core testbed
+        let batch = {
+            let guard = rx.lock().unwrap();
+            collect_batch(&guard, max_batch, max_wait)
+        };
+        let Some(batch) = batch else { break };
+        if let Err(e) = serve_batch(&state, batch, &metrics) {
+            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            eprintln!("[serve-{tag}] batch failed: {e:#}");
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Attention-matrix reconstruction and approximation-error metrics.
+//!
+//! Powers Fig. 2 (error vs M, iid vs ORF), Fig. 11 (error propagation
+//! through layers), Figs. 7–10 (attention visualization via the one-hot-V
+//! trick described in Appendix C.4) and the empirical Thm. 1 check.
+
+use crate::tensor::Mat;
+
+use super::exact::raw_attention_matrix;
+use super::features::FeatureMap;
+use super::linear::STABILIZER;
+use super::Direction;
+
+/// Exact renormalized attention matrix D⁻¹A (L×L) — what the Transformer
+/// materializes.
+pub fn attention_matrix_exact(q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let mut a = raw_attention_matrix(q, k, dir);
+    let sums = a.row_sums();
+    for i in 0..a.rows {
+        let s = sums[i].max(1e-30);
+        for v in a.row_mut(i) {
+            *v /= s;
+        }
+    }
+    a
+}
+
+/// FAVOR's implied attention matrix, reconstructed via the Appendix C.4
+/// one-hot-V probe: running the mechanism with V° = I returns exactly the
+/// renormalized D̂⁻¹Â row by row. O(L²) — analysis only.
+pub fn attention_matrix_favor(fm: &FeatureMap, q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let qp = fm.apply(q);
+    let kp = fm.apply(k);
+    let l = q.rows;
+    let mut a = qp.matmul(&kp.t());
+    if dir == Direction::Unidirectional {
+        for i in 0..l {
+            for j in i + 1..l {
+                *a.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    let sums = a.row_sums();
+    for i in 0..l {
+        let s = sums[i] + STABILIZER;
+        for v in a.row_mut(i) {
+            *v /= s;
+        }
+    }
+    a
+}
+
+/// FAVOR's *unnormalized* estimate Â = Q'(K')ᵀ of A — the quantity
+/// Theorem 1 bounds in L1 norm.
+pub fn raw_attention_matrix_favor(fm: &FeatureMap, q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let qp = fm.apply(q);
+    let kp = fm.apply(k);
+    let l = q.rows;
+    let mut a = qp.matmul(&kp.t());
+    if dir == Direction::Unidirectional {
+        for i in 0..l {
+            for j in i + 1..l {
+                *a.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    a
+}
+
+/// Mean-squared error between two matrices (Fig. 2's metric).
+pub fn output_error(a: &Mat, b: &Mat) -> f64 {
+    let diff = a.sub(b);
+    let n = diff.data.len() as f64;
+    diff.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / n
+}
+
+/// Entrywise L1 error ||Â − A||₁ normalized by entries (Thm. 1's norm).
+pub fn l1_error(a: &Mat, b: &Mat) -> f64 {
+    a.mean_abs_diff(b)
+}
+
+/// Amino-acid similarity matrix from attention (Vig et al. [50], used for
+/// Fig. 10): S[a][b] = mean attention weight from tokens of type a to
+/// tokens of type b, aggregated over sequences.
+pub struct AaSimilarity {
+    pub counts: Mat,
+    pub weights: Mat,
+}
+
+impl AaSimilarity {
+    pub fn new(vocab: usize) -> Self {
+        AaSimilarity { counts: Mat::zeros(vocab, vocab), weights: Mat::zeros(vocab, vocab) }
+    }
+
+    /// Accumulate one sequence's attention matrix (L×L) with token ids.
+    pub fn accumulate(&mut self, attn: &Mat, tokens: &[usize]) {
+        assert_eq!(attn.rows, tokens.len());
+        for i in 0..attn.rows {
+            for j in 0..attn.cols {
+                let (a, b) = (tokens[i], tokens[j]);
+                *self.weights.at_mut(a, b) += attn.at(i, j);
+                *self.counts.at_mut(a, b) += 1.0;
+            }
+        }
+    }
+
+    /// Normalized similarity matrix (mean attention weight per AA pair),
+    /// symmetrized, with zero diagonal for visualization parity with the
+    /// normalized-BLOSUM presentation of Fig. 10.
+    pub fn finish(&self) -> Mat {
+        let n = self.weights.rows;
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let c = self.counts.at(i, j);
+                if c > 0.0 {
+                    *s.at_mut(i, j) = self.weights.at(i, j) / c;
+                }
+            }
+        }
+        // symmetrize
+        for i in 0..n {
+            for j in 0..i {
+                let m = 0.5 * (s.at(i, j) + s.at(j, i));
+                *s.at_mut(i, j) = m;
+                *s.at_mut(j, i) = m;
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::favor::features::FeatureKind;
+    use crate::linalg::OrfMechanism;
+    use crate::rng::Pcg64;
+
+    fn qk(l: usize, d: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        (
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d).iter().map(|v| v * 0.5).collect()),
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d).iter().map(|v| v * 0.5).collect()),
+        )
+    }
+
+    #[test]
+    fn exact_matrix_rows_sum_to_one() {
+        let (q, k) = qk(16, 8, 0);
+        let a = attention_matrix_exact(&q, &k, Direction::Bidirectional);
+        for i in 0..16 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn favor_matrix_converges_with_m() {
+        let (q, k) = qk(16, 8, 1);
+        let exact = attention_matrix_exact(&q, &k, Direction::Bidirectional);
+        let mut rng = Pcg64::new(2);
+        let err_at = |m: usize, rng: &mut Pcg64| {
+            // average over a few feature draws
+            let mut e = 0.0;
+            for t in 0..5 {
+                let fm = FeatureMap::sample(
+                    FeatureKind::Softmax, m, 8, OrfMechanism::Regular, &mut rng.fork(t));
+                e += output_error(&attention_matrix_favor(&fm, &q, &k, Direction::Bidirectional), &exact);
+            }
+            e / 5.0
+        };
+        let e_small = err_at(8, &mut rng);
+        let e_big = err_at(256, &mut rng);
+        assert!(e_big < e_small, "error must shrink with M: {e_small} -> {e_big}");
+    }
+
+    #[test]
+    fn one_hot_probe_equals_direct_reconstruction() {
+        // Appendix C.4: attention applied to V° = I gives the matrix.
+        let (q, k) = qk(10, 4, 3);
+        let mut rng = Pcg64::new(4);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 4, OrfMechanism::Regular, &mut rng);
+        let direct = attention_matrix_favor(&fm, &q, &k, Direction::Bidirectional);
+        let probe = crate::favor::linear::favor_attention(
+            &fm, &q, &k, &Mat::eye(10), Direction::Bidirectional);
+        assert!(direct.max_abs_diff(&probe) < 1e-4);
+    }
+
+    #[test]
+    fn causal_matrix_is_lower_triangular() {
+        let (q, k) = qk(12, 4, 5);
+        let mut rng = Pcg64::new(6);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 4, OrfMechanism::Regular, &mut rng);
+        let a = attention_matrix_favor(&fm, &q, &k, Direction::Unidirectional);
+        for i in 0..12 {
+            for j in i + 1..12 {
+                assert_eq!(a.at(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn similarity_accumulator_symmetric() {
+        let mut sim = AaSimilarity::new(4);
+        let attn = Mat::from_fn(3, 3, |i, j| ((i + 1) * (j + 1)) as f32 * 0.1);
+        sim.accumulate(&attn, &[0, 1, 2]);
+        sim.accumulate(&attn, &[2, 1, 0]);
+        let s = sim.finish();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert!((s.at(i, j) - s.at(j, i)).abs() < 1e-6);
+            }
+        }
+    }
+}

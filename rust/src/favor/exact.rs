@@ -1,0 +1,132 @@
+//! Exact softmax attention (Eq. 1/2) — the O(L²) baseline every figure
+//! compares against — plus the "identity attention" used for the
+//! "X (OPT)" line of Fig. 1 (attention simply returns V: the maximum
+//! possible speedup any attention replacement could achieve).
+
+use crate::tensor::Mat;
+
+use super::Direction;
+
+/// Att(Q,K,V) = D^{-1} A V with A = exp(QKᵀ/√d); `tril` applied for the
+/// unidirectional case. Numerically-stable row softmax.
+pub fn exact_attention(q: &Mat, k: &Mat, v: &Mat, dir: Direction) -> Mat {
+    let (l, d) = (q.rows, q.cols);
+    assert_eq!(k.rows, l);
+    assert_eq!(v.rows, l);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut a = q.matmul(&k.t());
+    a.scale(scale);
+    if dir == Direction::Unidirectional {
+        for i in 0..l {
+            for j in i + 1..l {
+                *a.at_mut(i, j) = f32::NEG_INFINITY;
+            }
+        }
+    }
+    a.softmax_rows();
+    a.matmul(v)
+}
+
+/// The raw (un-normalized) attention matrix A = exp(QKᵀ/√d), optionally
+/// lower-triangular. Exposed for the approximation-error analyses
+/// (Fig. 2) which measure ||Â − A||.
+pub fn raw_attention_matrix(q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let (l, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut a = q.matmul(&k.t());
+    for val in &mut a.data {
+        *val = (*val * scale).exp();
+    }
+    if dir == Direction::Unidirectional {
+        for i in 0..l {
+            for j in i + 1..l {
+                *a.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    a
+}
+
+/// Identity attention: returns V untouched — Fig. 1's "X (OPT)" line.
+pub fn identity_attention(_q: &Mat, _k: &Mat, v: &Mat, _dir: Direction) -> Mat {
+    v.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn qkv(l: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        (
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d)),
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d)),
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d)),
+        )
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        let (q, k, v) = qkv(12, 4, 0);
+        let out = exact_attention(&q, &k, &v, Direction::Bidirectional);
+        for c in 0..4 {
+            let lo = (0..12).map(|r| v.at(r, c)).fold(f32::INFINITY, f32::min);
+            let hi = (0..12).map(|r| v.at(r, c)).fold(f32::NEG_INFINITY, f32::max);
+            for r in 0..12 {
+                assert!(out.at(r, c) >= lo - 1e-5 && out.at(r, c) <= hi + 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_row_is_v0() {
+        let (q, k, v) = qkv(6, 3, 1);
+        let out = exact_attention(&q, &k, &v, Direction::Unidirectional);
+        for c in 0..3 {
+            assert!((out.at(0, c) - v.at(0, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn causal_prefix_invariance() {
+        let (q, k, mut v) = qkv(10, 4, 2);
+        let before = exact_attention(&q, &k, &v, Direction::Unidirectional);
+        *v.at_mut(9, 0) = 100.0;
+        let after = exact_attention(&q, &k, &v, Direction::Unidirectional);
+        assert!(before.rows_slice(0, 9).max_abs_diff(&after.rows_slice(0, 9)) < 1e-6);
+    }
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // If all q.k products are equal, attention averages V uniformly.
+        let q = Mat::zeros(5, 4);
+        let k = Mat::from_fn(5, 4, |_, _| 1.0);
+        let v = Mat::from_fn(5, 2, |i, _| i as f32);
+        let out = exact_attention(&q, &k, &v, Direction::Bidirectional);
+        for r in 0..5 {
+            assert!((out.at(r, 0) - 2.0).abs() < 1e-5); // mean of 0..4
+        }
+    }
+
+    #[test]
+    fn raw_matrix_positive_and_causal() {
+        let (q, k, _) = qkv(8, 4, 3);
+        let a = raw_attention_matrix(&q, &k, Direction::Unidirectional);
+        for i in 0..8 {
+            for j in 0..8 {
+                if j > i {
+                    assert_eq!(a.at(i, j), 0.0);
+                } else {
+                    assert!(a.at(i, j) > 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identity_returns_v() {
+        let (q, k, v) = qkv(4, 2, 4);
+        assert_eq!(identity_attention(&q, &k, &v, Direction::Bidirectional).data, v.data);
+    }
+}

@@ -1,0 +1,244 @@
+//! Random-feature maps phi: R^d -> R^M (Sec. 2.3).
+//!
+//! Softmax features (Eq. 10 + the D_Q/D_K renormalizers of Eq. 5-6):
+//!   phi'(x) = exp(||x||²/r) · sqrt(2/M) · cos(Wx + b),  r = 2√d,
+//!   W rows ~ N(0, I/√d)  (Gaussian kernel bandwidth σ_B = d^{1/4}),
+//!   so that E[phi'(q)·phi'(k)] = exp(q·k/√d) = A_ij exactly.
+//!
+//! Generalized-attention features (Sec. 2.2, Appendix B.3):
+//!   phi(x) = f(Wx)/√M + ε,  W rows ~ N(0, I), f ∈ {ReLU, sigmoid, ...}.
+
+use crate::linalg::{projection_matrix, OrfMechanism};
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+/// The nonlinearity f in phi(x) = c/sqrt(M) f(Wx + b) (Eq. 9).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// cos features + exp renormalizers: unbiased softmax-attention
+    /// estimator (the paper's "Performer-SOFTMAX").
+    Softmax,
+    /// Generalized attention with the given f (paper default: ReLU).
+    Relu,
+    Sigmoid,
+    Exp,
+    Abs,
+    Gelu,
+    Cos,
+    Tanh,
+    Identity,
+}
+
+impl FeatureKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "softmax" => Self::Softmax,
+            "relu" => Self::Relu,
+            "sigmoid" => Self::Sigmoid,
+            "exp" => Self::Exp,
+            "abs" => Self::Abs,
+            "gelu" => Self::Gelu,
+            "cos" => Self::Cos,
+            "tanh" => Self::Tanh,
+            "identity" => Self::Identity,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Softmax => "softmax",
+            Self::Relu => "relu",
+            Self::Sigmoid => "sigmoid",
+            Self::Exp => "exp",
+            Self::Abs => "abs",
+            Self::Gelu => "gelu",
+            Self::Cos => "cos",
+            Self::Tanh => "tanh",
+            Self::Identity => "identity",
+        }
+    }
+
+    fn apply(&self, t: f32) -> f32 {
+        match self {
+            Self::Softmax | Self::Cos => t.cos(),
+            Self::Relu => t.max(0.0),
+            Self::Sigmoid => 1.0 / (1.0 + (-t).exp()),
+            Self::Exp => t.exp(),
+            Self::Abs => t.abs(),
+            Self::Gelu => 0.5 * t * (1.0 + (0.7978845608 * (t + 0.044715 * t * t * t)).tanh()),
+            Self::Tanh => t.tanh(),
+            Self::Identity => t,
+        }
+    }
+}
+
+/// A sampled feature map: projection W (M×d), bias b (M), and the scaling
+/// conventions for the chosen kind.
+#[derive(Clone, Debug)]
+pub struct FeatureMap {
+    pub kind: FeatureKind,
+    pub w: Mat,
+    pub b: Vec<f32>,
+    pub kernel_eps: f32,
+    d: usize,
+}
+
+impl FeatureMap {
+    /// Sample a feature map. `d` is the head dimension, `m` the number of
+    /// random features M, `mech` the ORF mechanism of Sec. 2.4.
+    pub fn sample(kind: FeatureKind, m: usize, d: usize, mech: OrfMechanism, rng: &mut Pcg64) -> Self {
+        match kind {
+            FeatureKind::Softmax => {
+                let sigma = 1.0 / (d as f32).powf(0.25);
+                let w = projection_matrix(m, d, mech, sigma, true, rng);
+                let b: Vec<f32> =
+                    (0..m).map(|_| rng.uniform_in(0.0, std::f64::consts::TAU) as f32).collect();
+                FeatureMap { kind, w, b, kernel_eps: 0.0, d }
+            }
+            _ => {
+                let w = projection_matrix(m, d, mech, 1.0, true, rng);
+                FeatureMap { kind, w, b: vec![0.0; m], kernel_eps: 1e-3, d }
+            }
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.w.rows
+    }
+
+    /// Construct from raw parts (e.g. weights loaded from a checkpoint);
+    /// w is M×d, b has length M.
+    pub fn from_parts(kind: FeatureKind, w: Mat, b: Vec<f32>, kernel_eps: f32) -> FeatureMap {
+        assert_eq!(w.rows, b.len(), "W rows must match b length");
+        let d = w.cols;
+        FeatureMap { kind, w, b, kernel_eps, d }
+    }
+
+    /// Resample W and b in place (the paper's periodic feature-redrawing
+    /// strategy, Sec. 4.2) keeping kind/M/d fixed.
+    pub fn resample(&mut self, mech: OrfMechanism, rng: &mut Pcg64) {
+        *self = FeatureMap::sample(self.kind, self.m(), self.d, mech, rng);
+    }
+
+    /// phi'(X) for all rows of X (L×d) -> (L×M).
+    pub fn apply(&self, x: &Mat) -> Mat {
+        assert_eq!(x.cols, self.d);
+        let m = self.m();
+        let mut z = x.matmul(&self.w.t()); // (L, M)
+        match self.kind {
+            FeatureKind::Softmax => {
+                let scale = (2.0 / m as f32).sqrt();
+                let r = 2.0 * (self.d as f32).sqrt();
+                for i in 0..x.rows {
+                    let norm_sq: f32 = x.row(i).iter().map(|v| v * v).sum();
+                    let diag = (norm_sq / r).exp();
+                    for j in 0..m {
+                        let v = z.at(i, j) + self.b[j];
+                        *z.at_mut(i, j) = diag * scale * v.cos() + self.kernel_eps;
+                    }
+                }
+            }
+            kind => {
+                let scale = 1.0 / (m as f32).sqrt();
+                for v in &mut z.data {
+                    *v = scale * kind.apply(*v) + self.kernel_eps;
+                }
+            }
+        }
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Softmax features are an unbiased estimator of exp(q·k/√d):
+    /// with many features the Monte-Carlo estimate concentrates.
+    #[test]
+    fn softmax_features_estimate_attention_kernel() {
+        let d = 8;
+        let mut rng = Pcg64::new(0);
+        let q = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.5).collect());
+        let k = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.5).collect());
+        let exact = (crate::tensor::dot(q.row(0), k.row(0)) / (d as f32).sqrt()).exp();
+
+        let mut est = 0.0f64;
+        let trials = 40;
+        for t in 0..trials {
+            let fm = FeatureMap::sample(
+                FeatureKind::Softmax, 512, d, OrfMechanism::Regular, &mut rng.fork(t as u64));
+            let qp = fm.apply(&q);
+            let kp = fm.apply(&k);
+            est += crate::tensor::dot(qp.row(0), kp.row(0)) as f64;
+        }
+        est /= trials as f64;
+        let rel = ((est - exact as f64) / exact as f64).abs();
+        assert!(rel < 0.05, "estimate {est} vs exact {exact} (rel {rel})");
+    }
+
+    #[test]
+    fn orf_lower_variance_than_iid() {
+        // Sec. 3 / Fig. 2: orthogonal features reduce estimator variance.
+        let d = 8;
+        let m = 8;
+        let mut rng = Pcg64::new(42);
+        let q = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.6).collect());
+        let k = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.6).collect());
+        let exact = (crate::tensor::dot(q.row(0), k.row(0)) / (d as f32).sqrt()).exp() as f64;
+
+        let var = |mech: OrfMechanism, rng: &mut Pcg64| -> f64 {
+            let trials = 300;
+            let mut sq = 0.0;
+            for t in 0..trials {
+                let fm = FeatureMap::sample(FeatureKind::Softmax, m, d, mech, &mut rng.fork(t));
+                let e = crate::tensor::dot(fm.apply(&q).row(0), fm.apply(&k).row(0)) as f64;
+                sq += (e - exact) * (e - exact);
+            }
+            sq / trials as f64
+        };
+        let v_iid = var(OrfMechanism::Iid, &mut rng);
+        let v_orf = var(OrfMechanism::Regular, &mut rng);
+        assert!(v_orf < v_iid, "ORF variance {v_orf} should beat iid {v_iid}");
+    }
+
+    #[test]
+    fn relu_features_nonnegative() {
+        let mut rng = Pcg64::new(1);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 8, OrfMechanism::Regular, &mut rng);
+        let x = Mat::from_vec(4, 8, rng.gaussian_vec(32));
+        let phi = fm.apply(&x);
+        assert!(phi.data.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn feature_shapes() {
+        let mut rng = Pcg64::new(2);
+        for kind in [FeatureKind::Softmax, FeatureKind::Relu, FeatureKind::Tanh] {
+            let fm = FeatureMap::sample(kind, 24, 8, OrfMechanism::Iid, &mut rng);
+            let x = Mat::from_vec(5, 8, rng.gaussian_vec(40));
+            let phi = fm.apply(&x);
+            assert_eq!((phi.rows, phi.cols), (5, 24));
+            assert!(phi.data.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn resample_changes_projection() {
+        let mut rng = Pcg64::new(3);
+        let mut fm = FeatureMap::sample(FeatureKind::Relu, 8, 8, OrfMechanism::Regular, &mut rng);
+        let w0 = fm.w.clone();
+        fm.resample(OrfMechanism::Regular, &mut rng);
+        assert!(w0.max_abs_diff(&fm.w) > 1e-3);
+        assert_eq!((fm.w.rows, fm.w.cols), (8, 8));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["softmax", "relu", "sigmoid", "exp", "abs", "gelu", "cos", "tanh", "identity"] {
+            assert_eq!(FeatureKind::parse(name).unwrap().name(), name);
+        }
+        assert!(FeatureKind::parse("nope").is_none());
+    }
+}

@@ -1,0 +1,266 @@
+//! Linear-time FAVOR attention (Algorithm 1).
+//!
+//! Bidirectional (Eq. 13):  D̂⁻¹ (Q′ ((K′)ᵀ C)) with C = [V 1] — the
+//! bracketing is the whole point: never materialize the L×L matrix.
+//!
+//! Unidirectional (Eq. 14): prefix sums over G_j = K′_j C_jᵀ. We use the
+//! paper's Sec. 2.6 streaming aggregation: the running M×(d+1) state is
+//! updated row by row in O(M(d+1)) memory instead of storing the full
+//! L×M×(d+1) tensor G^PS.
+
+use crate::tensor::{axpy, dot, Mat};
+
+use super::features::FeatureMap;
+use super::Direction;
+
+/// Numerical stabilizer added to the denominator (paper Appendix B.2).
+pub const STABILIZER: f32 = 1e-6;
+
+/// Bidirectional FAVOR: qp, kp are the mapped features (L×M), v is (L×d).
+/// Time O(LM(d+1)), space O(M(d+1)) beyond inputs/outputs.
+pub fn favor_bidirectional(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
+    let (l, m) = (qp.rows, qp.cols);
+    let d = v.cols;
+    assert_eq!(kp.rows, l);
+    assert_eq!(kp.cols, m);
+    assert_eq!(v.rows, l);
+
+    // KV = (K')^T C, with the ones-column folded in as an extra column.
+    let mut kv = Mat::zeros(m, d + 1);
+    for j in 0..l {
+        let krow = kp.row(j);
+        let vrow = v.row(j);
+        for (i, &kji) in krow.iter().enumerate() {
+            if kji != 0.0 {
+                let out = &mut kv.data[i * (d + 1)..i * (d + 1) + d];
+                axpy(kji, vrow, out);
+                kv.data[i * (d + 1) + d] += kji;
+            }
+        }
+    }
+
+    let mut out = Mat::zeros(l, d);
+    let mut buf = vec![0.0f32; d + 1];
+    for i in 0..l {
+        buf.fill(0.0);
+        let qrow = qp.row(i);
+        for (j, &qij) in qrow.iter().enumerate() {
+            if qij != 0.0 {
+                axpy(qij, &kv.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
+            }
+        }
+        let denom = buf[d] + STABILIZER;
+        let orow = out.row_mut(i);
+        for (o, &b) in orow.iter_mut().zip(&buf[..d]) {
+            *o = b / denom;
+        }
+    }
+    out
+}
+
+/// Unidirectional FAVOR with the streaming prefix-sum state (Alg. 1,
+/// Sec. 2.5.1). Row i's output uses the running sum of K'_j C_j^T for
+/// j <= i — causality by construction, no L×L matrix.
+pub fn favor_unidirectional(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
+    let (l, m) = (qp.rows, qp.cols);
+    let d = v.cols;
+    assert_eq!(kp.rows, l);
+    assert_eq!(v.rows, l);
+
+    let mut state = Mat::zeros(m, d + 1); // G^PS running value
+    let mut out = Mat::zeros(l, d);
+    let mut buf = vec![0.0f32; d + 1];
+    for i in 0..l {
+        // state += K'_i C_i^T
+        let krow = kp.row(i);
+        let vrow = v.row(i);
+        for (j, &kij) in krow.iter().enumerate() {
+            if kij != 0.0 {
+                let srow = &mut state.data[j * (d + 1)..(j + 1) * (d + 1)];
+                axpy(kij, vrow, &mut srow[..d]);
+                srow[d] += kij;
+            }
+        }
+        // out_i = (Q'_i · G^PS_i) renormalized
+        buf.fill(0.0);
+        let qrow = qp.row(i);
+        for (j, &qij) in qrow.iter().enumerate() {
+            if qij != 0.0 {
+                axpy(qij, &state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
+            }
+        }
+        let denom = buf[d] + STABILIZER;
+        for (o, &b) in out.row_mut(i).iter_mut().zip(&buf[..d]) {
+            *o = b / denom;
+        }
+    }
+    out
+}
+
+/// Full FAVOR attention: map q/k through the feature map, then apply the
+/// direction-appropriate linear attention.
+pub fn favor_attention(fm: &FeatureMap, q: &Mat, k: &Mat, v: &Mat, dir: Direction) -> Mat {
+    let qp = fm.apply(q);
+    let kp = fm.apply(k);
+    match dir {
+        Direction::Bidirectional => favor_bidirectional(&qp, &kp, v),
+        Direction::Unidirectional => favor_unidirectional(&qp, &kp, v),
+    }
+}
+
+/// O(L²) reference for the same estimator: materialize Â = Q'(K')ᵀ and
+/// renormalize. Used by tests and by the attention-matrix analyses.
+pub fn favor_attention_quadratic(qp: &Mat, kp: &Mat, v: &Mat, dir: Direction) -> Mat {
+    let l = qp.rows;
+    let mut a = qp.matmul(&kp.t());
+    if dir == Direction::Unidirectional {
+        for i in 0..l {
+            for j in i + 1..l {
+                *a.at_mut(i, j) = 0.0;
+            }
+        }
+    }
+    let sums = a.row_sums();
+    let mut out = a.matmul(v);
+    for i in 0..l {
+        let denom = sums[i] + STABILIZER;
+        for x in out.row_mut(i) {
+            *x /= denom;
+        }
+    }
+    out
+}
+
+/// Convexity diagnostic: the rows of the implied attention matrix after
+/// renormalization sum to ~1 when features are nonnegative (ReLU/softmax
+/// kinds), so outputs are convex combinations of value vectors.
+pub fn row_mass(qp: &Mat, kp: &Mat) -> Vec<f32> {
+    let ksum: Vec<f32> = {
+        let mut s = vec![0.0f32; kp.cols];
+        for i in 0..kp.rows {
+            axpy(1.0, kp.row(i), &mut s);
+        }
+        s
+    };
+    (0..qp.rows).map(|i| dot(qp.row(i), &ksum)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::favor::features::{FeatureKind, FeatureMap};
+    use crate::linalg::OrfMechanism;
+    use crate::rng::Pcg64;
+
+    fn random_qkv(l: usize, d: usize, seed: u64, scale: f32) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let gen = |rng: &mut Pcg64| {
+            Mat::from_vec(l, d, rng.gaussian_vec(l * d).iter().map(|v| v * scale).collect())
+        };
+        (gen(&mut rng), gen(&mut rng), gen(&mut rng))
+    }
+
+    #[test]
+    fn linear_matches_quadratic_bidirectional() {
+        let (q, k, v) = random_qkv(32, 8, 0, 0.5);
+        let mut rng = Pcg64::new(1);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 8, OrfMechanism::Regular, &mut rng);
+        let qp = fm.apply(&q);
+        let kp = fm.apply(&k);
+        let lin = favor_bidirectional(&qp, &kp, &v);
+        let quad = favor_attention_quadratic(&qp, &kp, &v, Direction::Bidirectional);
+        assert!(lin.max_abs_diff(&quad) < 1e-4, "diff {}", lin.max_abs_diff(&quad));
+    }
+
+    #[test]
+    fn linear_matches_quadratic_unidirectional() {
+        let (q, k, v) = random_qkv(32, 8, 2, 0.5);
+        let mut rng = Pcg64::new(3);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 8, OrfMechanism::Regular, &mut rng);
+        let qp = fm.apply(&q);
+        let kp = fm.apply(&k);
+        let lin = favor_unidirectional(&qp, &kp, &v);
+        let quad = favor_attention_quadratic(&qp, &kp, &v, Direction::Unidirectional);
+        assert!(lin.max_abs_diff(&quad) < 1e-4, "diff {}", lin.max_abs_diff(&quad));
+    }
+
+    #[test]
+    fn unidirectional_is_causal() {
+        // Changing a future key/value must not change past outputs.
+        let (q, k, v) = random_qkv(16, 4, 4, 0.5);
+        let mut rng = Pcg64::new(5);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 8, 4, OrfMechanism::Regular, &mut rng);
+        let out1 = favor_attention(&fm, &q, &k, &v, Direction::Unidirectional);
+
+        let mut k2 = k.clone();
+        let mut v2 = v.clone();
+        for c in 0..4 {
+            *k2.at_mut(15, c) = 9.0;
+            *v2.at_mut(15, c) = -9.0;
+        }
+        let out2 = favor_attention(&fm, &q, &k2, &v2, Direction::Unidirectional);
+        let head1 = out1.rows_slice(0, 15);
+        let head2 = out2.rows_slice(0, 15);
+        assert!(head1.max_abs_diff(&head2) < 1e-6);
+        // ...but the last row must change
+        assert!(
+            out1.rows_slice(15, 16).max_abs_diff(&out2.rows_slice(15, 16)) > 1e-4
+        );
+    }
+
+    #[test]
+    fn bidirectional_approximates_softmax_attention() {
+        // The headline claim: FAVOR-softmax estimates exact attention.
+        let (q, k, v) = random_qkv(24, 8, 6, 0.4);
+        let exact = crate::favor::exact::exact_attention(&q, &k, &v, Direction::Bidirectional);
+        let mut rng = Pcg64::new(7);
+        let fm = FeatureMap::sample(FeatureKind::Softmax, 1024, 8, OrfMechanism::Regular, &mut rng);
+        let approx = favor_attention(&fm, &q, &k, &v, Direction::Bidirectional);
+        let err = exact.mean_abs_diff(&approx);
+        assert!(err < 0.05, "approximation error {err}");
+    }
+
+    #[test]
+    fn unidirectional_approximates_causal_softmax() {
+        let (q, k, v) = random_qkv(24, 8, 8, 0.4);
+        let exact = crate::favor::exact::exact_attention(&q, &k, &v, Direction::Unidirectional);
+        let mut rng = Pcg64::new(9);
+        let fm = FeatureMap::sample(FeatureKind::Softmax, 1024, 8, OrfMechanism::Regular, &mut rng);
+        let approx = favor_attention(&fm, &q, &k, &v, Direction::Unidirectional);
+        let err = exact.mean_abs_diff(&approx);
+        assert!(err < 0.08, "approximation error {err}");
+    }
+
+    #[test]
+    fn outputs_in_value_convex_hull_for_nonneg_features() {
+        // With ReLU features every output coordinate lies within the range
+        // spanned by the value vectors (convex combination property).
+        let (q, k, v) = random_qkv(20, 6, 10, 0.8);
+        let mut rng = Pcg64::new(11);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 32, 6, OrfMechanism::Regular, &mut rng);
+        let out = favor_attention(&fm, &q, &k, &v, Direction::Bidirectional);
+        for c in 0..6 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..20 {
+                lo = lo.min(v.at(r, c));
+                hi = hi.max(v.at(r, c));
+            }
+            for r in 0..20 {
+                let x = out.at(r, c);
+                assert!(x >= lo - 1e-3 && x <= hi + 1e-3, "out[{r},{c}]={x} outside [{lo},{hi}]");
+            }
+        }
+    }
+
+    #[test]
+    fn first_token_attends_only_to_itself_causally() {
+        let (q, k, v) = random_qkv(8, 4, 12, 0.5);
+        let mut rng = Pcg64::new(13);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 64, 4, OrfMechanism::Regular, &mut rng);
+        let out = favor_attention(&fm, &q, &k, &v, Direction::Unidirectional);
+        // row 0 denominator only includes k_0 -> output == v_0 exactly
+        for c in 0..4 {
+            assert!((out.at(0, c) - v.at(0, c)).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Reformer-style LSH attention baseline [29].
+//!
+//! The paper's sparse-attention comparator (Fig. 4): shared-QK attention
+//! restricted to hash buckets found by random-rotation LSH, chunked with
+//! one-chunk lookback. This is a faithful *simplified* Reformer: single
+//! hash round, stable bucket sort, no reversible layers (those affect
+//! training memory, not the attention pattern).
+
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+use super::Direction;
+
+#[derive(Clone, Debug)]
+pub struct LshConfig {
+    pub n_buckets: usize,
+    pub chunk: usize,
+}
+
+impl LshConfig {
+    pub fn for_len(l: usize) -> Self {
+        let chunk = (l / 8).max(8).min(64);
+        LshConfig { n_buckets: (l / chunk).max(2), chunk }
+    }
+}
+
+/// Rotation-LSH bucket ids: argmax([xR, -xR]) per row (Andoni et al.,
+/// as used by Reformer).
+pub fn lsh_buckets(x: &Mat, rot: &Mat) -> Vec<usize> {
+    let half = rot.cols;
+    let proj = x.matmul(rot);
+    (0..x.rows)
+        .map(|i| {
+            let row = proj.row(i);
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            for (j, &v) in row.iter().enumerate() {
+                if v > best_v {
+                    best_v = v;
+                    best = j;
+                }
+                if -v > best_v {
+                    best_v = -v;
+                    best = j + half;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// LSH attention over a single head. `q` doubles as the shared-QK tensor
+/// (rows are L2-normalized internally, per Reformer).
+pub fn lsh_attention(
+    q: &Mat,
+    v: &Mat,
+    dir: Direction,
+    cfg: &LshConfig,
+    rng: &mut Pcg64,
+) -> Mat {
+    let (l, d) = (q.rows, q.cols);
+    assert_eq!(v.rows, l);
+    assert!(l % cfg.chunk == 0, "L={l} must be divisible by chunk={}", cfg.chunk);
+
+    // normalize shared QK
+    let mut qk = q.clone();
+    for i in 0..l {
+        let n = qk.row(i).iter().map(|x| x * x).sum::<f32>().sqrt() + 1e-6;
+        for x in qk.row_mut(i) {
+            *x /= n;
+        }
+    }
+
+    let rot = Mat::from_vec(d, cfg.n_buckets / 2 + 1, rng.gaussian_vec(d * (cfg.n_buckets / 2 + 1)));
+    let buckets = lsh_buckets(&qk, &rot);
+
+    // stable sort by bucket
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by_key(|&i| (buckets[i], i));
+
+    let n_chunks = l / cfg.chunk;
+    let scale = (d as f32).sqrt();
+    let mut out = Mat::zeros(l, d);
+
+    for c in 0..n_chunks {
+        let prev = if c == 0 { n_chunks - 1 } else { c - 1 };
+        // key set = own chunk + previous chunk (Reformer lookback)
+        let keys: Vec<usize> = (0..cfg.chunk)
+            .map(|i| order[c * cfg.chunk + i])
+            .chain((0..cfg.chunk).map(|i| order[prev * cfg.chunk + i]))
+            .collect();
+        for qi in 0..cfg.chunk {
+            let pos_q = order[c * cfg.chunk + qi];
+            let qrow = qk.row(pos_q);
+            let mut scores: Vec<f32> = keys
+                .iter()
+                .map(|&pos_k| {
+                    if pos_k == pos_q {
+                        return -1e5; // no self-attention (shared-QK convention)
+                    }
+                    if dir == Direction::Unidirectional && pos_k > pos_q {
+                        return f32::NEG_INFINITY;
+                    }
+                    crate::tensor::dot(qrow, qk.row(pos_k)) * scale
+                })
+                .collect();
+            // stable softmax; if everything is masked fall back to self
+            let mx = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            if mx == f32::NEG_INFINITY {
+                out.row_mut(pos_q).copy_from_slice(v.row(pos_q));
+                continue;
+            }
+            let mut sum = 0.0;
+            for s in &mut scores {
+                *s = (*s - mx).exp();
+                sum += *s;
+            }
+            let orow = out.row_mut(pos_q);
+            for (ki, &pos_k) in keys.iter().enumerate() {
+                let wgt = scores[ki] / sum;
+                if wgt > 0.0 {
+                    crate::tensor::axpy(wgt, v.row(pos_k), orow);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_in_range() {
+        let mut rng = Pcg64::new(0);
+        let x = Mat::from_vec(32, 8, rng.gaussian_vec(256));
+        let rot = Mat::from_vec(8, 4, rng.gaussian_vec(32));
+        let b = lsh_buckets(&x, &rot);
+        assert!(b.iter().all(|&v| v < 8));
+    }
+
+    #[test]
+    fn similar_vectors_share_buckets() {
+        let mut rng = Pcg64::new(1);
+        let base = rng.gaussian_vec(8);
+        let mut data = Vec::new();
+        // 4 near-duplicates of base, 4 near-duplicates of -base
+        for s in [1.0f32, -1.0] {
+            for _ in 0..4 {
+                for (j, &b) in base.iter().enumerate() {
+                    data.push(s * b + 0.01 * rng.gaussian() as f32 * (j as f32 * 0.0 + 1.0));
+                }
+            }
+        }
+        let x = Mat::from_vec(8, 8, data);
+        let rot = Mat::from_vec(8, 8, rng.gaussian_vec(64));
+        let b = lsh_buckets(&x, &rot);
+        assert_eq!(b[0], b[1]);
+        assert_eq!(b[4], b[5]);
+        assert_ne!(b[0], b[4], "opposite vectors must hash apart");
+    }
+
+    #[test]
+    fn output_shape_and_finite() {
+        let mut rng = Pcg64::new(2);
+        let q = Mat::from_vec(64, 8, rng.gaussian_vec(512));
+        let v = Mat::from_vec(64, 8, rng.gaussian_vec(512));
+        let cfg = LshConfig { n_buckets: 4, chunk: 16 };
+        let out = lsh_attention(&q, &v, Direction::Bidirectional, &cfg, &mut rng);
+        assert_eq!((out.rows, out.cols), (64, 8));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causal_never_uses_future_values() {
+        let mut rng = Pcg64::new(3);
+        let q = Mat::from_vec(32, 4, rng.gaussian_vec(128));
+        let mut v = Mat::from_vec(32, 4, rng.gaussian_vec(128));
+        let mut r1 = Pcg64::new(99);
+        let out1 = lsh_attention(&q, &v, Direction::Unidirectional,
+                                 &LshConfig { n_buckets: 4, chunk: 8 }, &mut r1);
+        for c in 0..4 {
+            *v.at_mut(31, c) = 50.0;
+        }
+        let mut r2 = Pcg64::new(99);
+        let out2 = lsh_attention(&q, &v, Direction::Unidirectional,
+                                 &LshConfig { n_buckets: 4, chunk: 8 }, &mut r2);
+        assert!(out1.rows_slice(0, 31).max_abs_diff(&out2.rows_slice(0, 31)) < 1e-6);
+    }
+
+    #[test]
+    fn config_divides_length() {
+        for l in [64usize, 128, 512, 1024] {
+            let cfg = LshConfig::for_len(l);
+            assert_eq!(l % cfg.chunk, 0);
+            assert!(cfg.n_buckets >= 2);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! FAVOR — Fast Attention Via Orthogonal Random features (the paper's
+//! contribution), implemented natively for the coordinator's analysis
+//! path and for the baselines the evaluation section compares against.
+//!
+//! The AOT/Pallas implementation of the same math lives in
+//! `python/compile/kernels/favor.py` and is what the model artifacts run;
+//! this native version powers the L3-side experiments that need direct
+//! access to attention matrices (Figs. 2, 7–11, Thm. 1 checks) and the
+//! scaling benches (Fig. 1/14/15 native series). The two implementations
+//! are cross-checked in `rust/tests/favor_cross.rs` against golden values
+//! produced by the python oracle.
+
+pub mod analysis;
+pub mod exact;
+pub mod features;
+pub mod linear;
+pub mod lsh;
+
+pub use analysis::{attention_matrix_exact, attention_matrix_favor, l1_error, output_error, raw_attention_matrix_favor};
+pub use exact::{exact_attention, identity_attention};
+pub use features::{FeatureKind, FeatureMap};
+pub use linear::{favor_attention, favor_bidirectional, favor_unidirectional};
+pub use lsh::{lsh_attention, LshConfig};
+
+/// Direction of the attention mechanism (Eq. 1 vs Eq. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Bidirectional,
+    Unidirectional,
+}

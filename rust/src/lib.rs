@@ -1,0 +1,28 @@
+//! # Performer: linearly scalable long-context Transformers for proteins
+//!
+//! A three-layer reproduction of *"Masked Language Modeling for Proteins
+//! via Linearly Scalable Long-Context Transformers"* (Choromanski et al.,
+//! 2020) — the Performer architecture and its FAVOR attention mechanism.
+//!
+//! * **L1** (`python/compile/kernels/`): Pallas kernels for the FAVOR
+//!   feature maps and linear-attention contractions.
+//! * **L2** (`python/compile/model.py`): the JAX Performer/Transformer
+//!   protein language model, AOT-lowered to HLO text.
+//! * **L3** (this crate): the coordinator — PJRT runtime, training
+//!   driver, serving router/batcher, synthetic protein data pipeline,
+//!   plus a native FAVOR implementation for analysis and benchmarking.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for measured reproductions of every table/figure.
+
+pub mod benchlib;
+pub mod configx;
+pub mod coordinator;
+pub mod favor;
+pub mod jsonx;
+pub mod linalg;
+pub mod protein;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod train;

@@ -1,0 +1,319 @@
+//! Linear-algebra substrate for orthogonal random features (Sec. 2.4).
+//!
+//! Three ORF mechanisms from the paper, plus the iid baseline:
+//!   * R-ORF — Gaussian orthogonal matrices via modified Gram–Schmidt,
+//!     rows rescaled by chi_d norms so marginals stay N(0, I) [56].
+//!   * H-ORF — SORF-style products H·D of normalized Walsh–Hadamard
+//!     transforms and random sign diagonals (O(M log d) apply cost) [13].
+//!   * G-ORF — products of random Givens rotations [11].
+
+use crate::rng::Pcg64;
+use crate::tensor::Mat;
+
+/// Orthogonalize the rows of `a` in place (modified Gram–Schmidt).
+/// Returns false if a row collapses to ~zero (numerically dependent).
+pub fn gram_schmidt_rows(a: &mut Mat) -> bool {
+    let (n, d) = (a.rows, a.cols);
+    assert!(n <= d, "cannot orthonormalize {n} rows in R^{d}");
+    for i in 0..n {
+        let orig_norm = a.row(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+        for j in 0..i {
+            let proj = crate::tensor::dot(a.row(i), a.row(j));
+            let rowj = a.row(j).to_vec();
+            for (v, w) in a.row_mut(i).iter_mut().zip(&rowj) {
+                *v -= proj * w;
+            }
+        }
+        let norm = a.row(i).iter().map(|v| v * v).sum::<f32>().sqrt();
+        // relative tolerance: detects numerically dependent rows
+        if norm < 1e-5 * (orig_norm + 1e-30) {
+            return false;
+        }
+        for v in a.row_mut(i) {
+            *v /= norm;
+        }
+    }
+    true
+}
+
+/// In-place fast Walsh–Hadamard transform over a power-of-two slice,
+/// normalized so the implied matrix is orthonormal.
+pub fn fwht(x: &mut [f32]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT needs power-of-two length");
+    let mut h = 1;
+    while h < n {
+        for i in (0..n).step_by(h * 2) {
+            for j in i..i + h {
+                let (a, b) = (x[j], x[j + h]);
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+        }
+        h *= 2;
+    }
+    let scale = 1.0 / (n as f32).sqrt();
+    for v in x {
+        *v *= scale;
+    }
+}
+
+/// Apply a random Givens rotation sequence (indices + angles) to rows.
+#[derive(Clone, Debug)]
+pub struct GivensSeq {
+    pub rotations: Vec<(usize, usize, f32)>, // (i, j, theta)
+    pub dim: usize,
+}
+
+impl GivensSeq {
+    pub fn random(dim: usize, count: usize, rng: &mut Pcg64) -> Self {
+        let mut rotations = Vec::with_capacity(count);
+        for _ in 0..count {
+            let i = rng.below(dim);
+            let mut j = rng.below(dim - 1);
+            if j >= i {
+                j += 1;
+            }
+            rotations.push((i, j, rng.uniform_in(0.0, std::f64::consts::TAU) as f32));
+        }
+        GivensSeq { rotations, dim }
+    }
+
+    /// Dense matrix form (product of all rotations applied to I).
+    pub fn to_mat(&self) -> Mat {
+        let mut m = Mat::eye(self.dim);
+        for &(i, j, theta) in &self.rotations {
+            let (c, s) = (theta.cos(), theta.sin());
+            for col in 0..self.dim {
+                let (vi, vj) = (m.at(i, col), m.at(j, col));
+                *m.at_mut(i, col) = c * vi - s * vj;
+                *m.at_mut(j, col) = s * vi + c * vj;
+            }
+        }
+        m
+    }
+}
+
+/// Which projection-matrix mechanism to use for FAVOR features.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrfMechanism {
+    Iid,
+    Regular,  // R-ORF
+    Hadamard, // H-ORF
+    Givens,   // G-ORF
+}
+
+impl OrfMechanism {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "iid" => OrfMechanism::Iid,
+            "r-orf" | "regular" => OrfMechanism::Regular,
+            "h-orf" | "hadamard" => OrfMechanism::Hadamard,
+            "g-orf" | "givens" => OrfMechanism::Givens,
+            _ => return None,
+        })
+    }
+}
+
+/// One orthogonal d×d block for the given mechanism.
+fn orthogonal_block(d: usize, mech: OrfMechanism, rng: &mut Pcg64) -> Mat {
+    match mech {
+        OrfMechanism::Iid => unreachable!("iid has no orthogonal block"),
+        OrfMechanism::Regular => loop {
+            let mut g = Mat::from_vec(d, d, rng.gaussian_vec(d * d));
+            if gram_schmidt_rows(&mut g) {
+                return g;
+            }
+        },
+        OrfMechanism::Hadamard => {
+            assert!(d.is_power_of_two(), "H-ORF needs power-of-two d, got {d}");
+            // (HD)^3: three rounds of sign-flip + Hadamard
+            let mut m = Mat::eye(d);
+            for _ in 0..3 {
+                let signs: Vec<f32> = (0..d)
+                    .map(|_| if rng.next_u64() & 1 == 0 { 1.0 } else { -1.0 })
+                    .collect();
+                for col in 0..d {
+                    let mut column: Vec<f32> =
+                        (0..d).map(|r| m.at(r, col) * signs[r]).collect();
+                    fwht(&mut column);
+                    for r in 0..d {
+                        *m.at_mut(r, col) = column[r];
+                    }
+                }
+            }
+            m
+        }
+        OrfMechanism::Givens => {
+            let count = d * (usize::BITS - d.leading_zeros()) as usize; // d log2 d
+            GivensSeq::random(d, count.max(d), rng).to_mat()
+        }
+    }
+}
+
+/// W ∈ R^{M×d} with rows marginally ~ N(0, sigma² I_d). Orthogonal
+/// mechanisms draw independent d×d blocks (block-local orthogonality, as
+/// in [56]); `chi_norms` rescales rows by chi_d-distributed norms so row
+/// marginals match the iid Gaussian case exactly.
+pub fn projection_matrix(
+    m: usize,
+    d: usize,
+    mech: OrfMechanism,
+    sigma: f32,
+    chi_norms: bool,
+    rng: &mut Pcg64,
+) -> Mat {
+    let mut w = Mat::zeros(m, d);
+    match mech {
+        OrfMechanism::Iid => {
+            w.data = rng.gaussian_vec(m * d);
+        }
+        _ => {
+            let mut filled = 0;
+            while filled < m {
+                let block = orthogonal_block(d, mech, rng);
+                let take = (m - filled).min(d);
+                for r in 0..take {
+                    let norm = if chi_norms {
+                        rng.gaussian_vec(d).iter().map(|v| v * v).sum::<f32>().sqrt()
+                    } else {
+                        (d as f32).sqrt()
+                    };
+                    for c in 0..d {
+                        *w.at_mut(filled + r, c) = block.at(r, c) * norm;
+                    }
+                }
+                filled += take;
+            }
+        }
+    }
+    w.scale(sigma);
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_rows_orthogonal(w: &Mat, tol: f32) {
+        for i in 0..w.rows.min(w.cols) {
+            for j in 0..i {
+                let d = crate::tensor::dot(w.row(i), w.row(j));
+                let ni = crate::tensor::dot(w.row(i), w.row(i)).sqrt();
+                let nj = crate::tensor::dot(w.row(j), w.row(j)).sqrt();
+                assert!(
+                    (d / (ni * nj)).abs() < tol,
+                    "rows {i},{j} not orthogonal: cos={}",
+                    d / (ni * nj)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormalizes() {
+        let mut rng = Pcg64::new(0);
+        let mut a = Mat::from_vec(6, 8, rng.gaussian_vec(48));
+        assert!(gram_schmidt_rows(&mut a));
+        assert_rows_orthogonal(&a, 1e-5);
+        for i in 0..6 {
+            let n = crate::tensor::dot(a.row(i), a.row(i));
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_detects_dependence() {
+        let mut a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 2.0, 4.0, 6.0]);
+        assert!(!gram_schmidt_rows(&mut a));
+    }
+
+    #[test]
+    fn fwht_is_orthonormal_involution() {
+        let mut rng = Pcg64::new(1);
+        let x = rng.gaussian_vec(16);
+        let mut y = x.clone();
+        fwht(&mut y);
+        // norm preserved
+        let nx: f32 = x.iter().map(|v| v * v).sum();
+        let ny: f32 = y.iter().map(|v| v * v).sum();
+        assert!((nx - ny).abs() / nx < 1e-5);
+        // H^2 = I (normalized Hadamard is an involution)
+        fwht(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn givens_product_is_orthogonal() {
+        let mut rng = Pcg64::new(2);
+        let g = GivensSeq::random(8, 24, &mut rng).to_mat();
+        assert_rows_orthogonal(&g, 1e-5);
+    }
+
+    #[test]
+    fn rorf_blocks_orthogonal() {
+        let mut rng = Pcg64::new(3);
+        let w = projection_matrix(8, 8, OrfMechanism::Regular, 1.0, false, &mut rng);
+        assert_rows_orthogonal(&w, 1e-4);
+    }
+
+    #[test]
+    fn horf_blocks_orthogonal() {
+        let mut rng = Pcg64::new(4);
+        let w = projection_matrix(8, 8, OrfMechanism::Hadamard, 1.0, false, &mut rng);
+        assert_rows_orthogonal(&w, 1e-4);
+    }
+
+    #[test]
+    fn gorf_blocks_orthogonal() {
+        let mut rng = Pcg64::new(5);
+        let w = projection_matrix(8, 8, OrfMechanism::Givens, 1.0, false, &mut rng);
+        assert_rows_orthogonal(&w, 1e-4);
+    }
+
+    #[test]
+    fn iid_marginals_gaussian() {
+        let mut rng = Pcg64::new(6);
+        let w = projection_matrix(256, 16, OrfMechanism::Iid, 2.0, true, &mut rng);
+        let mean: f32 = w.data.iter().sum::<f32>() / w.data.len() as f32;
+        let var: f32 =
+            w.data.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / w.data.len() as f32;
+        assert!(mean.abs() < 0.1);
+        assert!((var - 4.0).abs() < 0.4, "var {var}");
+    }
+
+    #[test]
+    fn chi_norm_rows_match_gaussian_row_norms() {
+        // E[||row||^2] = sigma^2 * d for both iid and chi-rescaled ORF rows
+        let mut rng = Pcg64::new(7);
+        let d = 16;
+        let w = projection_matrix(512, d, OrfMechanism::Regular, 1.0, true, &mut rng);
+        let mean_sq: f32 = (0..w.rows)
+            .map(|i| crate::tensor::dot(w.row(i), w.row(i)))
+            .sum::<f32>()
+            / w.rows as f32;
+        assert!((mean_sq - d as f32).abs() < 2.0, "mean row norm^2 {mean_sq}");
+    }
+
+    #[test]
+    fn blocks_cover_m_greater_than_d() {
+        let mut rng = Pcg64::new(8);
+        let w = projection_matrix(20, 8, OrfMechanism::Regular, 1.0, true, &mut rng);
+        assert_eq!((w.rows, w.cols), (20, 8));
+        // rows within each block of 8 are orthogonal
+        for blk in 0..2 {
+            for i in 0..8 {
+                for j in 0..i {
+                    let a = blk * 8 + i;
+                    let b = blk * 8 + j;
+                    let cosv = crate::tensor::dot(w.row(a), w.row(b))
+                        / (crate::tensor::dot(w.row(a), w.row(a)).sqrt()
+                            * crate::tensor::dot(w.row(b), w.row(b)).sqrt());
+                    assert!(cosv.abs() < 1e-4);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! BLOSUM62 substitution matrix — the reference amino-acid similarity
+//! structure Fig. 10 compares trained-attention similarity against
+//! (following Vig et al. [50]).
+
+use super::vocab::{aa_token, AA_BASE, N_STANDARD_AA};
+use crate::tensor::Mat;
+
+/// Standard one-letter order used by the raw BLOSUM62 table below.
+const BLOSUM_ORDER: [char; 20] = [
+    'A', 'R', 'N', 'D', 'C', 'Q', 'E', 'G', 'H', 'I', 'L', 'K', 'M', 'F',
+    'P', 'S', 'T', 'W', 'Y', 'V',
+];
+
+/// BLOSUM62 scores (half-bit units), row-major in BLOSUM_ORDER.
+#[rustfmt::skip]
+const BLOSUM62: [[i8; 20]; 20] = [
+    [ 4,-1,-2,-2, 0,-1,-1, 0,-2,-1,-1,-1,-1,-2,-1, 1, 0,-3,-2, 0],
+    [-1, 5, 0,-2,-3, 1, 0,-2, 0,-3,-2, 2,-1,-3,-2,-1,-1,-3,-2,-3],
+    [-2, 0, 6, 1,-3, 0, 0, 0, 1,-3,-3, 0,-2,-3,-2, 1, 0,-4,-2,-3],
+    [-2,-2, 1, 6,-3, 0, 2,-1,-1,-3,-4,-1,-3,-3,-1, 0,-1,-4,-3,-3],
+    [ 0,-3,-3,-3, 9,-3,-4,-3,-3,-1,-1,-3,-1,-2,-3,-1,-1,-2,-2,-1],
+    [-1, 1, 0, 0,-3, 5, 2,-2, 0,-3,-2, 1, 0,-3,-1, 0,-1,-2,-1,-2],
+    [-1, 0, 0, 2,-4, 2, 5,-2, 0,-3,-3, 1,-2,-3,-1, 0,-1,-3,-2,-2],
+    [ 0,-2, 0,-1,-3,-2,-2, 6,-2,-4,-4,-2,-3,-3,-2, 0,-2,-2,-3,-3],
+    [-2, 0, 1,-1,-3, 0, 0,-2, 8,-3,-3,-1,-2,-1,-2,-1,-2,-2, 2,-3],
+    [-1,-3,-3,-3,-1,-3,-3,-4,-3, 4, 2,-3, 1, 0,-3,-2,-1,-3,-1, 3],
+    [-1,-2,-3,-4,-1,-2,-3,-4,-3, 2, 4,-2, 2, 0,-3,-2,-1,-2,-1, 1],
+    [-1, 2, 0,-1,-3, 1, 1,-2,-1,-3,-2, 5,-1,-3,-1, 0,-1,-3,-2,-2],
+    [-1,-1,-2,-3,-1, 0,-2,-3,-2, 1, 2,-1, 5, 0,-2,-1,-1,-1,-1, 1],
+    [-2,-3,-3,-3,-2,-3,-3,-3,-1, 0, 0,-3, 0, 6,-4,-2,-2, 1, 3,-1],
+    [-1,-2,-2,-1,-3,-1,-1,-2,-2,-3,-3,-1,-2,-4, 7,-1,-1,-4,-3,-2],
+    [ 1,-1, 1, 0,-1, 0, 0, 0,-1,-2,-2, 0,-1,-2,-1, 4, 1,-3,-2,-2],
+    [ 0,-1, 0,-1,-1,-1,-1,-2,-2,-1,-1,-1,-1,-2,-1, 1, 5,-2,-2, 0],
+    [-3,-3,-4,-4,-2,-2,-3,-2,-2,-3,-2,-3,-1, 1,-4,-3,-2,11, 2,-3],
+    [-2,-2,-2,-3,-2,-1,-2,-3, 2,-1,-1,-2,-1, 3,-3,-2,-2, 2, 7,-2],
+    [ 0,-3,-3,-3,-1,-2,-2,-3,-3, 3, 1,-2, 1,-1,-2,-2, 0,-3,-2, 4],
+];
+
+/// BLOSUM62 as a matrix indexed by *standard-AA index* (token − AA_BASE),
+/// min-max normalized to [0, 1] off-diagonal (the "normalized BLOSUM"
+/// presentation of Fig. 10).
+pub fn normalized_blosum() -> Mat {
+    let mut m = Mat::zeros(N_STANDARD_AA, N_STANDARD_AA);
+    // map BLOSUM order -> token index order
+    let idx: Vec<usize> = BLOSUM_ORDER
+        .iter()
+        .map(|&c| (aa_token(c).unwrap() - AA_BASE) as usize)
+        .collect();
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for i in 0..20 {
+        for j in 0..20 {
+            if i != j {
+                lo = lo.min(BLOSUM62[i][j] as f32);
+                hi = hi.max(BLOSUM62[i][j] as f32);
+            }
+        }
+    }
+    for i in 0..20 {
+        for j in 0..20 {
+            let v = (BLOSUM62[i][j] as f32 - lo) / (hi - lo);
+            *m.at_mut(idx[i], idx[j]) = v;
+        }
+    }
+    m
+}
+
+/// Pearson correlation between the off-diagonal entries of two AA
+/// similarity matrices (the quantitative form of Fig. 10's comparison).
+pub fn offdiag_correlation(a: &Mat, b: &Mat) -> f64 {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for i in 0..a.rows {
+        for j in 0..a.cols {
+            if i != j {
+                xs.push(a.at(i, j) as f64);
+                ys.push(b.at(i, j) as f64);
+            }
+        }
+    }
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    for (x, y) in xs.iter().zip(&ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx) * (x - mx);
+        vy += (y - my) * (y - my);
+    }
+    cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blosum_symmetric() {
+        let m = normalized_blosum();
+        for i in 0..20 {
+            for j in 0..20 {
+                assert!((m.at(i, j) - m.at(j, i)).abs() < 1e-6, "asym at {i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_range() {
+        let m = normalized_blosum();
+        for i in 0..20 {
+            for j in 0..20 {
+                if i != j {
+                    assert!(m.at(i, j) >= 0.0 && m.at(i, j) <= 1.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn known_similar_pairs_score_high() {
+        // Fig. 10 calls out (D, E) and (F, Y) as highly similar pairs.
+        let m = normalized_blosum();
+        let t = |c| (aa_token(c).unwrap() - AA_BASE) as usize;
+        let de = m.at(t('D'), t('E'));
+        let fy = m.at(t('F'), t('Y'));
+        let dw = m.at(t('D'), t('W'));
+        assert!(de > dw, "D-E ({de}) should beat D-W ({dw})");
+        assert!(fy > dw, "F-Y ({fy}) should beat D-W ({dw})");
+    }
+
+    #[test]
+    fn correlation_of_matrix_with_itself_is_one() {
+        let m = normalized_blosum();
+        assert!((offdiag_correlation(&m, &m) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlation_with_noise_is_low() {
+        let m = normalized_blosum();
+        let mut rng = crate::rng::Pcg64::new(0);
+        let noise = Mat::from_vec(20, 20, rng.gaussian_vec(400));
+        assert!(offdiag_correlation(&m, &noise).abs() < 0.3);
+    }
+}

@@ -1,0 +1,261 @@
+//! Synthetic Pfam-style protein corpus (DESIGN.md §Substitutions).
+//!
+//! The paper trains on TrEMBL (105M sequences). We cannot ship TrEMBL, so
+//! we build a generator that preserves the *task structure* the paper's
+//! experiments exercise:
+//!
+//!   * family structure — each sequence is a noisy copy of one of K
+//!     family consensus sequences (substitutions, indels), so a masked
+//!     token is recoverable from long-range family context, and models
+//!     with better global attention should score better (Fig. 4's axis);
+//!   * empirical residue distribution — consensus residues are drawn
+//!     from the TrEMBL amino-acid frequencies (Fig. 6's histogram);
+//!   * length distribution — log-normal matched to Table 1's statistics
+//!     (median 289, mean ≈ 353);
+//!   * OOD split — held-out families, mirroring the held-out-Pfam
+//!     protocol of Appendix C.1.
+
+use crate::rng::Pcg64;
+
+use super::vocab::{self, aa_weights, AA_BASE};
+
+/// One protein family: a consensus sequence + mutation parameters.
+#[derive(Clone, Debug)]
+pub struct Family {
+    pub id: usize,
+    pub consensus: Vec<u8>,
+    /// per-position substitution probability
+    pub sub_rate: f64,
+    /// insertion/deletion probability per position
+    pub indel_rate: f64,
+}
+
+/// Corpus generation parameters.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub n_families: usize,
+    pub n_ood_families: usize,
+    /// log-normal length parameters — defaults match Table 1
+    pub len_mu: f64,
+    pub len_sigma: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+    pub sub_rate: f64,
+    pub indel_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_families: 60,
+            n_ood_families: 12,
+            // exp(mu) = median = 289; sigma chosen so mean ~= 353
+            len_mu: 289f64.ln(),
+            len_sigma: 0.63,
+            min_len: 8,
+            max_len: 2048,
+            sub_rate: 0.15,
+            indel_rate: 0.02,
+            seed: 0,
+        }
+    }
+}
+
+/// A generated corpus: IID families (train/valid/test) + OOD families.
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    pub families: Vec<Family>,
+    pub ood_families: Vec<Family>,
+    aa_w: Vec<f64>,
+}
+
+impl Corpus {
+    pub fn generate(cfg: CorpusConfig) -> Self {
+        let mut rng = Pcg64::new(cfg.seed);
+        let aa_w = aa_weights();
+        let mk_family = |id: usize, rng: &mut Pcg64| {
+            let len = sample_length(cfg.len_mu, cfg.len_sigma, cfg.min_len, cfg.max_len, rng);
+            let consensus: Vec<u8> =
+                (0..len).map(|_| AA_BASE + rng.categorical(&aa_w) as u8).collect();
+            Family { id, consensus, sub_rate: cfg.sub_rate, indel_rate: cfg.indel_rate }
+        };
+        let families: Vec<Family> =
+            (0..cfg.n_families).map(|i| mk_family(i, &mut rng)).collect();
+        let ood_families: Vec<Family> = (0..cfg.n_ood_families)
+            .map(|i| mk_family(cfg.n_families + i, &mut rng))
+            .collect();
+        Corpus { cfg, families, ood_families, aa_w }
+    }
+
+    /// Sample one sequence from a family: substitutions + indels.
+    pub fn sample_from_family(&self, fam: &Family, rng: &mut Pcg64) -> Vec<u8> {
+        let mut seq = Vec::with_capacity(fam.consensus.len() + 8);
+        for &aa in &fam.consensus {
+            let r = rng.uniform();
+            if r < fam.indel_rate / 2.0 {
+                continue; // deletion
+            }
+            if r < fam.indel_rate {
+                // insertion of a random residue, then the original
+                seq.push(AA_BASE + rng.categorical(&self.aa_w) as u8);
+            }
+            if rng.uniform() < fam.sub_rate {
+                seq.push(AA_BASE + rng.categorical(&self.aa_w) as u8);
+            } else {
+                seq.push(aa);
+            }
+        }
+        if seq.is_empty() {
+            seq.push(fam.consensus[0]);
+        }
+        seq
+    }
+
+    /// Sample a sequence from the IID pool (train/valid/test share
+    /// families; the split differs by RNG stream).
+    pub fn sample_iid(&self, rng: &mut Pcg64) -> (usize, Vec<u8>) {
+        let f = rng.below(self.families.len());
+        (f, self.sample_from_family(&self.families[f], rng))
+    }
+
+    /// Sample a sequence from the held-out (OOD) families.
+    pub fn sample_ood(&self, rng: &mut Pcg64) -> (usize, Vec<u8>) {
+        let f = rng.below(self.ood_families.len());
+        (self.ood_families[f].id, self.sample_from_family(&self.ood_families[f], rng))
+    }
+
+    /// Fixed-length window: BOS + sequence clipped/padded to `l` tokens
+    /// (the paper clips single sequences to L=1024; Appendix C.1).
+    pub fn window(&self, seq: &[u8], l: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(l);
+        out.push(vocab::BOS);
+        out.extend(seq.iter().take(l.saturating_sub(2)));
+        out.push(vocab::EOS);
+        while out.len() < l {
+            out.push(vocab::PAD);
+        }
+        out.truncate(l);
+        out
+    }
+
+    /// Concatenated long-context stream (Appendix C.1's L=8192 task):
+    /// proteins joined by EOS, chopped into non-overlapping windows.
+    pub fn concat_stream(&self, l: usize, count: usize, rng: &mut Pcg64) -> Vec<Vec<u8>> {
+        let mut windows = Vec::with_capacity(count);
+        let mut buf: Vec<u8> = Vec::with_capacity(l * 2);
+        while windows.len() < count {
+            let (_, seq) = self.sample_iid(rng);
+            buf.extend_from_slice(&seq);
+            buf.push(vocab::EOS);
+            while buf.len() >= l && windows.len() < count {
+                windows.push(buf[..l].to_vec());
+                buf.drain(..l);
+            }
+        }
+        windows
+    }
+}
+
+fn sample_length(mu: f64, sigma: f64, lo: usize, hi: usize, rng: &mut Pcg64) -> usize {
+    let z = rng.gaussian();
+    ((mu + sigma * z).exp() as usize).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::vocab::N_AA;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusConfig { n_families: 10, n_ood_families: 3, ..Default::default() })
+    }
+
+    #[test]
+    fn family_ids_disjoint() {
+        let c = corpus();
+        let iid: Vec<usize> = c.families.iter().map(|f| f.id).collect();
+        let ood: Vec<usize> = c.ood_families.iter().map(|f| f.id).collect();
+        assert!(iid.iter().all(|i| !ood.contains(i)));
+    }
+
+    #[test]
+    fn sequences_are_aa_tokens() {
+        let c = corpus();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..20 {
+            let (_, s) = c.sample_iid(&mut rng);
+            assert!(!s.is_empty());
+            assert!(s.iter().all(|&t| t >= AA_BASE && (t as usize) < AA_BASE as usize + N_AA));
+        }
+    }
+
+    #[test]
+    fn family_members_similar_but_not_identical() {
+        // indels off: positional comparison is only meaningful without
+        // alignment shifts (with indels the family signal is still there
+        // but needs an aligner to expose)
+        let c = Corpus::generate(CorpusConfig {
+            n_families: 10,
+            indel_rate: 0.0,
+            ..Default::default()
+        });
+        let mut rng = Pcg64::new(2);
+        let fam = &c.families[0];
+        let a = c.sample_from_family(fam, &mut rng);
+        let b = c.sample_from_family(fam, &mut rng);
+        // compare against the consensus over the shared prefix length
+        let n = a.len().min(fam.consensus.len());
+        let matches = (0..n).filter(|&i| a[i] == fam.consensus[i]).count();
+        assert!(matches as f64 / n as f64 > 0.5, "family signal should survive noise");
+        assert_ne!(a, b, "independent samples should differ");
+    }
+
+    #[test]
+    fn window_has_bos_eos_pad() {
+        let c = corpus();
+        let w = c.window(&[10, 11, 12], 8);
+        assert_eq!(w.len(), 8);
+        assert_eq!(w[0], vocab::BOS);
+        assert_eq!(w[4], vocab::EOS);
+        assert!(w[5..].iter().all(|&t| t == vocab::PAD));
+    }
+
+    #[test]
+    fn window_clips_long_sequences() {
+        let c = corpus();
+        let seq: Vec<u8> = (0..100).map(|_| AA_BASE).collect();
+        let w = c.window(&seq, 16);
+        assert_eq!(w.len(), 16);
+        assert_eq!(w[0], vocab::BOS);
+    }
+
+    #[test]
+    fn concat_windows_exact_length() {
+        let c = corpus();
+        let mut rng = Pcg64::new(3);
+        let ws = c.concat_stream(128, 5, &mut rng);
+        assert_eq!(ws.len(), 5);
+        assert!(ws.iter().all(|w| w.len() == 128));
+        // concatenated stream must contain separators
+        assert!(ws.iter().any(|w| w.contains(&vocab::EOS)));
+    }
+
+    #[test]
+    fn lengths_roughly_lognormal() {
+        let cfg = CorpusConfig::default();
+        let c = Corpus::generate(cfg);
+        let lens: Vec<usize> = c.families.iter().map(|f| f.consensus.len()).collect();
+        let mut sorted = lens.clone();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2] as f64;
+        assert!(median > 150.0 && median < 550.0, "median {median}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Corpus::generate(CorpusConfig { seed: 9, ..Default::default() });
+        let b = Corpus::generate(CorpusConfig { seed: 9, ..Default::default() });
+        assert_eq!(a.families[0].consensus, b.families[0].consensus);
+    }
+}

@@ -1,0 +1,255 @@
+//! Task construction: BERT-style masking for the bidirectional MLM and
+//! shifted next-token targets for the unidirectional LM (Appendix C.3's
+//! two evaluation protocols).
+
+use crate::rng::Pcg64;
+
+use super::vocab::{self, AA_BASE, MASK, N_AA, PAD};
+
+/// A ready-to-execute batch: row-major (b, l) i32 tokens/targets and f32
+/// weights (1.0 where the loss counts).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub b: usize,
+    pub l: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub weights: Vec<f32>,
+}
+
+impl Batch {
+    pub fn new(b: usize, l: usize) -> Self {
+        Batch {
+            b,
+            l,
+            tokens: vec![PAD as i32; b * l],
+            targets: vec![PAD as i32; b * l],
+            weights: vec![0.0; b * l],
+        }
+    }
+
+    pub fn masked_fraction(&self) -> f64 {
+        let nz = self.weights.iter().filter(|&&w| w > 0.0).count();
+        nz as f64 / self.weights.len() as f64
+    }
+}
+
+/// Masking hyperparameters — the paper's protocol: "mask each token with
+/// 15% probability", BERT's 80/10/10 replacement split.
+#[derive(Clone, Copy, Debug)]
+pub struct MaskPolicy {
+    pub rate: f64,
+    pub mask_prob: f64,
+    pub random_prob: f64,
+}
+
+impl Default for MaskPolicy {
+    fn default() -> Self {
+        MaskPolicy { rate: 0.15, mask_prob: 0.8, random_prob: 0.1 }
+    }
+}
+
+/// Build a bidirectional-MLM batch from fixed-length windows.
+pub fn mlm_batch(windows: &[Vec<u8>], l: usize, policy: MaskPolicy, rng: &mut Pcg64) -> Batch {
+    let b = windows.len();
+    let mut batch = Batch::new(b, l);
+    for (row, win) in windows.iter().enumerate() {
+        assert_eq!(win.len(), l, "window length mismatch");
+        for (col, &tok) in win.iter().enumerate() {
+            let idx = row * l + col;
+            batch.targets[idx] = tok as i32;
+            let is_aa = tok >= AA_BASE;
+            if is_aa && rng.uniform() < policy.rate {
+                batch.weights[idx] = 1.0;
+                let r = rng.uniform();
+                batch.tokens[idx] = if r < policy.mask_prob {
+                    MASK as i32
+                } else if r < policy.mask_prob + policy.random_prob {
+                    (AA_BASE + rng.below(N_AA) as u8) as i32
+                } else {
+                    tok as i32 // keep
+                };
+            } else {
+                batch.tokens[idx] = tok as i32;
+            }
+        }
+    }
+    batch
+}
+
+/// Build a unidirectional (next-token) batch: target[i] = token[i+1],
+/// weights 0 on padding and on the final position.
+pub fn lm_batch(windows: &[Vec<u8>], l: usize) -> Batch {
+    let b = windows.len();
+    let mut batch = Batch::new(b, l);
+    for (row, win) in windows.iter().enumerate() {
+        assert_eq!(win.len(), l);
+        for col in 0..l {
+            let idx = row * l + col;
+            batch.tokens[idx] = win[col] as i32;
+            if col + 1 < l {
+                batch.targets[idx] = win[col + 1] as i32;
+                let next_is_real = win[col + 1] != PAD;
+                let cur_is_real = win[col] != PAD;
+                batch.weights[idx] = if next_is_real && cur_is_real { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    batch
+}
+
+/// The empirical baseline of Appendix C.2: predict every masked token
+/// from the training-set frequency distribution. Returns (accuracy,
+/// perplexity) over the batch's weighted positions.
+pub fn empirical_baseline(batch: &Batch, freqs: &[f64]) -> (f64, f64) {
+    // freqs indexed by token id, normalized internally
+    let total: f64 = freqs.iter().sum();
+    let argmax = freqs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    let mut correct = 0.0;
+    let mut nll = 0.0;
+    let mut n = 0.0;
+    for i in 0..batch.targets.len() {
+        if batch.weights[i] > 0.0 {
+            let t = batch.targets[i] as usize;
+            let p = (freqs.get(t).copied().unwrap_or(0.0) / total).max(1e-12);
+            nll -= p.ln();
+            if t == argmax {
+                correct += 1.0;
+            }
+            n += 1.0;
+        }
+    }
+    if n == 0.0 {
+        return (0.0, f64::INFINITY);
+    }
+    (correct / n, (nll / n).exp())
+}
+
+/// Training-set token frequencies over the full vocab (for the empirical
+/// baseline and the Fig. 6 histogram).
+pub fn token_frequencies(windows: &[Vec<u8>]) -> Vec<f64> {
+    let mut f = vec![0.0f64; vocab::VOCAB_SIZE];
+    for w in windows {
+        for &t in w {
+            f[t as usize] += 1.0;
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::generator::{Corpus, CorpusConfig};
+
+    fn windows(n: usize, l: usize) -> Vec<Vec<u8>> {
+        let c = Corpus::generate(CorpusConfig { n_families: 5, ..Default::default() });
+        let mut rng = Pcg64::new(7);
+        (0..n).map(|_| {
+            let (_, s) = c.sample_iid(&mut rng);
+            c.window(&s, l)
+        }).collect()
+    }
+
+    #[test]
+    fn mlm_masks_about_15_percent_of_aas() {
+        let ws = windows(16, 128);
+        let mut rng = Pcg64::new(0);
+        let b = mlm_batch(&ws, 128, MaskPolicy::default(), &mut rng);
+        // fraction relative to AA positions, not all positions
+        let n_aa: usize = ws.iter().flatten().filter(|&&t| t >= AA_BASE).count();
+        let n_masked = b.weights.iter().filter(|&&w| w > 0.0).count();
+        let frac = n_masked as f64 / n_aa as f64;
+        assert!((frac - 0.15).abs() < 0.04, "masked fraction {frac}");
+    }
+
+    #[test]
+    fn mlm_targets_are_original_tokens() {
+        let ws = windows(4, 64);
+        let mut rng = Pcg64::new(1);
+        let b = mlm_batch(&ws, 64, MaskPolicy::default(), &mut rng);
+        for (row, w) in ws.iter().enumerate() {
+            for col in 0..64 {
+                assert_eq!(b.targets[row * 64 + col], w[col] as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn mlm_unmasked_positions_unchanged() {
+        let ws = windows(4, 64);
+        let mut rng = Pcg64::new(2);
+        let b = mlm_batch(&ws, 64, MaskPolicy::default(), &mut rng);
+        for (row, w) in ws.iter().enumerate() {
+            for col in 0..64 {
+                let i = row * 64 + col;
+                if b.weights[i] == 0.0 {
+                    assert_eq!(b.tokens[i], w[col] as i32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mlm_never_masks_specials() {
+        let ws = windows(8, 64);
+        let mut rng = Pcg64::new(3);
+        let b = mlm_batch(&ws, 64, MaskPolicy::default(), &mut rng);
+        for (row, w) in ws.iter().enumerate() {
+            for col in 0..64 {
+                if w[col] < AA_BASE {
+                    assert_eq!(b.weights[row * 64 + col], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lm_targets_shifted() {
+        let ws = windows(2, 32);
+        let b = lm_batch(&ws, 32);
+        for (row, w) in ws.iter().enumerate() {
+            for col in 0..31 {
+                assert_eq!(b.targets[row * 32 + col], w[col + 1] as i32);
+            }
+            assert_eq!(b.weights[row * 32 + 31], 0.0, "last position has no target");
+        }
+    }
+
+    #[test]
+    fn lm_padding_unweighted() {
+        let c = Corpus::generate(CorpusConfig::default());
+        let w = c.window(&[10, 11], 16); // mostly padding
+        let b = lm_batch(&[w.clone()], 16);
+        for col in 0..16 {
+            if w[col] == PAD {
+                assert_eq!(b.weights[col], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_baseline_beats_uniform_on_skewed_data() {
+        let ws = windows(32, 128);
+        let freqs = token_frequencies(&ws);
+        let mut rng = Pcg64::new(4);
+        let b = mlm_batch(&ws, 128, MaskPolicy::default(), &mut rng);
+        let (acc, ppl) = empirical_baseline(&b, &freqs);
+        // paper: ~9.9% accuracy, ~17.8 perplexity for the empirical baseline
+        assert!(acc > 0.04 && acc < 0.25, "acc {acc}");
+        assert!(ppl > 5.0 && ppl < 30.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn frequencies_count_all_tokens() {
+        let ws = windows(4, 32);
+        let f = token_frequencies(&ws);
+        let total: f64 = f.iter().sum();
+        assert_eq!(total as usize, 4 * 32);
+    }
+}

@@ -1,0 +1,13 @@
+//! Protein data substrate: vocabulary, synthetic Pfam-style corpus,
+//! masking/next-token task construction, dataset statistics (Table 1,
+//! Fig. 6) and the BLOSUM reference for Fig. 10.
+
+pub mod blosum;
+pub mod generator;
+pub mod masking;
+pub mod stats;
+pub mod vocab;
+
+pub use generator::{Corpus, CorpusConfig, Family};
+pub use masking::{empirical_baseline, lm_batch, mlm_batch, token_frequencies, Batch, MaskPolicy};
+pub use stats::{aa_histogram, length_stats, LengthStats};

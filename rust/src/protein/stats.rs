@@ -1,0 +1,134 @@
+//! Dataset statistics — regenerates Table 1 (length statistics per split)
+//! and the Fig. 6 amino-acid histogram.
+
+use super::vocab::{aa_class, token_letter, AA_BASE, N_STANDARD_AA};
+
+/// Length summary statistics in the exact columns of Table 1.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LengthStats {
+    pub count: usize,
+    pub min: usize,
+    pub max: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub median: f64,
+}
+
+pub fn length_stats(lengths: &[usize]) -> LengthStats {
+    assert!(!lengths.is_empty());
+    let count = lengths.len();
+    let min = *lengths.iter().min().unwrap();
+    let max = *lengths.iter().max().unwrap();
+    let mean = lengths.iter().map(|&l| l as f64).sum::<f64>() / count as f64;
+    let var = lengths.iter().map(|&l| (l as f64 - mean).powi(2)).sum::<f64>() / count as f64;
+    let mut sorted = lengths.to_vec();
+    sorted.sort_unstable();
+    let median = if count % 2 == 0 {
+        (sorted[count / 2 - 1] + sorted[count / 2]) as f64 / 2.0
+    } else {
+        sorted[count / 2] as f64
+    };
+    LengthStats { count, min, max, mean, std: var.sqrt(), median }
+}
+
+impl LengthStats {
+    /// A Table-1-style row: Count | Min | Max | Mean | STD | Median.
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "| {:<10} | {:>9} | {:>5} | {:>6} | {:>8.2} | {:>8.2} | {:>8.2} |",
+            name, self.count, self.min, self.max, self.mean, self.std, self.median
+        )
+    }
+}
+
+/// Standard-AA frequency histogram (Fig. 6): (letter, class, fraction).
+pub fn aa_histogram(freqs: &[f64]) -> Vec<(char, u8, f64)> {
+    let total: f64 = (0..N_STANDARD_AA).map(|i| freqs[AA_BASE as usize + i]).sum();
+    (0..N_STANDARD_AA)
+        .map(|i| {
+            let tok = AA_BASE + i as u8;
+            let letter = token_letter(tok);
+            (letter, aa_class(letter), freqs[tok as usize] / total.max(1.0))
+        })
+        .collect()
+}
+
+/// ASCII bar chart of the histogram, sorted by frequency (how Fig. 6 is
+/// rendered in text form by `xp fig6`).
+pub fn render_histogram(hist: &[(char, u8, f64)]) -> String {
+    let class_names = ["hydrophobic", "polar", "acidic", "basic", "special"];
+    let mut rows: Vec<_> = hist.to_vec();
+    rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    let mut out = String::new();
+    for (letter, class, frac) in rows {
+        let bar = "#".repeat((frac * 400.0) as usize);
+        out.push_str(&format!(
+            "{letter}  {:>5.2}%  {:<12} {bar}\n",
+            frac * 100.0,
+            class_names[class as usize]
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::generator::{Corpus, CorpusConfig};
+    use crate::protein::masking::token_frequencies;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn stats_of_known_values() {
+        let s = length_stats(&[1, 2, 3, 4, 100]);
+        assert_eq!(s.count, 5);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 100);
+        assert_eq!(s.median, 3.0);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn median_even_count() {
+        let s = length_stats(&[1, 2, 3, 4]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn corpus_stats_resemble_table1_shape() {
+        // Scaled-down corpus should reproduce the *shape*: median < mean
+        // (right-skewed log-normal), std of the same order as the mean.
+        let c = Corpus::generate(CorpusConfig::default());
+        let mut rng = Pcg64::new(0);
+        let lens: Vec<usize> = (0..2000).map(|_| c.sample_iid(&mut rng).1.len()).collect();
+        let s = length_stats(&lens);
+        assert!(s.median < s.mean, "log-normal is right-skewed");
+        assert!(s.std > 0.3 * s.mean && s.std < 3.0 * s.mean);
+    }
+
+    #[test]
+    fn histogram_sums_to_one() {
+        let c = Corpus::generate(CorpusConfig::default());
+        let mut rng = Pcg64::new(1);
+        let ws: Vec<Vec<u8>> = (0..200).map(|_| c.window(&c.sample_iid(&mut rng).1, 128)).collect();
+        let h = aa_histogram(&token_frequencies(&ws));
+        let total: f64 = h.iter().map(|(_, _, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        // leucine should be among the most frequent (TrEMBL empirical)
+        let leu = h.iter().find(|(c, _, _)| *c == 'L').unwrap().2;
+        let trp = h.iter().find(|(c, _, _)| *c == 'W').unwrap().2;
+        assert!(leu > trp);
+    }
+
+    #[test]
+    fn render_contains_all_letters() {
+        let c = Corpus::generate(CorpusConfig::default());
+        let mut rng = Pcg64::new(2);
+        let ws: Vec<Vec<u8>> = (0..50).map(|_| c.window(&c.sample_iid(&mut rng).1, 128)).collect();
+        let h = aa_histogram(&token_frequencies(&ws));
+        let txt = render_histogram(&h);
+        for ch in ['A', 'L', 'W', 'Y'] {
+            assert!(txt.contains(ch), "missing {ch} in histogram");
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Amino-acid vocabulary: 20 standard + 5 anomalous residues [15] plus
+//! the special tokens the MLM/LM tasks need. Token ids are stable — the
+//! AOT models are compiled against vocab_size = 30.
+
+/// Special tokens.
+pub const PAD: u8 = 0;
+pub const MASK: u8 = 1;
+pub const BOS: u8 = 2;
+pub const EOS: u8 = 3; // also the protein separator in concatenated mode
+
+/// First amino-acid token id.
+pub const AA_BASE: u8 = 4;
+
+/// The 20 standard amino acids, in the conventional alphabetical
+/// one-letter order, followed by the 5 anomalous ones (B, O, U, X, Z).
+pub const AA_LETTERS: [char; 25] = [
+    'A', 'C', 'D', 'E', 'F', 'G', 'H', 'I', 'K', 'L', 'M', 'N', 'P', 'Q', 'R',
+    'S', 'T', 'V', 'W', 'Y', 'B', 'O', 'U', 'X', 'Z',
+];
+
+pub const N_STANDARD_AA: usize = 20;
+pub const N_AA: usize = 25;
+pub const VOCAB_SIZE: usize = AA_BASE as usize + N_AA + 1; // 30 (one reserved)
+
+/// Empirical amino-acid frequencies (%) in TrEMBL, matching the UniProt
+/// statistics page referenced by Appendix C.2 (standard AAs; anomalous
+/// residues get a tiny epsilon mass).
+pub const TREMBL_FREQ: [(char, f64); 20] = [
+    ('A', 9.07), ('C', 1.28), ('D', 5.45), ('E', 6.17), ('F', 3.90),
+    ('G', 7.27), ('H', 2.22), ('I', 5.55), ('K', 4.92), ('L', 9.89),
+    ('M', 2.38), ('N', 3.88), ('P', 4.86), ('Q', 3.80), ('R', 5.77),
+    ('S', 6.75), ('T', 5.54), ('V', 6.87), ('W', 1.30), ('Y', 2.91),
+];
+
+/// Physicochemical class per standard AA (for the Fig. 6 class-coloured
+/// histogram): 0=hydrophobic, 1=polar, 2=acidic, 3=basic, 4=special.
+pub fn aa_class(letter: char) -> u8 {
+    match letter {
+        'A' | 'I' | 'L' | 'M' | 'F' | 'V' | 'W' | 'Y' => 0,
+        'N' | 'Q' | 'S' | 'T' => 1,
+        'D' | 'E' => 2,
+        'R' | 'H' | 'K' => 3,
+        _ => 4, // C, G, P + anomalous
+    }
+}
+
+/// Token id for an amino-acid letter.
+pub fn aa_token(letter: char) -> Option<u8> {
+    AA_LETTERS.iter().position(|&c| c == letter).map(|i| AA_BASE + i as u8)
+}
+
+/// Letter for a token id (special tokens map to punctuation).
+pub fn token_letter(tok: u8) -> char {
+    match tok {
+        PAD => '.',
+        MASK => '_',
+        BOS => '^',
+        EOS => '$',
+        t if (t as usize) < AA_BASE as usize + N_AA => {
+            AA_LETTERS[(t - AA_BASE) as usize]
+        }
+        _ => '?',
+    }
+}
+
+/// Unnormalized sampling weights over all 25 AA tokens (empirical TrEMBL
+/// frequencies for the standard 20, epsilon for the anomalous 5).
+pub fn aa_weights() -> Vec<f64> {
+    let mut w = vec![0.02; N_AA]; // anomalous epsilon
+    for &(letter, pct) in &TREMBL_FREQ {
+        let idx = AA_LETTERS.iter().position(|&c| c == letter).unwrap();
+        w[idx] = pct;
+    }
+    w
+}
+
+/// Encode a letter string into token ids (skips unknown characters).
+pub fn encode(seq: &str) -> Vec<u8> {
+    seq.chars().filter_map(aa_token).collect()
+}
+
+/// Decode token ids into a letter string.
+pub fn decode(toks: &[u8]) -> String {
+    toks.iter().map(|&t| token_letter(t)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_size_matches_model() {
+        assert_eq!(VOCAB_SIZE, 30);
+    }
+
+    #[test]
+    fn aa_tokens_distinct_and_in_range() {
+        let mut seen = std::collections::HashSet::new();
+        for &c in &AA_LETTERS {
+            let t = aa_token(c).unwrap();
+            assert!(t >= AA_BASE && (t as usize) < VOCAB_SIZE);
+            assert!(seen.insert(t));
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = "MKVLAW";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn weights_cover_all_aas_and_favor_leucine() {
+        let w = aa_weights();
+        assert_eq!(w.len(), N_AA);
+        let leu = AA_LETTERS.iter().position(|&c| c == 'L').unwrap();
+        let trp = AA_LETTERS.iter().position(|&c| c == 'W').unwrap();
+        assert!(w[leu] > w[trp]);
+        assert!(w.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn classes_cover_standard_aas() {
+        for &(letter, _) in &TREMBL_FREQ {
+            assert!(aa_class(letter) <= 4);
+        }
+    }
+
+    #[test]
+    fn specials_decode_distinctly() {
+        assert_eq!(token_letter(PAD), '.');
+        assert_eq!(token_letter(MASK), '_');
+        assert_eq!(token_letter(EOS), '$');
+    }
+}

@@ -1,0 +1,132 @@
+//! Engine actor: the `xla` crate's PJRT handles are `!Send` (Rc + raw
+//! pointers), so all PJRT compilation/execution lives on one dedicated
+//! thread. Other threads (serving workers, the router, benches) talk to
+//! it through a cloneable `EngineHandle` exchanging plain host data.
+//!
+//! On this single-core testbed the serialization this imposes is free —
+//! PJRT CPU execution is the bottleneck either way.
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use super::artifact::ArtifactMeta;
+use super::engine::{Engine, HostValue};
+
+enum Msg {
+    Exec {
+        artifact: String,
+        inputs: Vec<HostValue>,
+        reply: Sender<Result<Vec<HostValue>>>,
+    },
+    /// Pre-compile an artifact without running it.
+    Warm {
+        artifact: String,
+        reply: Sender<Result<()>>,
+    },
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+    dir: PathBuf,
+}
+
+impl EngineHandle {
+    /// Execute an artifact with host inputs; blocks for the result.
+    pub fn exec(&self, artifact: &str, inputs: Vec<HostValue>) -> Result<Vec<HostValue>> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Exec { artifact: artifact.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Compile an artifact ahead of serving.
+    pub fn warm(&self, artifact: &str) -> Result<()> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(Msg::Warm { artifact: artifact.to_string(), reply })
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Artifact metadata (parsed from disk; no PJRT involved).
+    pub fn meta(&self, artifact: &str) -> Result<ArtifactMeta> {
+        ArtifactMeta::load(&self.dir, artifact)
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+/// A running engine actor; dropping it (after all handles) stops the
+/// thread.
+pub struct EngineActor {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+}
+
+impl EngineActor {
+    /// Spawn the engine thread over an artifacts directory.
+    pub fn spawn(artifacts_dir: impl AsRef<Path>) -> Result<EngineActor> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let dir2 = dir.clone();
+        let (tx, rx) = channel::<Msg>();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let engine = match Engine::new(&dir2) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Exec { artifact, inputs, reply } => {
+                            let res = engine
+                                .load(&artifact)
+                                .and_then(|exe| exe.run(&inputs));
+                            let _ = reply.send(res);
+                        }
+                        Msg::Warm { artifact, reply } => {
+                            let _ = reply.send(engine.load(&artifact).map(|_| ()));
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during startup"))??;
+        Ok(EngineActor { handle: EngineHandle { tx, dir }, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for EngineActor {
+    fn drop(&mut self) {
+        // Detach rather than join: other EngineHandles (e.g. inside a
+        // Coordinator that outlives this actor) keep the channel open, so
+        // joining here could deadlock. The engine thread exits when the
+        // last handle drops; at process exit it is reaped either way.
+        let (tx, _) = channel();
+        let old = std::mem::replace(&mut self.handle.tx, tx);
+        drop(old);
+        if let Some(j) = self.join.take() {
+            drop(j); // detach
+        }
+    }
+}

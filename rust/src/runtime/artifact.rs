@@ -1,0 +1,257 @@
+//! Artifact metadata: the I/O contract between `python/compile/aot.py`
+//! and the rust runtime. Each `<name>.hlo.txt` is paired with a
+//! `<name>.meta.json` describing inputs (name/role/shape/dtype), outputs
+//! and the model configuration it was lowered with.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::Json;
+
+/// What an input/output slot means to the training/serving driver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    OptM,
+    OptV,
+    OptStep,
+    Feature,
+    Tokens,
+    Targets,
+    Weights,
+    Input,
+    Loss,
+    Acc,
+    Other,
+}
+
+impl Role {
+    fn parse(s: &str) -> Role {
+        match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "opt_step" => Role::OptStep,
+            "feature" => Role::Feature,
+            "tokens" => Role::Tokens,
+            "targets" => Role::Targets,
+            "weights" => Role::Weights,
+            "input" => Role::Input,
+            "loss" => Role::Loss,
+            "acc" => Role::Acc,
+            _ => Role::Other,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unsupported dtype {s}"),
+        }
+    }
+}
+
+/// One input or output slot.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub name: String,
+    pub role: Role,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl Slot {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> Result<Slot> {
+        let shape = j
+            .req("shape")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Slot {
+            name: j.str_or("name", "?"),
+            role: Role::parse(&j.str_or("role", "other")),
+            shape,
+            dtype: Dtype::parse(&j.str_or("dtype", "f32"))?,
+        })
+    }
+}
+
+/// Model configuration echoed into the metadata by aot.py.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_len: usize,
+    pub n_features: usize,
+    pub batch: usize,
+    pub vocab_size: usize,
+    pub attention: String,
+    pub unidirectional: bool,
+    pub param_count: usize,
+    pub extra: BTreeMap<String, f64>,
+}
+
+/// A parsed artifact contract.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub config: ArtifactConfig,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, name: &str) -> Result<ArtifactMeta> {
+        let meta_path = dir.join(format!("{name}.meta.json"));
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {}", meta_path.display()))?;
+
+        let cfg_j = j.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
+        let config = ArtifactConfig {
+            d_model: cfg_j.usize_or("d_model", 0),
+            n_heads: cfg_j.usize_or("n_heads", 0),
+            n_layers: cfg_j.usize_or("n_layers", 0),
+            d_ff: cfg_j.usize_or("d_ff", 0),
+            max_len: cfg_j.usize_or("max_len", cfg_j.usize_or("l", 0)),
+            n_features: cfg_j.usize_or("n_features", cfg_j.usize_or("m", 0)),
+            batch: cfg_j.usize_or("batch", cfg_j.usize_or("bh", 1)),
+            vocab_size: cfg_j.usize_or("vocab_size", 0),
+            attention: cfg_j.str_or("attention", cfg_j.str_or("mech", "").as_str()),
+            unidirectional: cfg_j.bool_or("unidirectional", cfg_j.bool_or("causal", false)),
+            param_count: cfg_j.usize_or("param_count", 0),
+            extra: BTreeMap::new(),
+        };
+
+        let inputs = j
+            .req("inputs")?
+            .as_arr()?
+            .iter()
+            .map(Slot::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .map(|o| o.as_arr().map(|a| a.iter().map(Slot::parse).collect::<Result<Vec<_>>>()))
+            .transpose()?
+            .transpose()?
+            .unwrap_or_default();
+
+        Ok(ArtifactMeta {
+            name: name.to_string(),
+            kind: j.str_or("kind", "unknown"),
+            config,
+            inputs,
+            outputs,
+            hlo_path: dir.join(format!("{name}.hlo.txt")),
+        })
+    }
+
+    /// Indices of input slots with the given role, in artifact order.
+    pub fn input_indices(&self, role: Role) -> Vec<usize> {
+        self.inputs
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.role == role)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Index of the single input slot with the given role.
+    pub fn input_index(&self, role: Role) -> Result<usize> {
+        let idx = self.input_indices(role);
+        match idx.as_slice() {
+            [i] => Ok(*i),
+            [] => Err(anyhow!("{}: no input with role {role:?}", self.name)),
+            _ => Err(anyhow!("{}: multiple inputs with role {role:?}", self.name)),
+        }
+    }
+
+    /// Index of an output slot by name.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("{}: no output named {name}", self.name))
+    }
+}
+
+/// The artifact directory index written by aot.py.
+pub fn list_artifacts(dir: &Path) -> Result<Vec<String>> {
+    let mut names = Vec::new();
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let p = entry?.path();
+        if let Some(fname) = p.file_name().and_then(|f| f.to_str()) {
+            if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                names.push(stem.to_string());
+            }
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("t_fwd.meta.json"),
+            r#"{
+              "kind": "fwd",
+              "config": {"d_model": 64, "batch": 4, "max_len": 64,
+                         "attention": "favor-relu", "unidirectional": false,
+                         "param_count": 1000},
+              "inputs": [
+                {"name": "embed", "role": "param", "shape": [30, 64], "dtype": "f32"},
+                {"name": "w", "role": "feature", "shape": [32, 32], "dtype": "f32"},
+                {"name": "tokens", "role": "tokens", "shape": [4, 64], "dtype": "i32"}
+              ],
+              "outputs": [
+                {"name": "logits", "shape": [4, 64, 30], "dtype": "f32"}
+              ]
+            }"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("t_fwd.hlo.txt"), "HloModule t\n").unwrap();
+    }
+
+    #[test]
+    fn load_and_query() {
+        let dir = std::env::temp_dir().join("performer_meta_test");
+        write_fixture(&dir);
+        let m = ArtifactMeta::load(&dir, "t_fwd").unwrap();
+        assert_eq!(m.kind, "fwd");
+        assert_eq!(m.config.d_model, 64);
+        assert_eq!(m.inputs.len(), 3);
+        assert_eq!(m.input_indices(Role::Param), vec![0]);
+        assert_eq!(m.input_index(Role::Tokens).unwrap(), 2);
+        assert_eq!(m.inputs[2].dtype, Dtype::I32);
+        assert_eq!(m.inputs[0].elements(), 30 * 64);
+        assert_eq!(m.output_index("logits").unwrap(), 0);
+        assert!(m.input_index(Role::Targets).is_err());
+        let names = list_artifacts(&dir).unwrap();
+        assert!(names.contains(&"t_fwd".to_string()));
+    }
+}

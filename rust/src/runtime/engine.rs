@@ -1,0 +1,242 @@
+//! PJRT execution engine: loads `artifacts/*.hlo.txt`, compiles them on
+//! the CPU PJRT client, and executes them with typed host values.
+//!
+//! One `Engine` owns the PJRT client and a compile cache keyed by
+//! artifact name; `Executable` pairs the compiled module with its
+//! metadata contract so callers address inputs by role, not position.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{ArtifactMeta, Dtype, Role};
+
+/// A typed host-side value fed to / read from an executable.
+#[derive(Clone, Debug)]
+pub enum HostValue {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostValue {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostValue::F32(v) => Ok(v),
+            _ => bail!("expected f32 value"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostValue::I32(v) => Ok(v),
+            _ => bail!("expected i32 value"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first().copied().ok_or_else(|| anyhow!("empty value"))
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostValue::F32(v) => v.len(),
+            HostValue::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Compiled artifact + its metadata contract.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execute statistics (wall time, call count)
+    stats: Mutex<ExecStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+impl Executable {
+    /// Run with host inputs in artifact order. Returns host outputs in
+    /// artifact order (the AOT modules are lowered with return_tuple).
+    pub fn run(&self, inputs: &[HostValue]) -> Result<Vec<HostValue>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (slot, val) in self.meta.inputs.iter().zip(inputs) {
+            if slot.elements() != val.len() {
+                bail!(
+                    "{}: input '{}' expects {} elements, got {}",
+                    self.meta.name, slot.name, slot.elements(), val.len()
+                );
+            }
+            let dims: Vec<i64> = slot.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (slot.dtype, val) {
+                (Dtype::F32, HostValue::F32(v)) => {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (Dtype::I32, HostValue::I32(v)) => {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                _ => bail!("{}: dtype mismatch for '{}'", self.meta.name, slot.name),
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.calls += 1;
+            st.total_secs += t0.elapsed().as_secs_f64();
+        }
+
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let dtype = self.meta.outputs.get(i).map(|s| s.dtype).unwrap_or(Dtype::F32);
+            out.push(match dtype {
+                Dtype::F32 => HostValue::F32(lit.to_vec::<f32>()?),
+                Dtype::I32 => HostValue::I32(lit.to_vec::<i32>()?),
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// The engine: PJRT client + compiled-artifact cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Engine {
+    /// CPU PJRT client over the given artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Engine {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = ArtifactMeta::load(&self.dir, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e}", meta.hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let compiled = Arc::new(Executable {
+            meta,
+            exe,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        eprintln!(
+            "[engine] compiled {name} in {:.2}s",
+            t0.elapsed().as_secs_f64()
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Compile-time check that an artifact exists without compiling it.
+    pub fn exists(&self, name: &str) -> bool {
+        self.dir.join(format!("{name}.hlo.txt")).exists()
+    }
+}
+
+/// Helper: build the full input vector for an executable from role-keyed
+/// parts, filling `Role::Param`-like slots from an ordered list.
+pub struct InputBuilder<'a> {
+    meta: &'a ArtifactMeta,
+    values: Vec<Option<HostValue>>,
+}
+
+impl<'a> InputBuilder<'a> {
+    pub fn new(meta: &'a ArtifactMeta) -> Self {
+        InputBuilder { meta, values: vec![None; meta.inputs.len()] }
+    }
+
+    /// Fill all slots of a role from an ordered iterator of values.
+    pub fn fill_role(mut self, role: Role, vals: impl IntoIterator<Item = HostValue>) -> Result<Self> {
+        let idx = self.meta.input_indices(role);
+        let mut it = vals.into_iter();
+        for i in &idx {
+            self.values[*i] = Some(
+                it.next()
+                    .ok_or_else(|| anyhow!("not enough values for role {role:?}"))?,
+            );
+        }
+        if it.next().is_some() {
+            bail!("too many values for role {role:?} (expected {})", idx.len());
+        }
+        Ok(self)
+    }
+
+    pub fn set(mut self, role: Role, val: HostValue) -> Result<Self> {
+        let i = self.meta.input_index(role)?;
+        self.values[i] = Some(val);
+        Ok(self)
+    }
+
+    pub fn finish(self) -> Result<Vec<HostValue>> {
+        let mut out = Vec::with_capacity(self.values.len());
+        for (i, v) in self.values.into_iter().enumerate() {
+            out.push(v.ok_or_else(|| {
+                anyhow!(
+                    "input '{}' (role {:?}) not provided",
+                    self.meta.inputs[i].name,
+                    self.meta.inputs[i].role
+                )
+            })?);
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime: the PJRT bridge between the rust coordinator and the AOT
+//! artifacts produced by `python/compile/aot.py`. Python never runs at
+//! serving/training time — the HLO text is compiled once by the CPU PJRT
+//! client and executed from the rust hot path.
+
+pub mod actor;
+pub mod artifact;
+pub mod engine;
+pub mod tensorfile;
+
+pub use actor::{EngineActor, EngineHandle};
+pub use artifact::{ArtifactMeta, Dtype, Role, Slot};
+pub use engine::{Engine, Executable, HostValue, InputBuilder};
+pub use tensorfile::TensorFile;

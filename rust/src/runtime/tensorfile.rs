@@ -1,0 +1,166 @@
+//! The PFRMTENS tensor container: how python hands rust the initial
+//! parameter/feature values, and how rust checkpoints training state.
+//!
+//! Layout: b"PFRMTENS" | u32 LE header length | JSON header | raw payload.
+//! Header: [{"name", "shape", "dtype": "f32", "offset"}] with offsets into
+//! the payload region (bytes). f32 little-endian only.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{arr, num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"PFRMTENS";
+
+/// A named collection of f32 tensors (order preserved).
+#[derive(Clone, Debug, Default)]
+pub struct TensorFile {
+    pub entries: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl TensorFile {
+    pub fn read(path: &Path) -> Result<TensorFile> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() < 12 || &bytes[..8] != MAGIC {
+            bail!("{}: not a PFRMTENS file", path.display());
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let header_end = 12 + hlen;
+        if bytes.len() < header_end {
+            bail!("{}: truncated header", path.display());
+        }
+        let header = Json::parse(std::str::from_utf8(&bytes[12..header_end])?)?;
+        let payload = &bytes[header_end..];
+
+        let mut entries = Vec::new();
+        for e in header.as_arr()? {
+            let name = e.str_or("name", "?");
+            let shape: Vec<usize> = e
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+            let offset = e.usize_or("offset", 0);
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let end = offset + n * 4;
+            if end > payload.len() {
+                bail!("{}: tensor {name} overruns payload", path.display());
+            }
+            let data: Vec<f32> = payload[offset..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            entries.push((name, shape, data));
+        }
+        Ok(TensorFile { entries })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut header = Vec::new();
+        let mut offset = 0usize;
+        for (name, shape, data) in &self.entries {
+            header.push(obj(vec![
+                ("name", s(name)),
+                ("shape", arr(shape.iter().map(|&d| num(d as f64)))),
+                ("dtype", s("f32")),
+                ("offset", num(offset as f64)),
+            ]));
+            offset += data.len() * 4;
+        }
+        let hjson = Json::Arr(header).to_string();
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u32).to_le_bytes())?;
+        f.write_all(hjson.as_bytes())?;
+        for (_, _, data) in &self.entries {
+            // safe little-endian serialization
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
+        self.entries
+            .iter()
+            .find(|(n, _, _)| n == name)
+            .map(|(_, shape, data)| (shape.as_slice(), data.as_slice()))
+    }
+
+    /// Entries with the given prefix (e.g. "param:"), prefix stripped,
+    /// as a name -> (shape, data) map preserving artifact order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<(String, &[usize], &[f32])> {
+        self.entries
+            .iter()
+            .filter_map(|(n, shape, data)| {
+                n.strip_prefix(prefix).map(|rest| (rest.to_string(), shape.as_slice(), data.as_slice()))
+            })
+            .collect()
+    }
+
+    pub fn to_map(&self) -> BTreeMap<String, (Vec<usize>, Vec<f32>)> {
+        self.entries
+            .iter()
+            .map(|(n, s, d)| (n.clone(), (s.clone(), d.clone())))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tf = TensorFile {
+            entries: vec![
+                ("param:a".into(), vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+                ("feature:w".into(), vec![4], vec![-1.0, 0.5, 0.0, 9.0]),
+                ("scalar".into(), vec![], vec![7.5]),
+            ],
+        };
+        let path = std::env::temp_dir().join("pfrm_tensorfile_test.bin");
+        tf.write(&path).unwrap();
+        let back = TensorFile::read(&path).unwrap();
+        assert_eq!(back.entries.len(), 3);
+        let (shape, data) = back.get("param:a").unwrap();
+        assert_eq!(shape, &[2, 3]);
+        assert_eq!(data, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let (shape, data) = back.get("scalar").unwrap();
+        assert!(shape.is_empty());
+        assert_eq!(data, &[7.5]);
+        let params = back.with_prefix("param:");
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].0, "a");
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("pfrm_badmagic.bin");
+        std::fs::write(&path, b"NOTMAGIC....").unwrap();
+        assert!(TensorFile::read(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_overrun() {
+        // header declares more data than the payload holds
+        let path = std::env::temp_dir().join("pfrm_overrun.bin");
+        let hdr = r#"[{"name":"x","shape":[100],"dtype":"f32","offset":0}]"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PFRMTENS");
+        bytes.extend_from_slice(&(hdr.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(hdr.as_bytes());
+        bytes.extend_from_slice(&[0u8; 16]); // only 4 floats
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(TensorFile::read(&path).is_err());
+    }
+}

@@ -1,0 +1,309 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The native FAVOR implementation, the exact/LSH attention baselines and
+//! the analysis benches (Figs. 1, 2, 11, Thm. 1 checks) run on this — a
+//! row-major, heap-backed matrix with the handful of BLAS-1/3 operations
+//! attention needs. Hot paths (matmul) are written cache-blocked so the
+//! paper's timing *shape* (linear vs quadratic in L) is measured on a
+//! reasonable baseline, not an artificially slow one.
+
+use std::fmt;
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B, cache-blocked ikj loop.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul {}x{} @ {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let mut out = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut out);
+        out
+    }
+
+    /// y = A @ x for a vector x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| dot(self.row(i), x))
+            .collect()
+    }
+
+    pub fn scale(&mut self, s: f32) -> &mut Self {
+        for v in &mut self.data {
+            *v *= s;
+        }
+        self
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| f(v)).collect())
+    }
+
+    /// Row-wise softmax in place (numerically stable).
+    pub fn softmax_rows(&mut self) {
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    }
+
+    /// Sum over each row -> length-`rows` vector.
+    pub fn row_sums(&self) -> Vec<f32> {
+        (0..self.rows).map(|i| self.row(i).iter().sum()).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Mean absolute difference to another matrix.
+    pub fn mean_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    /// Max absolute difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Slice of rows [lo, hi).
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_vec(hi - lo, self.cols, self.data[lo * self.cols..hi * self.cols].to_vec())
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation: lets LLVM vectorize without fast-math
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// axpy: y += a * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// out = A @ B accumulated into a preallocated buffer (ikj order: streams
+/// B rows, writes C rows — cache-friendly for row-major data).
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((out.rows, out.cols), (a.rows, b.cols));
+    out.data.fill(0.0);
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let orow = &mut out.data[i * b.cols..(i + 1) * b.cols];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik != 0.0 {
+                axpy(aik, b.row(k), orow);
+            }
+        }
+    }
+}
+
+/// C = A^T @ B without materializing A^T.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows);
+    let mut out = Mat::zeros(a.cols, b.cols);
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for (i, &ari) in arow.iter().enumerate() {
+            if ari != 0.0 {
+                axpy(ari, brow, &mut out.data[i * b.cols..(i + 1) * b.cols]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Mat::from_fn(5, 5, |i, j| (i * 5 + j) as f32);
+        assert_eq!(a.matmul(&Mat::eye(5)).data, a.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Mat::from_fn(3, 7, |i, j| (i * 11 + j * 3) as f32);
+        assert_eq!(a.t().t().data, a.data);
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let a = Mat::from_fn(4, 3, |i, j| (i + 2 * j) as f32);
+        let b = Mat::from_fn(4, 5, |i, j| (i * j) as f32 + 1.0);
+        assert_eq!(matmul_at_b(&a, &b).data, a.t().matmul(&b).data);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut a = Mat::from_fn(3, 4, |i, j| (i * j) as f32);
+        a.softmax_rows();
+        for i in 0..3 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_stable_for_large_values() {
+        let mut a = Mat::from_vec(1, 3, vec![1000.0, 1001.0, 1002.0]);
+        a.softmax_rows();
+        assert!(a.data.iter().all(|v| v.is_finite()));
+        assert!((a.row(0).iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let x: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn matvec_consistent_with_matmul() {
+        let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let x = vec![1.0, -1.0, 2.0, 0.5];
+        let via_mat = a.matmul(&Mat::from_vec(4, 1, x.clone()));
+        assert_eq!(a.matvec(&x), via_mat.data);
+    }
+
+    #[test]
+    fn rows_slice_contents() {
+        let a = Mat::from_fn(5, 2, |i, j| (i * 2 + j) as f32);
+        let s = a.rows_slice(1, 3);
+        assert_eq!(s.data, vec![2.0, 3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,129 @@
+//! Training-curve recording: the (step, loss, accuracy) series every
+//! training figure in the paper plots (Figs. 3, 4, 5, 12, 13).
+
+use std::fmt::Write as _;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub step: usize,
+    pub loss: f64,
+    pub acc: f64,
+}
+
+/// Train + validation series for one run.
+#[derive(Clone, Debug, Default)]
+pub struct Curve {
+    pub name: String,
+    pub train: Vec<Point>,
+    pub valid: Vec<Point>,
+}
+
+impl Curve {
+    pub fn new(name: &str) -> Self {
+        Curve { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn push_train(&mut self, step: usize, loss: f64, acc: f64) {
+        self.train.push(Point { step, loss, acc });
+    }
+
+    pub fn push_valid(&mut self, step: usize, loss: f64, acc: f64) {
+        self.valid.push(Point { step, loss, acc });
+    }
+
+    pub fn final_train_acc(&self) -> f64 {
+        self.train.last().map(|p| p.acc).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_valid_acc(&self) -> f64 {
+        self.valid.last().map(|p| p.acc).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_valid_acc(&self) -> f64 {
+        self.valid.iter().map(|p| p.acc).fold(f64::NAN, f64::max)
+    }
+
+    /// Smoothed (trailing-window mean) train accuracy, for noisy small
+    /// batches.
+    pub fn smoothed_train_acc(&self, window: usize) -> f64 {
+        let n = self.train.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let lo = n.saturating_sub(window);
+        let slice = &self.train[lo..];
+        slice.iter().map(|p| p.acc).sum::<f64>() / slice.len() as f64
+    }
+
+    /// CSV: series,step,loss,acc
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,step,loss,acc\n");
+        for p in &self.train {
+            let _ = writeln!(out, "train,{},{:.6},{:.6}", p.step, p.loss, p.acc);
+        }
+        for p in &self.valid {
+            let _ = writeln!(out, "valid,{},{:.6},{:.6}", p.step, p.loss, p.acc);
+        }
+        out
+    }
+
+    /// Terminal sparkline of train loss (quick visual check in logs).
+    pub fn sparkline(&self) -> String {
+        const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        if self.train.is_empty() {
+            return String::new();
+        }
+        let lo = self.train.iter().map(|p| p.loss).fold(f64::INFINITY, f64::min);
+        let hi = self.train.iter().map(|p| p.loss).fold(f64::NEG_INFINITY, f64::max);
+        let span = (hi - lo).max(1e-9);
+        self.train
+            .iter()
+            .map(|p| BARS[(((p.loss - lo) / span) * 7.0).round() as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut c = Curve::new("run");
+        c.push_train(0, 3.0, 0.1);
+        c.push_train(10, 2.0, 0.2);
+        c.push_valid(10, 2.5, 0.15);
+        assert_eq!(c.final_train_acc(), 0.2);
+        assert_eq!(c.final_valid_acc(), 0.15);
+        assert_eq!(c.best_valid_acc(), 0.15);
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let mut c = Curve::new("run");
+        for i in 0..10 {
+            c.push_train(i, 1.0, i as f64 / 10.0);
+        }
+        let s = c.smoothed_train_acc(5);
+        assert!((s - 0.7).abs() < 1e-9); // mean of .5 .6 .7 .8 .9
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut c = Curve::new("r");
+        c.push_train(1, 2.0, 0.1);
+        c.push_valid(1, 2.1, 0.12);
+        let csv = c.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.contains("valid,1,"));
+    }
+
+    #[test]
+    fn sparkline_length_matches_points() {
+        let mut c = Curve::new("r");
+        for i in 0..5 {
+            c.push_train(i, 5.0 - i as f64, 0.0);
+        }
+        assert_eq!(c.sparkline().chars().count(), 5);
+    }
+}

@@ -1,0 +1,403 @@
+//! The training driver: owns the AOT `train_step` executable and the
+//! host-resident training state (params, Adam moments, FAVOR features),
+//! streams batches from the protein pipeline, and records curves.
+//!
+//! One step = one PJRT execute of the whole jitted train_step (forward +
+//! backward + Adam), exactly the paper's jax.jit training setup — the
+//! coordinator only generates data, shuttles state and logs.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::favor::{FeatureKind, FeatureMap};
+use crate::linalg::OrfMechanism;
+use crate::protein::{lm_batch, mlm_batch, Batch, Corpus, MaskPolicy};
+use crate::rng::Pcg64;
+use crate::runtime::{Engine, Executable, HostValue, Role, TensorFile};
+
+use super::curve::Curve;
+
+/// Which data split a batch is drawn from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+    Ood,
+}
+
+/// Streams fixed-shape batches for a given artifact config.
+pub struct DataGen {
+    pub corpus: Arc<Corpus>,
+    pub l: usize,
+    pub b: usize,
+    pub unidirectional: bool,
+    /// long-context concatenated-protein task (Fig. 5) vs single-sequence
+    pub concat: bool,
+    policy: MaskPolicy,
+    rngs: [Pcg64; 4],
+}
+
+impl DataGen {
+    pub fn new(corpus: Arc<Corpus>, l: usize, b: usize, unidirectional: bool,
+               concat: bool, seed: u64) -> Self {
+        let mut root = Pcg64::new(seed ^ 0x9e3779b97f4a7c15);
+        DataGen {
+            corpus,
+            l,
+            b,
+            unidirectional,
+            concat,
+            policy: MaskPolicy::default(),
+            rngs: [root.fork(1), root.fork(2), root.fork(3), root.fork(4)],
+        }
+    }
+
+    pub fn next_batch(&mut self, split: Split) -> Batch {
+        let rng = &mut self.rngs[match split {
+            Split::Train => 0,
+            Split::Valid => 1,
+            Split::Test => 2,
+            Split::Ood => 3,
+        }];
+        let windows: Vec<Vec<u8>> = if self.concat {
+            self.corpus.concat_stream(self.l, self.b, rng)
+        } else {
+            (0..self.b)
+                .map(|_| {
+                    let seq = match split {
+                        Split::Ood => self.corpus.sample_ood(rng).1,
+                        _ => self.corpus.sample_iid(rng).1,
+                    };
+                    self.corpus.window(&seq, self.l)
+                })
+                .collect()
+        };
+        if self.unidirectional {
+            lm_batch(&windows, self.l)
+        } else {
+            mlm_batch(&windows, self.l, self.policy, rng)
+        }
+    }
+}
+
+/// Host-resident model/optimizer state, in the artifact's slot order.
+pub struct TrainState {
+    pub engine: Arc<Engine>,
+    pub tag: String,
+    pub train_exe: Arc<Executable>,
+    pub eval_exe: Option<Arc<Executable>>,
+    pub params: Vec<Vec<f32>>,
+    pub opt_m: Vec<Vec<f32>>,
+    pub opt_v: Vec<Vec<f32>>,
+    pub step: f32,
+    pub features: Vec<Vec<f32>>,
+    /// names of the param slots (artifact order), for checkpoints and
+    /// weight transplant
+    pub param_names: Vec<String>,
+    pub feature_names: Vec<String>,
+}
+
+impl TrainState {
+    /// Bootstrap from `{tag}_train` + `{tag}_init.bin`.
+    pub fn new(engine: Arc<Engine>, tag: &str) -> Result<TrainState> {
+        let train_exe = engine.load(&format!("{tag}_train"))?;
+        let eval_exe = if engine.exists(&format!("{tag}_eval")) {
+            Some(engine.load(&format!("{tag}_eval"))?)
+        } else {
+            None
+        };
+        let init = TensorFile::read(&engine.artifacts_dir().join(format!("{tag}_init.bin")))
+            .with_context(|| format!("init tensors for {tag}"))?;
+
+        let meta = &train_exe.meta;
+        let param_idx = meta.input_indices(Role::Param);
+        let feat_idx = meta.input_indices(Role::Feature);
+
+        let mut params = Vec::with_capacity(param_idx.len());
+        let mut param_names = Vec::with_capacity(param_idx.len());
+        for &i in &param_idx {
+            let slot = &meta.inputs[i];
+            let (_, data) = init
+                .get(&format!("param:{}", slot.name))
+                .ok_or_else(|| anyhow!("init missing param:{}", slot.name))?;
+            if data.len() != slot.elements() {
+                bail!("init param {} wrong size", slot.name);
+            }
+            params.push(data.to_vec());
+            param_names.push(slot.name.clone());
+        }
+        let mut features = Vec::with_capacity(feat_idx.len());
+        let mut feature_names = Vec::with_capacity(feat_idx.len());
+        for &i in &feat_idx {
+            let slot = &meta.inputs[i];
+            let (_, data) = init
+                .get(&format!("feature:{}", slot.name))
+                .ok_or_else(|| anyhow!("init missing feature:{}", slot.name))?;
+            features.push(data.to_vec());
+            feature_names.push(slot.name.clone());
+        }
+        let opt_m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let opt_v = opt_m.clone();
+
+        Ok(TrainState {
+            engine,
+            tag: tag.to_string(),
+            train_exe,
+            eval_exe,
+            params,
+            opt_m,
+            opt_v,
+            step: 0.0,
+            features,
+            param_names,
+            feature_names,
+        })
+    }
+
+    pub fn data_gen(&self, corpus: Arc<Corpus>, seed: u64) -> DataGen {
+        let cfg = &self.train_exe.meta.config;
+        DataGen::new(
+            corpus,
+            cfg.max_len,
+            cfg.batch,
+            cfg.unidirectional,
+            self.tag.starts_with("long"),
+            seed,
+        )
+    }
+
+    /// Execute one train step; updates state in place, returns (loss, acc).
+    pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let meta = &self.train_exe.meta;
+        let mut inputs: Vec<HostValue> = Vec::with_capacity(meta.inputs.len());
+        // artifact input order: params, m, v, step, features, tokens,
+        // targets, weights — but we index by role to stay contract-driven.
+        let mut p_it = self.params.iter();
+        let mut m_it = self.opt_m.iter();
+        let mut v_it = self.opt_v.iter();
+        let mut f_it = self.features.iter();
+        for slot in &meta.inputs {
+            inputs.push(match slot.role {
+                Role::Param => HostValue::F32(p_it.next().unwrap().clone()),
+                Role::OptM => HostValue::F32(m_it.next().unwrap().clone()),
+                Role::OptV => HostValue::F32(v_it.next().unwrap().clone()),
+                Role::OptStep => HostValue::F32(vec![self.step]),
+                Role::Feature => HostValue::F32(f_it.next().unwrap().clone()),
+                Role::Tokens => HostValue::I32(batch.tokens.clone()),
+                Role::Targets => HostValue::I32(batch.targets.clone()),
+                Role::Weights => HostValue::F32(batch.weights.clone()),
+                other => bail!("unexpected train input role {other:?}"),
+            });
+        }
+        let outputs = self.train_exe.run(&inputs)?;
+
+        // demux outputs by the metadata roles
+        let mut loss = f32::NAN;
+        let mut acc = f32::NAN;
+        let (mut pi, mut mi, mut vi) = (0usize, 0usize, 0usize);
+        for (slot, val) in meta.outputs.iter().zip(outputs) {
+            match (slot.role, val) {
+                (Role::Param, HostValue::F32(v)) => {
+                    self.params[pi] = v;
+                    pi += 1;
+                }
+                (Role::OptM, HostValue::F32(v)) => {
+                    self.opt_m[mi] = v;
+                    mi += 1;
+                }
+                (Role::OptV, HostValue::F32(v)) => {
+                    self.opt_v[vi] = v;
+                    vi += 1;
+                }
+                (Role::OptStep, HostValue::F32(v)) => self.step = v[0],
+                (Role::Loss, HostValue::F32(v)) => loss = v[0],
+                (Role::Acc, HostValue::F32(v)) => acc = v[0],
+                (r, _) => bail!("unexpected train output role {r:?}"),
+            }
+        }
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss at step {}", self.tag, self.step);
+        }
+        Ok((loss, acc))
+    }
+
+    /// Evaluate (loss, acc) on one batch without updating state.
+    pub fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .ok_or_else(|| anyhow!("{}: no eval artifact", self.tag))?;
+        let meta = &exe.meta;
+        let mut inputs = Vec::with_capacity(meta.inputs.len());
+        let mut p_it = self.params.iter();
+        let mut f_it = self.features.iter();
+        for slot in &meta.inputs {
+            inputs.push(match slot.role {
+                Role::Param => HostValue::F32(p_it.next().unwrap().clone()),
+                Role::Feature => HostValue::F32(f_it.next().unwrap().clone()),
+                Role::Tokens => HostValue::I32(batch.tokens.clone()),
+                Role::Targets => HostValue::I32(batch.targets.clone()),
+                Role::Weights => HostValue::F32(batch.weights.clone()),
+                other => bail!("unexpected eval input role {other:?}"),
+            });
+        }
+        let out = exe.run(&inputs)?;
+        Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
+    }
+
+    /// Mean (loss, acc) over `n` batches from a split.
+    pub fn evaluate(&self, gen: &mut DataGen, split: Split, n: usize) -> Result<(f64, f64)> {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let b = gen.next_batch(split);
+            let (l, a) = self.eval_step(&b)?;
+            loss += l as f64;
+            acc += a as f64;
+        }
+        Ok((loss / n as f64, acc / n as f64))
+    }
+
+    /// Resample the FAVOR projection features natively (paper Sec. 4.2's
+    /// redrawing strategy): regenerates W (and b) with matching shapes.
+    pub fn resample_features(&mut self, rng: &mut Pcg64) -> Result<()> {
+        let meta = &self.train_exe.meta;
+        let attention = meta.config.attention.clone();
+        if !attention.starts_with("favor-") {
+            return Ok(()); // nothing to resample for exact/lsh/identity
+        }
+        let kind = FeatureKind::parse(attention.trim_start_matches("favor-"))
+            .ok_or_else(|| anyhow!("unknown attention {attention}"))?;
+        let feat_idx = meta.input_indices(Role::Feature);
+        for (slot_pos, &i) in feat_idx.iter().enumerate() {
+            let slot = &meta.inputs[i];
+            match slot.name.as_str() {
+                "w" => {
+                    let (m, d) = (slot.shape[0], slot.shape[1]);
+                    let fm = FeatureMap::sample(kind, m, d, OrfMechanism::Regular, rng);
+                    self.features[slot_pos] = fm.w.data;
+                }
+                "b" => {
+                    let m = slot.shape[0];
+                    self.features[slot_pos] = if kind == FeatureKind::Softmax {
+                        (0..m)
+                            .map(|_| rng.uniform_in(0.0, std::f64::consts::TAU) as f32)
+                            .collect()
+                    } else {
+                        vec![0.0; m]
+                    };
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Transplant parameters by name from another state (Fig. 3's
+    /// backward-compatibility experiment: Transformer -> Performer).
+    /// Returns the number of tensors copied.
+    pub fn transplant_from(&mut self, donor: &TrainState) -> usize {
+        let mut copied = 0;
+        for (i, name) in self.param_names.iter().enumerate() {
+            if let Some(j) = donor.param_names.iter().position(|n| n == name) {
+                if donor.params[j].len() == self.params[i].len() {
+                    self.params[i] = donor.params[j].clone();
+                    copied += 1;
+                }
+            }
+        }
+        copied
+    }
+
+    /// Save params + opt state + features to a PFRMTENS checkpoint.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut tf = TensorFile::default();
+        for (name, data) in self.param_names.iter().zip(&self.params) {
+            tf.entries.push((format!("param:{name}"), vec![data.len()], data.clone()));
+        }
+        for (name, data) in self.param_names.iter().zip(&self.opt_m) {
+            tf.entries.push((format!("opt_m:{name}"), vec![data.len()], data.clone()));
+        }
+        for (name, data) in self.param_names.iter().zip(&self.opt_v) {
+            tf.entries.push((format!("opt_v:{name}"), vec![data.len()], data.clone()));
+        }
+        for (name, data) in self.feature_names.iter().zip(&self.features) {
+            tf.entries.push((format!("feature:{name}"), vec![data.len()], data.clone()));
+        }
+        tf.entries.push(("step".into(), vec![], vec![self.step]));
+        tf.write(path)
+    }
+
+    /// Restore a checkpoint written by `save_checkpoint`.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let tf = TensorFile::read(path)?;
+        for (i, name) in self.param_names.iter().enumerate() {
+            if let Some((_, data)) = tf.get(&format!("param:{name}")) {
+                self.params[i] = data.to_vec();
+            }
+            if let Some((_, data)) = tf.get(&format!("opt_m:{name}")) {
+                self.opt_m[i] = data.to_vec();
+            }
+            if let Some((_, data)) = tf.get(&format!("opt_v:{name}")) {
+                self.opt_v[i] = data.to_vec();
+            }
+        }
+        for (i, name) in self.feature_names.iter().enumerate() {
+            if let Some((_, data)) = tf.get(&format!("feature:{name}")) {
+                self.features[i] = data.to_vec();
+            }
+        }
+        if let Some((_, s)) = tf.get("step") {
+            self.step = s[0];
+        }
+        Ok(())
+    }
+}
+
+/// Run a full training loop per the config; returns the curve.
+pub struct LoopOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub resample_every: usize,
+    pub quiet: bool,
+}
+
+pub fn run_training(
+    state: &mut TrainState,
+    gen: &mut DataGen,
+    opts: &LoopOptions,
+    seed: u64,
+) -> Result<Curve> {
+    let mut curve = Curve::new(&state.tag);
+    let mut rng = Pcg64::new(seed ^ 0xabcdef);
+    let t0 = std::time::Instant::now();
+    for step in 1..=opts.steps {
+        if opts.resample_every > 0 && step % opts.resample_every == 0 {
+            state.resample_features(&mut rng)?;
+        }
+        let batch = gen.next_batch(Split::Train);
+        let (loss, acc) = state.train_step(&batch)?;
+        curve.push_train(step, loss as f64, acc as f64);
+        if !opts.quiet && (step % opts.log_every == 0 || step == 1) {
+            eprintln!(
+                "[{}] step {step}/{} loss {loss:.4} acc {acc:.3} ({:.2} s/step)",
+                state.tag,
+                opts.steps,
+                t0.elapsed().as_secs_f64() / step as f64
+            );
+        }
+        if state.eval_exe.is_some() && opts.eval_every > 0 && step % opts.eval_every == 0 {
+            let (vl, va) = state.evaluate(gen, Split::Valid, opts.eval_batches)?;
+            curve.push_valid(step, vl, va);
+            if !opts.quiet {
+                eprintln!("[{}]   valid loss {vl:.4} acc {va:.3}", state.tag);
+            }
+        }
+    }
+    Ok(curve)
+}

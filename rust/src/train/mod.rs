@@ -1,0 +1,11 @@
+//! Training orchestration: the AOT train-step driver, data streaming,
+//! curve recording, checkpoints and weight transplant (for the Fig. 3
+//! backward-compatibility experiment).
+
+pub mod curve;
+pub mod native_model;
+pub mod driver;
+
+pub use curve::{Curve, Point};
+pub use native_model::{NativeAttention, NativeModel};
+pub use driver::{run_training, DataGen, LoopOptions, Split, TrainState};

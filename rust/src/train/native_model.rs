@@ -1,0 +1,277 @@
+//! Native forward pass of the Performer/Transformer model, operating on
+//! checkpoint weights with the `tensor` substrate.
+//!
+//! Two purposes:
+//!   * analysis — Figs. 7–10 need per-layer, per-head *attention
+//!     matrices* from a trained model, which the AOT artifacts (logits
+//!     only) don't expose; this replays the model natively and captures
+//!     them via the Appendix C.4 one-hot probe equivalents;
+//!   * cross-validation — `rust/tests/native_vs_hlo.rs` checks this
+//!     implementation's logits against the AOT (Pallas-kerneled) HLO,
+//!     pinning both implementations to the same math.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::favor::{
+    attention_matrix_exact, attention_matrix_favor, exact_attention, favor_attention,
+    identity_attention, Direction, FeatureKind, FeatureMap,
+};
+use crate::runtime::{ArtifactMeta, Role};
+use crate::tensor::Mat;
+
+/// A dense layer (w: in×out, b: out).
+struct Dense {
+    w: Mat,
+    b: Vec<f32>,
+}
+
+impl Dense {
+    fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.matmul(&self.w);
+        for i in 0..out.rows {
+            for (v, b) in out.row_mut(i).iter_mut().zip(&self.b) {
+                *v += b;
+            }
+        }
+        out
+    }
+}
+
+struct LayerNorm {
+    g: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl LayerNorm {
+    fn apply(&self, x: &Mat) -> Mat {
+        let mut out = x.clone();
+        for i in 0..out.rows {
+            let row = out.row_mut(i);
+            let n = row.len() as f32;
+            let mu = row.iter().sum::<f32>() / n;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = self.g[j] * (*v - mu) * inv + self.b[j];
+            }
+        }
+        out
+    }
+}
+
+struct Layer {
+    ln1: LayerNorm,
+    qkv: Dense,
+    proj: Dense,
+    ln2: LayerNorm,
+    ff1: Dense,
+    ff2: Dense,
+}
+
+/// Which attention the native model runs (matches the artifact config).
+pub enum NativeAttention {
+    Exact,
+    Favor(FeatureMap),
+    Identity,
+}
+
+/// The assembled native model.
+pub struct NativeModel {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub vocab_size: usize,
+    pub direction: Direction,
+    embed: Mat,
+    lnf: LayerNorm,
+    layers: Vec<Layer>,
+    pub attention: NativeAttention,
+}
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Sinusoidal position encodings, matching model.py exactly.
+fn positions(l: usize, d: usize) -> Mat {
+    Mat::from_fn(l, d, |pos, i| {
+        let angle = pos as f64 / 10000f64.powf((2 * (i / 2)) as f64 / d as f64);
+        if i % 2 == 0 { angle.sin() as f32 } else { angle.cos() as f32 }
+    })
+}
+
+impl NativeModel {
+    /// Build from an artifact's metadata + a name->(shape, data) weight
+    /// lookup (init.bin or a checkpoint read as TensorFile entries).
+    pub fn from_weights(
+        meta: &ArtifactMeta,
+        lookup: &dyn Fn(&str) -> Option<Vec<f32>>,
+    ) -> Result<NativeModel> {
+        let cfg = &meta.config;
+        let d = cfg.d_model;
+        let shapes: std::collections::HashMap<&str, &[usize]> = meta
+            .inputs
+            .iter()
+            .filter(|s| s.role == Role::Param || s.role == Role::Feature)
+            .map(|s| (s.name.as_str(), s.shape.as_slice()))
+            .collect();
+        let fetch_mat = |name: &str| -> Result<Mat> {
+            let data = lookup(name).ok_or_else(|| anyhow!("missing weight {name}"))?;
+            let shape = shapes.get(name).ok_or_else(|| anyhow!("no shape for {name}"))?;
+            match shape.len() {
+                2 => Ok(Mat::from_vec(shape[0], shape[1], data)),
+                1 => Ok(Mat::from_vec(1, shape[0], data)),
+                n => bail!("{name}: unsupported rank {n}"),
+            }
+        };
+        let fetch_vec = |name: &str| -> Result<Vec<f32>> {
+            lookup(name).ok_or_else(|| anyhow!("missing weight {name}"))
+        };
+
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |leaf: &str| format!("layers/{i}/{leaf}");
+            layers.push(Layer {
+                ln1: LayerNorm { g: fetch_vec(&p("ln1/g"))?, b: fetch_vec(&p("ln1/b"))? },
+                qkv: Dense { w: fetch_mat(&p("qkv/w"))?, b: fetch_vec(&p("qkv/b"))? },
+                proj: Dense { w: fetch_mat(&p("proj/w"))?, b: fetch_vec(&p("proj/b"))? },
+                ln2: LayerNorm { g: fetch_vec(&p("ln2/g"))?, b: fetch_vec(&p("ln2/b"))? },
+                ff1: Dense { w: fetch_mat(&p("ff1/w"))?, b: fetch_vec(&p("ff1/b"))? },
+                ff2: Dense { w: fetch_mat(&p("ff2/w"))?, b: fetch_vec(&p("ff2/b"))? },
+            });
+        }
+
+        let attention = if cfg.attention.starts_with("favor-") {
+            let kind = FeatureKind::parse(cfg.attention.trim_start_matches("favor-"))
+                .ok_or_else(|| anyhow!("unknown attention {}", cfg.attention))?;
+            let w_shape = shapes.get("w").copied().unwrap_or(&[0, 0]);
+            let w = Mat::from_vec(w_shape[0], w_shape[1], fetch_vec("w")?);
+            let b = fetch_vec("b").unwrap_or_else(|_| vec![0.0; w_shape[0]]);
+            let kernel_eps = if kind == FeatureKind::Softmax { 0.0 } else { 1e-3 };
+            NativeAttention::Favor(FeatureMap::from_parts(kind, w, b, kernel_eps))
+        } else if cfg.attention == "exact" {
+            NativeAttention::Exact
+        } else if cfg.attention == "identity" {
+            NativeAttention::Identity
+        } else {
+            bail!("native model does not support attention '{}'", cfg.attention);
+        };
+
+        let embed = fetch_mat("embed")?;
+        Ok(NativeModel {
+            d_model: d,
+            n_heads: cfg.n_heads,
+            vocab_size: embed.rows,
+            direction: if cfg.unidirectional {
+                Direction::Unidirectional
+            } else {
+                Direction::Bidirectional
+            },
+            embed,
+            lnf: LayerNorm { g: fetch_vec("lnf/g")?, b: fetch_vec("lnf/b")? },
+            layers,
+            attention,
+        })
+    }
+
+    fn head_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        match &self.attention {
+            NativeAttention::Exact => exact_attention(q, k, v, self.direction),
+            NativeAttention::Favor(fm) => favor_attention(fm, q, k, v, self.direction),
+            NativeAttention::Identity => identity_attention(q, k, v, self.direction),
+        }
+    }
+
+    /// The attention matrix a head *would* apply (for visualization).
+    fn head_attention_matrix(&self, q: &Mat, k: &Mat) -> Mat {
+        match &self.attention {
+            NativeAttention::Exact | NativeAttention::Identity => {
+                attention_matrix_exact(q, k, self.direction)
+            }
+            NativeAttention::Favor(fm) => attention_matrix_favor(fm, q, k, self.direction),
+        }
+    }
+
+    /// Forward pass for one sequence. Returns logits (L×vocab) and, if
+    /// `capture_attention`, the per-layer per-head attention matrices.
+    pub fn forward(
+        &self,
+        tokens: &[u8],
+        capture_attention: bool,
+    ) -> (Mat, Vec<Vec<Mat>>) {
+        let l = tokens.len();
+        let d = self.d_model;
+        let h = self.n_heads;
+        let dh = d / h;
+        let scale = (d as f32).sqrt();
+
+        let mut x = Mat::from_fn(l, d, |i, j| self.embed.at(tokens[i] as usize, j) * scale);
+        x.add_assign(&positions(l, d));
+
+        let mut attn_maps: Vec<Vec<Mat>> = Vec::new();
+        for layer in &self.layers {
+            // attention block
+            let normed = layer.ln1.apply(&x);
+            let qkv = layer.qkv.apply(&normed); // (L, 3d)
+            let mut head_outs = Mat::zeros(l, d);
+            let mut layer_maps = Vec::new();
+            for head in 0..h {
+                let slice = |which: usize| -> Mat {
+                    Mat::from_fn(l, dh, |i, j| qkv.at(i, which * d + head * dh + j))
+                };
+                let (q, k, v) = (slice(0), slice(1), slice(2));
+                let out = self.head_attention(&q, &k, &v);
+                for i in 0..l {
+                    for j in 0..dh {
+                        *head_outs.at_mut(i, head * dh + j) = out.at(i, j);
+                    }
+                }
+                if capture_attention {
+                    layer_maps.push(self.head_attention_matrix(&q, &k));
+                }
+            }
+            if capture_attention {
+                attn_maps.push(layer_maps);
+            }
+            x.add_assign(&layer.proj.apply(&head_outs));
+
+            // MLP block
+            let normed = layer.ln2.apply(&x);
+            let mut hmid = layer.ff1.apply(&normed);
+            for v in &mut hmid.data {
+                *v = gelu(*v);
+            }
+            x.add_assign(&layer.ff2.apply(&hmid));
+        }
+
+        let xf = self.lnf.apply(&x);
+        let logits = xf.matmul(&self.embed.t());
+        (logits, attn_maps)
+    }
+
+    /// Swap the attention mechanism (e.g. exact -> FAVOR on the same
+    /// weights — the Fig. 11 error-propagation experiment).
+    pub fn with_attention(mut self, attention: NativeAttention) -> Self {
+        self.attention = attention;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn positions_match_reference_values() {
+        let p = positions(4, 8);
+        assert!((p.at(0, 0) - 0.0).abs() < 1e-6); // sin(0)
+        assert!((p.at(0, 1) - 1.0).abs() < 1e-6); // cos(0)
+        assert!((p.at(1, 0) - 1f32.sin()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_reference_points() {
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+}

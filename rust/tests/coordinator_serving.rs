@@ -1,0 +1,141 @@
+//! Integration tests of the serving coordinator: concurrent clients,
+//! batch fusion, response correctness and clean shutdown. Requires
+//! `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use performer::configx::ServeConfig;
+use performer::coordinator::Coordinator;
+use performer::protein::vocab::{AA_BASE, BOS, EOS, MASK, N_AA};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::EngineActor;
+
+fn built() -> bool {
+    PathBuf::from("artifacts").join("tiny_relu_bid_fwd.hlo.txt").exists()
+}
+
+fn coordinator(max_batch: usize, max_wait_ms: u64) -> (EngineActor, Coordinator) {
+    let actor = EngineActor::spawn("artifacts").unwrap();
+    let mut coord = Coordinator::new(actor.handle());
+    let cfg = ServeConfig {
+        artifact: "tiny_relu_bid".into(),
+        max_batch,
+        max_wait_ms,
+        workers: 1,
+        seed: 0,
+    };
+    coord.start_pool(&cfg, None).unwrap();
+    (actor, coord)
+}
+
+#[test]
+fn fill_mask_predicts_only_masked_positions() {
+    if !built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (_actor, mut coord) = coordinator(4, 2);
+    let mut tokens = vec![BOS];
+    tokens.extend([AA_BASE, AA_BASE + 1, MASK, AA_BASE + 3, MASK]);
+    tokens.push(EOS);
+    let resp = coord.fill_mask("tiny_relu_bid", tokens.clone()).unwrap();
+    let masked: Vec<usize> =
+        tokens.iter().enumerate().filter(|(_, &t)| t == MASK).map(|(i, _)| i).collect();
+    assert_eq!(resp.predictions.len(), masked.len());
+    for ((pos, tok, p), want_pos) in resp.predictions.iter().zip(&masked) {
+        assert_eq!(pos, want_pos);
+        assert!(*tok >= AA_BASE && (*tok as usize) < AA_BASE as usize + N_AA,
+                "must predict an amino acid");
+        assert!(*p > 0.0 && *p <= 1.0);
+    }
+    // non-masked positions untouched
+    for (i, &t) in tokens.iter().enumerate() {
+        if t != MASK {
+            assert_eq!(resp.filled[i], t);
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_get_answers() {
+    if !built() {
+        return;
+    }
+    let (_actor, coord) = coordinator(4, 3);
+    let coord = Arc::new(coord);
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let mut handles = Vec::new();
+    for c in 0..3u64 {
+        let coord = coord.clone();
+        let corpus = corpus.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(c);
+            for _ in 0..8 {
+                let (_, seq) = corpus.sample_iid(&mut rng);
+                let mut toks = corpus.window(&seq, 64);
+                toks[5] = MASK;
+                let resp = coord.fill_mask("tiny_relu_bid", toks).unwrap();
+                assert_eq!(resp.predictions.len(), 1);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics("tiny_relu_bid").unwrap();
+    assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 24);
+    // dynamic batching must have fused at least some requests
+    assert!(m.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn batching_fuses_under_load() {
+    if !built() {
+        return;
+    }
+    let (_actor, coord) = coordinator(4, 25);
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let mut rng = Pcg64::new(9);
+    // submit a burst before any can complete: expect fused batches
+    let mut pending = Vec::new();
+    for _ in 0..12 {
+        let (_, seq) = corpus.sample_iid(&mut rng);
+        let mut toks = corpus.window(&seq, 64);
+        toks[3] = MASK;
+        pending.push(coord.submit("tiny_relu_bid", toks).unwrap());
+    }
+    for rx in pending {
+        rx.recv().unwrap();
+    }
+    let m = coord.metrics("tiny_relu_bid").unwrap();
+    assert!(
+        m.mean_batch_size() > 1.5,
+        "burst should fuse into batches, got mean {}",
+        m.mean_batch_size()
+    );
+}
+
+#[test]
+fn unknown_model_is_an_error() {
+    if !built() {
+        return;
+    }
+    let (_actor, coord) = coordinator(2, 1);
+    assert!(coord.submit("nonexistent", vec![MASK]).is_err());
+}
+
+#[test]
+fn oversized_request_is_clipped_not_crashed() {
+    if !built() {
+        return;
+    }
+    let (_actor, mut coord) = coordinator(2, 1);
+    let toks = vec![MASK; 500]; // longer than compiled L=64
+    let resp = coord.fill_mask("tiny_relu_bid", toks).unwrap();
+    // predictions only within the compiled window
+    assert!(resp.predictions.iter().all(|(pos, _, _)| *pos < 64));
+    coord.shutdown();
+}

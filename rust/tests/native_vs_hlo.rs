@@ -1,0 +1,105 @@
+//! Cross-validation: the native rust forward pass must agree with the
+//! AOT HLO (whose FAVOR attention runs through the Pallas kernels) on
+//! identical weights and tokens. This pins L1 (Pallas), L2 (jax model)
+//! and the L3 native reimplementation to the same math.
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::{ArtifactMeta, Engine, HostValue, Role, TensorFile};
+use performer::train::NativeModel;
+
+fn artifacts() -> PathBuf {
+    // tests run from the crate root
+    PathBuf::from("artifacts")
+}
+
+fn have(tag: &str) -> bool {
+    artifacts().join(format!("{tag}.hlo.txt")).exists()
+}
+
+fn hlo_logits(engine: &Engine, tag: &str, tokens: &[i32]) -> Vec<f32> {
+    let exe = engine.load(&format!("{tag}_fwd")).expect("load fwd");
+    let init = TensorFile::read(&artifacts().join(format!("{tag}_init.bin"))).unwrap();
+    let mut inputs = Vec::new();
+    for slot in &exe.meta.inputs {
+        inputs.push(match slot.role {
+            Role::Param => HostValue::F32(
+                init.get(&format!("param:{}", slot.name)).unwrap().1.to_vec(),
+            ),
+            Role::Feature => HostValue::F32(
+                init.get(&format!("feature:{}", slot.name)).unwrap().1.to_vec(),
+            ),
+            Role::Tokens => HostValue::I32(tokens.to_vec()),
+            _ => panic!("unexpected role"),
+        });
+    }
+    exe.run(&inputs).unwrap()[0].as_f32().unwrap().to_vec()
+}
+
+fn native_logits(tag: &str, tokens: &[u8]) -> Vec<f32> {
+    let meta = ArtifactMeta::load(&artifacts(), &format!("{tag}_fwd")).unwrap();
+    let init = TensorFile::read(&artifacts().join(format!("{tag}_init.bin"))).unwrap();
+    let lookup = move |name: &str| -> Option<Vec<f32>> {
+        init.get(&format!("param:{name}"))
+            .or_else(|| init.get(&format!("feature:{name}")))
+            .map(|(_, d)| d.to_vec())
+    };
+    let model = NativeModel::from_weights(&meta, &lookup).unwrap();
+    model.forward(tokens, false).0.data
+}
+
+fn check_tag(tag: &str, tol: f32) {
+    if !have(&format!("{tag}_fwd")) {
+        eprintln!("skipping {tag}: artifacts not built");
+        return;
+    }
+    let engine = Engine::new(artifacts()).unwrap();
+    let meta = ArtifactMeta::load(&artifacts(), &format!("{tag}_fwd")).unwrap();
+    let (b, l) = (meta.config.batch, meta.config.max_len);
+
+    // real protein tokens for the whole batch
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let mut rng = Pcg64::new(1);
+    let windows: Vec<Vec<u8>> =
+        (0..b).map(|_| corpus.window(&corpus.sample_iid(&mut rng).1, l)).collect();
+    let tokens_i32: Vec<i32> =
+        windows.iter().flatten().map(|&t| t as i32).collect();
+
+    let hlo = hlo_logits(&engine, tag, &tokens_i32);
+    let vocab = meta.config.vocab_size;
+
+    // native runs one sequence at a time; compare row 0 and row b-1
+    for row in [0, b - 1] {
+        let native = native_logits(tag, &windows[row]);
+        let hlo_row = &hlo[row * l * vocab..(row + 1) * l * vocab];
+        let mut max_diff = 0.0f32;
+        for (a, b_) in native.iter().zip(hlo_row) {
+            max_diff = max_diff.max((a - b_).abs());
+        }
+        assert!(
+            max_diff < tol,
+            "{tag} row {row}: native vs HLO logits diverge by {max_diff}"
+        );
+    }
+}
+
+#[test]
+fn native_matches_hlo_favor_relu() {
+    // HLO fwd contains the Pallas kernels; native is pure rust — both
+    // implement the same FAVOR math.
+    check_tag("tiny_relu_bid", 2e-3);
+}
+
+#[test]
+fn native_matches_hlo_exact() {
+    check_tag("base_exact_bid", 2e-3);
+}
+
+#[test]
+fn native_matches_hlo_base_favor() {
+    check_tag("base_perf_relu_bid", 5e-3);
+}

@@ -1,0 +1,145 @@
+//! Integration tests over the PJRT runtime + training driver: artifact
+//! loading, train-step execution, checkpoint roundtrip, feature
+//! resampling and the eval contract. Requires `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::Engine;
+use performer::train::{run_training, LoopOptions, Split, TrainState};
+
+fn artifacts() -> PathBuf {
+    PathBuf::from("artifacts")
+}
+
+fn built() -> bool {
+    artifacts().join("tiny_relu_bid_train.hlo.txt").exists()
+}
+
+fn new_state() -> (Arc<Engine>, TrainState) {
+    let engine = Arc::new(Engine::new(artifacts()).unwrap());
+    let state = TrainState::new(engine.clone(), "tiny_relu_bid").unwrap();
+    (engine, state)
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    if !built() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let (_e, mut state) = new_state();
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let mut gen = state.data_gen(corpus, 0);
+    let opts = LoopOptions {
+        steps: 12,
+        eval_every: 0,
+        eval_batches: 0,
+        log_every: 100,
+        resample_every: 0,
+        quiet: true,
+    };
+    let curve = run_training(&mut state, &mut gen, &opts, 0).unwrap();
+    let first = curve.train.first().unwrap().loss;
+    let last = curve.train.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(state.step as usize == 12);
+}
+
+#[test]
+fn eval_is_deterministic_and_stateless() {
+    if !built() {
+        return;
+    }
+    let (_e, state) = new_state();
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let mut gen1 = state.data_gen(corpus.clone(), 5);
+    let mut gen2 = state.data_gen(corpus, 5);
+    let (l1, a1) = state.evaluate(&mut gen1, Split::Test, 2).unwrap();
+    let (l2, a2) = state.evaluate(&mut gen2, Split::Test, 2).unwrap();
+    assert_eq!(l1, l2);
+    assert_eq!(a1, a2);
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_state() {
+    if !built() {
+        return;
+    }
+    let (engine, mut state) = new_state();
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let mut gen = state.data_gen(corpus.clone(), 1);
+    for _ in 0..3 {
+        let b = gen.next_batch(Split::Train);
+        state.train_step(&b).unwrap();
+    }
+    let path = std::env::temp_dir().join("performer_ckpt_test.bin");
+    state.save_checkpoint(&path).unwrap();
+
+    let mut restored = TrainState::new(engine, "tiny_relu_bid").unwrap();
+    restored.load_checkpoint(&path).unwrap();
+    assert_eq!(restored.step, state.step);
+    for (a, b) in state.params.iter().zip(&restored.params) {
+        assert_eq!(a, b);
+    }
+    // eval parity proves the restored state is functionally identical
+    let mut g1 = state.data_gen(corpus.clone(), 9);
+    let mut g2 = restored.data_gen(corpus, 9);
+    let (l1, _) = state.evaluate(&mut g1, Split::Valid, 2).unwrap();
+    let (l2, _) = restored.evaluate(&mut g2, Split::Valid, 2).unwrap();
+    assert_eq!(l1, l2);
+}
+
+#[test]
+fn feature_resampling_changes_projection_but_keeps_model_sane() {
+    if !built() {
+        return;
+    }
+    let (_e, mut state) = new_state();
+    // check the "w" slot specifically (the "b" slot is zeros for ReLU
+    // features and legitimately survives a redraw unchanged)
+    let w_idx = state.feature_names.iter().position(|n| n == "w").unwrap();
+    let before = state.features[w_idx].clone();
+    let mut rng = Pcg64::new(3);
+    state.resample_features(&mut rng).unwrap();
+    let after = state.features[w_idx].clone();
+    assert_ne!(before, after, "resample must redraw W");
+    // model still evaluates finitely after redraw
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+    let mut gen = state.data_gen(corpus, 2);
+    let (loss, acc) = state.evaluate(&mut gen, Split::Valid, 1).unwrap();
+    assert!(loss.is_finite() && acc.is_finite());
+}
+
+#[test]
+fn transplant_copies_matching_tensors() {
+    if !built() {
+        return;
+    }
+    let engine = Arc::new(Engine::new(artifacts()).unwrap());
+    let donor = TrainState::new(engine.clone(), "tiny_relu_bid").unwrap();
+    let mut recipient = TrainState::new(engine, "tiny_relu_bid").unwrap();
+    // scramble the recipient first
+    for p in recipient.params.iter_mut() {
+        for v in p.iter_mut() {
+            *v += 1.0;
+        }
+    }
+    let copied = recipient.transplant_from(&donor);
+    assert_eq!(copied, donor.params.len());
+    for (a, b) in donor.params.iter().zip(&recipient.params) {
+        assert_eq!(a, b);
+    }
+}
+
+#[test]
+fn corrupt_batch_size_is_rejected() {
+    if !built() {
+        return;
+    }
+    let (_e, mut state) = new_state();
+    let bad = performer::protein::Batch::new(1, 8); // wrong shape
+    assert!(state.train_step(&bad).is_err());
+}
