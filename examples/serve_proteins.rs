@@ -8,7 +8,7 @@
 //! SERVE_ARTIFACT (default tiny_relu_bid).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 use performer::configx::ServeConfig;
@@ -39,12 +39,17 @@ fn main() -> Result<()> {
     let l = actor.handle().meta(&format!("{artifact}_fwd"))?.config.max_len;
     println!("serving {artifact} (L={l}); {n_clients} clients x {} requests", n_requests / n_clients);
 
+    // a wedged worker must surface as a timeout error, not a client
+    // that blocks forever — every request in this load test carries a
+    // deadline (first one generous: it pays the PJRT compile)
+    let deadline = Duration::from_secs(30);
+
     // warm the executable before timing
     let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
     {
         let mut rng = Pcg64::new(99);
         let toks = corpus.window(&corpus.sample_iid(&mut rng).1, l);
-        coord.fill_mask(&artifact, toks)?;
+        coord.fill_mask_timeout(&artifact, toks, Duration::from_secs(120))?;
     }
 
     let t0 = Instant::now();
@@ -66,7 +71,7 @@ fn main() -> Result<()> {
                         *t = MASK;
                     }
                 }
-                let resp = coord.fill_mask(&artifact, toks)?;
+                let resp = coord.fill_mask_timeout(&artifact, toks, deadline)?;
                 filled += resp.predictions.len();
                 latency_sum += resp.latency.as_secs_f64();
             }

@@ -1,0 +1,96 @@
+//! Streaming-session scaling bench: the stream subsystem's core claim is
+//! that per-chunk latency and resident state stay *constant* as the
+//! total streamed length grows (8k → 256k+ tokens here), because causal
+//! FAVOR carries only the M×(d+1) prefix sums per head. Exact attention
+//! has no such mode at all — its per-token cost and memory grow with the
+//! context.
+//!
+//!   cargo bench --bench stream_scaling            # full sweep, 8k→262k
+//!   cargo bench --bench stream_scaling -- --test  # smoke mode (CI-fast)
+//!
+//! No artifacts required: drives a synthetic native Performer stack
+//! through the shared `stream::sweep` measurement core. Exits non-zero
+//! if per-chunk latency fails to stay flat or the resident state grows
+//! with the streamed length.
+
+use std::sync::Arc;
+
+use performer::benchlib::{fmt_secs, loglog_slope, Report};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::stream::{chunked_latency_point, sweep_totals};
+use performer::train::{NativeModel, SyntheticConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test")
+        || std::env::var("STREAM_SMOKE").is_ok();
+    let (chunk, totals): (usize, Vec<usize>) = if smoke {
+        (256, sweep_totals(4096, 4, 16_384))
+    } else {
+        let chunk = env_usize("STREAM_CHUNK", 512);
+        let max_total = env_usize("STREAM_MAX_TOTAL", 262_144).max(chunk);
+        (chunk, sweep_totals(8192.min(max_total), 4, max_total))
+    };
+
+    let mut rng = Pcg64::new(0);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    let mut rep = Report::new(
+        &format!(
+            "Stream scaling — per-chunk latency & resident state vs total length \
+             (chunk={chunk}; expect flat)"
+        ),
+        &["total_tokens", "chunks", "first", "last", "last/first", "state_bytes", "tokens_per_s"],
+    );
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    let mut state_sizes = Vec::new();
+    let mut worst_ratio = 0.0f64;
+    for &total in &totals {
+        let p = chunked_latency_point(&model, &corpus, chunk, total, &mut rng)?;
+        worst_ratio = worst_ratio.max(p.flatness_ratio());
+        xs.push(total as f64);
+        ys.push(p.last_secs);
+        state_sizes.push(p.state_bytes);
+        rep.row(vec![
+            total.to_string(),
+            p.n_chunks.to_string(),
+            fmt_secs(p.first_secs),
+            fmt_secs(p.last_secs),
+            format!("{:.2}", p.flatness_ratio()),
+            p.state_bytes.to_string(),
+            format!("{:.0}", p.tokens_per_sec()),
+        ]);
+    }
+    println!("{}", rep.render());
+
+    let slope = if xs.len() > 1 { loglog_slope(&xs, &ys) } else { 0.0 };
+    println!("per-chunk latency scaling exponent vs total length: {slope:.3} (0 = flat)");
+    println!(
+        "resident state: {} bytes at every total (constant by construction)",
+        state_sizes[0]
+    );
+    rep.save_csv(std::path::Path::new("results/stream_scaling.csv"))?;
+
+    // hard claims — fail the bench if streaming stops being O(1)/chunk
+    assert!(
+        state_sizes.iter().all(|&b| b == state_sizes[0]),
+        "resident state must not grow with streamed length: {state_sizes:?}"
+    );
+    assert!(
+        worst_ratio < 2.0,
+        "per-chunk latency must stay flat within a stream (worst last/first = {worst_ratio:.2})"
+    );
+    assert!(
+        slope.abs() < 0.25,
+        "per-chunk latency must not scale with total length (slope {slope:.3})"
+    );
+    println!("PASS: per-chunk latency and resident state are flat in total streamed length");
+    Ok(())
+}

@@ -14,6 +14,7 @@
 //!   xp fig12    generalized-attention kernel sweep (Figs. 12/13)
 //!   xp table2   accuracy/perplexity on Test + OOD (Appendix C.3 Table 2)
 //!   xp thm1     empirical check of the Thm. 1 M = Theta(d log d) scaling
+//!   xp stream   streaming-session scaling: per-chunk latency/state vs length
 //!   xp ablation-orf / ablation-resample   design-choice ablations
 //!   xp all      everything above in dependency order
 //!
@@ -41,8 +42,11 @@ use performer::protein::{
 };
 use performer::rng::Pcg64;
 use performer::runtime::{ArtifactMeta, Engine, TensorFile};
+use performer::stream::{chunked_latency_point, sweep_totals};
 use performer::tensor::Mat;
-use performer::train::{run_training, LoopOptions, NativeAttention, NativeModel, Split, TrainState};
+use performer::train::{
+    run_training, LoopOptions, NativeAttention, NativeModel, Split, SyntheticConfig, TrainState,
+};
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("PERFORMER_ARTIFACTS")
@@ -70,10 +74,11 @@ fn main() {
 fn run() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first().map(|s| s.as_str()) else {
-        bail!("usage: xp <table1|fig2|fig3|fig4|fig5|fig6|fig7|fig10|fig11|fig12|table2|thm1|all>");
+        bail!("usage: xp <table1|fig2|fig3|fig4|fig5|fig6|fig7|fig10|fig11|fig12|table2|thm1|stream|all>");
     };
     match cmd {
         "table1" => table1(),
+        "stream" => stream_scaling(),
         "fig2" => fig2(),
         "fig3" => fig3(),
         "fig4" => fig4(),
@@ -93,6 +98,7 @@ fn run() -> Result<()> {
                 fig6,
                 fig2,
                 thm1,
+                stream_scaling,
                 fig11,
                 fig12,
                 fig4,
@@ -850,6 +856,47 @@ fn ablation_resample() -> Result<()> {
     }
     println!("{}", rep.render());
     rep.save_csv(&results_dir().join("ablation_resample.csv"))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Streaming sessions: per-chunk latency and resident state must be flat
+// in the total streamed length (the stream subsystem's core claim)
+// ---------------------------------------------------------------------------
+
+fn stream_scaling() -> Result<()> {
+    let chunk = env_usize("XP_STREAM_CHUNK", 256);
+    let max_total = env_usize("XP_STREAM_TOTAL", 65536).max(chunk);
+    let mut rng = Pcg64::new(0);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    let mut rep = Report::new(
+        "Streaming sessions — per-chunk latency & resident state vs total length (expect flat)",
+        &["total_tokens", "chunks", "first_ms", "last_ms", "last/first", "state_bytes"],
+    );
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for total in sweep_totals(4096, 4, max_total) {
+        let p = chunked_latency_point(&model, &corpus, chunk, total, &mut rng)?;
+        xs.push(total as f64);
+        ys.push(p.last_secs);
+        rep.row(vec![
+            total.to_string(),
+            p.n_chunks.to_string(),
+            format!("{:.3}", p.first_secs * 1e3),
+            format!("{:.3}", p.last_secs * 1e3),
+            format!("{:.2}", p.flatness_ratio()),
+            p.state_bytes.to_string(),
+        ]);
+    }
+    println!("{}", rep.render());
+    let slope = if xs.len() > 1 { loglog_slope(&xs, &ys) } else { 0.0 };
+    println!(
+        "per-chunk latency scaling exponent vs total length: {slope:.3} \
+         (0 = flat; exact attention would be ~1)\n"
+    );
+    rep.save_csv(&results_dir().join("stream_scaling.csv"))?;
     Ok(())
 }
 

@@ -1,11 +1,15 @@
 //! L3 serving coordinator: request router, dynamic batcher and metrics
-//! in front of the AOT-compiled Performer executables. Python is never
-//! on this path — requests hit compiled HLO through PJRT directly.
+//! in front of the AOT-compiled Performer executables (Python is never
+//! on this path — requests hit compiled HLO through PJRT directly),
+//! plus the streaming session path for chunked long-context inference
+//! over the native Performer stack.
 
 pub mod batcher;
 pub mod metrics;
 pub mod service;
+pub mod streamer;
 
 pub use batcher::{Request, Response};
 pub use metrics::Metrics;
 pub use service::Coordinator;
+pub use streamer::{StreamRequest, StreamResponse};

@@ -13,7 +13,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -22,9 +22,12 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::configx::ServeConfig;
 use crate::runtime::{EngineHandle, Role, TensorFile};
+use crate::stream::SessionConfig;
+use crate::train::NativeModel;
 
 use super::batcher::{collect_batch, serve_batch, ModelState, Request, Response};
 use super::metrics::Metrics;
+use super::streamer::{into_result, StreamPool, StreamRequest, StreamResponse};
 
 /// Handle to a running model pool.
 struct Pool {
@@ -33,16 +36,23 @@ struct Pool {
     workers: Vec<JoinHandle<()>>,
 }
 
-/// The coordinator: owns the engine handle and all model pools.
+/// The coordinator: owns the engine handle, all batched model pools and
+/// all streaming session pools.
 pub struct Coordinator {
     engine: EngineHandle,
     pools: HashMap<String, Pool>,
+    streams: HashMap<String, StreamPool>,
     next_id: AtomicU64,
 }
 
 impl Coordinator {
     pub fn new(engine: EngineHandle) -> Coordinator {
-        Coordinator { engine, pools: HashMap::new(), next_id: AtomicU64::new(1) }
+        Coordinator {
+            engine,
+            pools: HashMap::new(),
+            streams: HashMap::new(),
+            next_id: AtomicU64::new(1),
+        }
     }
 
     /// Start a model pool serving `{artifact}_fwd` with weights from
@@ -135,6 +145,94 @@ impl Coordinator {
         rx.recv().map_err(|_| anyhow!("worker dropped response"))
     }
 
+    /// Submit and wait at most `deadline` — a wedged worker yields a
+    /// timeout error instead of blocking the client forever.
+    pub fn fill_mask_timeout(
+        &self,
+        model: &str,
+        tokens: Vec<u8>,
+        deadline: Duration,
+    ) -> Result<Response> {
+        let rx = self.submit(model, tokens)?;
+        match rx.recv_timeout(deadline) {
+            Ok(resp) => Ok(resp),
+            Err(RecvTimeoutError::Timeout) => Err(anyhow!(
+                "fill_mask on '{model}' timed out after {deadline:?}"
+            )),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("worker dropped response")),
+        }
+    }
+
+    /// Start a streaming session pool under `name`, serving chunked
+    /// long-context inference over the native model (no artifacts/PJRT
+    /// involved). Errors if the model is not streamable.
+    pub fn start_stream_pool(
+        &mut self,
+        name: &str,
+        model: Arc<NativeModel>,
+        cfg: SessionConfig,
+    ) -> Result<()> {
+        let pool = StreamPool::spawn(name, model, cfg)?;
+        self.streams.insert(name.to_string(), pool);
+        Ok(())
+    }
+
+    /// Submit the next chunk of stream `session` to pool `pool`;
+    /// returns the receiver for the incremental response.
+    pub fn submit_chunk(
+        &self,
+        pool: &str,
+        session: &str,
+        tokens: Vec<u8>,
+    ) -> Result<Receiver<StreamResponse>> {
+        self.submit_stream_request(pool, session, tokens, false)
+    }
+
+    /// Submit a chunk and wait for its scores.
+    pub fn stream_chunk(
+        &self,
+        pool: &str,
+        session: &str,
+        tokens: Vec<u8>,
+    ) -> Result<StreamResponse> {
+        let rx = self.submit_chunk(pool, session, tokens)?;
+        into_result(rx.recv().map_err(|_| anyhow!("stream worker dropped response"))?)
+    }
+
+    /// Close a stream, releasing its carried state; waits for the ack.
+    pub fn close_stream(&self, pool: &str, session: &str) -> Result<()> {
+        let rx = self.submit_stream_request(pool, session, Vec::new(), true)?;
+        rx.recv().map_err(|_| anyhow!("stream worker dropped response"))?;
+        Ok(())
+    }
+
+    pub fn stream_pools(&self) -> Vec<String> {
+        self.streams.keys().cloned().collect()
+    }
+
+    fn submit_stream_request(
+        &self,
+        pool: &str,
+        session: &str,
+        tokens: Vec<u8>,
+        close: bool,
+    ) -> Result<Receiver<StreamResponse>> {
+        let p = self
+            .streams
+            .get(pool)
+            .ok_or_else(|| anyhow!("no stream pool '{pool}'"))?;
+        let (rtx, rrx) = channel();
+        p.tx.send(StreamRequest {
+            session: session.to_string(),
+            tokens,
+            close,
+            respond: rtx,
+            submitted: Instant::now(),
+        })
+        .map_err(|_| anyhow!("stream pool '{pool}' shut down"))?;
+        Ok(rrx)
+    }
+
     pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
         self.pools.get(model).map(|p| p.metrics.clone())
     }
@@ -151,6 +249,9 @@ impl Coordinator {
             for w in pool.workers {
                 let _ = w.join();
             }
+        }
+        for (_, stream) in std::mem::take(&mut self.streams) {
+            stream.shutdown();
         }
     }
 }

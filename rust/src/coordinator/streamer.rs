@@ -1,0 +1,121 @@
+//! Streaming request path: long-context sessions served through the
+//! coordinator. Clients submit chunks tagged with a session id; a
+//! dedicated worker thread owns the `stream::SessionManager` (per-model)
+//! and answers each chunk incrementally, so a stream's total length is
+//! unbounded while its resident footprint stays constant.
+//!
+//!   clients ──submit_chunk()──▶ stream worker ──▶ SessionManager
+//!                                                   (budget + LRU)
+//!
+//! This path runs the native Performer stack — it never touches PJRT,
+//! so it works in stub builds and scales past any compiled artifact
+//! length.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::stream::{ChunkScores, SessionConfig, SessionManager};
+use crate::train::NativeModel;
+
+/// One streaming request: the next chunk of a session's token stream,
+/// or a close notice (empty `tokens` + `close`).
+pub struct StreamRequest {
+    pub session: String,
+    pub tokens: Vec<u8>,
+    /// release the session's state after processing this request
+    pub close: bool,
+    pub respond: Sender<StreamResponse>,
+    pub submitted: Instant,
+}
+
+/// Incremental answer for one chunk.
+#[derive(Clone, Debug)]
+pub struct StreamResponse {
+    pub session: String,
+    /// per-token scores for this chunk (None for a close-only request
+    /// or an error)
+    pub scores: Option<ChunkScores>,
+    pub error: Option<String>,
+    pub latency: Duration,
+    /// sessions resident after this request
+    pub resident_sessions: usize,
+    /// carried-state bytes resident after this request
+    pub resident_bytes: usize,
+}
+
+impl StreamResponse {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// A running stream pool: worker thread + its request queue.
+pub(crate) struct StreamPool {
+    pub(crate) tx: Sender<StreamRequest>,
+    pub(crate) worker: Option<JoinHandle<()>>,
+}
+
+impl StreamPool {
+    /// Spawn the worker owning a session manager over `model`.
+    pub(crate) fn spawn(
+        name: &str,
+        model: Arc<NativeModel>,
+        cfg: SessionConfig,
+    ) -> Result<StreamPool> {
+        // validate streamability up front, on the caller's thread
+        let mut mgr = SessionManager::new(model, cfg)?;
+        let (tx, rx) = channel::<StreamRequest>();
+        let worker = std::thread::Builder::new()
+            .name(format!("stream-{name}"))
+            .spawn(move || stream_loop(&rx, &mut mgr))?;
+        Ok(StreamPool { tx, worker: Some(worker) })
+    }
+
+    pub(crate) fn shutdown(mut self) {
+        drop(self.tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn stream_loop(rx: &Receiver<StreamRequest>, mgr: &mut SessionManager) {
+    while let Ok(req) = rx.recv() {
+        let (scores, error) = if req.tokens.is_empty() {
+            if req.close {
+                (None, None) // close-only ack
+            } else {
+                (None, Some("empty chunk (and close not requested)".to_string()))
+            }
+        } else {
+            match mgr.advance(&req.session, &req.tokens) {
+                Ok(s) => (Some(s), None),
+                Err(e) => (None, Some(format!("{e:#}"))),
+            }
+        };
+        if req.close {
+            mgr.close(&req.session);
+        }
+        // receiver may have hung up; that's fine
+        let _ = req.respond.send(StreamResponse {
+            session: req.session,
+            scores,
+            error,
+            latency: req.submitted.elapsed(),
+            resident_sessions: mgr.len(),
+            resident_bytes: mgr.resident_bytes(),
+        });
+    }
+}
+
+/// Turn a worker's possibly-failed response into a `Result`.
+pub fn into_result(resp: StreamResponse) -> Result<StreamResponse> {
+    match &resp.error {
+        Some(e) => Err(anyhow!("stream session '{}': {e}", resp.session)),
+        None => Ok(resp),
+    }
+}

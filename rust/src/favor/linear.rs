@@ -61,40 +61,14 @@ pub fn favor_bidirectional(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
 /// Unidirectional FAVOR with the streaming prefix-sum state (Alg. 1,
 /// Sec. 2.5.1). Row i's output uses the running sum of K'_j C_j^T for
 /// j <= i — causality by construction, no L×L matrix.
+///
+/// This is a thin wrapper over [`crate::stream::StreamState`] — the
+/// single source of truth for the recurrence — run as one chunk covering
+/// the whole sequence. The streaming form consumes the same sequence
+/// split into arbitrary chunks and produces identical outputs.
 pub fn favor_unidirectional(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
-    let (l, m) = (qp.rows, qp.cols);
-    let d = v.cols;
-    assert_eq!(kp.rows, l);
-    assert_eq!(v.rows, l);
-
-    let mut state = Mat::zeros(m, d + 1); // G^PS running value
-    let mut out = Mat::zeros(l, d);
-    let mut buf = vec![0.0f32; d + 1];
-    for i in 0..l {
-        // state += K'_i C_i^T
-        let krow = kp.row(i);
-        let vrow = v.row(i);
-        for (j, &kij) in krow.iter().enumerate() {
-            if kij != 0.0 {
-                let srow = &mut state.data[j * (d + 1)..(j + 1) * (d + 1)];
-                axpy(kij, vrow, &mut srow[..d]);
-                srow[d] += kij;
-            }
-        }
-        // out_i = (Q'_i · G^PS_i) renormalized
-        buf.fill(0.0);
-        let qrow = qp.row(i);
-        for (j, &qij) in qrow.iter().enumerate() {
-            if qij != 0.0 {
-                axpy(qij, &state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
-            }
-        }
-        let denom = buf[d] + STABILIZER;
-        for (o, &b) in out.row_mut(i).iter_mut().zip(&buf[..d]) {
-            *o = b / denom;
-        }
-    }
-    out
+    let mut state = crate::stream::StreamState::new(qp.cols, v.cols);
+    state.advance(qp, kp, v)
 }
 
 /// Full FAVOR attention: map q/k through the feature map, then apply the

@@ -7,8 +7,9 @@
 //! this native version powers the L3-side experiments that need direct
 //! access to attention matrices (Figs. 2, 7–11, Thm. 1 checks) and the
 //! scaling benches (Fig. 1/14/15 native series). The two implementations
-//! are cross-checked in `rust/tests/favor_cross.rs` against golden values
-//! produced by the python oracle.
+//! are cross-checked in `rust/tests/native_vs_hlo.rs` (native vs AOT HLO
+//! on identical weights); the native math itself is property-tested in
+//! `rust/tests/prop_favor.rs` and `rust/tests/prop_stream.rs`.
 
 pub mod analysis;
 pub mod exact;

@@ -10,10 +10,17 @@
 //!   protein language model, AOT-lowered to HLO text.
 //! * **L3** (this crate): the coordinator — PJRT runtime, training
 //!   driver, serving router/batcher, synthetic protein data pipeline,
-//!   plus a native FAVOR implementation for analysis and benchmarking.
+//!   a native FAVOR implementation for analysis and benchmarking, and
+//!   the `stream` subsystem for stateful chunked long-context inference.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for measured reproductions of every table/figure.
+//! See `DESIGN.md` for the system inventory; the experiment harness is
+//! the `xp` binary (`rust/src/bin/xp.rs`), which writes its measured
+//! tables/figures as CSV under `results/`.
+
+// The numeric kernels index deliberately (tight f32 loops over `Mat`
+// rows where iterator chains obscure the stride arithmetic); silence the
+// corresponding style lint crate-wide rather than per-loop.
+#![allow(clippy::needless_range_loop)]
 
 pub mod benchlib;
 pub mod configx;
@@ -24,5 +31,6 @@ pub mod linalg;
 pub mod protein;
 pub mod rng;
 pub mod runtime;
+pub mod stream;
 pub mod tensor;
 pub mod train;

@@ -59,6 +59,15 @@ impl EngineHandle {
         ArtifactMeta::load(&self.dir, artifact)
     }
 
+    /// A handle backed by no engine thread: `exec`/`warm` fail cleanly.
+    /// Lets a `Coordinator` host native streaming pools (which never
+    /// touch PJRT) without spawning an engine actor — e.g. in builds
+    /// where the PJRT backend is stubbed out.
+    pub fn disconnected(artifacts_dir: impl AsRef<Path>) -> EngineHandle {
+        let (tx, _rx) = channel();
+        EngineHandle { tx, dir: artifacts_dir.as_ref().to_path_buf() }
+    }
+
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }

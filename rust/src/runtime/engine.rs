@@ -14,6 +14,11 @@ use anyhow::{anyhow, bail, Result};
 
 use super::artifact::{ArtifactMeta, Dtype, Role};
 
+// Without the `xla` feature the PJRT bindings resolve to the in-tree
+// stub, which fails at `PjRtClient::cpu()` with a clear message.
+#[cfg(not(feature = "xla"))]
+use super::xla_stub as xla;
+
 /// A typed host-side value fed to / read from an executable.
 #[derive(Clone, Debug)]
 pub enum HostValue {

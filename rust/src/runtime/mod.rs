@@ -7,6 +7,8 @@ pub mod actor;
 pub mod artifact;
 pub mod engine;
 pub mod tensorfile;
+#[cfg(not(feature = "xla"))]
+pub(crate) mod xla_stub;
 
 pub use actor::{EngineActor, EngineHandle};
 pub use artifact::{ArtifactMeta, Dtype, Role, Slot};

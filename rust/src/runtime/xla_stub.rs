@@ -1,0 +1,106 @@
+//! Offline stub of the `xla` PJRT binding surface `engine.rs` compiles
+//! against when the `xla` cargo feature is disabled (the bindings crate
+//! is not in the offline registry image).
+//!
+//! Every entry point fails fast with a descriptive error, so anything
+//! that genuinely needs compiled artifacts (serving pools, the training
+//! driver, the HLO bench series) reports "backend unavailable" cleanly
+//! at runtime instead of failing the build. All native paths — FAVOR,
+//! the streaming session subsystem, analysis and benches — never touch
+//! this module.
+
+use std::fmt;
+
+const UNAVAILABLE: &str =
+    "PJRT backend unavailable: built without the `xla` feature (offline image); \
+     native FAVOR and streaming paths remain fully functional";
+
+/// Error type standing in for the binding crate's error.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(UNAVAILABLE.to_string()))
+}
+
+/// Stub PJRT client; construction always fails.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub compiled executable (never constructed).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub device buffer (never constructed).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub host literal.
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub HLO module proto.
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// Stub computation handle.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

@@ -1,0 +1,30 @@
+//! Streaming long-context inference: stateful, chunked FAVOR sessions.
+//!
+//! The unidirectional FAVOR recurrence (PAPER.md Sec. 2.5.1/2.6) carries
+//! only an M×(d+1) prefix-sum per head, so a sequence can be consumed
+//! chunk by chunk in memory independent of its total length. This
+//! subsystem turns that observation into a serving capability:
+//!
+//! * [`state`] — [`StreamState`], the incremental prefix-sum core (the
+//!   single source of truth for causal FAVOR; `favor::linear`'s
+//!   single-shot path wraps it), plus [`FavorStream`] for raw q/k/v
+//!   streams;
+//! * [`scorer`] — [`ChunkScorer`], the full Performer stack run
+//!   layer-by-layer over chunks, yielding per-token MLM scores for
+//!   genome-scale inputs;
+//! * [`session`] — [`SessionManager`], many concurrent keyed streams
+//!   under a global memory budget with LRU eviction.
+//!
+//! The serving-side request path lives in `coordinator::streamer`; the
+//! `performer stream` CLI, `xp stream` report and the
+//! `benches/stream_scaling.rs` sweep drive it end to end.
+
+pub mod scorer;
+pub mod session;
+pub mod state;
+pub mod sweep;
+
+pub use scorer::{ChunkScorer, ChunkScores};
+pub use session::{SessionConfig, SessionManager, SessionStats};
+pub use state::{FavorStream, StreamState};
+pub use sweep::{chunked_latency_point, sweep_totals, SweepPoint};

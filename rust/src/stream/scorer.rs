@@ -1,0 +1,249 @@
+//! Chunked native-model scorer: drives the `train::NativeModel`
+//! Performer stack chunk by chunk through its streaming forward,
+//! producing causal per-token scores (log-likelihoods + greedy
+//! predictions) for sequences far longer than any compiled artifact
+//! length. Resident state is the per-layer per-head FAVOR prefix sums —
+//! constant in the streamed length.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::protein::vocab::{AA_BASE, N_AA};
+use crate::stream::StreamState;
+use crate::train::NativeModel;
+
+/// Per-token scores for one consumed chunk. Scoring is properly causal:
+/// position p is scored from the logits of position p−1 (carried across
+/// chunk boundaries), i.e. log P(token_p | tokens_<p) — same-position
+/// logits would let the model see the token it is scoring. The stream's
+/// very first token has no context and is scored against the uniform
+/// prior over the vocabulary.
+#[derive(Clone, Debug)]
+pub struct ChunkScores {
+    /// global stream position of the chunk's first token
+    pub offset: usize,
+    /// log P(observed token | causal context before it), per position
+    pub logprob: Vec<f32>,
+    /// greedy amino-acid prediction for each position (from the context
+    /// before it)
+    pub argmax: Vec<u8>,
+    /// probability of that prediction
+    pub argmax_prob: Vec<f32>,
+}
+
+impl ChunkScores {
+    pub fn len(&self) -> usize {
+        self.logprob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.logprob.is_empty()
+    }
+
+    /// Mean negative log-likelihood over the chunk (perplexity = exp).
+    pub fn mean_nll(&self) -> f64 {
+        if self.logprob.is_empty() {
+            return 0.0;
+        }
+        -self.logprob.iter().map(|&v| v as f64).sum::<f64>() / self.logprob.len() as f64
+    }
+}
+
+/// A stateful scorer over one token stream: owns the model handle and
+/// the carried attention states, tracks the global position.
+pub struct ChunkScorer {
+    model: Arc<NativeModel>,
+    states: Vec<Vec<StreamState>>,
+    /// logits of the previous chunk's last position — the causal context
+    /// for the next chunk's first token
+    prev_row: Option<Vec<f32>>,
+    pos: usize,
+}
+
+impl ChunkScorer {
+    /// Start a stream over the given model. Errors unless the model is
+    /// streamable (unidirectional + FAVOR).
+    pub fn new(model: Arc<NativeModel>) -> Result<ChunkScorer> {
+        let states = model.make_stream_states()?;
+        Ok(ChunkScorer { model, states, prev_row: None, pos: 0 })
+    }
+
+    pub fn model(&self) -> &Arc<NativeModel> {
+        &self.model
+    }
+
+    /// Tokens consumed so far.
+    pub fn tokens_seen(&self) -> usize {
+        self.pos
+    }
+
+    /// Resident bytes of the carried attention state — constant in the
+    /// streamed length.
+    pub fn state_bytes(&self) -> usize {
+        self.states
+            .iter()
+            .flat_map(|layer| layer.iter())
+            .map(StreamState::state_bytes)
+            .sum()
+    }
+
+    /// Restart the stream without reallocating.
+    pub fn reset(&mut self) {
+        for layer in &mut self.states {
+            for st in layer {
+                st.reset();
+            }
+        }
+        self.prev_row = None;
+        self.pos = 0;
+    }
+
+    /// Consume the next chunk of the stream and score every position
+    /// causally (position p from the logits at p−1, carried across
+    /// chunk boundaries).
+    pub fn advance(&mut self, tokens: &[u8]) -> Result<ChunkScores> {
+        if tokens.is_empty() {
+            bail!("empty chunk");
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= self.model.vocab_size) {
+            bail!("token {t} outside vocab (size {})", self.model.vocab_size);
+        }
+        let offset = self.pos;
+        let logits = self.model.forward_chunk(tokens, offset, &mut self.states)?;
+        self.pos += tokens.len();
+
+        let vocab = logits.cols;
+        let aa_lo = AA_BASE as usize;
+        let aa_hi = (aa_lo + N_AA).min(vocab);
+        let uniform = -(vocab as f32).ln();
+        let mut logprob = Vec::with_capacity(tokens.len());
+        let mut argmax = Vec::with_capacity(tokens.len());
+        let mut argmax_prob = Vec::with_capacity(tokens.len());
+        for (i, &tok) in tokens.iter().enumerate() {
+            // context row: previous position's logits (cross-chunk for i=0)
+            let ctx: Option<&[f32]> = if i == 0 {
+                self.prev_row.as_deref()
+            } else {
+                Some(logits.row(i - 1))
+            };
+            let Some(row) = ctx else {
+                // the stream's first token: no context, uniform prior
+                logprob.push(uniform);
+                argmax.push(AA_BASE);
+                argmax_prob.push(1.0 / vocab as f32);
+                continue;
+            };
+            // stable log-softmax
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let lse = row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+            logprob.push(row[tok as usize] - lse);
+            let (best, best_logit) = row[aa_lo..aa_hi]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, &v)| (aa_lo + j, v))
+                .unwrap();
+            argmax.push(best as u8);
+            argmax_prob.push((best_logit - lse).exp());
+        }
+        self.prev_row = Some(logits.row(tokens.len() - 1).to_vec());
+        Ok(ChunkScores { offset, logprob, argmax, argmax_prob })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::train::{NativeModel, SyntheticConfig};
+
+    fn model() -> Arc<NativeModel> {
+        let mut rng = Pcg64::new(7);
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng))
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+    }
+
+    #[test]
+    fn chunked_matches_single_shot_forward() {
+        let m = model();
+        let toks = tokens(96, 1);
+        let (full_logits, _) = m.forward(&toks, false);
+
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        let mut states = m.make_stream_states().unwrap();
+        let mut streamed = Vec::new();
+        let mut pos = 0;
+        for chunk in toks.chunks(25) {
+            let logits = m.forward_chunk(chunk, pos, &mut states).unwrap();
+            streamed.extend(logits.data);
+            pos += chunk.len();
+            scorer.advance(chunk).unwrap();
+        }
+        let max_diff = full_logits
+            .data
+            .iter()
+            .zip(&streamed)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-4, "chunked logits diverge by {max_diff}");
+        assert_eq!(scorer.tokens_seen(), toks.len());
+    }
+
+    #[test]
+    fn chunked_scoring_matches_single_shot_scoring() {
+        // the carried prev_row must make scores independent of chunking
+        let m = model();
+        let toks = tokens(60, 9);
+        let mut one = ChunkScorer::new(m.clone()).unwrap();
+        let whole = one.advance(&toks).unwrap();
+
+        let mut many = ChunkScorer::new(m).unwrap();
+        let mut got = Vec::new();
+        for chunk in toks.chunks(20) {
+            got.extend(many.advance(chunk).unwrap().logprob);
+        }
+        assert_eq!(whole.logprob.len(), got.len());
+        let max_diff = whole
+            .logprob
+            .iter()
+            .zip(&got)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "scores depend on chunk boundaries (diff {max_diff})");
+    }
+
+    #[test]
+    fn scores_are_finite_probabilities() {
+        let mut scorer = ChunkScorer::new(model()).unwrap();
+        let s = scorer.advance(&tokens(40, 2)).unwrap();
+        assert_eq!(s.len(), 40);
+        assert!(s.logprob.iter().all(|v| v.is_finite() && *v <= 0.0));
+        assert!(s.argmax_prob.iter().all(|&p| p > 0.0 && p <= 1.0));
+        assert!(s.argmax.iter().all(|&t| t >= AA_BASE && (t as usize) < AA_BASE as usize + N_AA));
+        assert!(s.mean_nll() > 0.0);
+    }
+
+    #[test]
+    fn state_bytes_constant_as_stream_grows() {
+        let mut scorer = ChunkScorer::new(model()).unwrap();
+        let b0 = scorer.state_bytes();
+        assert!(b0 > 0);
+        for seed in 0..8 {
+            scorer.advance(&tokens(64, 100 + seed)).unwrap();
+            assert_eq!(scorer.state_bytes(), b0);
+        }
+        assert_eq!(scorer.tokens_seen(), 8 * 64);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let mut scorer = ChunkScorer::new(model()).unwrap();
+        assert!(scorer.advance(&[]).is_err());
+        assert!(scorer.advance(&[200]).is_err());
+    }
+}

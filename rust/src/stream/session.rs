@@ -1,0 +1,306 @@
+//! Session management for concurrent long-context streams: many users
+//! hold open streams against one model; each session carries only the
+//! constant-size FAVOR prefix-sum state, and a global memory budget with
+//! LRU eviction keeps residency bounded no matter how many streams are
+//! opened and abandoned.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::train::NativeModel;
+
+use super::scorer::{ChunkScorer, ChunkScores};
+
+/// Budget knobs for a [`SessionManager`].
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// total bytes of carried attention state across all sessions; when
+    /// exceeded, least-recently-used sessions are evicted (the active
+    /// one is always preserved)
+    pub max_state_bytes: usize,
+    /// hard cap on simultaneously resident sessions (0 = no cap)
+    pub max_sessions: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        // 64 MiB of stream state, no session-count cap
+        SessionConfig { max_state_bytes: 64 << 20, max_sessions: 0 }
+    }
+}
+
+/// Aggregate counters, cheap to copy out for metrics/logging.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SessionStats {
+    pub active: usize,
+    pub resident_bytes: usize,
+    pub opened: u64,
+    pub closed: u64,
+    pub evicted: u64,
+    pub chunks: u64,
+    pub tokens: u64,
+}
+
+struct Session {
+    scorer: ChunkScorer,
+    last_used: u64,
+}
+
+/// Keyed store of open streams over one model, with budgeted residency.
+pub struct SessionManager {
+    model: Arc<NativeModel>,
+    cfg: SessionConfig,
+    sessions: HashMap<String, Session>,
+    /// ids dropped under memory pressure: a later chunk for one of these
+    /// must fail loudly (the causal context is gone) rather than
+    /// silently reopen at offset 0 with context-free scores
+    evicted_ids: HashSet<String>,
+    /// logical clock for LRU ordering
+    clock: u64,
+    /// bytes of carried state per session (uniform: one model)
+    per_session_bytes: usize,
+    opened: u64,
+    closed: u64,
+    evicted: u64,
+    chunks: u64,
+    tokens: u64,
+}
+
+impl SessionManager {
+    /// Build over a streamable model. Errors if the model cannot stream
+    /// (bidirectional or non-FAVOR attention).
+    pub fn new(model: Arc<NativeModel>, cfg: SessionConfig) -> Result<SessionManager> {
+        // probe streamability once up front so `advance` can't half-open
+        let probe = ChunkScorer::new(model.clone())?;
+        let per_session_bytes = probe.state_bytes();
+        Ok(SessionManager {
+            model,
+            cfg,
+            sessions: HashMap::new(),
+            evicted_ids: HashSet::new(),
+            clock: 0,
+            per_session_bytes,
+            opened: 0,
+            closed: 0,
+            evicted: 0,
+            chunks: 0,
+            tokens: 0,
+        })
+    }
+
+    /// Carried-state bytes for one session (constant for a given model).
+    pub fn per_session_bytes(&self) -> usize {
+        self.per_session_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.sessions.contains_key(id)
+    }
+
+    /// Total resident carried-state bytes.
+    pub fn resident_bytes(&self) -> usize {
+        self.sessions.len() * self.per_session_bytes
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            active: self.sessions.len(),
+            resident_bytes: self.resident_bytes(),
+            opened: self.opened,
+            closed: self.closed,
+            evicted: self.evicted,
+            chunks: self.chunks,
+            tokens: self.tokens,
+        }
+    }
+
+    /// Tokens consumed so far by a resident session.
+    pub fn tokens_seen(&self, id: &str) -> Option<usize> {
+        self.sessions.get(id).map(|s| s.scorer.tokens_seen())
+    }
+
+    /// Feed the next chunk of stream `id` (opening it on first use) and
+    /// return the chunk's scores. May evict other idle sessions to stay
+    /// within budget; the session being advanced is never evicted. A
+    /// session that *was* evicted fails loudly here — its causal context
+    /// is gone, so silently restarting it would return wrong scores;
+    /// `close` it (acknowledging the loss) to reuse the id.
+    pub fn advance(&mut self, id: &str, chunk: &[u8]) -> Result<ChunkScores> {
+        let needs_open = !self.sessions.contains_key(id);
+        if needs_open {
+            if self.evicted_ids.contains(id) {
+                return Err(anyhow!(
+                    "session '{id}' was evicted under memory pressure; \
+                     close it and start a new session"
+                ));
+            }
+            let scorer = ChunkScorer::new(self.model.clone())?;
+            self.sessions.insert(id.to_string(), Session { scorer, last_used: self.clock });
+            self.opened += 1;
+            self.enforce_budget(id);
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        let session = self
+            .sessions
+            .get_mut(id)
+            .ok_or_else(|| anyhow!("session '{id}' vanished"))?;
+        session.last_used = clock;
+        let scores = session.scorer.advance(chunk)?;
+        self.chunks += 1;
+        self.tokens += chunk.len() as u64;
+        Ok(scores)
+    }
+
+    /// Explicitly end a stream, releasing its state immediately (and
+    /// acknowledging a prior eviction, freeing the id for reuse).
+    /// Returns whether the session was resident.
+    pub fn close(&mut self, id: &str) -> bool {
+        self.evicted_ids.remove(id);
+        let existed = self.sessions.remove(id).is_some();
+        if existed {
+            self.closed += 1;
+        }
+        existed
+    }
+
+    /// Evict least-recently-used sessions (never `keep`) until both the
+    /// byte budget and the session cap hold.
+    fn enforce_budget(&mut self, keep: &str) {
+        loop {
+            let over_bytes = self.resident_bytes() > self.cfg.max_state_bytes;
+            let over_count =
+                self.cfg.max_sessions > 0 && self.sessions.len() > self.cfg.max_sessions;
+            if !over_bytes && !over_count {
+                return;
+            }
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(k, _)| k.as_str() != keep)
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    self.sessions.remove(&k);
+                    self.evicted_ids.insert(k);
+                    self.evicted += 1;
+                }
+                // only the active session is left; let it exceed the
+                // budget rather than refusing to serve it
+                None => return,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::vocab::{AA_BASE, N_AA};
+    use crate::rng::Pcg64;
+    use crate::train::{NativeModel, SyntheticConfig};
+
+    fn model() -> Arc<NativeModel> {
+        let mut rng = Pcg64::new(11);
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng))
+    }
+
+    fn chunk(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+    }
+
+    #[test]
+    fn sessions_are_independent_streams() {
+        let mut mgr = SessionManager::new(model(), SessionConfig::default()).unwrap();
+        let c = chunk(32, 0);
+        let a1 = mgr.advance("a", &c).unwrap();
+        let _ = mgr.advance("b", &chunk(32, 1)).unwrap();
+        // a fresh session fed the same chunk reproduces session a's start
+        let a2 = mgr.advance("c", &c).unwrap();
+        assert_eq!(a1.logprob, a2.logprob);
+        assert_eq!(mgr.tokens_seen("a"), Some(32));
+        assert_eq!(mgr.len(), 3);
+    }
+
+    #[test]
+    fn offsets_accumulate_within_a_session() {
+        let mut mgr = SessionManager::new(model(), SessionConfig::default()).unwrap();
+        let s0 = mgr.advance("s", &chunk(20, 2)).unwrap();
+        let s1 = mgr.advance("s", &chunk(20, 3)).unwrap();
+        assert_eq!(s0.offset, 0);
+        assert_eq!(s1.offset, 20);
+        assert_eq!(mgr.tokens_seen("s"), Some(40));
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_preserves_active() {
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        // room for exactly two sessions
+        let cfg = SessionConfig { max_state_bytes: 2 * per, max_sessions: 0 };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("old", &chunk(16, 4)).unwrap();
+        mgr.advance("mid", &chunk(16, 5)).unwrap();
+        // opening a third must evict the least-recently-used ("old")
+        mgr.advance("new", &chunk(16, 6)).unwrap();
+        assert!(!mgr.contains("old"), "LRU session should be evicted");
+        assert!(mgr.contains("mid"), "recently used session survives");
+        assert!(mgr.contains("new"), "active session is never evicted");
+        assert_eq!(mgr.stats().evicted, 1);
+        assert!(mgr.resident_bytes() <= 2 * per);
+
+        // the evicted stream must fail loudly, not silently restart…
+        assert!(mgr.advance("old", &chunk(16, 7)).is_err());
+        // …until the client acknowledges the loss by closing the id
+        mgr.close("old");
+        assert!(mgr.advance("old", &chunk(16, 8)).is_ok());
+    }
+
+    #[test]
+    fn session_cap_is_enforced() {
+        let cfg = SessionConfig { max_state_bytes: usize::MAX, max_sessions: 2 };
+        let mut mgr = SessionManager::new(model(), cfg).unwrap();
+        for (i, id) in ["a", "b", "c", "d"].iter().enumerate() {
+            mgr.advance(id, &chunk(8, 10 + i as u64)).unwrap();
+        }
+        assert_eq!(mgr.len(), 2);
+        assert!(mgr.contains("d"));
+    }
+
+    #[test]
+    fn close_releases_state() {
+        let mut mgr = SessionManager::new(model(), SessionConfig::default()).unwrap();
+        mgr.advance("x", &chunk(8, 20)).unwrap();
+        assert!(mgr.resident_bytes() > 0);
+        assert!(mgr.close("x"));
+        assert!(!mgr.close("x"));
+        assert_eq!(mgr.resident_bytes(), 0);
+        assert!(mgr.is_empty());
+        let st = mgr.stats();
+        assert_eq!((st.opened, st.closed), (1, 1));
+    }
+
+    #[test]
+    fn single_oversized_session_still_served() {
+        let cfg = SessionConfig { max_state_bytes: 1, max_sessions: 0 };
+        let mut mgr = SessionManager::new(model(), cfg).unwrap();
+        // budget smaller than one session: the active stream still works
+        let s = mgr.advance("only", &chunk(8, 30)).unwrap();
+        assert_eq!(s.len(), 8);
+        assert!(mgr.contains("only"));
+    }
+}

@@ -1,0 +1,243 @@
+//! The incremental FAVOR prefix-sum state — the streaming core of the
+//! unidirectional attention (Alg. 1, Sec. 2.5.1 / 2.6).
+//!
+//! Causal FAVOR needs only the running M×(d+1) aggregate
+//! G^PS = Σ_{j≤i} K'_j [V_j 1]ᵀ to produce row i's output, so a sequence
+//! can be consumed *chunk by chunk* in O(M(d+1)) resident memory,
+//! independent of how many tokens have streamed through. This module is
+//! the single source of truth for that recurrence:
+//! `favor::linear::favor_unidirectional` is a thin wrapper that runs one
+//! chunk covering the whole sequence.
+
+use crate::favor::features::FeatureMap;
+use crate::favor::linear::STABILIZER;
+use crate::tensor::{axpy, Mat};
+
+/// Streaming state of one attention head: the running M×(d+1) prefix-sum
+/// matrix (value columns plus the fused ones-column for the denominator).
+#[derive(Clone, Debug)]
+pub struct StreamState {
+    /// number of random features M
+    m: usize,
+    /// value/head dimension d
+    d: usize,
+    /// running G^PS, shape M×(d+1)
+    state: Mat,
+    /// total rows consumed since creation/reset
+    tokens_seen: u64,
+}
+
+impl StreamState {
+    /// Fresh state for M features and value dimension d.
+    pub fn new(m: usize, d: usize) -> StreamState {
+        StreamState { m, d, state: Mat::zeros(m, d + 1), tokens_seen: 0 }
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Rows consumed so far across all chunks.
+    pub fn tokens_seen(&self) -> u64 {
+        self.tokens_seen
+    }
+
+    /// Resident size of the carried state in bytes — constant in the
+    /// streamed length, the whole point of the subsystem.
+    pub fn state_bytes(&self) -> usize {
+        self.state.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Forget everything and start a new stream.
+    pub fn reset(&mut self) {
+        self.state.data.fill(0.0);
+        self.tokens_seen = 0;
+    }
+
+    /// Consume one chunk of mapped features/values and return the chunk's
+    /// attention outputs. `qp`/`kp` are the feature-mapped queries/keys
+    /// (chunk_len × M), `v` the values (chunk_len × d). Row i's output
+    /// uses the running sum over every previously consumed row plus rows
+    /// ≤ i of this chunk — identical, operation for operation, to the
+    /// single-shot `favor_unidirectional` on the concatenated stream.
+    pub fn advance(&mut self, qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
+        let l = qp.rows;
+        let (m, d) = (self.m, self.d);
+        assert_eq!(qp.cols, m, "qp features != state M");
+        assert_eq!(kp.cols, m, "kp features != state M");
+        assert_eq!(kp.rows, l, "kp rows != qp rows");
+        assert_eq!(v.rows, l, "v rows != qp rows");
+        assert_eq!(v.cols, d, "v dim != state d");
+
+        let mut out = Mat::zeros(l, d);
+        let mut buf = vec![0.0f32; d + 1];
+        for i in 0..l {
+            // state += K'_i C_i^T  (C_i = [V_i 1])
+            let krow = kp.row(i);
+            let vrow = v.row(i);
+            for (j, &kij) in krow.iter().enumerate() {
+                if kij != 0.0 {
+                    let srow = &mut self.state.data[j * (d + 1)..(j + 1) * (d + 1)];
+                    axpy(kij, vrow, &mut srow[..d]);
+                    srow[d] += kij;
+                }
+            }
+            // out_i = (Q'_i · G^PS) renormalized by the ones-column
+            buf.fill(0.0);
+            let qrow = qp.row(i);
+            for (j, &qij) in qrow.iter().enumerate() {
+                if qij != 0.0 {
+                    axpy(qij, &self.state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
+                }
+            }
+            let denom = buf[d] + STABILIZER;
+            for (o, &b) in out.row_mut(i).iter_mut().zip(&buf[..d]) {
+                *o = b / denom;
+            }
+        }
+        self.tokens_seen += l as u64;
+        out
+    }
+}
+
+/// A self-contained streaming attention head: a feature map plus its
+/// running state. Feeds raw q/k/v chunks, applies φ internally.
+#[derive(Clone, Debug)]
+pub struct FavorStream {
+    fm: FeatureMap,
+    state: StreamState,
+}
+
+impl FavorStream {
+    /// Stream with the given feature map over value dimension `d`.
+    pub fn new(fm: FeatureMap, d: usize) -> FavorStream {
+        let m = fm.m();
+        FavorStream { fm, state: StreamState::new(m, d) }
+    }
+
+    pub fn state(&self) -> &StreamState {
+        &self.state
+    }
+
+    pub fn feature_map(&self) -> &FeatureMap {
+        &self.fm
+    }
+
+    pub fn reset(&mut self) {
+        self.state.reset();
+    }
+
+    /// Consume a raw q/k/v chunk (chunk_len × d each) and return the
+    /// chunk's causal attention outputs.
+    pub fn advance(&mut self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+        let qp = self.fm.apply(q);
+        let kp = self.fm.apply(k);
+        self.state.advance(&qp, &kp, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::favor::linear::favor_unidirectional;
+    use crate::favor::{favor_attention, Direction, FeatureKind};
+    use crate::linalg::OrfMechanism;
+    use crate::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, scale: f32) -> Mat {
+        Mat::from_vec(r, c, rng.gaussian_vec(r * c).iter().map(|v| v * scale).collect())
+    }
+
+    #[test]
+    fn two_chunks_match_single_shot() {
+        let (l, d, m) = (48usize, 8usize, 16usize);
+        let mut rng = Pcg64::new(0);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, l, d, 0.5);
+        let k = rand_mat(&mut rng, l, d, 0.5);
+        let v = rand_mat(&mut rng, l, d, 1.0);
+        let (qp, kp) = (fm.apply(&q), fm.apply(&k));
+
+        let single = favor_unidirectional(&qp, &kp, &v);
+
+        let cut = 17;
+        let mut st = StreamState::new(m, d);
+        let out0 = st.advance(
+            &qp.rows_slice(0, cut),
+            &kp.rows_slice(0, cut),
+            &v.rows_slice(0, cut),
+        );
+        let out1 = st.advance(
+            &qp.rows_slice(cut, l),
+            &kp.rows_slice(cut, l),
+            &v.rows_slice(cut, l),
+        );
+        assert_eq!(st.tokens_seen(), l as u64);
+        assert!(out0.max_abs_diff(&single.rows_slice(0, cut)) < 1e-6);
+        assert!(out1.max_abs_diff(&single.rows_slice(cut, l)) < 1e-6);
+    }
+
+    #[test]
+    fn state_size_constant_in_stream_length() {
+        let (d, m) = (8usize, 16usize);
+        let mut rng = Pcg64::new(1);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let mut stream = FavorStream::new(fm, d);
+        let bytes0 = stream.state().state_bytes();
+        for _ in 0..10 {
+            let q = rand_mat(&mut rng, 32, d, 0.5);
+            let k = rand_mat(&mut rng, 32, d, 0.5);
+            let v = rand_mat(&mut rng, 32, d, 1.0);
+            stream.advance(&q, &k, &v);
+        }
+        assert_eq!(stream.state().state_bytes(), bytes0);
+        assert_eq!(stream.state().tokens_seen(), 320);
+        assert_eq!(bytes0, m * (d + 1) * 4);
+    }
+
+    #[test]
+    fn favor_stream_matches_full_attention() {
+        let (l, d, m) = (40usize, 4usize, 8usize);
+        let mut rng = Pcg64::new(2);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, l, d, 0.5);
+        let k = rand_mat(&mut rng, l, d, 0.5);
+        let v = rand_mat(&mut rng, l, d, 1.0);
+        let full = favor_attention(&fm, &q, &k, &v, Direction::Unidirectional);
+
+        let mut stream = FavorStream::new(fm, d);
+        let mut rows = Vec::new();
+        for lo in (0..l).step_by(7) {
+            let hi = (lo + 7).min(l);
+            let out = stream.advance(
+                &q.rows_slice(lo, hi),
+                &k.rows_slice(lo, hi),
+                &v.rows_slice(lo, hi),
+            );
+            rows.extend(out.data);
+        }
+        let streamed = Mat::from_vec(l, d, rows);
+        assert!(streamed.max_abs_diff(&full) < 1e-6);
+    }
+
+    #[test]
+    fn reset_starts_a_fresh_stream() {
+        let (d, m) = (4usize, 8usize);
+        let mut rng = Pcg64::new(3);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, 12, d, 0.5);
+        let k = rand_mat(&mut rng, 12, d, 0.5);
+        let v = rand_mat(&mut rng, 12, d, 1.0);
+
+        let mut stream = FavorStream::new(fm, d);
+        let first = stream.advance(&q, &k, &v);
+        stream.reset();
+        assert_eq!(stream.state().tokens_seen(), 0);
+        let again = stream.advance(&q, &k, &v);
+        assert!(first.max_abs_diff(&again) < 1e-7);
+    }
+}

@@ -1,0 +1,117 @@
+//! Shared measurement core for the chunked-latency sweeps — one
+//! methodology consumed by `xp stream`, `benches/stream_scaling.rs` and
+//! `examples/long_context.rs`, so the flatness claim is always measured
+//! the same way: stream `total` corpus tokens through a fresh scorer in
+//! fixed chunks, and compare the mean per-chunk wall time of the first
+//! and last deciles (growth there would mean per-chunk cost depends on
+//! how much has already streamed).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::protein::Corpus;
+use crate::rng::Pcg64;
+use crate::train::NativeModel;
+
+use super::scorer::ChunkScorer;
+
+/// One measured total-length point of a chunked-latency sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepPoint {
+    pub total: usize,
+    pub chunk: usize,
+    pub n_chunks: usize,
+    /// mean per-chunk seconds over the first decile of chunks
+    pub first_secs: f64,
+    /// mean per-chunk seconds over the last decile of chunks
+    pub last_secs: f64,
+    /// resident carried-state bytes after the full stream
+    pub state_bytes: usize,
+    /// wall time of the whole stream (tokens/s = total / wall)
+    pub wall_secs: f64,
+}
+
+impl SweepPoint {
+    /// last-decile / first-decile per-chunk latency; ~1.0 means flat.
+    pub fn flatness_ratio(&self) -> f64 {
+        self.last_secs / self.first_secs.max(1e-12)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        (self.n_chunks * self.chunk) as f64 / self.wall_secs.max(1e-12)
+    }
+}
+
+/// Stream `total` tokens of concatenated corpus proteins through a fresh
+/// [`ChunkScorer`] in `chunk`-sized pieces, timing every chunk.
+pub fn chunked_latency_point(
+    model: &Arc<NativeModel>,
+    corpus: &Corpus,
+    chunk: usize,
+    total: usize,
+    rng: &mut Pcg64,
+) -> Result<SweepPoint> {
+    let mut scorer = ChunkScorer::new(model.clone())?;
+    let n_chunks = (total / chunk).max(1);
+    let mut times = Vec::with_capacity(n_chunks);
+    let t_all = Instant::now();
+    for _ in 0..n_chunks {
+        let toks = corpus.concat_stream(chunk, 1, rng).pop().unwrap();
+        let t0 = Instant::now();
+        scorer.advance(&toks)?;
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let wall_secs = t_all.elapsed().as_secs_f64();
+    let head = (n_chunks / 10).max(1);
+    let mean = |s: &[f64]| s.iter().sum::<f64>() / s.len() as f64;
+    Ok(SweepPoint {
+        total,
+        chunk,
+        n_chunks,
+        first_secs: mean(&times[..head]),
+        last_secs: mean(&times[n_chunks - head..]),
+        state_bytes: scorer.state_bytes(),
+        wall_secs,
+    })
+}
+
+/// Geometric ladder of totals ending exactly at `max_total`.
+pub fn sweep_totals(start: usize, factor: usize, max_total: usize) -> Vec<usize> {
+    let mut totals = Vec::new();
+    let mut t = start;
+    while t < max_total {
+        totals.push(t);
+        t *= factor.max(2);
+    }
+    totals.push(max_total);
+    totals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::CorpusConfig;
+    use crate::train::SyntheticConfig;
+
+    #[test]
+    fn totals_ladder_ends_at_max() {
+        assert_eq!(sweep_totals(4096, 4, 65536), vec![4096, 16384, 65536]);
+        assert_eq!(sweep_totals(4096, 4, 8192), vec![4096, 8192]);
+        assert_eq!(sweep_totals(4096, 4, 2048), vec![2048]);
+        assert_eq!(sweep_totals(4096, 4, 4096), vec![4096]);
+    }
+
+    #[test]
+    fn point_measures_all_chunks() {
+        let mut rng = Pcg64::new(0);
+        let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+        let corpus = Corpus::generate(CorpusConfig::default());
+        let p = chunked_latency_point(&model, &corpus, 64, 512, &mut rng).unwrap();
+        assert_eq!(p.n_chunks, 8);
+        assert!(p.first_secs > 0.0 && p.last_secs > 0.0);
+        assert!(p.state_bytes > 0);
+        assert!(p.flatness_ratio() > 0.0);
+    }
+}

@@ -7,5 +7,5 @@ pub mod native_model;
 pub mod driver;
 
 pub use curve::{Curve, Point};
-pub use native_model::{NativeAttention, NativeModel};
+pub use native_model::{NativeAttention, NativeModel, SyntheticConfig};
 pub use driver::{run_training, DataGen, LoopOptions, Split, TrainState};

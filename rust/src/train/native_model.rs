@@ -16,7 +16,10 @@ use crate::favor::{
     attention_matrix_exact, attention_matrix_favor, exact_attention, favor_attention,
     identity_attention, Direction, FeatureKind, FeatureMap,
 };
+use crate::linalg::OrfMechanism;
+use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, Role};
+use crate::stream::StreamState;
 use crate::tensor::Mat;
 
 /// A dense layer (w: in×out, b: out).
@@ -93,10 +96,48 @@ fn gelu(x: f32) -> f32 {
 
 /// Sinusoidal position encodings, matching model.py exactly.
 fn positions(l: usize, d: usize) -> Mat {
+    positions_from(0, l, d)
+}
+
+/// Position encodings for rows [offset, offset+l) of a longer stream —
+/// row r here equals row offset+r of `positions(offset + l, d)`, so
+/// chunked forwards see exactly the single-shot encodings.
+fn positions_from(offset: usize, l: usize, d: usize) -> Mat {
     Mat::from_fn(l, d, |pos, i| {
-        let angle = pos as f64 / 10000f64.powf((2 * (i / 2)) as f64 / d as f64);
+        let angle =
+            (offset + pos) as f64 / 10000f64.powf((2 * (i / 2)) as f64 / d as f64);
         if i % 2 == 0 { angle.sin() as f32 } else { angle.cos() as f32 }
     })
+}
+
+/// Shape of a synthetically initialized [`NativeModel`] — used by the
+/// streaming tests/benches and the `stream` CLI demo, which need a
+/// Performer stack without compiled artifacts on disk.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub n_features: usize,
+    pub kind: FeatureKind,
+    pub direction: Direction,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            vocab_size: crate::protein::vocab::VOCAB_SIZE,
+            n_features: 32,
+            kind: FeatureKind::Relu,
+            direction: Direction::Unidirectional,
+        }
+    }
 }
 
 impl NativeModel {
@@ -253,6 +294,148 @@ impl NativeModel {
     pub fn with_attention(mut self, attention: NativeAttention) -> Self {
         self.attention = attention;
         self
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Whether this model can be driven chunk-by-chunk: streaming needs
+    /// the causal direction (prefix-sum recurrence) and FAVOR attention
+    /// (exact attention has no constant-size carried state).
+    pub fn is_streamable(&self) -> bool {
+        self.direction == Direction::Unidirectional
+            && matches!(self.attention, NativeAttention::Favor(_))
+    }
+
+    /// Fresh per-layer, per-head streaming attention states for
+    /// [`NativeModel::forward_chunk`].
+    pub fn make_stream_states(&self) -> Result<Vec<Vec<StreamState>>> {
+        let NativeAttention::Favor(fm) = &self.attention else {
+            bail!("streaming requires FAVOR attention (exact has no constant-size state)");
+        };
+        if self.direction != Direction::Unidirectional {
+            bail!("streaming requires a unidirectional (causal) model");
+        }
+        let dh = self.d_model / self.n_heads;
+        Ok((0..self.layers.len())
+            .map(|_| (0..self.n_heads).map(|_| StreamState::new(fm.m(), dh)).collect())
+            .collect())
+    }
+
+    /// Streaming forward: run one chunk of a longer token stream through
+    /// the whole stack, carrying the per-layer per-head FAVOR prefix-sum
+    /// states across calls. `pos_offset` is the global index of
+    /// `tokens[0]` in the stream. Feeding a stream chunk by chunk (any
+    /// chunking) produces the same logits as a single [`Self::forward`]
+    /// over the concatenation, in O(layers·heads·M·d) resident state.
+    pub fn forward_chunk(
+        &self,
+        tokens: &[u8],
+        pos_offset: usize,
+        states: &mut [Vec<StreamState>],
+    ) -> Result<Mat> {
+        let NativeAttention::Favor(fm) = &self.attention else {
+            bail!("streaming requires FAVOR attention");
+        };
+        if self.direction != Direction::Unidirectional {
+            bail!("streaming requires a unidirectional (causal) model");
+        }
+        if states.len() != self.layers.len()
+            || states.iter().any(|s| s.len() != self.n_heads)
+        {
+            bail!(
+                "stream state shape mismatch: expected {} layers x {} heads",
+                self.layers.len(),
+                self.n_heads
+            );
+        }
+        let l = tokens.len();
+        let d = self.d_model;
+        let h = self.n_heads;
+        let dh = d / h;
+        let scale = (d as f32).sqrt();
+
+        let mut x = Mat::from_fn(l, d, |i, j| self.embed.at(tokens[i] as usize, j) * scale);
+        x.add_assign(&positions_from(pos_offset, l, d));
+
+        for (layer, lstates) in self.layers.iter().zip(states.iter_mut()) {
+            // attention block, streaming per head
+            let normed = layer.ln1.apply(&x);
+            let qkv = layer.qkv.apply(&normed); // (chunk, 3d)
+            let mut head_outs = Mat::zeros(l, d);
+            for (head, st) in lstates.iter_mut().enumerate() {
+                let slice = |which: usize| -> Mat {
+                    Mat::from_fn(l, dh, |i, j| qkv.at(i, which * d + head * dh + j))
+                };
+                let (q, k, v) = (slice(0), slice(1), slice(2));
+                let qp = fm.apply(&q);
+                let kp = fm.apply(&k);
+                let out = st.advance(&qp, &kp, &v);
+                for i in 0..l {
+                    for j in 0..dh {
+                        *head_outs.at_mut(i, head * dh + j) = out.at(i, j);
+                    }
+                }
+            }
+            x.add_assign(&layer.proj.apply(&head_outs));
+
+            // MLP block
+            let normed = layer.ln2.apply(&x);
+            let mut hmid = layer.ff1.apply(&normed);
+            for v in &mut hmid.data {
+                *v = gelu(*v);
+            }
+            x.add_assign(&layer.ff2.apply(&hmid));
+        }
+
+        let xf = self.lnf.apply(&x);
+        Ok(xf.matmul(&self.embed.t()))
+    }
+
+    /// Randomly initialized model for streaming tests, benches and
+    /// artifact-free demos (no checkpoint required).
+    pub fn synthetic(cfg: &SyntheticConfig, rng: &mut Pcg64) -> NativeModel {
+        assert!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0, "d_model % n_heads != 0");
+        let dh = cfg.d_model / cfg.n_heads;
+        let dense = |din: usize, dout: usize, rng: &mut Pcg64| -> Dense {
+            let scale = 1.0 / (din as f32).sqrt();
+            Dense {
+                w: Mat::from_vec(
+                    din,
+                    dout,
+                    rng.gaussian_vec(din * dout).iter().map(|v| v * scale).collect(),
+                ),
+                b: vec![0.0; dout],
+            }
+        };
+        let ln = |d: usize| LayerNorm { g: vec![1.0; d], b: vec![0.0; d] };
+        let layers = (0..cfg.n_layers)
+            .map(|_| Layer {
+                ln1: ln(cfg.d_model),
+                qkv: dense(cfg.d_model, 3 * cfg.d_model, rng),
+                proj: dense(cfg.d_model, cfg.d_model, rng),
+                ln2: ln(cfg.d_model),
+                ff1: dense(cfg.d_model, cfg.d_ff, rng),
+                ff2: dense(cfg.d_ff, cfg.d_model, rng),
+            })
+            .collect();
+        let embed = Mat::from_vec(
+            cfg.vocab_size,
+            cfg.d_model,
+            rng.gaussian_vec(cfg.vocab_size * cfg.d_model).iter().map(|v| v * 0.1).collect(),
+        );
+        let fm = FeatureMap::sample(cfg.kind, cfg.n_features, dh, OrfMechanism::Regular, rng);
+        NativeModel {
+            d_model: cfg.d_model,
+            n_heads: cfg.n_heads,
+            vocab_size: cfg.vocab_size,
+            direction: cfg.direction,
+            embed,
+            lnf: ln(cfg.d_model),
+            layers,
+            attention: NativeAttention::Favor(fm),
+        }
     }
 }
 

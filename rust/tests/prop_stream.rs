@@ -1,0 +1,200 @@
+//! Property tests of the streaming subsystem (same seeded-generator
+//! harness as `prop_favor.rs` — rerun any failure with the printed
+//! seed):
+//!
+//!   * chunked `StreamState::advance` over *random* chunk splits equals
+//!     single-shot `favor_unidirectional` (the refactor's contract);
+//!   * the chunked native-model forward equals the single-shot forward;
+//!   * session budgeting: exceeding the budget evicts the LRU session
+//!     and preserves the active/recent ones;
+//!   * the coordinator stream path answers chunks incrementally.
+
+use std::sync::Arc;
+
+use performer::coordinator::Coordinator;
+use performer::favor::linear::favor_unidirectional;
+use performer::favor::{FeatureKind, FeatureMap};
+use performer::linalg::OrfMechanism;
+use performer::protein::vocab::{AA_BASE, N_AA};
+use performer::rng::Pcg64;
+use performer::runtime::EngineHandle;
+use performer::stream::{ChunkScorer, SessionConfig, SessionManager, StreamState};
+use performer::tensor::Mat;
+use performer::train::{NativeModel, SyntheticConfig};
+
+const CASES: u64 = 25;
+
+/// Tiny property-test harness: runs `f` across seeded cases, panics with
+/// the failing seed for reproduction.
+fn forall(name: &str, f: impl Fn(&mut Pcg64)) {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(0xbeef ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, scale: f32) -> Mat {
+    Mat::from_vec(r, c, rng.gaussian_vec(r * c).iter().map(|v| v * scale).collect())
+}
+
+/// Random partition of [0, l) into non-empty contiguous chunks.
+fn rand_splits(rng: &mut Pcg64, l: usize) -> Vec<(usize, usize)> {
+    let mut cuts = vec![0usize, l];
+    for _ in 0..rng.below(5) {
+        cuts.push(1 + rng.below(l - 1));
+    }
+    cuts.sort_unstable();
+    cuts.dedup();
+    cuts.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+fn aa_tokens(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+}
+
+#[test]
+fn prop_chunked_equals_single_shot() {
+    forall("chunked advance == favor_unidirectional", |rng| {
+        let l = [8, 16, 24, 48, 64][rng.below(5)];
+        let d = [2, 4, 8][rng.below(3)];
+        let m = [4, 8, 16, 32][rng.below(4)];
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, rng);
+        let qp = fm.apply(&rand_mat(rng, l, d, 0.5));
+        let kp = fm.apply(&rand_mat(rng, l, d, 0.5));
+        let v = rand_mat(rng, l, d, 1.0);
+
+        let single = favor_unidirectional(&qp, &kp, &v);
+
+        let mut state = StreamState::new(m, d);
+        let mut streamed = Vec::with_capacity(l * d);
+        for (lo, hi) in rand_splits(rng, l) {
+            let out = state.advance(
+                &qp.rows_slice(lo, hi),
+                &kp.rows_slice(lo, hi),
+                &v.rows_slice(lo, hi),
+            );
+            streamed.extend(out.data);
+        }
+        let streamed = Mat::from_vec(l, d, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-6, "chunked vs single-shot diff {diff}");
+        assert_eq!(state.tokens_seen(), l as u64);
+    });
+}
+
+#[test]
+fn prop_chunked_model_forward_equals_single_shot() {
+    let mut mrng = Pcg64::new(99);
+    let model = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig { d_model: 16, n_heads: 2, n_layers: 2, d_ff: 32, ..Default::default() },
+        &mut mrng,
+    ));
+    forall("chunked forward == forward", |rng| {
+        let l = 16 + rng.below(48);
+        let toks = aa_tokens(rng, l);
+        let (single, _) = model.forward(&toks, false);
+
+        let mut states = model.make_stream_states().unwrap();
+        let mut streamed = Vec::new();
+        for (lo, hi) in rand_splits(rng, l) {
+            let logits = model.forward_chunk(&toks[lo..hi], lo, &mut states).unwrap();
+            streamed.extend(logits.data);
+        }
+        let streamed = Mat::from_vec(l, model.vocab_size, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-4, "chunked model forward diverges by {diff}");
+    });
+}
+
+#[test]
+fn scorer_state_is_constant_and_positions_advance() {
+    let mut rng = Pcg64::new(3);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let mut scorer = ChunkScorer::new(model).unwrap();
+    let bytes = scorer.state_bytes();
+    let mut expect_offset = 0;
+    for i in 0..6 {
+        let n = 16 + (i * 7) % 32;
+        let s = scorer.advance(&aa_tokens(&mut rng, n)).unwrap();
+        assert_eq!(s.offset, expect_offset);
+        assert_eq!(s.len(), n);
+        expect_offset += n;
+        assert_eq!(scorer.state_bytes(), bytes, "state must not grow");
+    }
+    assert_eq!(scorer.tokens_seen(), expect_offset);
+}
+
+#[test]
+fn session_budget_evicts_lru_preserves_active() {
+    let mut rng = Pcg64::new(5);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let per = SessionManager::new(model.clone(), SessionConfig::default())
+        .unwrap()
+        .per_session_bytes();
+
+    // budget: exactly three resident sessions
+    let cfg = SessionConfig { max_state_bytes: 3 * per, max_sessions: 0 };
+    let mut mgr = SessionManager::new(model, cfg).unwrap();
+    for id in ["a", "b", "c"] {
+        mgr.advance(id, &aa_tokens(&mut rng, 16)).unwrap();
+    }
+    // touch "a" so "b" becomes the LRU
+    mgr.advance("a", &aa_tokens(&mut rng, 16)).unwrap();
+    // a fourth stream must push out exactly the LRU ("b")
+    mgr.advance("d", &aa_tokens(&mut rng, 16)).unwrap();
+
+    assert!(!mgr.contains("b"), "LRU session must be evicted");
+    assert!(mgr.contains("a"), "recently touched session must survive");
+    assert!(mgr.contains("c"), "under-budget session must survive");
+    assert!(mgr.contains("d"), "active session must never be evicted");
+    assert_eq!(mgr.stats().evicted, 1);
+    assert!(mgr.resident_bytes() <= 3 * per);
+
+    // explicit close releases the remaining state
+    for id in ["a", "c", "d"] {
+        assert!(mgr.close(id));
+    }
+    assert_eq!(mgr.resident_bytes(), 0);
+}
+
+#[test]
+fn coordinator_stream_path_round_trips() {
+    let mut rng = Pcg64::new(7);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+    coord
+        .start_stream_pool("native", model, SessionConfig::default())
+        .unwrap();
+
+    // two users interleave chunks; offsets advance per session
+    for round in 0..3 {
+        for user in ["u1", "u2"] {
+            let resp = coord
+                .stream_chunk("native", user, aa_tokens(&mut rng, 32))
+                .unwrap();
+            let scores = resp.scores.expect("scores for a chunk request");
+            assert_eq!(scores.offset, round * 32);
+            assert_eq!(scores.len(), 32);
+            assert!(resp.resident_bytes > 0);
+        }
+    }
+    coord.close_stream("native", "u1").unwrap();
+    let resp = coord.stream_chunk("native", "u2", aa_tokens(&mut rng, 8)).unwrap();
+    assert_eq!(resp.resident_sessions, 1, "closed session must be released");
+
+    // unknown pool is an error; a bidirectional model cannot stream
+    assert!(coord.stream_chunk("nope", "u", vec![AA_BASE]).is_err());
+    let mut rng2 = Pcg64::new(8);
+    let bid = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig {
+            direction: performer::favor::Direction::Bidirectional,
+            ..Default::default()
+        },
+        &mut rng2,
+    ));
+    assert!(coord.start_stream_pool("bid", bid, SessionConfig::default()).is_err());
+    coord.shutdown();
+}
