@@ -8,17 +8,26 @@
 //!   cargo bench --bench stream_scaling            # full sweep, 8k→262k
 //!   cargo bench --bench stream_scaling -- --test  # smoke mode (CI-fast)
 //!
+//! Also sweeps the **batched execution core**: B concurrent sessions
+//! advanced one at a time vs fused through `ChunkScorer::advance_batch`
+//! (one `forward_chunk_batch` per round), recording aggregate token
+//! throughput to `BENCH_stream_batched.json` so the perf trajectory is
+//! tracked. In full mode the B=8 fused sweep must clear 2× the
+//! sequential aggregate throughput.
+//!
 //! No artifacts required: drives a synthetic native Performer stack
 //! through the shared `stream::sweep` measurement core. Exits non-zero
-//! if per-chunk latency fails to stay flat or the resident state grows
-//! with the streamed length.
+//! if per-chunk latency fails to stay flat, the resident state grows
+//! with the streamed length, or fused scores diverge from sequential.
 
 use std::sync::Arc;
 
 use performer::benchlib::{fmt_secs, loglog_slope, Report};
+use performer::jsonx::{arr, num, obj, s};
 use performer::protein::{Corpus, CorpusConfig};
 use performer::rng::Pcg64;
-use performer::stream::{chunked_latency_point, sweep_totals};
+use performer::stream::{chunked_latency_point, fused_throughput_point, sweep_totals};
+use performer::tensor::matmul_threads;
 use performer::train::{NativeModel, SyntheticConfig};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -92,5 +101,93 @@ fn main() -> anyhow::Result<()> {
         "per-chunk latency must not scale with total length (slope {slope:.3})"
     );
     println!("PASS: per-chunk latency and resident state are flat in total streamed length");
+
+    // ---- batched execution core: fused vs sequential session advance ----
+    let (fused_chunk, n_chunks, sessions): (usize, usize, Vec<usize>) = if smoke {
+        (128, 2, vec![2, 8])
+    } else {
+        (
+            env_usize("STREAM_FUSED_CHUNK", 512),
+            env_usize("STREAM_FUSED_CHUNKS", 8),
+            vec![1, 2, 4, 8],
+        )
+    };
+    let mut rep = Report::new(
+        &format!(
+            "Fused multi-session advance — aggregate throughput vs sequential \
+             (chunk={fused_chunk}, {n_chunks} chunks/session, {} threads)",
+            matmul_threads()
+        ),
+        &["sessions", "seq_tok_per_s", "fused_tok_per_s", "speedup", "max_diff"],
+    );
+    let mut points = Vec::new();
+    for &b in &sessions {
+        let p = fused_throughput_point(&model, &corpus, b, fused_chunk, n_chunks, &mut rng)?;
+        rep.row(vec![
+            b.to_string(),
+            format!("{:.0}", p.seq_tokens_per_sec()),
+            format!("{:.0}", p.fused_tokens_per_sec()),
+            format!("{:.2}x", p.speedup()),
+            format!("{:.2e}", p.max_diff),
+        ]);
+        points.push(p);
+    }
+    println!("{}", rep.render());
+    rep.save_csv(std::path::Path::new("results/stream_batched.csv"))?;
+
+    // perf-trajectory artifact: tokens/sec sequential vs fused per B
+    let json = obj(vec![
+        ("bench", s("stream_batched")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("chunk", num(fused_chunk as f64)),
+        ("chunks_per_session", num(n_chunks as f64)),
+        ("threads", num(matmul_threads() as f64)),
+        (
+            "points",
+            arr(points.iter().map(|p| {
+                obj(vec![
+                    ("sessions", num(p.n_sessions as f64)),
+                    ("seq_tokens_per_sec", num(p.seq_tokens_per_sec())),
+                    ("fused_tokens_per_sec", num(p.fused_tokens_per_sec())),
+                    ("speedup", num(p.speedup())),
+                    ("max_abs_diff", num(p.max_diff)),
+                ])
+            })),
+        ),
+    ]);
+    std::fs::write("BENCH_stream_batched.json", json.to_string() + "\n")?;
+    println!("wrote BENCH_stream_batched.json");
+
+    // correctness is unconditional: fusing is an execution strategy,
+    // not an approximation
+    for p in &points {
+        assert!(
+            p.max_diff < 1e-4,
+            "B={}: fused scores diverge from sequential by {}",
+            p.n_sessions,
+            p.max_diff
+        );
+    }
+    let last = points.last().expect("at least one fused point");
+    if smoke {
+        println!(
+            "smoke: B={} fused speedup {:.2}x (threshold enforced in full mode only)",
+            last.n_sessions,
+            last.speedup()
+        );
+    } else {
+        assert!(
+            last.speedup() >= 2.0,
+            "B={} fused advance must clear 2x sequential aggregate throughput \
+             (got {:.2}x)",
+            last.n_sessions,
+            last.speedup()
+        );
+        println!(
+            "PASS: B={} fused advance at {:.2}x sequential aggregate throughput",
+            last.n_sessions,
+            last.speedup()
+        );
+    }
     Ok(())
 }

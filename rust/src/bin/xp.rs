@@ -42,7 +42,7 @@ use performer::protein::{
 };
 use performer::rng::Pcg64;
 use performer::runtime::{ArtifactMeta, Engine, TensorFile};
-use performer::stream::{chunked_latency_point, sweep_totals};
+use performer::stream::{chunked_latency_point, fused_throughput_point, sweep_totals};
 use performer::tensor::Mat;
 use performer::train::{
     run_training, LoopOptions, NativeAttention, NativeModel, Split, SyntheticConfig, TrainState,
@@ -897,6 +897,33 @@ fn stream_scaling() -> Result<()> {
          (0 = flat; exact attention would be ~1)\n"
     );
     rep.save_csv(&results_dir().join("stream_scaling.csv"))?;
+
+    // batched execution core: B concurrent sessions, sequential advance
+    // vs one fused forward_chunk_batch per round
+    let max_b = env_usize("XP_STREAM_SESSIONS", 8);
+    let n_chunks = env_usize("XP_STREAM_FUSED_CHUNKS", 8);
+    let mut rep = Report::new(
+        &format!(
+            "Fused multi-session advance — aggregate throughput, sequential vs batched \
+             (chunk={chunk}, {n_chunks} chunks/session, {} threads)",
+            performer::tensor::matmul_threads()
+        ),
+        &["sessions", "seq_tok_per_s", "fused_tok_per_s", "speedup", "max_diff"],
+    );
+    let mut b = 1;
+    while b <= max_b {
+        let p = fused_throughput_point(&model, &corpus, b, chunk, n_chunks, &mut rng)?;
+        rep.row(vec![
+            b.to_string(),
+            format!("{:.0}", p.seq_tokens_per_sec()),
+            format!("{:.0}", p.fused_tokens_per_sec()),
+            format!("{:.2}x", p.speedup()),
+            format!("{:.2e}", p.max_diff),
+        ]);
+        b *= 2;
+    }
+    println!("{}", rep.render());
+    rep.save_csv(&results_dir().join("stream_batched.csv"))?;
     Ok(())
 }
 

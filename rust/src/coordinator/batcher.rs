@@ -4,7 +4,9 @@
 //!
 //! Policy: block for the first request, then greedily drain the queue up
 //! to `max_batch` or until `max_wait` elapses — the standard
-//! latency/throughput knob in serving systems (vLLM-style).
+//! latency/throughput knob in serving systems (vLLM-style). A lone
+//! request with nothing else queued ships immediately rather than
+//! waiting out the window.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
@@ -32,7 +34,32 @@ pub struct Response {
     pub predictions: Vec<(usize, u8, f32)>,
     /// full filled sequence
     pub filled: Vec<u8>,
+    /// mask positions beyond the compiled window (`max_len`) that this
+    /// artifact could not answer — explicitly reported rather than
+    /// silently dropped; route these through the streaming path or a
+    /// longer-window artifact
+    pub truncated: Vec<usize>,
     pub latency: Duration,
+}
+
+impl Response {
+    /// Whether every masked position in the request was answered.
+    pub fn complete(&self) -> bool {
+        self.truncated.is_empty()
+    }
+}
+
+/// Mask positions at or beyond the compiled window `max_len`: the
+/// shape-static artifact never sees these tokens, so they can't be
+/// predicted — callers learn about them via [`Response::truncated`].
+pub fn truncated_masks(tokens: &[u8], max_len: usize) -> Vec<usize> {
+    tokens
+        .iter()
+        .enumerate()
+        .skip(max_len)
+        .filter(|&(_, &t)| t == MASK)
+        .map(|(i, _)| i)
+        .collect()
 }
 
 /// Model state the batcher serves (params/features in artifact order).
@@ -64,16 +91,33 @@ impl ModelState {
     }
 }
 
-/// Drain policy output: the requests fused into one batch.
-pub fn collect_batch(
-    rx: &Receiver<Request>,
+/// Drain policy output: the requests fused into one batch. Generic over
+/// the request type — the fill-mask worker and the stream worker share
+/// this one latency/throughput knob.
+///
+/// A lone request ships immediately: the `max_wait` window is only
+/// waited out when the non-blocking drain finds concurrent traffic
+/// already queued, so a single interactive client pays no batching
+/// latency while bursty submitters still fuse.
+pub fn collect_batch<T>(
+    rx: &Receiver<T>,
     max_batch: usize,
     max_wait: Duration,
-) -> Option<Vec<Request>> {
+) -> Option<Vec<T>> {
     // block for the first request (queue closed -> shut down)
     let first = rx.recv().ok()?;
-    let deadline = Instant::now() + max_wait;
     let mut batch = vec![first];
+    // greedily take everything already queued, without waiting
+    while batch.len() < max_batch {
+        match rx.try_recv() {
+            Ok(req) => batch.push(req),
+            Err(_) => break,
+        }
+    }
+    if batch.len() == 1 {
+        return Some(batch);
+    }
+    let deadline = Instant::now() + max_wait;
     while batch.len() < max_batch {
         let now = Instant::now();
         if now >= deadline {
@@ -111,6 +155,7 @@ pub fn serve_batch(model: &ModelState, batch: Vec<Request>, metrics: &Metrics) -
     for (row, req) in batch.into_iter().enumerate() {
         let mut predictions = Vec::new();
         let mut filled = req.tokens.clone();
+        let truncated = truncated_masks(&req.tokens, l);
         for (col, &t) in req.tokens.iter().enumerate().take(l) {
             if t == MASK {
                 let base = (row * l + col) * vocab_size;
@@ -136,7 +181,7 @@ pub fn serve_batch(model: &ModelState, batch: Vec<Request>, metrics: &Metrics) -
         let latency = req.submitted.elapsed();
         metrics.observe_latency(latency);
         // receiver may have hung up; that's fine
-        let _ = req.respond.send(Response { id: req.id, predictions, filled, latency });
+        let _ = req.respond.send(Response { id: req.id, predictions, filled, truncated, latency });
     }
     Ok(())
 }
@@ -161,6 +206,21 @@ mod tests {
     }
 
     #[test]
+    fn lone_request_ships_without_waiting_out_the_window() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(Request { id: 0, tokens: vec![MASK], respond: rtx, submitted: Instant::now() })
+            .unwrap();
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 8, Duration::from_secs(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "a lone request must not wait out max_wait"
+        );
+    }
+
+    #[test]
     fn collect_batch_times_out_quickly() {
         let (tx, rx) = channel();
         let (rtx, _rrx) = channel();
@@ -170,6 +230,17 @@ mod tests {
         let batch = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn truncated_masks_reports_only_dropped_positions() {
+        use crate::protein::vocab::AA_BASE;
+        // masks at 1 and 5, window of 4: only position 5 is dropped
+        let tokens = vec![AA_BASE, MASK, AA_BASE, AA_BASE, AA_BASE, MASK, AA_BASE];
+        assert_eq!(truncated_masks(&tokens, 4), vec![5]);
+        assert_eq!(truncated_masks(&tokens, 7), Vec::<usize>::new());
+        assert_eq!(truncated_masks(&tokens, 0), vec![1, 5]);
+        assert!(truncated_masks(&[], 4).is_empty());
     }
 
     #[test]

@@ -12,4 +12,4 @@ pub mod streamer;
 pub use batcher::{Request, Response};
 pub use metrics::Metrics;
 pub use service::Coordinator;
-pub use streamer::{StreamRequest, StreamResponse};
+pub use streamer::{StreamRequest, StreamResponse, STREAM_MAX_BATCH, STREAM_MAX_WAIT};

@@ -27,7 +27,9 @@ use crate::train::NativeModel;
 
 use super::batcher::{collect_batch, serve_batch, ModelState, Request, Response};
 use super::metrics::Metrics;
-use super::streamer::{into_result, StreamPool, StreamRequest, StreamResponse};
+use super::streamer::{
+    into_result, StreamPool, StreamRequest, StreamResponse, STREAM_MAX_BATCH, STREAM_MAX_WAIT,
+};
 
 /// Handle to a running model pool.
 struct Pool {
@@ -165,14 +167,30 @@ impl Coordinator {
 
     /// Start a streaming session pool under `name`, serving chunked
     /// long-context inference over the native model (no artifacts/PJRT
-    /// involved). Errors if the model is not streamable.
+    /// involved) with the default fused-batching window
+    /// ([`STREAM_MAX_BATCH`]/[`STREAM_MAX_WAIT`]). Errors if the model
+    /// is not streamable.
     pub fn start_stream_pool(
         &mut self,
         name: &str,
         model: Arc<NativeModel>,
         cfg: SessionConfig,
     ) -> Result<()> {
-        let pool = StreamPool::spawn(name, model, cfg)?;
+        self.start_stream_pool_batched(name, model, cfg, STREAM_MAX_BATCH, STREAM_MAX_WAIT)
+    }
+
+    /// [`Self::start_stream_pool`] with explicit batching knobs: the
+    /// worker fuses up to `max_batch` chunk submissions arriving within
+    /// `max_wait` of each other into one batched forward.
+    pub fn start_stream_pool_batched(
+        &mut self,
+        name: &str,
+        model: Arc<NativeModel>,
+        cfg: SessionConfig,
+        max_batch: usize,
+        max_wait: Duration,
+    ) -> Result<()> {
+        let pool = StreamPool::spawn(name, model, cfg, max_batch, max_wait)?;
         self.streams.insert(name.to_string(), pool);
         Ok(())
     }
@@ -186,6 +204,20 @@ impl Coordinator {
         tokens: Vec<u8>,
     ) -> Result<Receiver<StreamResponse>> {
         self.submit_stream_request(pool, session, tokens, false)
+    }
+
+    /// Submit many `(session, tokens)` chunk requests in one call — they
+    /// land in the worker's queue together, so requests for distinct
+    /// sessions fuse into batched forwards. Returns one receiver per
+    /// request, in submission order.
+    pub fn submit_chunks(
+        &self,
+        pool: &str,
+        reqs: Vec<(String, Vec<u8>)>,
+    ) -> Result<Vec<Receiver<StreamResponse>>> {
+        reqs.into_iter()
+            .map(|(session, tokens)| self.submit_chunk(pool, &session, tokens))
+            .collect()
     }
 
     /// Submit a chunk and wait for its scores.

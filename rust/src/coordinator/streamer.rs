@@ -5,7 +5,18 @@
 //! unbounded while its resident footprint stays constant.
 //!
 //!   clients ──submit_chunk()──▶ stream worker ──▶ SessionManager
-//!                                                   (budget + LRU)
+//!                                (fused drain)      (budget + LRU)
+//!
+//! The worker drains up to [`STREAM_MAX_BATCH`] requests arriving in
+//! the same [`STREAM_MAX_WAIT`] window and hands them to
+//! `SessionManager::advance_batch` in one call, which fuses them into
+//! length-compatible batched forwards
+//! (`NativeModel::forward_chunk_batch`), padding the remainder inside
+//! the fused `Batch` — the cross-chunk session batching the roadmap
+//! called for. Per-session submission order is preserved even when one
+//! session's chunks repeat within a drain window (duplicates advance in
+//! ordered fused waves), and none of the window's sessions can be
+//! LRU-evicted while the window is being served.
 //!
 //! This path runs the native Performer stack — it never touches PJRT,
 //! so it works in stub builds and scales past any compiled artifact
@@ -20,6 +31,14 @@ use anyhow::{anyhow, Result};
 
 use crate::stream::{ChunkScores, SessionConfig, SessionManager};
 use crate::train::NativeModel;
+
+use super::batcher::collect_batch;
+
+/// Most chunk submissions one drain fuses into a batched forward.
+pub const STREAM_MAX_BATCH: usize = 8;
+
+/// How long the worker waits to fill a batch after the first request.
+pub const STREAM_MAX_WAIT: Duration = Duration::from_millis(2);
 
 /// One streaming request: the next chunk of a session's token stream,
 /// or a close notice (empty `tokens` + `close`).
@@ -60,18 +79,22 @@ pub(crate) struct StreamPool {
 }
 
 impl StreamPool {
-    /// Spawn the worker owning a session manager over `model`.
+    /// Spawn the worker owning a session manager over `model`, fusing
+    /// up to `max_batch` same-window submissions per forward.
     pub(crate) fn spawn(
         name: &str,
         model: Arc<NativeModel>,
         cfg: SessionConfig,
+        max_batch: usize,
+        max_wait: Duration,
     ) -> Result<StreamPool> {
         // validate streamability up front, on the caller's thread
         let mut mgr = SessionManager::new(model, cfg)?;
         let (tx, rx) = channel::<StreamRequest>();
+        let max_batch = max_batch.max(1);
         let worker = std::thread::Builder::new()
             .name(format!("stream-{name}"))
-            .spawn(move || stream_loop(&rx, &mut mgr))?;
+            .spawn(move || stream_loop(&rx, &mut mgr, max_batch, max_wait))?;
         Ok(StreamPool { tx, worker: Some(worker) })
     }
 
@@ -83,19 +106,44 @@ impl StreamPool {
     }
 }
 
-fn stream_loop(rx: &Receiver<StreamRequest>, mgr: &mut SessionManager) {
-    while let Ok(req) = rx.recv() {
-        let (scores, error) = if req.tokens.is_empty() {
-            if req.close {
-                (None, None) // close-only ack
-            } else {
-                (None, Some("empty chunk (and close not requested)".to_string()))
-            }
-        } else {
-            match mgr.advance(&req.session, &req.tokens) {
-                Ok(s) => (Some(s), None),
-                Err(e) => (None, Some(format!("{e:#}"))),
-            }
+fn stream_loop(
+    rx: &Receiver<StreamRequest>,
+    mgr: &mut SessionManager,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    while let Some(batch) = collect_batch(rx, max_batch, max_wait) {
+        serve_stream_batch(batch, mgr);
+    }
+}
+
+/// Answer one drained batch: control requests (close-only / empty) are
+/// answered individually; everything scoreable goes to
+/// `SessionManager::advance_batch` in one call, which fuses it into
+/// length-compatible waves, advances repeated session ids in submission
+/// order, and never evicts any of the window's sessions while serving
+/// it. A request's `close` takes effect after the batch's scoring — a
+/// chunk for the same session queued behind a close-carrying chunk in
+/// one drain window continues the stream rather than racing the
+/// teardown.
+fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
+    let mut outcomes: Vec<Option<Result<ChunkScores>>> =
+        (0..batch.len()).map(|_| None).collect();
+
+    let scoreable: Vec<usize> =
+        (0..batch.len()).filter(|&i| !batch[i].tokens.is_empty()).collect();
+    let ids: Vec<&str> = scoreable.iter().map(|&i| batch[i].session.as_str()).collect();
+    let chunks: Vec<&[u8]> = scoreable.iter().map(|&i| batch[i].tokens.as_slice()).collect();
+    for (&i, res) in scoreable.iter().zip(mgr.advance_batch(&ids, &chunks)) {
+        outcomes[i] = Some(res);
+    }
+
+    for (req, outcome) in batch.into_iter().zip(outcomes) {
+        let (scores, error) = match outcome {
+            Some(Ok(s)) => (Some(s), None),
+            Some(Err(e)) => (None, Some(format!("{e:#}"))),
+            None if req.close => (None, None), // close-only ack
+            None => (None, Some("empty chunk (and close not requested)".to_string())),
         };
         if req.close {
             mgr.close(&req.session);

@@ -27,4 +27,6 @@ pub mod sweep;
 pub use scorer::{ChunkScorer, ChunkScores};
 pub use session::{SessionConfig, SessionManager, SessionStats};
 pub use state::{FavorStream, StreamState};
-pub use sweep::{chunked_latency_point, sweep_totals, SweepPoint};
+pub use sweep::{
+    chunked_latency_point, fused_throughput_point, sweep_totals, FusedPoint, SweepPoint,
+};

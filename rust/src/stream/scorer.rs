@@ -11,6 +11,7 @@ use anyhow::{bail, Result};
 
 use crate::protein::vocab::{AA_BASE, N_AA};
 use crate::stream::StreamState;
+use crate::tensor::Mat;
 use crate::train::NativeModel;
 
 /// Per-token scores for one consumed chunk. Scoring is properly causal:
@@ -79,13 +80,28 @@ impl ChunkScorer {
     }
 
     /// Resident bytes of the carried attention state — constant in the
-    /// streamed length.
+    /// streamed length (layers × heads × M × (d_h + 1) f32s).
     pub fn state_bytes(&self) -> usize {
         self.states
             .iter()
             .flat_map(|layer| layer.iter())
             .map(StreamState::state_bytes)
             .sum()
+    }
+
+    /// Total resident bytes this stream actually carries: the attention
+    /// prefix sums plus the cross-chunk context row (`prev_row`, one
+    /// vocab-sized logit vector once the first chunk has been consumed).
+    pub fn resident_bytes(&self) -> usize {
+        self.state_bytes()
+            + self.prev_row.as_ref().map_or(0, |r| r.len() * std::mem::size_of::<f32>())
+    }
+
+    /// Steady-state resident bytes (as [`Self::resident_bytes`] reports
+    /// after the first chunk) — what a budget should charge per session,
+    /// since every live session reaches it immediately.
+    pub fn steady_state_bytes(&self) -> usize {
+        self.state_bytes() + self.model.vocab_size * std::mem::size_of::<f32>()
     }
 
     /// Restart the stream without reallocating.
@@ -101,16 +117,60 @@ impl ChunkScorer {
 
     /// Consume the next chunk of the stream and score every position
     /// causally (position p from the logits at p−1, carried across
-    /// chunk boundaries).
+    /// chunk boundaries). Thin wrapper over [`Self::advance_batch`].
     pub fn advance(&mut self, tokens: &[u8]) -> Result<ChunkScores> {
-        if tokens.is_empty() {
-            bail!("empty chunk");
+        Self::advance_batch(std::slice::from_mut(self), &[tokens])?
+            .pop()
+            .ok_or_else(|| anyhow::anyhow!("B=1 advance produced no scores"))
+    }
+
+    /// Advance B independent streams in one fused forward: every scorer
+    /// must share the same model handle; chunk `i` feeds scorer `i`.
+    /// The dense per-token work of the whole batch runs as single fused
+    /// matrix operations ([`NativeModel::forward_chunk_batch`]), while
+    /// each stream's carried state, position and scoring context advance
+    /// exactly as B sequential [`Self::advance`] calls would.
+    pub fn advance_batch(
+        scorers: &mut [ChunkScorer],
+        chunks: &[&[u8]],
+    ) -> Result<Vec<ChunkScores>> {
+        if scorers.len() != chunks.len() {
+            bail!("{} scorers fed {} chunks", scorers.len(), chunks.len());
         }
-        if let Some(&t) = tokens.iter().find(|&&t| t as usize >= self.model.vocab_size) {
-            bail!("token {t} outside vocab (size {})", self.model.vocab_size);
+        if scorers.is_empty() {
+            return Ok(Vec::new());
         }
+        let model = scorers[0].model.clone();
+        for s in scorers.iter().skip(1) {
+            if !Arc::ptr_eq(&model, &s.model) {
+                bail!("fused scorers must share one model");
+            }
+        }
+        for tokens in chunks {
+            if tokens.is_empty() {
+                bail!("empty chunk");
+            }
+            if let Some(&t) = tokens.iter().find(|&&t| t as usize >= model.vocab_size) {
+                bail!("token {t} outside vocab (size {})", model.vocab_size);
+            }
+        }
+        let offsets: Vec<usize> = scorers.iter().map(|s| s.pos).collect();
+        let logits = {
+            let mut state_refs: Vec<&mut [Vec<StreamState>]> =
+                scorers.iter_mut().map(|s| s.states.as_mut_slice()).collect();
+            model.forward_chunk_batch(chunks, &offsets, &mut state_refs)?
+        };
+        Ok(scorers
+            .iter_mut()
+            .zip(chunks.iter().zip(logits))
+            .map(|(scorer, (tokens, logits))| scorer.score_chunk(tokens, logits))
+            .collect())
+    }
+
+    /// Score one consumed chunk from its logits, updating the stream
+    /// position and the carried cross-chunk context row.
+    fn score_chunk(&mut self, tokens: &[u8], logits: Mat) -> ChunkScores {
         let offset = self.pos;
-        let logits = self.model.forward_chunk(tokens, offset, &mut self.states)?;
         self.pos += tokens.len();
 
         let vocab = logits.cols;
@@ -148,7 +208,7 @@ impl ChunkScorer {
             argmax_prob.push((best_logit - lse).exp());
         }
         self.prev_row = Some(logits.row(tokens.len() - 1).to_vec());
-        Ok(ChunkScores { offset, logprob, argmax, argmax_prob })
+        ChunkScores { offset, logprob, argmax, argmax_prob }
     }
 }
 

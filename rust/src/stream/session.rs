@@ -31,6 +31,11 @@ impl Default for SessionConfig {
     }
 }
 
+/// Chunks are fused into one wave only when the longest is at most this
+/// multiple of the shortest — past that, the padding rows the fused
+/// `Batch` carries for the short chunks outweigh the fusion win.
+const COMPAT_LEN_RATIO: usize = 2;
+
 /// Aggregate counters, cheap to copy out for metrics/logging.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SessionStats {
@@ -72,9 +77,13 @@ impl SessionManager {
     /// Build over a streamable model. Errors if the model cannot stream
     /// (bidirectional or non-FAVOR attention).
     pub fn new(model: Arc<NativeModel>, cfg: SessionConfig) -> Result<SessionManager> {
-        // probe streamability once up front so `advance` can't half-open
+        // probe streamability once up front so `advance` can't half-open;
+        // budget the *steady-state* residency (prefix sums + the carried
+        // vocab-sized context row), which every live session reaches
+        // after its first chunk — charging only the attention state
+        // undercounted by vocab×4 bytes per session
         let probe = ChunkScorer::new(model.clone())?;
-        let per_session_bytes = probe.state_bytes();
+        let per_session_bytes = probe.steady_state_bytes();
         Ok(SessionManager {
             model,
             cfg,
@@ -135,31 +144,145 @@ impl SessionManager {
     /// session that *was* evicted fails loudly here — its causal context
     /// is gone, so silently restarting it would return wrong scores;
     /// `close` it (acknowledging the loss) to reuse the id.
+    /// Thin wrapper over [`Self::advance_batch`] with B = 1.
     pub fn advance(&mut self, id: &str, chunk: &[u8]) -> Result<ChunkScores> {
-        let needs_open = !self.sessions.contains_key(id);
-        if needs_open {
-            if self.evicted_ids.contains(id) {
-                return Err(anyhow!(
-                    "session '{id}' was evicted under memory pressure; \
-                     close it and start a new session"
-                ));
+        self.advance_batch(&[id], &[chunk]).pop().expect("B=1 advance")
+    }
+
+    /// Feed the next chunk of several streams in one fused forward
+    /// ([`ChunkScorer::advance_batch`] →
+    /// [`crate::train::NativeModel::forward_chunk_batch`]): the dense
+    /// per-token work of the whole batch runs as single matrix
+    /// operations while each session's carried state advances exactly as
+    /// B sequential [`Self::advance`] calls would. Results line up with
+    /// `ids`; each request succeeds or fails independently (bad chunk,
+    /// evicted id). The batch is served as one or more fused *waves*: a
+    /// wave holds each session at most once (a repeated id advances in
+    /// submission order across successive waves, so callers may drain a
+    /// queue without deduplicating) and only chunks within
+    /// [`COMPAT_LEN_RATIO`]× of each other in length (beyond that, the
+    /// padding rows the fused `Batch` would carry outweigh the fusion
+    /// win). None of the batch's sessions is evicted while serving any
+    /// part of it.
+    pub fn advance_batch(&mut self, ids: &[&str], chunks: &[&[u8]]) -> Vec<Result<ChunkScores>> {
+        assert_eq!(ids.len(), chunks.len(), "{} ids fed {} chunks", ids.len(), chunks.len());
+        let mut results: Vec<Option<Result<ChunkScores>>> =
+            (0..ids.len()).map(|_| None).collect();
+
+        // per-request validation and open-on-first-use, before fusing
+        let mut admitted: Vec<usize> = Vec::new();
+        for (i, (&id, &chunk)) in ids.iter().zip(chunks).enumerate() {
+            if chunk.is_empty() {
+                results[i] = Some(Err(anyhow!("empty chunk")));
+                continue;
             }
-            let scorer = ChunkScorer::new(self.model.clone())?;
-            self.sessions.insert(id.to_string(), Session { scorer, last_used: self.clock });
-            self.opened += 1;
-            self.enforce_budget(id);
+            if let Some(&t) = chunk.iter().find(|&&t| t as usize >= self.model.vocab_size) {
+                results[i] = Some(Err(anyhow!(
+                    "token {t} outside vocab (size {})",
+                    self.model.vocab_size
+                )));
+                continue;
+            }
+            if !self.sessions.contains_key(id) {
+                if self.evicted_ids.contains(id) {
+                    results[i] = Some(Err(anyhow!(
+                        "session '{id}' was evicted under memory pressure; \
+                         close it and start a new session"
+                    )));
+                    continue;
+                }
+                match ChunkScorer::new(self.model.clone()) {
+                    Ok(scorer) => {
+                        self.sessions
+                            .insert(id.to_string(), Session { scorer, last_used: self.clock });
+                        self.opened += 1;
+                    }
+                    Err(e) => {
+                        results[i] = Some(Err(e));
+                        continue;
+                    }
+                }
+            }
+            admitted.push(i);
         }
-        self.clock += 1;
-        let clock = self.clock;
-        let session = self
-            .sessions
-            .get_mut(id)
-            .ok_or_else(|| anyhow!("session '{id}' vanished"))?;
-        session.last_used = clock;
-        let scores = session.scorer.advance(chunk)?;
-        self.chunks += 1;
-        self.tokens += chunk.len() as u64;
-        Ok(scores)
+        let keep: HashSet<&str> = admitted.iter().map(|&i| ids[i]).collect();
+        self.enforce_budget(&keep);
+
+        // fused waves: a wave holds each session at most once (so a
+        // duplicated id advances sequentially in submission order) and
+        // only length-compatible chunks. An id deferred for length is
+        // blocked for the rest of the wave — a later chunk of the same
+        // session must not jump ahead of it.
+        let mut remaining = admitted;
+        while !remaining.is_empty() {
+            let mut wave: Vec<usize> = Vec::new();
+            let mut in_wave: HashSet<&str> = HashSet::new();
+            let mut blocked: HashSet<&str> = HashSet::new();
+            let mut next: Vec<usize> = Vec::new();
+            let (mut wlo, mut whi) = (0usize, 0usize); // wave's length window
+            for i in remaining {
+                let id = ids[i];
+                if in_wave.contains(id) || blocked.contains(id) {
+                    next.push(i);
+                    continue;
+                }
+                let len = chunks[i].len();
+                let (nlo, nhi) = if wave.is_empty() {
+                    (len, len)
+                } else {
+                    (wlo.min(len), whi.max(len))
+                };
+                if nhi > COMPAT_LEN_RATIO * nlo {
+                    blocked.insert(id);
+                    next.push(i);
+                    continue;
+                }
+                (wlo, whi) = (nlo, nhi);
+                in_wave.insert(id);
+                wave.push(i);
+            }
+            // pull the wave's scorers out of the map so they advance as
+            // one contiguous mutable slice, then reinsert (each with its
+            // own clock tick, in submission order, so LRU ordering stays
+            // a deterministic total order exactly as sequential advances
+            // would produce)
+            let mut scorers: Vec<ChunkScorer> = wave
+                .iter()
+                .map(|&i| {
+                    self.sessions.remove(ids[i]).expect("admitted session resident").scorer
+                })
+                .collect();
+            let wave_chunks: Vec<&[u8]> = wave.iter().map(|&i| chunks[i]).collect();
+            match ChunkScorer::advance_batch(&mut scorers, &wave_chunks) {
+                Ok(scores) => {
+                    for ((&i, scorer), sc) in wave.iter().zip(scorers).zip(scores) {
+                        self.chunks += 1;
+                        self.tokens += chunks[i].len() as u64;
+                        self.clock += 1;
+                        self.sessions.insert(
+                            ids[i].to_string(),
+                            Session { scorer, last_used: self.clock },
+                        );
+                        results[i] = Some(Ok(sc));
+                    }
+                }
+                Err(e) => {
+                    // advance_batch validates before touching any state,
+                    // so the scorers are unmodified: keep them resident
+                    let msg = format!("{e:#}");
+                    for (&i, scorer) in wave.iter().zip(scorers) {
+                        self.clock += 1;
+                        self.sessions.insert(
+                            ids[i].to_string(),
+                            Session { scorer, last_used: self.clock },
+                        );
+                        results[i] = Some(Err(anyhow!("{msg}")));
+                    }
+                }
+            }
+            remaining = next;
+        }
+        results.into_iter().map(|r| r.expect("every request answered")).collect()
     }
 
     /// Explicitly end a stream, releasing its state immediately (and
@@ -174,9 +297,9 @@ impl SessionManager {
         existed
     }
 
-    /// Evict least-recently-used sessions (never `keep`) until both the
-    /// byte budget and the session cap hold.
-    fn enforce_budget(&mut self, keep: &str) {
+    /// Evict least-recently-used sessions (never one in `keep`) until
+    /// both the byte budget and the session cap hold.
+    fn enforce_budget(&mut self, keep: &HashSet<&str>) {
         loop {
             let over_bytes = self.resident_bytes() > self.cfg.max_state_bytes;
             let over_count =
@@ -187,7 +310,7 @@ impl SessionManager {
             let victim = self
                 .sessions
                 .iter()
-                .filter(|(k, _)| k.as_str() != keep)
+                .filter(|(k, _)| !keep.contains(k.as_str()))
                 .min_by_key(|(_, s)| s.last_used)
                 .map(|(k, _)| k.clone());
             match victim {
@@ -196,8 +319,8 @@ impl SessionManager {
                     self.evicted_ids.insert(k);
                     self.evicted += 1;
                 }
-                // only the active session is left; let it exceed the
-                // budget rather than refusing to serve it
+                // only actively-served sessions are left; let them
+                // exceed the budget rather than refusing to serve them
                 None => return,
             }
         }
@@ -292,6 +415,102 @@ mod tests {
         assert!(mgr.is_empty());
         let st = mgr.stats();
         assert_eq!((st.opened, st.closed), (1, 1));
+    }
+
+    #[test]
+    fn budget_charges_true_resident_bytes() {
+        use crate::train::NativeAttention;
+        let m = model();
+        let mgr = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        // the estimate must equal the layers × heads × M × (d_h + 1)
+        // prefix sums plus the carried vocab-sized context row
+        let NativeAttention::Favor(fm) = &m.attention else {
+            panic!("synthetic model must be FAVOR");
+        };
+        let dh = m.d_model / m.n_heads;
+        let f32s = std::mem::size_of::<f32>();
+        let expect = m.n_layers() * m.n_heads * fm.m() * (dh + 1) * f32s + m.vocab_size * f32s;
+        assert_eq!(mgr.per_session_bytes(), expect);
+
+        // ...and match what a live session actually carries at steady
+        // state (after its first chunk)
+        let mut scorer = ChunkScorer::new(m).unwrap();
+        assert!(scorer.resident_bytes() < mgr.per_session_bytes(), "no context row yet");
+        scorer.advance(&chunk(16, 40)).unwrap();
+        assert_eq!(scorer.resident_bytes(), mgr.per_session_bytes());
+        assert_eq!(scorer.steady_state_bytes(), mgr.per_session_bytes());
+    }
+
+    #[test]
+    fn batched_advance_matches_sequential_and_orders_duplicates() {
+        let m = model();
+        let mut seq = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        let mut bat = SessionManager::new(m, SessionConfig::default()).unwrap();
+        let c0 = chunk(24, 50);
+        let c1 = chunk(16, 51);
+        let c2 = chunk(24, 52);
+        // "a" appears twice: its second chunk must see the first's state
+        let ids = ["a", "b", "a"];
+        let chunks: Vec<&[u8]> = vec![&c0, &c1, &c2];
+        let fused = bat.advance_batch(&ids, &chunks);
+        for (i, (id, c)) in ids.iter().zip(&chunks).enumerate() {
+            let want = seq.advance(id, c).unwrap();
+            let got = fused[i].as_ref().expect("batched advance succeeds");
+            assert_eq!(got.offset, want.offset, "request {i}");
+            let diff = got
+                .logprob
+                .iter()
+                .zip(&want.logprob)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(diff < 1e-5, "request {i}: fused diverges by {diff}");
+        }
+        assert_eq!(bat.stats().chunks, 3);
+        assert_eq!(bat.stats().tokens, (c0.len() + c1.len() + c2.len()) as u64);
+    }
+
+    #[test]
+    fn batch_members_survive_budget_pressure_across_waves() {
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        // room for exactly two sessions
+        let cfg = SessionConfig { max_state_bytes: 2 * per, max_sessions: 0 };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("live", &chunk(16, 70)).unwrap();
+        mgr.advance("idle", &chunk(16, 71)).unwrap();
+        // one window: a new session plus "live", with incompatible
+        // lengths (100 > 2×8) so they land in separate fused waves.
+        // Budget pressure must evict the idle session, never a batch
+        // member — even one whose wave runs after the eviction.
+        let short = chunk(8, 72);
+        let long = chunk(100, 73);
+        let res = mgr.advance_batch(&["new", "live"], &[&short, &long]);
+        assert!(res[0].is_ok(), "new session must be served");
+        assert!(
+            res[1].is_ok(),
+            "batch member in a later wave must not be evicted by an earlier wave: {:?}",
+            res[1].as_ref().err()
+        );
+        assert!(mgr.contains("live") && mgr.contains("new"));
+        assert!(!mgr.contains("idle"), "the idle session is the only valid victim");
+    }
+
+    #[test]
+    fn batched_advance_isolates_per_request_failures() {
+        let mut mgr = SessionManager::new(model(), SessionConfig::default()).unwrap();
+        let good = chunk(12, 60);
+        let empty: &[u8] = &[];
+        let bad = vec![200u8; 4]; // outside vocab
+        let res = mgr.advance_batch(&["ok", "e", "v"], &[&good, empty, &bad]);
+        assert!(res[0].is_ok(), "valid request must survive bad neighbors");
+        assert!(res[1].is_err());
+        assert!(res[2].is_err());
+        assert_eq!(mgr.stats().chunks, 1);
+        // failed requests must not leave half-open sessions resident
+        assert!(mgr.contains("ok"));
+        assert!(!mgr.contains("e") && !mgr.contains("v"));
     }
 
     #[test]

@@ -77,6 +77,94 @@ pub fn chunked_latency_point(
     })
 }
 
+/// One measured point of the fused-throughput comparison: the same B
+/// token streams advanced one session at a time vs fused through
+/// [`ChunkScorer::advance_batch`].
+#[derive(Clone, Copy, Debug)]
+pub struct FusedPoint {
+    pub n_sessions: usize,
+    pub chunk: usize,
+    pub n_chunks: usize,
+    /// wall seconds to advance every session sequentially
+    pub seq_secs: f64,
+    /// wall seconds to advance all sessions via fused batches
+    pub fused_secs: f64,
+    /// max |logprob| divergence between the two paths (must be ~0: the
+    /// fused path is an execution strategy, not an approximation)
+    pub max_diff: f64,
+}
+
+impl FusedPoint {
+    /// Tokens consumed across all sessions (each path consumes this many).
+    pub fn total_tokens(&self) -> usize {
+        self.n_sessions * self.chunk * self.n_chunks
+    }
+
+    pub fn seq_tokens_per_sec(&self) -> f64 {
+        self.total_tokens() as f64 / self.seq_secs.max(1e-12)
+    }
+
+    pub fn fused_tokens_per_sec(&self) -> f64 {
+        self.total_tokens() as f64 / self.fused_secs.max(1e-12)
+    }
+
+    /// Aggregate-throughput win of fusing (>1 means batching is faster).
+    pub fn speedup(&self) -> f64 {
+        self.seq_secs / self.fused_secs.max(1e-12)
+    }
+}
+
+/// Advance `n_sessions` independent corpus streams for `n_chunks` rounds
+/// of `chunk` tokens each, twice over the same token streams: once one
+/// session at a time ([`ChunkScorer::advance`]), once fused
+/// ([`ChunkScorer::advance_batch`]); time both and cross-check scores.
+pub fn fused_throughput_point(
+    model: &Arc<NativeModel>,
+    corpus: &Corpus,
+    n_sessions: usize,
+    chunk: usize,
+    n_chunks: usize,
+    rng: &mut Pcg64,
+) -> Result<FusedPoint> {
+    let streams: Vec<Vec<Vec<u8>>> = (0..n_sessions)
+        .map(|_| {
+            (0..n_chunks)
+                .map(|_| corpus.concat_stream(chunk, 1, rng).pop().unwrap())
+                .collect()
+        })
+        .collect();
+    let fresh = |n: usize| -> Result<Vec<ChunkScorer>> {
+        (0..n).map(|_| ChunkScorer::new(model.clone())).collect()
+    };
+
+    let mut seq_scorers = fresh(n_sessions)?;
+    let mut seq_scores = Vec::with_capacity(n_sessions * n_chunks);
+    let t0 = Instant::now();
+    for c in 0..n_chunks {
+        for (s, scorer) in seq_scorers.iter_mut().enumerate() {
+            seq_scores.push(scorer.advance(&streams[s][c])?);
+        }
+    }
+    let seq_secs = t0.elapsed().as_secs_f64();
+
+    let mut fused_scorers = fresh(n_sessions)?;
+    let mut fused_scores = Vec::with_capacity(n_sessions * n_chunks);
+    let t1 = Instant::now();
+    for c in 0..n_chunks {
+        let chunks: Vec<&[u8]> = streams.iter().map(|st| st[c].as_slice()).collect();
+        fused_scores.extend(ChunkScorer::advance_batch(&mut fused_scorers, &chunks)?);
+    }
+    let fused_secs = t1.elapsed().as_secs_f64();
+
+    let max_diff = seq_scores
+        .iter()
+        .zip(&fused_scores)
+        .flat_map(|(a, b)| a.logprob.iter().zip(&b.logprob))
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    Ok(FusedPoint { n_sessions, chunk, n_chunks, seq_secs, fused_secs, max_diff })
+}
+
 /// Geometric ladder of totals ending exactly at `max_total`.
 pub fn sweep_totals(start: usize, factor: usize, max_total: usize) -> Vec<usize> {
     let mut totals = Vec::new();
@@ -101,6 +189,22 @@ mod tests {
         assert_eq!(sweep_totals(4096, 4, 8192), vec![4096, 8192]);
         assert_eq!(sweep_totals(4096, 4, 2048), vec![2048]);
         assert_eq!(sweep_totals(4096, 4, 4096), vec![4096]);
+    }
+
+    #[test]
+    fn fused_point_consumes_everything_and_agrees() {
+        let mut rng = Pcg64::new(4);
+        let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+        let corpus = Corpus::generate(CorpusConfig::default());
+        let p = fused_throughput_point(&model, &corpus, 3, 32, 2, &mut rng).unwrap();
+        assert_eq!(p.total_tokens(), 3 * 32 * 2);
+        assert!(p.seq_secs > 0.0 && p.fused_secs > 0.0);
+        assert!(p.speedup() > 0.0);
+        assert!(
+            p.max_diff < 1e-4,
+            "fused and sequential scores must agree (diff {})",
+            p.max_diff
+        );
     }
 
     #[test]

@@ -20,7 +20,7 @@ use crate::linalg::OrfMechanism;
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, Role};
 use crate::stream::StreamState;
-use crate::tensor::Mat;
+use crate::tensor::{Batch, Mat};
 
 /// A dense layer (w: in×out, b: out).
 struct Dense {
@@ -94,18 +94,28 @@ fn gelu(x: f32) -> f32 {
     0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())
 }
 
-/// Sinusoidal position encodings, matching model.py exactly.
-fn positions(l: usize, d: usize) -> Mat {
-    positions_from(0, l, d)
+/// Copy one head's q/k/v block out of the fused QKV matrix: rows
+/// `[row_lo, row_lo+len)`, columns `[col_lo, col_lo+dh)` — a row-wise
+/// memcpy instead of the former per-element `Mat::from_fn`.
+fn slice_head(qkv: &Mat, row_lo: usize, len: usize, col_lo: usize, dh: usize) -> Mat {
+    let mut out = Mat::zeros(len, dh);
+    for i in 0..len {
+        out.row_mut(i).copy_from_slice(&qkv.row(row_lo + i)[col_lo..col_lo + dh]);
+    }
+    out
 }
 
 /// Position encodings for rows [offset, offset+l) of a longer stream —
 /// row r here equals row offset+r of `positions(offset + l, d)`, so
-/// chunked forwards see exactly the single-shot encodings.
+/// chunked forwards see exactly the single-shot encodings. The per-column
+/// inverse frequency is hoisted out of the row loop (it is the same
+/// `powf` for every position — recomputing it per element dominated the
+/// embedding cost of the naive version).
 fn positions_from(offset: usize, l: usize, d: usize) -> Mat {
+    let freq: Vec<f64> =
+        (0..d).map(|i| 10000f64.powf((2 * (i / 2)) as f64 / d as f64)).collect();
     Mat::from_fn(l, d, |pos, i| {
-        let angle =
-            (offset + pos) as f64 / 10000f64.powf((2 * (i / 2)) as f64 / d as f64);
+        let angle = (offset + pos) as f64 / freq[i];
         if i % 2 == 0 { angle.sin() as f32 } else { angle.cos() as f32 }
     })
 }
@@ -234,48 +244,104 @@ impl NativeModel {
 
     /// Forward pass for one sequence. Returns logits (L×vocab) and, if
     /// `capture_attention`, the per-layer per-head attention matrices.
+    /// Thin wrapper over [`Self::forward_batch`] with B = 1.
     pub fn forward(
         &self,
         tokens: &[u8],
         capture_attention: bool,
     ) -> (Mat, Vec<Vec<Mat>>) {
-        let l = tokens.len();
+        let (mut logits, mut maps) = self.forward_batch(&[tokens], capture_attention);
+        (logits.pop().expect("B=1 forward"), maps.pop().unwrap_or_default())
+    }
+
+    /// Batched forward pass: B sequences (possibly ragged) fused into one
+    /// [`Batch`], so every dense per-token operation — embedding,
+    /// LayerNorm, QKV, output projection, FFN, final logits — runs once
+    /// over the (B·stride)×d stack instead of B times over small
+    /// matrices; attention is dispatched per (sequence, head) on real
+    /// rows only. Returns per-sequence logits and, when
+    /// `capture_attention`, maps indexed `[seq][layer][head]`.
+    pub fn forward_batch(
+        &self,
+        seqs: &[&[u8]],
+        capture_attention: bool,
+    ) -> (Vec<Mat>, Vec<Vec<Vec<Mat>>>) {
+        let offsets = vec![0usize; seqs.len()];
+        self.forward_batch_inner(seqs, &offsets, capture_attention, |_, _, _, q, k, v| {
+            self.head_attention(q, k, v)
+        })
+    }
+
+    /// The shared batched layer stack behind every forward path.
+    /// `attend(layer, seq, head, q, k, v)` supplies the per-head
+    /// attention outputs — stateless full-sequence attention for
+    /// [`Self::forward_batch`], the carried FAVOR prefix-sum recurrence
+    /// for [`Self::forward_chunk_batch`].
+    fn forward_batch_inner(
+        &self,
+        seqs: &[&[u8]],
+        offsets: &[usize],
+        capture_attention: bool,
+        mut attend: impl FnMut(usize, usize, usize, &Mat, &Mat, &Mat) -> Mat,
+    ) -> (Vec<Mat>, Vec<Vec<Vec<Mat>>>) {
+        debug_assert_eq!(seqs.len(), offsets.len());
+        let bsz = seqs.len();
         let d = self.d_model;
         let h = self.n_heads;
         let dh = d / h;
         let scale = (d as f32).sqrt();
+        let lens: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
 
-        let mut x = Mat::from_fn(l, d, |i, j| self.embed.at(tokens[i] as usize, j) * scale);
-        x.add_assign(&positions(l, d));
+        // fused input: embeddings + positions per sequence; padding rows
+        // (ragged batches) stay zero and are never read back
+        let mut batch = Batch::zeros(&lens, d);
+        let stride = batch.stride;
+        for (s, tokens) in seqs.iter().enumerate() {
+            let pos = positions_from(offsets[s], tokens.len(), d);
+            let (lo, _) = batch.seq_rows(s);
+            for (i, &tok) in tokens.iter().enumerate() {
+                let row = batch.data.row_mut(lo + i);
+                let erow = self.embed.row(tok as usize);
+                let prow = pos.row(i);
+                for j in 0..d {
+                    row[j] = erow[j] * scale + prow[j];
+                }
+            }
+        }
+        let mut x = batch.data;
 
-        let mut attn_maps: Vec<Vec<Mat>> = Vec::new();
-        for layer in &self.layers {
-            // attention block
+        let mut attn_maps: Vec<Vec<Vec<Mat>>> =
+            if capture_attention { (0..bsz).map(|_| Vec::new()).collect() } else { Vec::new() };
+        for (li, layer) in self.layers.iter().enumerate() {
+            // attention block: one fused LayerNorm + QKV over the stack,
+            // then per-(sequence, head) attention on real rows
             let normed = layer.ln1.apply(&x);
-            let qkv = layer.qkv.apply(&normed); // (L, 3d)
-            let mut head_outs = Mat::zeros(l, d);
-            let mut layer_maps = Vec::new();
-            for head in 0..h {
-                let slice = |which: usize| -> Mat {
-                    Mat::from_fn(l, dh, |i, j| qkv.at(i, which * d + head * dh + j))
-                };
-                let (q, k, v) = (slice(0), slice(1), slice(2));
-                let out = self.head_attention(&q, &k, &v);
-                for i in 0..l {
-                    for j in 0..dh {
-                        *head_outs.at_mut(i, head * dh + j) = out.at(i, j);
+            let qkv = layer.qkv.apply(&normed); // (B*stride, 3d)
+            let mut head_outs = Mat::zeros(x.rows, d);
+            for s in 0..bsz {
+                let row_lo = s * stride;
+                let l = lens[s];
+                let mut layer_maps = Vec::new();
+                for head in 0..h {
+                    let q = slice_head(&qkv, row_lo, l, head * dh, dh);
+                    let k = slice_head(&qkv, row_lo, l, d + head * dh, dh);
+                    let v = slice_head(&qkv, row_lo, l, 2 * d + head * dh, dh);
+                    let out = attend(li, s, head, &q, &k, &v);
+                    for i in 0..l {
+                        head_outs.row_mut(row_lo + i)[head * dh..(head + 1) * dh]
+                            .copy_from_slice(out.row(i));
+                    }
+                    if capture_attention {
+                        layer_maps.push(self.head_attention_matrix(&q, &k));
                     }
                 }
                 if capture_attention {
-                    layer_maps.push(self.head_attention_matrix(&q, &k));
+                    attn_maps[s].push(layer_maps);
                 }
-            }
-            if capture_attention {
-                attn_maps.push(layer_maps);
             }
             x.add_assign(&layer.proj.apply(&head_outs));
 
-            // MLP block
+            // MLP block, fused over the whole stack
             let normed = layer.ln2.apply(&x);
             let mut hmid = layer.ff1.apply(&normed);
             for v in &mut hmid.data {
@@ -285,7 +351,10 @@ impl NativeModel {
         }
 
         let xf = self.lnf.apply(&x);
-        let logits = xf.matmul(&self.embed.t());
+        // the logits inherit the batch's row layout: rewrap them so the
+        // per-sequence views come from the same seq_rows arithmetic
+        let logits_all = Batch { data: xf.matmul(&self.embed.t()), stride, lens };
+        let logits = (0..bsz).map(|s| logits_all.seq_mat(s)).collect();
         (logits, attn_maps)
     }
 
@@ -329,68 +398,64 @@ impl NativeModel {
     /// `tokens[0]` in the stream. Feeding a stream chunk by chunk (any
     /// chunking) produces the same logits as a single [`Self::forward`]
     /// over the concatenation, in O(layers·heads·M·d) resident state.
+    /// Thin wrapper over [`Self::forward_chunk_batch`] with B = 1.
     pub fn forward_chunk(
         &self,
         tokens: &[u8],
         pos_offset: usize,
         states: &mut [Vec<StreamState>],
     ) -> Result<Mat> {
+        let mut refs = [states];
+        Ok(self
+            .forward_chunk_batch(&[tokens], &[pos_offset], &mut refs)?
+            .pop()
+            .expect("B=1 forward_chunk"))
+    }
+
+    /// Batched streaming forward: advance B independent sessions through
+    /// the whole stack in one fused call. `seqs[s]` is session `s`'s next
+    /// chunk, `offsets[s]` the global stream index of its first token,
+    /// and `states[s]` its carried per-layer per-head FAVOR prefix sums.
+    /// Dense work (LayerNorm/QKV/proj/FFN/logits) runs once over the
+    /// fused (B·stride)×d stack; each session's attention recurrence
+    /// advances on its own rows only, so chunk lengths may differ and
+    /// every session produces exactly the logits a sequential
+    /// [`Self::forward_chunk`] would.
+    pub fn forward_chunk_batch(
+        &self,
+        seqs: &[&[u8]],
+        offsets: &[usize],
+        states: &mut [&mut [Vec<StreamState>]],
+    ) -> Result<Vec<Mat>> {
         let NativeAttention::Favor(fm) = &self.attention else {
             bail!("streaming requires FAVOR attention");
         };
         if self.direction != Direction::Unidirectional {
             bail!("streaming requires a unidirectional (causal) model");
         }
-        if states.len() != self.layers.len()
-            || states.iter().any(|s| s.len() != self.n_heads)
-        {
+        if seqs.len() != offsets.len() || seqs.len() != states.len() {
             bail!(
-                "stream state shape mismatch: expected {} layers x {} heads",
-                self.layers.len(),
-                self.n_heads
+                "batch arity mismatch: {} seqs, {} offsets, {} states",
+                seqs.len(),
+                offsets.len(),
+                states.len()
             );
         }
-        let l = tokens.len();
-        let d = self.d_model;
-        let h = self.n_heads;
-        let dh = d / h;
-        let scale = (d as f32).sqrt();
-
-        let mut x = Mat::from_fn(l, d, |i, j| self.embed.at(tokens[i] as usize, j) * scale);
-        x.add_assign(&positions_from(pos_offset, l, d));
-
-        for (layer, lstates) in self.layers.iter().zip(states.iter_mut()) {
-            // attention block, streaming per head
-            let normed = layer.ln1.apply(&x);
-            let qkv = layer.qkv.apply(&normed); // (chunk, 3d)
-            let mut head_outs = Mat::zeros(l, d);
-            for (head, st) in lstates.iter_mut().enumerate() {
-                let slice = |which: usize| -> Mat {
-                    Mat::from_fn(l, dh, |i, j| qkv.at(i, which * d + head * dh + j))
-                };
-                let (q, k, v) = (slice(0), slice(1), slice(2));
-                let qp = fm.apply(&q);
-                let kp = fm.apply(&k);
-                let out = st.advance(&qp, &kp, &v);
-                for i in 0..l {
-                    for j in 0..dh {
-                        *head_outs.at_mut(i, head * dh + j) = out.at(i, j);
-                    }
-                }
+        for s in states.iter() {
+            if s.len() != self.layers.len() || s.iter().any(|l| l.len() != self.n_heads) {
+                bail!(
+                    "stream state shape mismatch: expected {} layers x {} heads",
+                    self.layers.len(),
+                    self.n_heads
+                );
             }
-            x.add_assign(&layer.proj.apply(&head_outs));
-
-            // MLP block
-            let normed = layer.ln2.apply(&x);
-            let mut hmid = layer.ff1.apply(&normed);
-            for v in &mut hmid.data {
-                *v = gelu(*v);
-            }
-            x.add_assign(&layer.ff2.apply(&hmid));
         }
-
-        let xf = self.lnf.apply(&x);
-        Ok(xf.matmul(&self.embed.t()))
+        let (logits, _) = self.forward_batch_inner(seqs, offsets, false, |li, s, head, q, k, v| {
+            let qp = fm.apply(q);
+            let kp = fm.apply(k);
+            states[s][li][head].advance(&qp, &kp, v)
+        });
+        Ok(logits)
     }
 
     /// Randomly initialized model for streaming tests, benches and
@@ -445,10 +510,17 @@ mod tests {
 
     #[test]
     fn positions_match_reference_values() {
-        let p = positions(4, 8);
+        let p = positions_from(0, 4, 8);
         assert!((p.at(0, 0) - 0.0).abs() < 1e-6); // sin(0)
         assert!((p.at(0, 1) - 1.0).abs() < 1e-6); // cos(0)
         assert!((p.at(1, 0) - 1f32.sin()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chunk_offset_positions_match_single_shot_rows() {
+        let full = positions_from(0, 24, 8);
+        let tail = positions_from(16, 8, 8);
+        assert!(tail.max_abs_diff(&full.rows_slice(16, 24)) < 1e-7);
     }
 
     #[test]
@@ -456,5 +528,47 @@ mod tests {
         assert!((gelu(0.0)).abs() < 1e-7);
         assert!((gelu(1.0) - 0.841192).abs() < 1e-4);
         assert!((gelu(-1.0) + 0.158808).abs() < 1e-4);
+    }
+
+    #[test]
+    fn slice_head_extracts_block() {
+        let m = Mat::from_fn(6, 8, |i, j| (i * 8 + j) as f32);
+        let s = slice_head(&m, 2, 3, 5, 2);
+        assert_eq!((s.rows, s.cols), (3, 2));
+        assert_eq!(s.data, vec![21.0, 22.0, 29.0, 30.0, 37.0, 38.0]);
+    }
+
+    #[test]
+    fn forward_batch_matches_independent_forwards_ragged() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(17);
+        let model = NativeModel::synthetic(&SyntheticConfig::default(), &mut rng);
+        let mk = |rng: &mut Pcg64, n: usize| -> Vec<u8> {
+            (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+        };
+        // ragged on purpose: padding rows must not perturb real rows
+        let seqs: Vec<Vec<u8>> = vec![mk(&mut rng, 19), mk(&mut rng, 7), mk(&mut rng, 12)];
+        let refs: Vec<&[u8]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let (batched, _) = model.forward_batch(&refs, false);
+        for (s, seq) in seqs.iter().enumerate() {
+            let (single, _) = model.forward(seq, false);
+            let diff = batched[s].max_abs_diff(&single);
+            assert!(diff < 1e-5, "seq {s}: batched forward diverges by {diff}");
+        }
+    }
+
+    #[test]
+    fn forward_batch_captures_attention_per_seq() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(23);
+        let model = NativeModel::synthetic(&SyntheticConfig::default(), &mut rng);
+        let toks: Vec<u8> = (0..9).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+        let (_, maps) = model.forward_batch(&[toks.as_slice(), toks.as_slice()], true);
+        assert_eq!(maps.len(), 2);
+        for seq_maps in &maps {
+            assert_eq!(seq_maps.len(), model.n_layers());
+            assert_eq!(seq_maps[0].len(), model.n_heads);
+            assert_eq!((seq_maps[0][0].rows, seq_maps[0][0].cols), (9, 9));
+        }
     }
 }

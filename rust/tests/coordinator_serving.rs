@@ -135,7 +135,11 @@ fn oversized_request_is_clipped_not_crashed() {
     let (_actor, mut coord) = coordinator(2, 1);
     let toks = vec![MASK; 500]; // longer than compiled L=64
     let resp = coord.fill_mask("tiny_relu_bid", toks).unwrap();
-    // predictions only within the compiled window
+    // predictions only within the compiled window…
     assert!(resp.predictions.iter().all(|(pos, _, _)| *pos < 64));
+    // …and the dropped masks are reported, not silently swallowed
+    assert!(!resp.complete());
+    assert_eq!(resp.truncated.len(), 500 - 64);
+    assert!(resp.truncated.iter().all(|&pos| pos >= 64));
     coord.shutdown();
 }

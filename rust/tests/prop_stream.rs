@@ -5,9 +5,14 @@
 //!   * chunked `StreamState::advance` over *random* chunk splits equals
 //!     single-shot `favor_unidirectional` (the refactor's contract);
 //!   * the chunked native-model forward equals the single-shot forward;
+//!   * the batched execution core: `forward_batch` over random ragged
+//!     batches equals B independent `forward` calls, and fused
+//!     `advance_batch` across random chunkings/session mixes equals the
+//!     per-session sequential advance;
 //!   * session budgeting: exceeding the budget evicts the LRU session
 //!     and preserves the active/recent ones;
-//!   * the coordinator stream path answers chunks incrementally.
+//!   * the coordinator stream path answers chunks incrementally, fusing
+//!     same-window submissions.
 
 use std::sync::Arc;
 
@@ -110,6 +115,73 @@ fn prop_chunked_model_forward_equals_single_shot() {
 }
 
 #[test]
+fn prop_forward_batch_equals_independent_forwards() {
+    let mut mrng = Pcg64::new(101);
+    let model = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig { d_model: 16, n_heads: 2, n_layers: 2, d_ff: 32, ..Default::default() },
+        &mut mrng,
+    ));
+    forall("forward_batch == B independent forwards", |rng| {
+        let b = 1 + rng.below(4);
+        // ragged on purpose: padding rows must not perturb real rows
+        let seqs: Vec<Vec<u8>> = (0..b)
+            .map(|_| {
+                let n = 4 + rng.below(40);
+                aa_tokens(rng, n)
+            })
+            .collect();
+        let refs: Vec<&[u8]> = seqs.iter().map(|s| s.as_slice()).collect();
+        let (batched, _) = model.forward_batch(&refs, false);
+        for (s, seq) in seqs.iter().enumerate() {
+            let (single, _) = model.forward(seq, false);
+            let diff = batched[s].max_abs_diff(&single);
+            assert!(diff < 1e-4, "seq {s} (len {}): batched diverges by {diff}", seq.len());
+        }
+    });
+}
+
+#[test]
+fn prop_fused_chunk_advance_equals_sequential_advance() {
+    let mut mrng = Pcg64::new(102);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    forall("advance_batch == per-session sequential advance", |rng| {
+        let b = 1 + rng.below(4);
+        let rounds = 1 + rng.below(3);
+        let mut fused: Vec<ChunkScorer> =
+            (0..b).map(|_| ChunkScorer::new(model.clone()).unwrap()).collect();
+        let mut seq: Vec<ChunkScorer> =
+            (0..b).map(|_| ChunkScorer::new(model.clone()).unwrap()).collect();
+        for round in 0..rounds {
+            // random chunk lengths per session per round: the fused
+            // batch is ragged and sessions drift out of position sync
+            let chunks: Vec<Vec<u8>> = (0..b)
+                .map(|_| {
+                    let n = 1 + rng.below(24);
+                    aa_tokens(rng, n)
+                })
+                .collect();
+            let refs: Vec<&[u8]> = chunks.iter().map(|c| c.as_slice()).collect();
+            let got = ChunkScorer::advance_batch(&mut fused, &refs).unwrap();
+            for s in 0..b {
+                let want = seq[s].advance(&chunks[s]).unwrap();
+                assert_eq!(got[s].offset, want.offset, "round {round} session {s}");
+                assert_eq!(got[s].argmax, want.argmax, "round {round} session {s}");
+                let diff = got[s]
+                    .logprob
+                    .iter()
+                    .zip(&want.logprob)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(
+                    diff < 1e-5,
+                    "round {round} session {s}: fused diverges by {diff}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn scorer_state_is_constant_and_positions_advance() {
     let mut rng = Pcg64::new(3);
     let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
@@ -158,6 +230,31 @@ fn session_budget_evicts_lru_preserves_active() {
         assert!(mgr.close(id));
     }
     assert_eq!(mgr.resident_bytes(), 0);
+}
+
+#[test]
+fn coordinator_fused_submissions_round_trip() {
+    let mut rng = Pcg64::new(21);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+    coord.start_stream_pool("native", model, SessionConfig::default()).unwrap();
+
+    // 8 sessions submit together each round: the worker drains them
+    // into fused batches, yet every session advances independently
+    for round in 0usize..3 {
+        let reqs: Vec<(String, Vec<u8>)> =
+            (0..8).map(|u| (format!("u{u}"), aa_tokens(&mut rng, 24 + u))).collect();
+        let lens: Vec<usize> = reqs.iter().map(|(_, t)| t.len()).collect();
+        let rxs = coord.submit_chunks("native", reqs).unwrap();
+        for (u, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.ok(), "round {round} u{u}: {:?}", resp.error);
+            let scores = resp.scores.expect("scores for a chunk request");
+            assert_eq!(scores.offset, round * (24 + u), "per-session offsets must advance");
+            assert_eq!(scores.len(), lens[u]);
+        }
+    }
+    coord.shutdown();
 }
 
 #[test]
