@@ -1,0 +1,169 @@
+//! Durable-persistence bench: what session durability costs. Measures
+//! snapshot encode/save latency, load/rehydrate latency and snapshot
+//! size for one session, then the end-to-end spill/rehydrate churn a
+//! budget-constrained `SessionManager` pays per chunk, and a full
+//! `checkpoint_all` → `restore_from` migration.
+//!
+//!   cargo bench --bench persist_roundtrip            # full sweep
+//!   cargo bench --bench persist_roundtrip -- --test  # smoke mode (CI)
+//!
+//! Exits non-zero if a spill/rehydrate round trip ever changes a score
+//! bit, or if the per-session snapshot stops being constant-size (it is
+//! the FAVOR carried state — growing with stream length would mean the
+//! subsystem's core claim broke). Writes BENCH_persist.json for the
+//! perf trajectory.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use performer::benchlib::{fmt_secs, Report};
+use performer::jsonx::{num, obj, s};
+use performer::persist::Checkpointer;
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::stream::{ChunkScorer, SessionConfig, SessionManager};
+use performer::train::{NativeModel, SyntheticConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test")
+        || std::env::var("STREAM_SMOKE").is_ok();
+    let (chunk, rounds, reps) = if smoke {
+        (128usize, 2usize, 3usize)
+    } else {
+        (
+            env_usize("PERSIST_CHUNK", 512),
+            env_usize("PERSIST_ROUNDS", 8),
+            env_usize("PERSIST_REPS", 20),
+        )
+    };
+    let dir = std::env::temp_dir().join(format!("pfrm_bench_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut rng = Pcg64::new(0);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+
+    // ---- single-session snapshot save/load latency + size ----
+    let mut scorer = ChunkScorer::new(model.clone())?;
+    scorer.advance(&corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap())?;
+    let mut ck = Checkpointer::create(&dir.join("single"))?;
+    let mut save_secs = Vec::with_capacity(reps);
+    let mut load_secs = Vec::with_capacity(reps);
+    let mut snap_bytes = 0u64;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rec = ck.save("bench", &scorer)?;
+        save_secs.push(t0.elapsed().as_secs_f64());
+        snap_bytes = rec.bytes;
+        let t1 = Instant::now();
+        let restored = ck.load("bench", &model)?;
+        load_secs.push(t1.elapsed().as_secs_f64());
+        assert_eq!(restored.tokens_seen(), scorer.tokens_seen());
+    }
+    // the snapshot must not grow as the stream does — stream more,
+    // resave. The tensor payload is exactly constant; only the JSON
+    // header's position counters can gain digits, so allow that jitter
+    // while still catching any real (tensor-sized) growth.
+    scorer.advance(&corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap())?;
+    let later = ck.save("bench", &scorer)?;
+    assert!(
+        later.bytes.abs_diff(snap_bytes) <= 64,
+        "snapshot size must stay constant in streamed length ({snap_bytes} -> {} bytes)",
+        later.bytes
+    );
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (save_s, load_s) = (mean(&save_secs), mean(&load_secs));
+
+    let mut rep = Report::new(
+        &format!("Session snapshot round trip ({reps} reps, {chunk}-token chunks)"),
+        &["snapshot_bytes", "save", "load", "save_MB_per_s"],
+    );
+    rep.row(vec![
+        snap_bytes.to_string(),
+        fmt_secs(save_s),
+        fmt_secs(load_s),
+        format!("{:.1}", snap_bytes as f64 / 1e6 / save_s.max(1e-12)),
+    ]);
+    println!("{}", rep.render());
+
+    // ---- spill/rehydrate churn under a 1-session budget ----
+    let per = SessionManager::new(model.clone(), SessionConfig::default())?.per_session_bytes();
+    let cfg = SessionConfig {
+        max_state_bytes: per,
+        max_sessions: 0,
+        spill_dir: Some(dir.join("spill")),
+    };
+    let mut mgr = SessionManager::new(model.clone(), cfg)?;
+    let mut reference = SessionManager::new(model.clone(), SessionConfig::default())?;
+    let t0 = Instant::now();
+    let mut bitwise = true;
+    for _ in 0..rounds {
+        for sid in 0..2 {
+            let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+            let a = mgr.advance(&format!("u{sid}"), &toks)?;
+            let b = reference.advance(&format!("u{sid}"), &toks)?;
+            bitwise &= a
+                .logprob
+                .iter()
+                .zip(&b.logprob)
+                .all(|(x, y)| x.to_bits() == y.to_bits());
+        }
+    }
+    let churn_secs = t0.elapsed().as_secs_f64();
+    let st = mgr.stats();
+    assert!(bitwise, "spill/rehydrate changed scores");
+    assert!(st.spills > 0 && st.rehydrations > 0, "churn loop must hit the spill tier");
+
+    let mut rep = Report::new(
+        &format!("Spill/rehydrate churn — 2 sessions through a 1-session budget, {rounds} rounds"),
+        &["spills", "rehydrations", "ckpt_bytes", "mean_rehydrate", "tokens_per_s"],
+    );
+    let mean_rehydrate = st.rehydrate_nanos as f64 / 1e9 / st.rehydrations.max(1) as f64;
+    rep.row(vec![
+        st.spills.to_string(),
+        st.rehydrations.to_string(),
+        st.checkpoint_bytes.to_string(),
+        fmt_secs(mean_rehydrate),
+        format!("{:.0}", (2 * rounds * chunk) as f64 / churn_secs.max(1e-12)),
+    ]);
+    println!("{}", rep.render());
+
+    // ---- full migration: checkpoint_all -> restore_from ----
+    let export = dir.join("export");
+    let t0 = Instant::now();
+    let written = mgr.checkpoint_all(&export)?;
+    let export_secs = t0.elapsed().as_secs_f64();
+    let mut replica = SessionManager::new(model, SessionConfig::default())?;
+    let t1 = Instant::now();
+    let adopted = replica.restore_from(&export)?;
+    let adopt_secs = t1.elapsed().as_secs_f64();
+    assert_eq!((written, adopted), (2, 2), "migration must carry both sessions");
+    println!(
+        "migration: exported {written} session(s) in {}, adopted in {}\n",
+        fmt_secs(export_secs),
+        fmt_secs(adopt_secs)
+    );
+
+    let json = obj(vec![
+        ("bench", s("persist_roundtrip")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("snapshot_bytes", num(snap_bytes as f64)),
+        ("save_secs", num(save_s)),
+        ("load_secs", num(load_s)),
+        ("spills", num(st.spills as f64)),
+        ("rehydrations", num(st.rehydrations as f64)),
+        ("mean_rehydrate_secs", num(mean_rehydrate)),
+        ("export_secs", num(export_secs)),
+        ("adopt_secs", num(adopt_secs)),
+    ]);
+    std::fs::write("BENCH_persist.json", json.to_string() + "\n")?;
+    println!("wrote BENCH_persist.json");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("PASS: durability round trips are bitwise-exact and constant-size");
+    Ok(())
+}

@@ -14,7 +14,8 @@
 //!   xp fig12    generalized-attention kernel sweep (Figs. 12/13)
 //!   xp table2   accuracy/perplexity on Test + OOD (Appendix C.3 Table 2)
 //!   xp thm1     empirical check of the Thm. 1 M = Theta(d log d) scaling
-//!   xp stream   streaming-session scaling: per-chunk latency/state vs length
+//!   xp stream   streaming-session scaling: per-chunk latency/state vs length,
+//!               fused-batch throughput, and spill/rehydrate persistence churn
 //!   xp ablation-orf / ablation-resample   design-choice ablations
 //!   xp all      everything above in dependency order
 //!
@@ -42,7 +43,9 @@ use performer::protein::{
 };
 use performer::rng::Pcg64;
 use performer::runtime::{ArtifactMeta, Engine, TensorFile};
-use performer::stream::{chunked_latency_point, fused_throughput_point, sweep_totals};
+use performer::stream::{
+    chunked_latency_point, fused_throughput_point, sweep_totals, SessionConfig, SessionManager,
+};
 use performer::tensor::Mat;
 use performer::train::{
     run_training, LoopOptions, NativeAttention, NativeModel, Split, SyntheticConfig, TrainState,
@@ -924,6 +927,83 @@ fn stream_scaling() -> Result<()> {
     }
     println!("{}", rep.render());
     rep.save_csv(&results_dir().join("stream_batched.csv"))?;
+
+    stream_persist()?;
+    Ok(())
+}
+
+/// Durable session persistence: force spill/rehydrate churn under a
+/// two-session byte budget, then a full checkpoint_all → restore_from
+/// migration, verifying scores stay *bitwise* identical to an
+/// unevicted reference manager throughout.
+fn stream_persist() -> Result<()> {
+    let chunk = env_usize("XP_PERSIST_CHUNK", 128);
+    let rounds = env_usize("XP_PERSIST_ROUNDS", 4);
+    let mut rng = Pcg64::new(7);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let per = SessionManager::new(model.clone(), SessionConfig::default())?.per_session_bytes();
+
+    let mut rep = Report::new(
+        &format!(
+            "Durable session persistence — spill/rehydrate churn under a 2-session \
+             budget + full migration ({rounds} rounds x {chunk}-token chunks; \
+             scores must stay bitwise identical)"
+        ),
+        &["sessions", "spills", "rehydrations", "ckpt_KiB", "rehydrate_us", "restore_ms", "bitwise"],
+    );
+    for &k in &[2usize, 4, 8] {
+        let dir = std::env::temp_dir().join(format!("xp_persist_{k}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SessionConfig {
+            max_state_bytes: 2 * per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(model.clone(), cfg)?;
+        let mut reference = SessionManager::new(model.clone(), SessionConfig::default())?;
+        let mut bitwise = true;
+        for _ in 0..rounds {
+            for s in 0..k {
+                let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+                let id = format!("u{s}");
+                let a = mgr.advance(&id, &toks)?;
+                let b = reference.advance(&id, &toks)?;
+                bitwise &= a.logprob.len() == b.logprob.len()
+                    && a
+                        .logprob
+                        .iter()
+                        .zip(&b.logprob)
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+            }
+        }
+        // migration: export every session (resident + spilled), adopt
+        // into a fresh replica, and time the adoption
+        let export = dir.join("export");
+        let written = mgr.checkpoint_all(&export)?;
+        let t0 = std::time::Instant::now();
+        let mut replica = SessionManager::new(model.clone(), SessionConfig::default())?;
+        let adopted = replica.restore_from(&export)?;
+        let restore_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            written == k && adopted == k,
+            "migration must carry all {k} sessions (wrote {written}, adopted {adopted})"
+        );
+        let st = mgr.stats();
+        rep.row(vec![
+            k.to_string(),
+            st.spills.to_string(),
+            st.rehydrations.to_string(),
+            format!("{:.1}", st.checkpoint_bytes as f64 / 1024.0),
+            format!("{:.0}", st.rehydrate_nanos as f64 / 1e3 / st.rehydrations.max(1) as f64),
+            format!("{restore_ms:.2}"),
+            if bitwise { "yes".into() } else { "NO".into() },
+        ]);
+        anyhow::ensure!(bitwise, "spill/rehydrate changed scores for K={k}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    println!("{}", rep.render());
+    rep.save_csv(&results_dir().join("stream_persist.csv"))?;
     Ok(())
 }
 

@@ -91,14 +91,31 @@ impl ModelState {
     }
 }
 
+/// Adaptive drain window: how much longer a partially-filled batch
+/// waits for more traffic. The window shrinks linearly with fill — a
+/// lone straggler pair gets the full `max_wait`, a nearly-full batch
+/// ships almost immediately, and a full batch never waits at all — so
+/// under a deep queue the worker drains back-to-back instead of
+/// sleeping out a fixed window it no longer needs.
+pub fn adaptive_wait(max_wait: Duration, filled: usize, max_batch: usize) -> Duration {
+    if max_batch <= 1 || filled >= max_batch {
+        return Duration::ZERO;
+    }
+    let frac = (max_batch - filled) as f64 / (max_batch - 1) as f64;
+    max_wait.mul_f64(frac.min(1.0))
+}
+
 /// Drain policy output: the requests fused into one batch. Generic over
 /// the request type — the fill-mask worker and the stream worker share
 /// this one latency/throughput knob.
 ///
-/// A lone request ships immediately: the `max_wait` window is only
-/// waited out when the non-blocking drain finds concurrent traffic
-/// already queued, so a single interactive client pays no batching
-/// latency while bursty submitters still fuse.
+/// A lone request ships immediately: a wait window is only opened when
+/// the non-blocking drain finds concurrent traffic already queued, so a
+/// single interactive client pays no batching latency while bursty
+/// submitters still fuse. The window itself is adaptive
+/// ([`adaptive_wait`]): it shrinks as the batch fills, collapsing to
+/// zero at `max_batch`, so queue depth directly tunes the
+/// latency/throughput trade instead of every batch paying `max_wait`.
 pub fn collect_batch<T>(
     rx: &Receiver<T>,
     max_batch: usize,
@@ -117,8 +134,11 @@ pub fn collect_batch<T>(
     if batch.len() == 1 {
         return Some(batch);
     }
-    let deadline = Instant::now() + max_wait;
+    let start = Instant::now();
     while batch.len() < max_batch {
+        // re-derived after every arrival: the fuller the batch, the
+        // sooner it ships
+        let deadline = start + adaptive_wait(max_wait, batch.len(), max_batch);
         let now = Instant::now();
         if now >= deadline {
             break;
@@ -230,6 +250,41 @@ mod tests {
         let batch = collect_batch(&rx, 8, Duration::from_millis(5)).unwrap();
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn adaptive_window_shrinks_with_fill() {
+        let w = Duration::from_millis(8);
+        // a two-element batch in an 8-slot window waits the full window
+        assert_eq!(adaptive_wait(w, 1, 8), w);
+        // ...and the wait collapses to zero as the batch fills
+        let mid = adaptive_wait(w, 4, 8);
+        assert!(mid < w && mid > Duration::ZERO);
+        assert!(adaptive_wait(w, 7, 8) < mid);
+        assert_eq!(adaptive_wait(w, 8, 8), Duration::ZERO);
+        // degenerate shapes never wait
+        assert_eq!(adaptive_wait(w, 1, 1), Duration::ZERO);
+        assert_eq!(adaptive_wait(w, 9, 8), Duration::ZERO);
+    }
+
+    #[test]
+    fn nearly_full_batch_ships_before_the_full_window() {
+        let (tx, rx) = channel();
+        for i in 0..3u64 {
+            let (rtx, _rrx) = channel();
+            tx.send(Request { id: i, tokens: vec![MASK], respond: rtx, submitted: Instant::now() })
+                .unwrap();
+        }
+        // 3 of 4 slots filled: the adaptive window is max_wait/3, so the
+        // drain must return far sooner than the fixed 900ms window would
+        let t0 = Instant::now();
+        let batch = collect_batch(&rx, 4, Duration::from_millis(900)).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(
+            t0.elapsed() < Duration::from_millis(700),
+            "deep queue must shrink the drain wait (took {:?})",
+            t0.elapsed()
+        );
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Serving metrics: request counters, latency histogram, batch-size
 //! distribution — what the paper's throughput claims are measured with
-//! on this testbed.
+//! on this testbed — plus the durability gauges of a streaming pool's
+//! spill/checkpoint tier.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::stream::SessionStats;
 
 /// Lock-free latency histogram with exponential buckets (µs scale).
 pub struct Metrics {
@@ -88,6 +91,56 @@ impl Metrics {
     }
 }
 
+/// Durability gauges for one streaming pool's persistence tier: spills,
+/// rehydrations, checkpoint bytes written and rehydration latency. The
+/// stream worker mirrors its `SessionManager` counters in here after
+/// every drain window, so readers on other threads (the `xp stream`
+/// report, ops tooling) see them without touching the worker's state.
+#[derive(Default)]
+pub struct PersistMetrics {
+    /// sessions currently demoted to the spill tier
+    pub spilled_sessions: AtomicU64,
+    /// cumulative demote-to-disk events
+    pub spills: AtomicU64,
+    /// cumulative disk-to-RAM promotions
+    pub rehydrations: AtomicU64,
+    /// cumulative snapshot bytes written (spills + checkpoint exports)
+    pub checkpoint_bytes: AtomicU64,
+    /// cumulative wall time spent rehydrating, nanoseconds
+    pub rehydrate_nanos: AtomicU64,
+}
+
+impl PersistMetrics {
+    /// Mirror the manager's counters (gauge semantics: last write wins).
+    pub fn record(&self, st: &SessionStats) {
+        self.spilled_sessions.store(st.spilled as u64, Ordering::Relaxed);
+        self.spills.store(st.spills, Ordering::Relaxed);
+        self.rehydrations.store(st.rehydrations, Ordering::Relaxed);
+        self.checkpoint_bytes.store(st.checkpoint_bytes, Ordering::Relaxed);
+        self.rehydrate_nanos.store(st.rehydrate_nanos, Ordering::Relaxed);
+    }
+
+    /// Mean wall time of one disk-to-RAM promotion.
+    pub fn mean_rehydrate_latency(&self) -> Duration {
+        let n = self.rehydrations.load(Ordering::Relaxed);
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.rehydrate_nanos.load(Ordering::Relaxed) / n)
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "spilled={} spills={} rehydrations={} checkpoint_bytes={} mean_rehydrate={:?}",
+            self.spilled_sessions.load(Ordering::Relaxed),
+            self.spills.load(Ordering::Relaxed),
+            self.rehydrations.load(Ordering::Relaxed),
+            self.checkpoint_bytes.load(Ordering::Relaxed),
+            self.mean_rehydrate_latency(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +175,24 @@ mod tests {
         m.observe_batch(8, 1024);
         assert_eq!(m.mean_batch_size(), 6.0);
         assert_eq!(m.tokens.load(Ordering::Relaxed), 1536);
+    }
+
+    #[test]
+    fn persist_gauges_mirror_session_stats() {
+        let p = PersistMetrics::default();
+        assert_eq!(p.mean_rehydrate_latency(), Duration::ZERO);
+        let st = SessionStats {
+            spilled: 3,
+            spills: 7,
+            rehydrations: 4,
+            checkpoint_bytes: 9000,
+            rehydrate_nanos: 8_000_000,
+            ..Default::default()
+        };
+        p.record(&st);
+        assert_eq!(p.spills.load(Ordering::Relaxed), 7);
+        assert_eq!(p.mean_rehydrate_latency(), Duration::from_nanos(2_000_000));
+        let s = p.summary();
+        assert!(s.contains("spills=7") && s.contains("checkpoint_bytes=9000"), "{s}");
     }
 }

@@ -9,7 +9,9 @@ pub mod metrics;
 pub mod service;
 pub mod streamer;
 
-pub use batcher::{Request, Response};
-pub use metrics::Metrics;
+pub use batcher::{adaptive_wait, Request, Response};
+pub use metrics::{Metrics, PersistMetrics};
 pub use service::Coordinator;
-pub use streamer::{StreamRequest, StreamResponse, STREAM_MAX_BATCH, STREAM_MAX_WAIT};
+pub use streamer::{
+    StreamOp, StreamRequest, StreamResponse, STREAM_MAX_BATCH, STREAM_MAX_WAIT,
+};

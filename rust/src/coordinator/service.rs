@@ -26,9 +26,10 @@ use crate::stream::SessionConfig;
 use crate::train::NativeModel;
 
 use super::batcher::{collect_batch, serve_batch, ModelState, Request, Response};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PersistMetrics};
 use super::streamer::{
-    into_result, StreamPool, StreamRequest, StreamResponse, STREAM_MAX_BATCH, STREAM_MAX_WAIT,
+    into_result, StreamOp, StreamPool, StreamRequest, StreamResponse, STREAM_MAX_BATCH,
+    STREAM_MAX_WAIT,
 };
 
 /// Handle to a running model pool.
@@ -238,8 +239,53 @@ impl Coordinator {
         Ok(())
     }
 
+    /// Export every live session of a stream pool — resident and
+    /// spilled — as verified snapshots in `dir` (the migration export:
+    /// a warm replica, or this process after a restart, adopts them via
+    /// [`Self::restore_from`]). The export is a barrier in the worker's
+    /// queue: it captures exactly the chunks submitted before it.
+    /// Returns the number of sessions written.
+    pub fn checkpoint_all(&self, pool: &str, dir: &std::path::Path) -> Result<usize> {
+        self.stream_control(pool, StreamOp::CheckpointAll(dir.to_path_buf()))
+    }
+
+    /// Adopt every session checkpointed in `dir` into a stream pool.
+    /// All-or-nothing, and an id collision with a live session is an
+    /// error. Returns the number of sessions adopted.
+    pub fn restore_from(&self, pool: &str, dir: &std::path::Path) -> Result<usize> {
+        self.stream_control(pool, StreamOp::RestoreFrom(dir.to_path_buf()))
+    }
+
+    /// Durability gauges of a stream pool (spills, rehydrations,
+    /// checkpoint bytes, rehydration latency).
+    pub fn stream_persist_metrics(&self, pool: &str) -> Option<Arc<PersistMetrics>> {
+        self.streams.get(pool).map(|p| p.persist.clone())
+    }
+
     pub fn stream_pools(&self) -> Vec<String> {
         self.streams.keys().cloned().collect()
+    }
+
+    fn stream_control(&self, pool: &str, op: StreamOp) -> Result<usize> {
+        let p = self
+            .streams
+            .get(pool)
+            .ok_or_else(|| anyhow!("no stream pool '{pool}'"))?;
+        let (rtx, rrx) = channel();
+        p.tx.send(StreamRequest {
+            session: String::new(),
+            tokens: Vec::new(),
+            close: false,
+            op,
+            respond: rtx,
+            submitted: Instant::now(),
+        })
+        .map_err(|_| anyhow!("stream pool '{pool}' shut down"))?;
+        let resp = rrx.recv().map_err(|_| anyhow!("stream worker dropped response"))?;
+        match resp.error {
+            Some(e) => Err(anyhow!("{e}")),
+            None => Ok(resp.affected),
+        }
     }
 
     fn submit_stream_request(
@@ -258,6 +304,7 @@ impl Coordinator {
             session: session.to_string(),
             tokens,
             close,
+            op: StreamOp::Chunk,
             respond: rtx,
             submitted: Instant::now(),
         })

@@ -22,6 +22,7 @@
 //! so it works in stub builds and scales past any compiled artifact
 //! length.
 
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -33,20 +34,37 @@ use crate::stream::{ChunkScores, SessionConfig, SessionManager};
 use crate::train::NativeModel;
 
 use super::batcher::collect_batch;
+use super::metrics::PersistMetrics;
 
 /// Most chunk submissions one drain fuses into a batched forward.
 pub const STREAM_MAX_BATCH: usize = 8;
 
-/// How long the worker waits to fill a batch after the first request.
+/// Longest the worker waits to fill a batch after the first request —
+/// the actual window is adaptive (`batcher::adaptive_wait`): it shrinks
+/// as the drain fills and collapses to zero at a full batch.
 pub const STREAM_MAX_WAIT: Duration = Duration::from_millis(2);
 
-/// One streaming request: the next chunk of a session's token stream,
-/// or a close notice (empty `tokens` + `close`).
+/// What a [`StreamRequest`] asks the worker to do.
+#[derive(Clone, Debug)]
+pub enum StreamOp {
+    /// score the request's `tokens` as the session's next chunk
+    Chunk,
+    /// snapshot every live session into the directory (migration
+    /// export); acts as a barrier, capturing exactly the chunks
+    /// submitted before it
+    CheckpointAll(PathBuf),
+    /// adopt every session checkpointed in the directory
+    RestoreFrom(PathBuf),
+}
+
+/// One streaming request: the next chunk of a session's token stream, a
+/// close notice (empty `tokens` + `close`), or a persistence control op.
 pub struct StreamRequest {
     pub session: String,
     pub tokens: Vec<u8>,
     /// release the session's state after processing this request
     pub close: bool,
+    pub op: StreamOp,
     pub respond: Sender<StreamResponse>,
     pub submitted: Instant,
 }
@@ -55,10 +73,12 @@ pub struct StreamRequest {
 #[derive(Clone, Debug)]
 pub struct StreamResponse {
     pub session: String,
-    /// per-token scores for this chunk (None for a close-only request
-    /// or an error)
+    /// per-token scores for this chunk (None for a close-only request,
+    /// a control op, or an error)
     pub scores: Option<ChunkScores>,
     pub error: Option<String>,
+    /// sessions written/adopted by a control op (0 for chunk requests)
+    pub affected: usize,
     pub latency: Duration,
     /// sessions resident after this request
     pub resident_sessions: usize,
@@ -76,6 +96,8 @@ impl StreamResponse {
 pub(crate) struct StreamPool {
     pub(crate) tx: Sender<StreamRequest>,
     pub(crate) worker: Option<JoinHandle<()>>,
+    /// durability gauges, mirrored from the worker's session manager
+    pub(crate) persist: Arc<PersistMetrics>,
 }
 
 impl StreamPool {
@@ -92,10 +114,12 @@ impl StreamPool {
         let mut mgr = SessionManager::new(model, cfg)?;
         let (tx, rx) = channel::<StreamRequest>();
         let max_batch = max_batch.max(1);
+        let persist = Arc::new(PersistMetrics::default());
+        let persist2 = persist.clone();
         let worker = std::thread::Builder::new()
             .name(format!("stream-{name}"))
-            .spawn(move || stream_loop(&rx, &mut mgr, max_batch, max_wait))?;
-        Ok(StreamPool { tx, worker: Some(worker) })
+            .spawn(move || stream_loop(&rx, &mut mgr, max_batch, max_wait, &persist2))?;
+        Ok(StreamPool { tx, worker: Some(worker), persist })
     }
 
     pub(crate) fn shutdown(mut self) {
@@ -111,39 +135,86 @@ fn stream_loop(
     mgr: &mut SessionManager,
     max_batch: usize,
     max_wait: Duration,
+    persist: &PersistMetrics,
 ) {
     while let Some(batch) = collect_batch(rx, max_batch, max_wait) {
         serve_stream_batch(batch, mgr);
+        persist.record(&mgr.stats());
     }
 }
 
-/// Answer one drained batch: control requests (close-only / empty) are
-/// answered individually; everything scoreable goes to
-/// `SessionManager::advance_batch` in one call, which fuses it into
-/// length-compatible waves, advances repeated session ids in submission
-/// order, and never evicts any of the window's sessions while serving
-/// it. A request's `close` takes effect after the batch's scoring — a
-/// chunk for the same session queued behind a close-carrying chunk in
-/// one drain window continues the stream rather than racing the
-/// teardown.
-fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
-    let mut outcomes: Vec<Option<Result<ChunkScores>>> =
-        (0..batch.len()).map(|_| None).collect();
+/// Per-request result of serving one drained window.
+enum Outcome {
+    /// close-only or empty request — nothing was scored
+    Nothing,
+    Scores(Result<ChunkScores>),
+    /// a persistence control op, carrying the session count it touched
+    Control(Result<usize>),
+}
 
-    let scoreable: Vec<usize> =
-        (0..batch.len()).filter(|&i| !batch[i].tokens.is_empty()).collect();
-    let ids: Vec<&str> = scoreable.iter().map(|&i| batch[i].session.as_str()).collect();
-    let chunks: Vec<&[u8]> = scoreable.iter().map(|&i| batch[i].tokens.as_slice()).collect();
-    for (&i, res) in scoreable.iter().zip(mgr.advance_batch(&ids, &chunks)) {
-        outcomes[i] = Some(res);
+/// Advance one run of scoreable requests as a single fused
+/// `advance_batch` call.
+fn flush_run(
+    run: &mut Vec<usize>,
+    batch: &[StreamRequest],
+    mgr: &mut SessionManager,
+    outcomes: &mut [Outcome],
+) {
+    if run.is_empty() {
+        return;
     }
+    let ids: Vec<&str> = run.iter().map(|&i| batch[i].session.as_str()).collect();
+    let chunks: Vec<&[u8]> = run.iter().map(|&i| batch[i].tokens.as_slice()).collect();
+    for (&i, res) in run.iter().zip(mgr.advance_batch(&ids, &chunks)) {
+        outcomes[i] = Outcome::Scores(res);
+    }
+    run.clear();
+}
+
+/// Answer one drained batch: everything scoreable goes to
+/// `SessionManager::advance_batch` in fused runs, which split into
+/// length-compatible waves, advance repeated session ids in submission
+/// order, and never evict any of the window's sessions while serving
+/// it. Persistence control ops (checkpoint/restore) are barriers within
+/// the window: chunks submitted before a checkpoint are scored before
+/// the snapshot is taken, chunks after it continue on the
+/// checkpointed-then-advanced state. A request's `close` takes effect
+/// after the whole window's scoring — a chunk for the same session
+/// queued behind a close-carrying chunk in one drain window continues
+/// the stream rather than racing the teardown.
+fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
+    let mut outcomes: Vec<Outcome> = (0..batch.len()).map(|_| Outcome::Nothing).collect();
+
+    let mut run: Vec<usize> = Vec::new();
+    for i in 0..batch.len() {
+        match &batch[i].op {
+            StreamOp::Chunk => {
+                if !batch[i].tokens.is_empty() {
+                    run.push(i);
+                }
+            }
+            StreamOp::CheckpointAll(dir) => {
+                flush_run(&mut run, &batch, mgr, &mut outcomes);
+                outcomes[i] = Outcome::Control(mgr.checkpoint_all(dir));
+            }
+            StreamOp::RestoreFrom(dir) => {
+                flush_run(&mut run, &batch, mgr, &mut outcomes);
+                outcomes[i] = Outcome::Control(mgr.restore_from(dir));
+            }
+        }
+    }
+    flush_run(&mut run, &batch, mgr, &mut outcomes);
 
     for (req, outcome) in batch.into_iter().zip(outcomes) {
-        let (scores, error) = match outcome {
-            Some(Ok(s)) => (Some(s), None),
-            Some(Err(e)) => (None, Some(format!("{e:#}"))),
-            None if req.close => (None, None), // close-only ack
-            None => (None, Some("empty chunk (and close not requested)".to_string())),
+        let (scores, error, affected) = match outcome {
+            Outcome::Scores(Ok(s)) => (Some(s), None, 0),
+            Outcome::Scores(Err(e)) => (None, Some(format!("{e:#}")), 0),
+            Outcome::Control(Ok(n)) => (None, None, n),
+            Outcome::Control(Err(e)) => (None, Some(format!("{e:#}")), 0),
+            Outcome::Nothing if req.close => (None, None, 0), // close-only ack
+            Outcome::Nothing => {
+                (None, Some("empty chunk (and close not requested)".to_string()), 0)
+            }
         };
         if req.close {
             mgr.close(&req.session);
@@ -153,6 +224,7 @@ fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
             session: req.session,
             scores,
             error,
+            affected,
             latency: req.submitted.elapsed(),
             resident_sessions: mgr.len(),
             resident_bytes: mgr.resident_bytes(),

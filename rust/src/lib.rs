@@ -10,8 +10,10 @@
 //!   protein language model, AOT-lowered to HLO text.
 //! * **L3** (this crate): the coordinator — PJRT runtime, training
 //!   driver, serving router/batcher, synthetic protein data pipeline,
-//!   a native FAVOR implementation for analysis and benchmarking, and
-//!   the `stream` subsystem for stateful chunked long-context inference.
+//!   a native FAVOR implementation for analysis and benchmarking, the
+//!   `stream` subsystem for stateful chunked long-context inference,
+//!   and the `persist` subsystem that makes those sessions durable
+//!   (spill-to-disk eviction, checkpoint/restore migration).
 //!
 //! See `DESIGN.md` for the system inventory; the experiment harness is
 //! the `xp` binary (`rust/src/bin/xp.rs`), which writes its measured
@@ -28,6 +30,7 @@ pub mod coordinator;
 pub mod favor;
 pub mod jsonx;
 pub mod linalg;
+pub mod persist;
 pub mod protein;
 pub mod rng;
 pub mod runtime;

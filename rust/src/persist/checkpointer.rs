@@ -1,0 +1,468 @@
+//! A directory of session snapshots with a crash-safe manifest — the
+//! storage layer behind `SessionManager`'s spill tier and the
+//! coordinator's `checkpoint_all` / `restore_from` migration APIs.
+//!
+//! On-disk layout:
+//!
+//! ```text
+//! <dir>/manifest.json        index of live snapshots (see below)
+//! <dir>/<id-slug>-<fnv64>.snap   one PFRMSNAP envelope per session
+//! ```
+//!
+//! Every mutation is crash-safe by construction: snapshot bytes and the
+//! manifest are both written to a `.tmp` sibling, fsynced, then renamed
+//! over the final name — a crash leaves either the old state or the new
+//! state, never a torn file. The manifest records each snapshot's byte
+//! length and whole-file CRC32; [`Checkpointer::load`] verifies both
+//! (and the envelope re-verifies its own checksum), so a corrupt or
+//! truncated snapshot fails loudly instead of restoring garbage.
+
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::jsonx::{arr, num, obj, s, Json};
+use crate::stream::ChunkScorer;
+use crate::train::NativeModel;
+
+use super::snapshot::{crc32, SessionSnapshot};
+
+const MANIFEST: &str = "manifest.json";
+const MANIFEST_FORMAT: &str = "pfrm-session-manifest";
+const MANIFEST_VERSION: usize = 1;
+
+/// One manifest entry: where a session's snapshot lives and what its
+/// bytes must look like.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotRecord {
+    pub id: String,
+    /// file name inside the checkpoint directory
+    pub file: String,
+    /// exact snapshot length in bytes
+    pub bytes: u64,
+    /// CRC32 over the whole snapshot file
+    pub crc: u32,
+    /// stream position the snapshot was taken at
+    pub pos: u64,
+}
+
+/// A checkpoint directory: save/load/remove session snapshots, with the
+/// manifest as the single source of truth for what is restorable.
+pub struct Checkpointer {
+    dir: PathBuf,
+    records: BTreeMap<String, SnapshotRecord>,
+}
+
+impl Checkpointer {
+    /// Open-or-create: makes the directory, adopts an existing manifest
+    /// if one is present. The spill tier uses this — an empty directory
+    /// is a valid (empty) checkpoint.
+    pub fn create(dir: &Path) -> Result<Checkpointer> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let records = if dir.join(MANIFEST).exists() { read_manifest(dir)? } else { BTreeMap::new() };
+        Ok(Checkpointer { dir: dir.to_path_buf(), records })
+    }
+
+    /// Open an existing checkpoint directory for restore. A missing or
+    /// malformed manifest is a loud error — restoring from a directory
+    /// we cannot fully account for must never silently succeed.
+    pub fn open(dir: &Path) -> Result<Checkpointer> {
+        if !dir.join(MANIFEST).exists() {
+            bail!("{} has no {MANIFEST}: not a checkpoint directory", dir.display());
+        }
+        Ok(Checkpointer { dir: dir.to_path_buf(), records: read_manifest(dir)? })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.records.contains_key(id)
+    }
+
+    /// Session ids with a restorable snapshot, in sorted order.
+    pub fn ids(&self) -> Vec<String> {
+        self.records.keys().cloned().collect()
+    }
+
+    pub fn record(&self, id: &str) -> Option<&SnapshotRecord> {
+        self.records.get(id)
+    }
+
+    /// Total bytes of snapshots on disk.
+    pub fn total_bytes(&self) -> u64 {
+        self.records.values().map(|r| r.bytes).sum()
+    }
+
+    /// Snapshot one session: write-temp-then-rename the envelope, then
+    /// the updated manifest, so a crash at any point leaves the
+    /// directory restorable (at worst without this session).
+    pub fn save(&mut self, id: &str, scorer: &ChunkScorer) -> Result<SnapshotRecord> {
+        let record = self.stage(id, scorer)?;
+        self.commit()?;
+        Ok(record)
+    }
+
+    /// Write one session's snapshot WITHOUT rewriting the manifest —
+    /// the bulk-export building block (`checkpoint_all` stages every
+    /// session, then [`Self::commit`]s once, instead of paying N
+    /// manifest rewrites). Until commit, the new snapshot is invisible
+    /// to restores: the on-disk manifest still describes the previous
+    /// state — old or new, never torn.
+    pub fn stage(&mut self, id: &str, scorer: &ChunkScorer) -> Result<SnapshotRecord> {
+        let snap = SessionSnapshot::capture(id, scorer)?;
+        let bytes = snap.to_bytes();
+        let file = snapshot_filename(id);
+        write_atomic(&self.dir.join(&file), &bytes)
+            .with_context(|| format!("spilling session '{id}'"))?;
+        let record = SnapshotRecord {
+            id: id.to_string(),
+            file,
+            bytes: bytes.len() as u64,
+            crc: crc32(&bytes),
+            pos: scorer.tokens_seen() as u64,
+        };
+        self.records.insert(id.to_string(), record.clone());
+        Ok(record)
+    }
+
+    /// Persist the manifest, making every staged snapshot restorable.
+    pub fn commit(&mut self) -> Result<()> {
+        self.write_manifest()
+    }
+
+    /// Drop every snapshot (files + records) and persist the now-empty
+    /// manifest. `checkpoint_all` clears its target first, so a reused
+    /// export directory can never resurrect sessions that have since
+    /// closed, and a `SessionManager` clears its spill directory on
+    /// startup — the spill tier caches one process's live sessions,
+    /// never a dead process's (restart recovery is `checkpoint_all` /
+    /// `restore_from`). Returns how many snapshots were removed.
+    pub fn clear(&mut self) -> Result<usize> {
+        let records = std::mem::take(&mut self.records);
+        if records.is_empty() {
+            return Ok(0);
+        }
+        for r in records.values() {
+            let path = self.dir.join(&r.file);
+            match std::fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(anyhow!("removing {}: {e}", path.display())),
+            }
+        }
+        self.write_manifest()?;
+        Ok(records.len())
+    }
+
+    /// Rehydrate one session into a scorer over `model`. Verifies the
+    /// manifest record (length + CRC32) against the file before the
+    /// envelope is even decoded; any mismatch is a loud error.
+    pub fn load(&self, id: &str, model: &Arc<NativeModel>) -> Result<ChunkScorer> {
+        let record = self
+            .records
+            .get(id)
+            .ok_or_else(|| anyhow!("no snapshot for session '{id}' in {}", self.dir.display()))?;
+        let path = self.dir.join(&record.file);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() as u64 != record.bytes {
+            bail!(
+                "{}: {} bytes on disk, manifest says {} — truncated or torn snapshot",
+                path.display(),
+                bytes.len(),
+                record.bytes
+            );
+        }
+        let crc = crc32(&bytes);
+        if crc != record.crc {
+            bail!(
+                "{}: checksum {crc:#010x} does not match manifest {:#010x} — corrupt snapshot",
+                path.display(),
+                record.crc
+            );
+        }
+        let snap = SessionSnapshot::from_bytes(&bytes)
+            .with_context(|| format!("decoding {}", path.display()))?;
+        if snap.session != id {
+            bail!(
+                "{} holds session '{}', manifest filed it under '{id}'",
+                path.display(),
+                snap.session
+            );
+        }
+        snap.into_scorer(model.clone())
+    }
+
+    /// Drop a session's snapshot (file + manifest record). Returns
+    /// whether one existed.
+    pub fn remove(&mut self, id: &str) -> Result<bool> {
+        let Some(record) = self.records.remove(id) else {
+            return Ok(false);
+        };
+        let path = self.dir.join(&record.file);
+        match std::fs::remove_file(&path) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(anyhow!("removing {}: {e}", path.display())),
+        }
+        self.write_manifest()?;
+        Ok(true)
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let manifest = obj(vec![
+            ("format", s(MANIFEST_FORMAT)),
+            ("version", num(MANIFEST_VERSION as f64)),
+            (
+                "sessions",
+                arr(self.records.values().map(|r| {
+                    obj(vec![
+                        ("id", s(&r.id)),
+                        ("file", s(&r.file)),
+                        ("bytes", num(r.bytes as f64)),
+                        ("crc", num(r.crc as f64)),
+                        ("pos", num(r.pos as f64)),
+                    ])
+                })),
+            ),
+        ]);
+        write_atomic(&self.dir.join(MANIFEST), manifest.to_string().as_bytes())
+            .context("writing checkpoint manifest")
+    }
+}
+
+fn read_manifest(dir: &Path) -> Result<BTreeMap<String, SnapshotRecord>> {
+    let path = dir.join(MANIFEST);
+    let text =
+        std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("{} is not valid JSON", path.display()))?;
+    let format = j.req("format")?.as_str()?;
+    if format != MANIFEST_FORMAT {
+        bail!("{}: format '{format}' is not a session manifest", path.display());
+    }
+    let version = j.req("version")?.as_usize()?;
+    if version != MANIFEST_VERSION {
+        bail!("{}: unsupported manifest version {version}", path.display());
+    }
+    let mut records = BTreeMap::new();
+    for e in j.req("sessions")?.as_arr()? {
+        let r = SnapshotRecord {
+            id: e.req("id")?.as_str()?.to_string(),
+            file: e.req("file")?.as_str()?.to_string(),
+            bytes: e.req("bytes")?.as_f64()? as u64,
+            crc: e.req("crc")?.as_f64()? as u32,
+            pos: e.req("pos")?.as_f64()? as u64,
+        };
+        if r.file.contains('/') || r.file.contains("..") {
+            bail!("{}: record '{}' escapes the checkpoint dir", path.display(), r.file);
+        }
+        records.insert(r.id.clone(), r);
+    }
+    Ok(records)
+}
+
+/// Write bytes to `path` via a `.tmp` sibling + fsync + rename + parent
+/// directory fsync — the crash-safety primitive every persist-layer
+/// write goes through. Without the directory sync the rename itself is
+/// not durable across power loss on journaling filesystems; it is
+/// best-effort because not every platform lets a directory be opened
+/// for syncing.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    if let Some(parent) = path.parent() {
+        let _ = std::fs::File::open(parent).and_then(|d| d.sync_all());
+    }
+    Ok(())
+}
+
+/// Filesystem-safe snapshot name: a sanitized prefix of the id for
+/// humans, plus an FNV-1a hash of the full id so distinct sessions can
+/// never collide on a shared sanitized prefix.
+fn snapshot_filename(id: &str) -> String {
+    let safe: String = id
+        .chars()
+        .take(40)
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') { c } else { '_' })
+        .collect();
+    format!("{safe}-{:016x}.snap", crate::rng::fnv1a64(id.as_bytes()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::vocab::{AA_BASE, N_AA};
+    use crate::rng::Pcg64;
+    use crate::train::SyntheticConfig;
+
+    fn model() -> Arc<NativeModel> {
+        let mut rng = Pcg64::new(31);
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng))
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("pfrm_ckpt_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn save_load_remove_lifecycle() {
+        let dir = tempdir("lifecycle");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        assert!(ck.is_empty());
+
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(20, 1)).unwrap();
+        let rec = ck.save("user/1", &scorer).unwrap();
+        assert_eq!(rec.pos, 20);
+        assert!(ck.contains("user/1"));
+        assert_eq!(ck.total_bytes(), rec.bytes);
+
+        // a fresh handle over the same dir sees the manifest
+        let ck2 = Checkpointer::open(&dir).unwrap();
+        assert_eq!(ck2.ids(), vec!["user/1".to_string()]);
+        let restored = ck2.load("user/1", &m).unwrap();
+        assert_eq!(restored.tokens_seen(), 20);
+
+        let mut ck3 = Checkpointer::open(&dir).unwrap();
+        assert!(ck3.remove("user/1").unwrap());
+        assert!(!ck3.remove("user/1").unwrap());
+        assert!(Checkpointer::open(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resave_overwrites_in_place() {
+        let dir = tempdir("resave");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(8, 2)).unwrap();
+        ck.save("s", &scorer).unwrap();
+        scorer.advance(&tokens(8, 3)).unwrap();
+        ck.save("s", &scorer).unwrap();
+        assert_eq!(ck.len(), 1);
+        assert_eq!(ck.load("s", &m).unwrap().tokens_seen(), 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn staged_snapshots_are_invisible_until_commit() {
+        let dir = tempdir("stage");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(8, 10)).unwrap();
+        ck.stage("a", &scorer).unwrap();
+        // a second handle (≈ another process) sees nothing yet
+        assert!(Checkpointer::create(&dir).unwrap().is_empty());
+        ck.commit().unwrap();
+        assert_eq!(Checkpointer::open(&dir).unwrap().ids(), vec!["a".to_string()]);
+
+        // clear drops files and records, and persists the empty manifest
+        let mut ck = Checkpointer::open(&dir).unwrap();
+        assert_eq!(ck.clear().unwrap(), 1);
+        assert_eq!(ck.clear().unwrap(), 0);
+        assert!(Checkpointer::open(&dir).unwrap().is_empty());
+        assert!(
+            !std::fs::read_dir(&dir)
+                .unwrap()
+                .filter_map(|e| e.ok())
+                .any(|e| e.path().extension().is_some_and(|x| x == "snap")),
+            "clear must remove the snapshot files themselves"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_manifest_fails_loudly() {
+        let dir = tempdir("badmanifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(MANIFEST), b"{not json").unwrap();
+        assert!(Checkpointer::open(&dir).is_err());
+        // wrong format marker is also rejected
+        std::fs::write(dir.join(MANIFEST), br#"{"format":"other","version":1,"sessions":[]}"#)
+            .unwrap();
+        assert!(Checkpointer::open(&dir).is_err());
+        // a record pointing outside the dir is rejected
+        std::fs::write(
+            dir.join(MANIFEST),
+            br#"{"format":"pfrm-session-manifest","version":1,
+                "sessions":[{"id":"x","file":"../x.snap","bytes":1,"crc":0,"pos":0}]}"#,
+        )
+        .unwrap();
+        assert!(Checkpointer::open(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_snapshot_fails_loudly() {
+        let dir = tempdir("truncated");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(12, 4)).unwrap();
+        let rec = ck.save("t", &scorer).unwrap();
+
+        let path = dir.join(&rec.file);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = Checkpointer::open(&dir).unwrap().load("t", &m).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        // corrupt (right length, flipped byte) must fail the checksum
+        let mut bad = bytes.clone();
+        bad[bytes.len() / 2] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        let err = Checkpointer::open(&dir).unwrap().load("t", &m).unwrap_err();
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_session_is_an_error() {
+        let dir = tempdir("missing");
+        let ck = Checkpointer::create(&dir).unwrap();
+        assert!(ck.load("ghost", &model()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn filenames_are_safe_and_collision_free() {
+        let a = snapshot_filename("user/../../etc/passwd");
+        assert!(!a.contains('/') && a.ends_with(".snap"));
+        // same sanitized prefix, different ids -> different files
+        let b = snapshot_filename("user:1");
+        let c = snapshot_filename("user_1");
+        assert_ne!(b, c);
+    }
+}

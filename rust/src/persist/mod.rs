@@ -1,0 +1,35 @@
+//! Durable session persistence: checkpoint, spill-to-disk and migration
+//! for streaming FAVOR state.
+//!
+//! Causal FAVOR compresses an unbounded prefix into a fixed
+//! M×(d_h+1) prefix sum per (layer, head) — a few tens of kilobytes per
+//! session no matter how many tokens have streamed through. That makes
+//! a live session *cheap to make durable*: snapshot the prefix sums,
+//! the carried cross-chunk context row and the stream position, and any
+//! process holding the same weights can resume the stream bit-for-bit.
+//! This module turns that observation into three capabilities:
+//!
+//! * [`snapshot`] — [`SessionSnapshot`], the versioned, checksummed
+//!   binary snapshot of one session's carried state (`PFRMSNAP`
+//!   envelope around a `runtime::TensorFile` tensor payload), plus
+//!   [`ModelFingerprint`], which pins a snapshot to the model geometry
+//!   it was captured from so it can never be rehydrated into a
+//!   mismatched stack;
+//! * [`checkpointer`] — [`Checkpointer`], a directory of snapshots with
+//!   a crash-safe manifest (every write goes temp-file-then-rename, and
+//!   every record carries the snapshot's byte length and CRC32, so a
+//!   torn write is detected loudly instead of restoring garbage);
+//! * the spill tier in `stream::SessionManager` — LRU eviction under a
+//!   byte budget demotes cold sessions to a [`Checkpointer`] instead of
+//!   destroying their context, and the next chunk for a spilled id
+//!   transparently rehydrates it — and the migration APIs on
+//!   `coordinator::Coordinator` (`checkpoint_all` / `restore_from`),
+//!   which let a warm replica adopt another coordinator's sessions.
+//!
+//! See DESIGN.md §Durable session persistence for the byte-level format.
+
+pub mod checkpointer;
+pub mod snapshot;
+
+pub use checkpointer::{Checkpointer, SnapshotRecord};
+pub use snapshot::{crc32, ModelFingerprint, SessionSnapshot, SNAPSHOT_VERSION};

@@ -1,0 +1,432 @@
+//! The versioned binary snapshot of one streaming session's carried
+//! state.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! b"PFRMSNAP" | u32 version | u32 header_len | JSON header
+//!            | u64 payload_len | payload (PFRMTENS container)
+//!            | u32 crc32 over every preceding byte
+//! ```
+//!
+//! The JSON header carries the identity and geometry — session id,
+//! stream position, per-state token counts and the
+//! [`ModelFingerprint`]; the payload is a `runtime::TensorFile`
+//! container holding the actual f32 tensors: one `state:{layer}:{head}`
+//! entry per carried M×(d_h+1) prefix sum, plus the vocab-sized
+//! `prev_row` context row once the stream has consumed a chunk. The
+//! trailing CRC32 (IEEE) makes truncation and bit-rot loud: a snapshot
+//! either decodes to exactly the captured state or refuses to decode.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::jsonx::{num, obj, s, Json};
+use crate::runtime::TensorFile;
+use crate::stream::{ChunkScorer, StreamState};
+use crate::tensor::Mat;
+use crate::train::{NativeAttention, NativeModel};
+
+const MAGIC: &[u8; 8] = b"PFRMSNAP";
+
+/// Bump on any incompatible change to the envelope or header schema;
+/// readers reject other versions loudly instead of guessing.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// IEEE CRC32 (reflected, init/xorout 0xFFFFFFFF) — bitwise variant;
+/// snapshots are tens of kilobytes, so a lookup table buys nothing.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// The model a snapshot was captured from: the carried-state geometry
+/// plus a digest over every parameter byte. Restoring validates both
+/// against the target model, so a snapshot can only rehydrate into the
+/// exact stack it came from — two models with identical shapes but
+/// different weights (or resampled FAVOR features) would turn the
+/// carried prefix sums into silently wrong scores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelFingerprint {
+    pub layers: usize,
+    pub heads: usize,
+    /// random-feature count M of the FAVOR feature map
+    pub m: usize,
+    /// per-head value dimension d_h
+    pub d_head: usize,
+    pub vocab: usize,
+    /// [`NativeModel::weights_digest`] over every parameter byte
+    pub weights: u64,
+}
+
+impl ModelFingerprint {
+    /// Fingerprint a streamable model. Errors on non-FAVOR attention —
+    /// such a model has no carried state to snapshot in the first place.
+    pub fn of(model: &NativeModel) -> Result<ModelFingerprint> {
+        let NativeAttention::Favor(fm) = &model.attention else {
+            bail!("only FAVOR models carry snapshottable stream state");
+        };
+        Ok(ModelFingerprint {
+            layers: model.n_layers(),
+            heads: model.n_heads,
+            m: fm.m(),
+            d_head: model.d_model / model.n_heads,
+            vocab: model.vocab_size,
+            weights: model.weights_digest(),
+        })
+    }
+
+    fn to_json(self) -> Json {
+        obj(vec![
+            ("layers", num(self.layers as f64)),
+            ("heads", num(self.heads as f64)),
+            ("m", num(self.m as f64)),
+            ("d_head", num(self.d_head as f64)),
+            ("vocab", num(self.vocab as f64)),
+            // hex string: a u64 digest does not fit losslessly in a
+            // JSON f64 number
+            ("weights", s(&format!("{:016x}", self.weights))),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<ModelFingerprint> {
+        Ok(ModelFingerprint {
+            layers: j.req("layers")?.as_usize()?,
+            heads: j.req("heads")?.as_usize()?,
+            m: j.req("m")?.as_usize()?,
+            d_head: j.req("d_head")?.as_usize()?,
+            vocab: j.req("vocab")?.as_usize()?,
+            weights: u64::from_str_radix(j.req("weights")?.as_str()?, 16)
+                .context("fingerprint weight digest is not hex")?,
+        })
+    }
+}
+
+/// Everything needed to resume one session in another process: the
+/// serializable image of a `ChunkScorer` (minus the shared model).
+#[derive(Clone, Debug)]
+pub struct SessionSnapshot {
+    /// session id the state belongs to
+    pub session: String,
+    /// global stream position (tokens consumed)
+    pub pos: usize,
+    /// carried cross-chunk context row (previous chunk's last logits)
+    pub prev_row: Option<Vec<f32>>,
+    /// geometry of the model the state was captured from
+    pub fingerprint: ModelFingerprint,
+    /// per-layer per-head FAVOR prefix sums
+    pub states: Vec<Vec<StreamState>>,
+}
+
+impl SessionSnapshot {
+    /// Capture a live scorer's carried state.
+    pub fn capture(session: &str, scorer: &ChunkScorer) -> Result<SessionSnapshot> {
+        Ok(SessionSnapshot {
+            session: session.to_string(),
+            pos: scorer.tokens_seen(),
+            prev_row: scorer.prev_row().map(<[f32]>::to_vec),
+            fingerprint: ModelFingerprint::of(scorer.model())?,
+            states: scorer.states().to_vec(),
+        })
+    }
+
+    /// Rehydrate into a scorer over `model`, refusing a geometry
+    /// mismatch — restoring state into the wrong model would stream
+    /// plausible-looking garbage.
+    pub fn into_scorer(self, model: Arc<NativeModel>) -> Result<ChunkScorer> {
+        let target = ModelFingerprint::of(&model)?;
+        if target != self.fingerprint {
+            bail!(
+                "snapshot for session '{}' was captured from {:?}, target model is {:?}",
+                self.session,
+                self.fingerprint,
+                target
+            );
+        }
+        ChunkScorer::from_parts(model, self.states, self.prev_row, self.pos)
+            .with_context(|| format!("rehydrating session '{}'", self.session))
+    }
+
+    /// Encode into the `PFRMSNAP` envelope.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut tensors = TensorFile::default();
+        let mut tokens_seen = Vec::new();
+        for (li, layer) in self.states.iter().enumerate() {
+            for (hi, st) in layer.iter().enumerate() {
+                tokens_seen.push(num(st.tokens_seen() as f64));
+                tensors.entries.push((
+                    format!("state:{li}:{hi}"),
+                    vec![st.matrix().rows, st.matrix().cols],
+                    st.matrix().data.clone(),
+                ));
+            }
+        }
+        if let Some(row) = &self.prev_row {
+            tensors.entries.push(("prev_row".to_string(), vec![row.len()], row.clone()));
+        }
+        let header = obj(vec![
+            ("session", s(&self.session)),
+            ("pos", num(self.pos as f64)),
+            ("has_prev_row", Json::Bool(self.prev_row.is_some())),
+            ("fingerprint", self.fingerprint.to_json()),
+            ("tokens_seen", Json::Arr(tokens_seen)),
+        ])
+        .to_string();
+        let payload = tensors.to_bytes();
+
+        let mut out = Vec::with_capacity(28 + header.len() + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload);
+        let crc = crc32(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Decode and verify a `PFRMSNAP` envelope. Every failure mode —
+    /// wrong magic, unknown version, truncation anywhere, checksum
+    /// mismatch, malformed header, missing or mis-shaped tensor — is a
+    /// loud error; this function never returns a partially-restored
+    /// state.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
+        if bytes.len() < 16 || &bytes[..8] != MAGIC {
+            bail!("not a PFRMSNAP session snapshot");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            bail!("unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})");
+        }
+        let header_len = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let header_end = 16usize
+            .checked_add(header_len)
+            .filter(|e| e.checked_add(8).is_some_and(|x| x <= bytes.len()))
+            .ok_or_else(|| anyhow::anyhow!("truncated snapshot header"))?;
+        let payload_len =
+            u64::from_le_bytes(bytes[header_end..header_end + 8].try_into().unwrap()) as usize;
+        let payload_end = (header_end + 8)
+            .checked_add(payload_len)
+            .filter(|e| e.checked_add(4).is_some_and(|x| x <= bytes.len()))
+            .ok_or_else(|| anyhow::anyhow!("truncated snapshot payload"))?;
+        if payload_end + 4 != bytes.len() {
+            bail!("snapshot has trailing garbage after the checksum");
+        }
+        let stored_crc = u32::from_le_bytes(bytes[payload_end..payload_end + 4].try_into().unwrap());
+        let actual_crc = crc32(&bytes[..payload_end]);
+        if stored_crc != actual_crc {
+            bail!("snapshot checksum mismatch (stored {stored_crc:#010x}, computed {actual_crc:#010x}): file is corrupt");
+        }
+
+        let header = Json::parse(
+            std::str::from_utf8(&bytes[16..header_end]).context("snapshot header is not UTF-8")?,
+        )
+        .context("snapshot header is not valid JSON")?;
+        let session = header.req("session")?.as_str()?.to_string();
+        let pos = header.req("pos")?.as_usize()?;
+        let has_prev_row = header.req("has_prev_row")?.as_bool()?;
+        let fingerprint = ModelFingerprint::from_json(header.req("fingerprint")?)?;
+        let tokens_seen: Vec<u64> = header
+            .req("tokens_seen")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_f64().map(|n| n as u64))
+            .collect::<Result<Vec<_>>>()?;
+        if tokens_seen.len() != fingerprint.layers * fingerprint.heads {
+            bail!(
+                "snapshot lists {} states, fingerprint implies {}",
+                tokens_seen.len(),
+                fingerprint.layers * fingerprint.heads
+            );
+        }
+
+        let tensors = TensorFile::from_bytes(&bytes[header_end + 8..payload_end])
+            .context("snapshot tensor payload")?;
+        let (m, dh) = (fingerprint.m, fingerprint.d_head);
+        let mut states = Vec::with_capacity(fingerprint.layers);
+        for li in 0..fingerprint.layers {
+            let mut layer = Vec::with_capacity(fingerprint.heads);
+            for hi in 0..fingerprint.heads {
+                let name = format!("state:{li}:{hi}");
+                let (shape, data) = tensors
+                    .get(&name)
+                    .ok_or_else(|| anyhow::anyhow!("snapshot is missing tensor {name}"))?;
+                if shape != [m, dh + 1].as_slice() {
+                    bail!("tensor {name} has shape {shape:?}, expected [{m}, {}]", dh + 1);
+                }
+                layer.push(StreamState::from_parts(
+                    m,
+                    dh,
+                    Mat::from_vec(m, dh + 1, data.to_vec()),
+                    tokens_seen[li * fingerprint.heads + hi],
+                ));
+            }
+            states.push(layer);
+        }
+        let prev_row = if has_prev_row {
+            let (shape, data) = tensors
+                .get("prev_row")
+                .ok_or_else(|| anyhow::anyhow!("snapshot is missing its context row"))?;
+            if shape != [fingerprint.vocab].as_slice() {
+                bail!(
+                    "context row has shape {shape:?}, expected [{}]",
+                    fingerprint.vocab
+                );
+            }
+            Some(data.to_vec())
+        } else {
+            None
+        };
+        Ok(SessionSnapshot { session, pos, prev_row, fingerprint, states })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::vocab::{AA_BASE, N_AA};
+    use crate::rng::Pcg64;
+    use crate::train::SyntheticConfig;
+
+    fn model(seed: u64) -> Arc<NativeModel> {
+        let mut rng = Pcg64::new(seed);
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng))
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+    }
+
+    #[test]
+    fn crc32_reference_vectors() {
+        // the standard IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_resumes_bit_for_bit() {
+        let m = model(1);
+        let mut original = ChunkScorer::new(m.clone()).unwrap();
+        original.advance(&tokens(37, 2)).unwrap();
+
+        let snap = SessionSnapshot::capture("s", &original).unwrap();
+        let bytes = snap.to_bytes();
+        let mut restored = SessionSnapshot::from_bytes(&bytes)
+            .unwrap()
+            .into_scorer(m)
+            .unwrap();
+        assert_eq!(restored.tokens_seen(), 37);
+
+        let next = tokens(23, 3);
+        let a = original.advance(&next).unwrap();
+        let b = restored.advance(&next).unwrap();
+        assert_eq!(a.offset, b.offset);
+        // bitwise, not approximately: restore must be exact
+        let (abits, bbits): (Vec<u32>, Vec<u32>) = (
+            a.logprob.iter().map(|v| v.to_bits()).collect(),
+            b.logprob.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(abits, bbits, "restored session diverged from the original");
+    }
+
+    #[test]
+    fn fresh_session_snapshot_has_no_context_row() {
+        let m = model(4);
+        let scorer = ChunkScorer::new(m.clone()).unwrap();
+        let snap = SessionSnapshot::capture("fresh", &scorer).unwrap();
+        assert!(snap.prev_row.is_none());
+        let restored = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(m)
+            .unwrap();
+        assert_eq!(restored.tokens_seen(), 0);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let m = model(5);
+        let mut scorer = ChunkScorer::new(m).unwrap();
+        scorer.advance(&tokens(16, 6)).unwrap();
+        let bytes = SessionSnapshot::capture("t", &scorer).unwrap().to_bytes();
+        for cut in [0, 7, 8, 12, 15, 16, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                SessionSnapshot::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} must fail loudly"
+            );
+        }
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum() {
+        let m = model(7);
+        let mut scorer = ChunkScorer::new(m).unwrap();
+        scorer.advance(&tokens(16, 8)).unwrap();
+        let bytes = SessionSnapshot::capture("x", &scorer).unwrap().to_bytes();
+        for pos in [9, 20, bytes.len() / 2, bytes.len() - 6] {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 0x40;
+            assert!(
+                SessionSnapshot::from_bytes(&bad).is_err(),
+                "bit flip at {pos} must fail loudly"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_rejected() {
+        let m = model(9);
+        let scorer = ChunkScorer::new(m).unwrap();
+        let bytes = SessionSnapshot::capture("v", &scorer).unwrap().to_bytes();
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] = b'X';
+        assert!(SessionSnapshot::from_bytes(&wrong_magic).is_err());
+        let mut wrong_version = bytes;
+        wrong_version[8] = 99; // version is checked before the checksum
+        assert!(SessionSnapshot::from_bytes(&wrong_version).is_err());
+    }
+
+    #[test]
+    fn refuses_same_geometry_different_weights() {
+        // identical architecture, different seed: geometry matches but
+        // the weight digest must block the restore — the carried prefix
+        // sums would otherwise produce silently wrong scores
+        let donor = model(21);
+        let impostor = model(22);
+        let mut scorer = ChunkScorer::new(donor).unwrap();
+        scorer.advance(&tokens(8, 23)).unwrap();
+        let snap = SessionSnapshot::capture("w", &scorer).unwrap();
+        let err = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(impostor)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("captured from"), "{err:#}");
+    }
+
+    #[test]
+    fn refuses_a_mismatched_model() {
+        let mut rng = Pcg64::new(10);
+        let small = Arc::new(NativeModel::synthetic(
+            &SyntheticConfig { d_model: 16, n_heads: 2, ..Default::default() },
+            &mut rng,
+        ));
+        let mut scorer = ChunkScorer::new(model(11)).unwrap();
+        scorer.advance(&tokens(8, 12)).unwrap();
+        let snap = SessionSnapshot::capture("mm", &scorer).unwrap();
+        let err = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(small)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("captured from"), "{err:#}");
+    }
+}

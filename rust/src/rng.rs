@@ -6,6 +6,26 @@
 //! synthetic corpus, masking, LSH rotations) draws from this, so entire
 //! experiments are reproducible from a single `u64` seed.
 
+/// FNV-1a offset basis — seed for [`fnv1a64`] / [`fnv1a64_extend`].
+pub const FNV1A64_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Fold more bytes into a running 64-bit FNV-1a hash. The persistence
+/// layer uses this both for snapshot file names and for the model
+/// weight digest, so the algorithm lives once, here, at the bottom of
+/// the dependency graph.
+pub fn fnv1a64_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One-shot 64-bit FNV-1a hash.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_extend(FNV1A64_SEED, bytes)
+}
+
 /// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-rotate output.
 #[derive(Clone, Debug)]
 pub struct Pcg64 {

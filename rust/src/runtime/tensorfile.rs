@@ -25,13 +25,20 @@ impl TensorFile {
     pub fn read(path: &Path) -> Result<TensorFile> {
         let bytes =
             std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Decode a PFRMTENS container from memory — the embedded form used
+    /// by the session-snapshot format (`persist/snapshot.rs`), which
+    /// wraps these bytes in its own versioned, checksummed envelope.
+    pub fn from_bytes(bytes: &[u8]) -> Result<TensorFile> {
         if bytes.len() < 12 || &bytes[..8] != MAGIC {
-            bail!("{}: not a PFRMTENS file", path.display());
+            bail!("not a PFRMTENS container");
         }
         let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
-        let header_end = 12 + hlen;
+        let header_end = 12usize.checked_add(hlen).ok_or_else(|| anyhow::anyhow!("header length overflow"))?;
         if bytes.len() < header_end {
-            bail!("{}: truncated header", path.display());
+            bail!("truncated header");
         }
         let header = Json::parse(std::str::from_utf8(&bytes[12..header_end])?)?;
         let payload = &bytes[header_end..];
@@ -46,11 +53,18 @@ impl TensorFile {
                 .map(|v| v.as_usize())
                 .collect::<Result<Vec<_>>>()?;
             let offset = e.usize_or("offset", 0);
-            let n: usize = shape.iter().product::<usize>().max(1);
-            let end = offset + n * 4;
-            if end > payload.len() {
-                bail!("{}: tensor {name} overruns payload", path.display());
-            }
+            // checked arithmetic: a corrupt header must bail, not wrap
+            // into a bogus in-bounds range (or panic on a slice)
+            let n = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .ok_or_else(|| anyhow::anyhow!("tensor {name}: shape overflows"))?
+                .max(1);
+            let end = n
+                .checked_mul(4)
+                .and_then(|b| offset.checked_add(b))
+                .filter(|&e| e <= payload.len())
+                .ok_or_else(|| anyhow::anyhow!("tensor {name} overruns payload"))?;
             let data: Vec<f32> = payload[offset..end]
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
@@ -60,7 +74,8 @@ impl TensorFile {
         Ok(TensorFile { entries })
     }
 
-    pub fn write(&self, path: &Path) -> Result<()> {
+    /// Encode as a PFRMTENS container in memory (see [`Self::from_bytes`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut header = Vec::new();
         let mut offset = 0usize;
         for (name, shape, data) in &self.entries {
@@ -73,19 +88,23 @@ impl TensorFile {
             offset += data.len() * 4;
         }
         let hjson = Json::Arr(header).to_string();
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(hjson.len() as u32).to_le_bytes())?;
-        f.write_all(hjson.as_bytes())?;
+        let mut out = Vec::with_capacity(12 + hjson.len() + offset);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(hjson.len() as u32).to_le_bytes());
+        out.extend_from_slice(hjson.as_bytes());
         for (_, _, data) in &self.entries {
             // safe little-endian serialization
-            let mut buf = Vec::with_capacity(data.len() * 4);
             for v in data {
-                buf.extend_from_slice(&v.to_le_bytes());
+                out.extend_from_slice(&v.to_le_bytes());
             }
-            f.write_all(&buf)?;
         }
+        out
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
         Ok(())
     }
 
@@ -141,6 +160,22 @@ mod tests {
         let params = back.with_prefix("param:");
         assert_eq!(params.len(), 1);
         assert_eq!(params[0].0, "a");
+    }
+
+    #[test]
+    fn bytes_roundtrip_without_touching_disk() {
+        let tf = TensorFile {
+            entries: vec![("x".into(), vec![3], vec![1.5, -2.5, 3.25])],
+        };
+        let bytes = tf.to_bytes();
+        let back = TensorFile::from_bytes(&bytes).unwrap();
+        let (shape, data) = back.get("x").unwrap();
+        assert_eq!(shape, &[3]);
+        assert_eq!(data, &[1.5, -2.5, 3.25]);
+        // every truncation of a valid container must fail, not misparse
+        for cut in [0, 4, 11, bytes.len() - 1] {
+            assert!(TensorFile::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

@@ -74,6 +74,66 @@ impl ChunkScorer {
         &self.model
     }
 
+    /// The carried per-layer per-head attention states — read-only view
+    /// for snapshot serialization (`persist/snapshot.rs`).
+    pub fn states(&self) -> &[Vec<StreamState>] {
+        &self.states
+    }
+
+    /// The carried cross-chunk context row (previous chunk's last logits;
+    /// `None` before the first chunk) — read-only view for snapshots.
+    pub fn prev_row(&self) -> Option<&[f32]> {
+        self.prev_row.as_deref()
+    }
+
+    /// Rebuild a scorer from snapshot parts. Validates every shape
+    /// against the model (layer/head counts, feature count M, head dim,
+    /// context-row length) so a snapshot can never be rehydrated into a
+    /// model it was not captured from; the restored scorer continues the
+    /// stream bit-for-bit where the captured one stopped.
+    pub fn from_parts(
+        model: Arc<NativeModel>,
+        states: Vec<Vec<StreamState>>,
+        prev_row: Option<Vec<f32>>,
+        pos: usize,
+    ) -> Result<ChunkScorer> {
+        // make_stream_states re-checks streamability and gives the
+        // reference geometry to validate the snapshot against
+        let reference = model.make_stream_states()?;
+        if states.len() != reference.len() {
+            bail!("snapshot has {} layers, model has {}", states.len(), reference.len());
+        }
+        for (li, (got, want)) in states.iter().zip(&reference).enumerate() {
+            if got.len() != want.len() {
+                bail!("snapshot layer {li} has {} heads, model has {}", got.len(), want.len());
+            }
+            for (hi, (g, w)) in got.iter().zip(want).enumerate() {
+                if g.m() != w.m() || g.d() != w.d() {
+                    bail!(
+                        "snapshot state ({li},{hi}) is {}x({}+1), model needs {}x({}+1)",
+                        g.m(),
+                        g.d(),
+                        w.m(),
+                        w.d()
+                    );
+                }
+            }
+        }
+        if let Some(row) = &prev_row {
+            if row.len() != model.vocab_size {
+                bail!(
+                    "snapshot context row has {} logits, model vocab is {}",
+                    row.len(),
+                    model.vocab_size
+                );
+            }
+        }
+        if prev_row.is_none() && pos > 0 {
+            bail!("snapshot at position {pos} is missing its carried context row");
+        }
+        Ok(ChunkScorer { model, states, prev_row, pos })
+    }
+
     /// Tokens consumed so far.
     pub fn tokens_seen(&self) -> usize {
         self.pos

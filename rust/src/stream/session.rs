@@ -3,18 +3,29 @@
 //! constant-size FAVOR prefix-sum state, and a global memory budget with
 //! LRU eviction keeps residency bounded no matter how many streams are
 //! opened and abandoned.
+//!
+//! With a spill directory configured, eviction becomes *demotion*: the
+//! LRU session's state is snapshotted to disk (`persist::Checkpointer`)
+//! instead of destroyed, and its next chunk transparently rehydrates it
+//! — scores are bitwise identical to a never-evicted stream. The same
+//! machinery backs [`SessionManager::checkpoint_all`] /
+//! [`SessionManager::restore_from`], the migration path that lets a
+//! warm replica adopt another coordinator's sessions.
 
 use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::persist::Checkpointer;
 use crate::train::NativeModel;
 
 use super::scorer::{ChunkScorer, ChunkScores};
 
 /// Budget knobs for a [`SessionManager`].
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SessionConfig {
     /// total bytes of carried attention state across all sessions; when
     /// exceeded, least-recently-used sessions are evicted (the active
@@ -22,12 +33,16 @@ pub struct SessionConfig {
     pub max_state_bytes: usize,
     /// hard cap on simultaneously resident sessions (0 = no cap)
     pub max_sessions: usize,
+    /// when set, budget eviction demotes cold sessions to snapshots in
+    /// this directory instead of destroying their context; their next
+    /// chunk rehydrates them transparently
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        // 64 MiB of stream state, no session-count cap
-        SessionConfig { max_state_bytes: 64 << 20, max_sessions: 0 }
+        // 64 MiB of stream state, no session-count cap, no spill tier
+        SessionConfig { max_state_bytes: 64 << 20, max_sessions: 0, spill_dir: None }
     }
 }
 
@@ -46,6 +61,16 @@ pub struct SessionStats {
     pub evicted: u64,
     pub chunks: u64,
     pub tokens: u64,
+    /// sessions currently demoted to the spill tier
+    pub spilled: usize,
+    /// cumulative demote-to-disk events
+    pub spills: u64,
+    /// cumulative disk-to-RAM promotions
+    pub rehydrations: u64,
+    /// cumulative snapshot bytes written (spills + checkpoint_all)
+    pub checkpoint_bytes: u64,
+    /// cumulative wall time spent rehydrating, nanoseconds
+    pub rehydrate_nanos: u64,
 }
 
 struct Session {
@@ -58,6 +83,9 @@ pub struct SessionManager {
     model: Arc<NativeModel>,
     cfg: SessionConfig,
     sessions: HashMap<String, Session>,
+    /// spill tier: snapshots of demoted-but-live sessions (None when no
+    /// spill directory is configured — eviction then destroys context)
+    spill: Option<Checkpointer>,
     /// ids dropped under memory pressure: a later chunk for one of these
     /// must fail loudly (the causal context is gone) rather than
     /// silently reopen at offset 0 with context-free scores
@@ -71,11 +99,16 @@ pub struct SessionManager {
     evicted: u64,
     chunks: u64,
     tokens: u64,
+    spills: u64,
+    rehydrations: u64,
+    checkpoint_bytes: u64,
+    rehydrate_nanos: u64,
 }
 
 impl SessionManager {
     /// Build over a streamable model. Errors if the model cannot stream
-    /// (bidirectional or non-FAVOR attention).
+    /// (bidirectional or non-FAVOR attention) or if the configured spill
+    /// directory cannot be opened.
     pub fn new(model: Arc<NativeModel>, cfg: SessionConfig) -> Result<SessionManager> {
         // probe streamability once up front so `advance` can't half-open;
         // budget the *steady-state* residency (prefix sums + the carried
@@ -84,10 +117,29 @@ impl SessionManager {
         // undercounted by vocab×4 bytes per session
         let probe = ChunkScorer::new(model.clone())?;
         let per_session_bytes = probe.steady_state_bytes();
+        let spill = match &cfg.spill_dir {
+            Some(dir) => {
+                let mut ck = Checkpointer::create(dir).context("opening spill directory")?;
+                // the spill tier caches *this* manager's demoted
+                // sessions; stale snapshots from a previous process must
+                // not silently resume mid-stream (restart recovery is
+                // checkpoint_all / restore_from, not the spill dir)
+                let stale = ck.clear().context("clearing stale spill snapshots")?;
+                if stale > 0 {
+                    eprintln!(
+                        "[session] cleared {stale} stale spill snapshot(s) in {}",
+                        dir.display()
+                    );
+                }
+                Some(ck)
+            }
+            None => None,
+        };
         Ok(SessionManager {
             model,
             cfg,
             sessions: HashMap::new(),
+            spill,
             evicted_ids: HashSet::new(),
             clock: 0,
             per_session_bytes,
@@ -96,6 +148,10 @@ impl SessionManager {
             evicted: 0,
             chunks: 0,
             tokens: 0,
+            spills: 0,
+            rehydrations: 0,
+            checkpoint_bytes: 0,
+            rehydrate_nanos: 0,
         })
     }
 
@@ -121,6 +177,12 @@ impl SessionManager {
         self.sessions.len() * self.per_session_bytes
     }
 
+    /// Whether a session is currently demoted to the spill tier (its
+    /// next chunk will rehydrate it).
+    pub fn is_spilled(&self, id: &str) -> bool {
+        self.spill.as_ref().is_some_and(|ck| ck.contains(id))
+    }
+
     pub fn stats(&self) -> SessionStats {
         SessionStats {
             active: self.sessions.len(),
@@ -130,6 +192,11 @@ impl SessionManager {
             evicted: self.evicted,
             chunks: self.chunks,
             tokens: self.tokens,
+            spilled: self.spill.as_ref().map_or(0, Checkpointer::len),
+            spills: self.spills,
+            rehydrations: self.rehydrations,
+            checkpoint_bytes: self.checkpoint_bytes,
+            rehydrate_nanos: self.rehydrate_nanos,
         }
     }
 
@@ -184,22 +251,30 @@ impl SessionManager {
                 continue;
             }
             if !self.sessions.contains_key(id) {
-                if self.evicted_ids.contains(id) {
+                if self.is_spilled(id) {
+                    // demoted under byte pressure: promote it back before
+                    // scoring — the caller never learns it was gone
+                    if let Err(e) = self.rehydrate(id) {
+                        results[i] = Some(Err(e));
+                        continue;
+                    }
+                } else if self.evicted_ids.contains(id) {
                     results[i] = Some(Err(anyhow!(
                         "session '{id}' was evicted under memory pressure; \
                          close it and start a new session"
                     )));
                     continue;
-                }
-                match ChunkScorer::new(self.model.clone()) {
-                    Ok(scorer) => {
-                        self.sessions
-                            .insert(id.to_string(), Session { scorer, last_used: self.clock });
-                        self.opened += 1;
-                    }
-                    Err(e) => {
-                        results[i] = Some(Err(e));
-                        continue;
+                } else {
+                    match ChunkScorer::new(self.model.clone()) {
+                        Ok(scorer) => {
+                            self.sessions
+                                .insert(id.to_string(), Session { scorer, last_used: self.clock });
+                            self.opened += 1;
+                        }
+                        Err(e) => {
+                            results[i] = Some(Err(e));
+                            continue;
+                        }
                     }
                 }
             }
@@ -285,20 +360,143 @@ impl SessionManager {
         results.into_iter().map(|r| r.expect("every request answered")).collect()
     }
 
-    /// Explicitly end a stream, releasing its state immediately (and
-    /// acknowledging a prior eviction, freeing the id for reuse).
-    /// Returns whether the session was resident.
+    /// Explicitly end a stream, releasing its state immediately —
+    /// resident or spilled — (and acknowledging a prior eviction,
+    /// freeing the id for reuse). Returns whether the session existed.
     pub fn close(&mut self, id: &str) -> bool {
         self.evicted_ids.remove(id);
-        let existed = self.sessions.remove(id).is_some();
+        let mut existed = self.sessions.remove(id).is_some();
+        if let Some(ck) = &mut self.spill {
+            match ck.remove(id) {
+                Ok(removed) => existed |= removed,
+                Err(e) => eprintln!("[session] dropping spilled '{id}' failed: {e:#}"),
+            }
+        }
         if existed {
             self.closed += 1;
         }
         existed
     }
 
+    /// Promote a spilled session back into residency, consuming its
+    /// snapshot (the resident copy owns the stream from here on).
+    fn rehydrate(&mut self, id: &str) -> Result<()> {
+        let t0 = Instant::now();
+        let ck = self.spill.as_mut().expect("rehydrate requires a spill tier");
+        let scorer =
+            ck.load(id, &self.model).with_context(|| format!("rehydrating session '{id}'"))?;
+        ck.remove(id)?;
+        self.clock += 1;
+        self.sessions.insert(id.to_string(), Session { scorer, last_used: self.clock });
+        self.rehydrations += 1;
+        self.rehydrate_nanos += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// Snapshot every live session — resident and spilled — into `dir`
+    /// (which must not be the spill directory itself), leaving the
+    /// manager untouched. The target is cleared first: the export
+    /// describes exactly the sessions live *now*, so a reused directory
+    /// can never resurrect ones that have since closed. Returns the
+    /// number of sessions written; this is the coordinator's migration
+    /// export.
+    pub fn checkpoint_all(&mut self, dir: &Path) -> Result<usize> {
+        // resolve aliases (relative paths, symlinks) before comparing —
+        // clearing the live spill directory would destroy the spilled
+        // sessions' only copies. A target that does not exist yet
+        // cannot alias the (existing) spill dir, so the textual
+        // fallback only has to cover equal spellings.
+        if let Some(spill_dir) = self.cfg.spill_dir.as_deref() {
+            let same = match (std::fs::canonicalize(spill_dir), std::fs::canonicalize(dir)) {
+                (Ok(a), Ok(b)) => a == b,
+                _ => spill_dir == dir,
+            };
+            if same {
+                bail!("checkpoint target must differ from the spill directory");
+            }
+        }
+        let mut ck = Checkpointer::create(dir).context("opening checkpoint directory")?;
+        ck.clear().context("clearing previous export")?;
+        let mut ids: Vec<&String> = self.sessions.keys().collect();
+        ids.sort();
+        let mut written = 0usize;
+        for id in ids {
+            let rec = ck.stage(id, &self.sessions[id].scorer)?;
+            self.checkpoint_bytes += rec.bytes;
+            written += 1;
+        }
+        // spilled sessions migrate too: copy through their snapshots
+        if let Some(spill) = &self.spill {
+            for id in spill.ids() {
+                if self.sessions.contains_key(&id) {
+                    continue;
+                }
+                let scorer = spill.load(&id, &self.model)?;
+                let rec = ck.stage(&id, &scorer)?;
+                self.checkpoint_bytes += rec.bytes;
+                written += 1;
+            }
+        }
+        // one manifest write for the whole export
+        ck.commit()?;
+        Ok(written)
+    }
+
+    /// Adopt every session checkpointed in `dir` (a `checkpoint_all`
+    /// export from this or another coordinator). All-or-nothing: every
+    /// snapshot is decoded and verified before any session becomes
+    /// visible; an id collision with a live session is an error
+    /// (silently overwriting an advancing stream would corrupt it); and
+    /// without a spill tier, an export that cannot fit in the budget is
+    /// refused up front — adopting it would immediately destroy the
+    /// overflow's context while reporting success. Returns the number
+    /// of sessions adopted; the source directory is left intact.
+    pub fn restore_from(&mut self, dir: &Path) -> Result<usize> {
+        let ck = Checkpointer::open(dir)?;
+        let ids = ck.ids();
+        for id in &ids {
+            if self.sessions.contains_key(id) || self.is_spilled(id) {
+                bail!("cannot restore '{id}': a session with that id is already live");
+            }
+        }
+        if self.spill.is_none() {
+            // with a spill tier the budget demotes (recoverably); without
+            // one it destroys, so the adoption must fit outright
+            let resident = self.sessions.len() + ids.len();
+            let over_bytes = resident * self.per_session_bytes > self.cfg.max_state_bytes;
+            let over_count = self.cfg.max_sessions > 0 && resident > self.cfg.max_sessions;
+            if over_bytes || over_count {
+                bail!(
+                    "restoring {} session(s) onto {} resident would exceed the budget \
+                     and no spill tier is configured; raise max_state_bytes/max_sessions \
+                     or set spill_dir",
+                    ids.len(),
+                    self.sessions.len()
+                );
+            }
+        }
+        let mut adopted = Vec::with_capacity(ids.len());
+        for id in &ids {
+            adopted.push((id.clone(), ck.load(id, &self.model)?));
+        }
+        let n = adopted.len();
+        for (id, scorer) in adopted {
+            self.clock += 1;
+            self.evicted_ids.remove(&id);
+            self.sessions.insert(id, Session { scorer, last_used: self.clock });
+            self.opened += 1;
+        }
+        // adopted sessions count against the budget like any others
+        // (with a spill tier this can only demote, never destroy)
+        self.enforce_budget(&HashSet::new());
+        Ok(n)
+    }
+
     /// Evict least-recently-used sessions (never one in `keep`) until
-    /// both the byte budget and the session cap hold.
+    /// both the byte budget and the session cap hold. With a spill tier
+    /// the victim is demoted to disk and stays transparently resumable;
+    /// without one (or if the spill write fails) its context is
+    /// destroyed and later chunks for the id fail loudly.
     fn enforce_budget(&mut self, keep: &HashSet<&str>) {
         loop {
             let over_bytes = self.resident_bytes() > self.cfg.max_state_bytes;
@@ -315,9 +513,27 @@ impl SessionManager {
                 .map(|(k, _)| k.clone());
             match victim {
                 Some(k) => {
-                    self.sessions.remove(&k);
-                    self.evicted_ids.insert(k);
-                    self.evicted += 1;
+                    let sess = self.sessions.remove(&k).expect("victim is resident");
+                    match &mut self.spill {
+                        Some(ck) => match ck.save(&k, &sess.scorer) {
+                            Ok(rec) => {
+                                self.spills += 1;
+                                self.checkpoint_bytes += rec.bytes;
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "[session] spilling '{k}' failed ({e:#}); \
+                                     dropping its context"
+                                );
+                                self.evicted_ids.insert(k);
+                                self.evicted += 1;
+                            }
+                        },
+                        None => {
+                            self.evicted_ids.insert(k);
+                            self.evicted += 1;
+                        }
+                    }
                 }
                 // only actively-served sessions are left; let them
                 // exceed the budget rather than refusing to serve them
@@ -374,7 +590,7 @@ mod tests {
             .unwrap()
             .per_session_bytes();
         // room for exactly two sessions
-        let cfg = SessionConfig { max_state_bytes: 2 * per, max_sessions: 0 };
+        let cfg = SessionConfig { max_state_bytes: 2 * per, ..Default::default() };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("old", &chunk(16, 4)).unwrap();
         mgr.advance("mid", &chunk(16, 5)).unwrap();
@@ -395,7 +611,7 @@ mod tests {
 
     #[test]
     fn session_cap_is_enforced() {
-        let cfg = SessionConfig { max_state_bytes: usize::MAX, max_sessions: 2 };
+        let cfg = SessionConfig { max_state_bytes: usize::MAX, max_sessions: 2, spill_dir: None };
         let mut mgr = SessionManager::new(model(), cfg).unwrap();
         for (i, id) in ["a", "b", "c", "d"].iter().enumerate() {
             mgr.advance(id, &chunk(8, 10 + i as u64)).unwrap();
@@ -476,7 +692,7 @@ mod tests {
             .unwrap()
             .per_session_bytes();
         // room for exactly two sessions
-        let cfg = SessionConfig { max_state_bytes: 2 * per, max_sessions: 0 };
+        let cfg = SessionConfig { max_state_bytes: 2 * per, ..Default::default() };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("live", &chunk(16, 70)).unwrap();
         mgr.advance("idle", &chunk(16, 71)).unwrap();
@@ -515,11 +731,252 @@ mod tests {
 
     #[test]
     fn single_oversized_session_still_served() {
-        let cfg = SessionConfig { max_state_bytes: 1, max_sessions: 0 };
+        let cfg = SessionConfig { max_state_bytes: 1, ..Default::default() };
         let mut mgr = SessionManager::new(model(), cfg).unwrap();
         // budget smaller than one session: the active stream still works
         let s = mgr.advance("only", &chunk(8, 30)).unwrap();
         assert_eq!(s.len(), 8);
         assert!(mgr.contains("only"));
+    }
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("pfrm_session_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn bits(scores: &ChunkScores) -> Vec<u32> {
+        scores.logprob.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn spill_then_rehydrate_is_bitwise_transparent() {
+        let dir = tempdir("spill");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        // room for exactly one resident session, spill tier enabled
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
+        let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
+
+        let (c0, c1) = (chunk(24, 80), chunk(24, 81));
+        assert_eq!(
+            bits(&mgr.advance("a", &c0).unwrap()),
+            bits(&ref_mgr.advance("a", &c0).unwrap())
+        );
+        // opening "b" demotes "a" to disk instead of destroying it
+        mgr.advance("b", &chunk(24, 82)).unwrap();
+        assert!(!mgr.contains("a") && mgr.is_spilled("a"));
+        assert_eq!(mgr.stats().spills, 1);
+        assert!(mgr.stats().checkpoint_bytes > 0);
+
+        // the next chunk for "a" rehydrates transparently, scores
+        // bitwise identical to the never-evicted reference stream
+        assert_eq!(
+            bits(&mgr.advance("a", &c1).unwrap()),
+            bits(&ref_mgr.advance("a", &c1).unwrap())
+        );
+        assert!(mgr.contains("a") && !mgr.is_spilled("a"));
+        let st = mgr.stats();
+        assert_eq!((st.spills, st.rehydrations), (2, 1), "advancing 'a' demoted 'b'");
+        assert_eq!(st.evicted, 0, "a spill is not a context-destroying eviction");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn close_drops_spilled_snapshots_too() {
+        let dir = tempdir("close");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("a", &chunk(16, 83)).unwrap();
+        mgr.advance("b", &chunk(16, 84)).unwrap();
+        assert!(mgr.is_spilled("a"));
+        assert!(mgr.close("a"), "closing a spilled session reports it existed");
+        assert!(!mgr.is_spilled("a"));
+        // the id is reusable and starts a *fresh* stream
+        let s = mgr.advance("a", &chunk(16, 85)).unwrap();
+        assert_eq!(s.offset, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spilled_snapshot_fails_loudly() {
+        let dir = tempdir("corrupt");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("a", &chunk(16, 86)).unwrap();
+        mgr.advance("b", &chunk(16, 87)).unwrap();
+        assert!(mgr.is_spilled("a"));
+        // flip one byte of the spilled snapshot
+        let snap = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .find(|p| p.extension().is_some_and(|x| x == "snap"))
+            .expect("one spilled snapshot on disk");
+        let mut bytes = std::fs::read(&snap).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&snap, &bytes).unwrap();
+
+        let err = mgr.advance("a", &chunk(16, 88)).unwrap_err();
+        assert!(format!("{err:#}").contains("rehydrating"), "{err:#}");
+        // acknowledging the loss frees the id
+        mgr.close("a");
+        assert_eq!(mgr.advance("a", &chunk(16, 89)).unwrap().offset, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checkpoint_all_restore_from_migrates_every_session() {
+        let ck_dir = tempdir("ckall");
+        let spill_dir = tempdir("ckall_spill");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        // one resident slot + spill tier: "a" ends up spilled, "b" resident
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(spill_dir.clone()),
+        };
+        let mut donor = SessionManager::new(m.clone(), cfg).unwrap();
+        let (ca, cb) = (chunk(20, 90), chunk(20, 91));
+        donor.advance("a", &ca).unwrap();
+        donor.advance("b", &cb).unwrap();
+        assert!(donor.is_spilled("a") && donor.contains("b"));
+        assert!(donor.checkpoint_all(&spill_dir).is_err(), "spill dir is not a valid target");
+        assert_eq!(donor.checkpoint_all(&ck_dir).unwrap(), 2);
+
+        // a warm replica (no spill tier needed) adopts both sessions...
+        let mut replica = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        assert_eq!(replica.restore_from(&ck_dir).unwrap(), 2);
+        assert!(replica.contains("a") && replica.contains("b"));
+        assert_eq!(replica.tokens_seen("a"), Some(20));
+
+        // ...and continues them exactly where the donor would have
+        let mut reference = SessionManager::new(m, SessionConfig::default()).unwrap();
+        reference.advance("a", &ca).unwrap();
+        reference.advance("b", &cb).unwrap();
+        let next = chunk(20, 92);
+        assert_eq!(
+            bits(&replica.advance("a", &next).unwrap()),
+            bits(&reference.advance("a", &next).unwrap())
+        );
+
+        // adopting over a live id must refuse, not overwrite
+        assert!(replica.restore_from(&ck_dir).is_err());
+        let _ = std::fs::remove_dir_all(&ck_dir);
+        let _ = std::fs::remove_dir_all(&spill_dir);
+    }
+
+    #[test]
+    fn reexport_to_reused_dir_drops_stale_sessions() {
+        let dir = tempdir("reexport");
+        let m = model();
+        let mut donor = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        donor.advance("a", &chunk(16, 100)).unwrap();
+        donor.advance("b", &chunk(16, 101)).unwrap();
+        assert_eq!(donor.checkpoint_all(&dir).unwrap(), 2);
+        // "a" closes; a re-export into the SAME dir must not keep it
+        donor.close("a");
+        assert_eq!(donor.checkpoint_all(&dir).unwrap(), 1);
+        let mut replica = SessionManager::new(m, SessionConfig::default()).unwrap();
+        assert_eq!(replica.restore_from(&dir).unwrap(), 1);
+        assert!(replica.contains("b"));
+        assert!(!replica.contains("a"), "closed session resurrected from a stale export");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restart_clears_stale_spill_snapshots() {
+        let dir = tempdir("stale_spill");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut first = SessionManager::new(m.clone(), cfg.clone()).unwrap();
+        first.advance("a", &chunk(16, 102)).unwrap();
+        first.advance("b", &chunk(16, 103)).unwrap();
+        assert!(first.is_spilled("a"));
+        drop(first); // the process "dies": resident 'b' is gone for good
+
+        // a new manager on the same spill dir must NOT resume 'a'
+        // mid-stream while 'b' silently vanished — the spill tier is a
+        // cache, not a recovery mechanism
+        let mut second = SessionManager::new(m, cfg).unwrap();
+        assert!(!second.is_spilled("a"), "stale spill snapshot survived a restart");
+        assert_eq!(second.advance("a", &chunk(16, 104)).unwrap().offset, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_without_spill_refuses_over_budget_exports() {
+        let dir = tempdir("overbudget");
+        let m = model();
+        let mut donor = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        for (i, id) in ["a", "b", "c"].iter().enumerate() {
+            donor.advance(id, &chunk(16, 110 + i as u64)).unwrap();
+        }
+        donor.checkpoint_all(&dir).unwrap();
+        let per = donor.per_session_bytes();
+
+        // room for two sessions, no spill tier: adopting three would
+        // destroy one immediately — refuse instead, adopting nothing
+        let cfg = SessionConfig { max_state_bytes: 2 * per, ..Default::default() };
+        let mut replica = SessionManager::new(m.clone(), cfg).unwrap();
+        assert!(replica.restore_from(&dir).is_err());
+        assert!(replica.is_empty(), "a refused restore must adopt nothing");
+
+        // the same adoption with a spill tier succeeds: overflow demotes
+        // to disk, recoverably, instead of being destroyed
+        let spill = tempdir("overbudget_spill");
+        let cfg = SessionConfig {
+            max_state_bytes: 2 * per,
+            max_sessions: 0,
+            spill_dir: Some(spill.clone()),
+        };
+        let mut replica = SessionManager::new(m, cfg).unwrap();
+        assert_eq!(replica.restore_from(&dir).unwrap(), 3);
+        let st = replica.stats();
+        assert_eq!(st.active + st.spilled, 3, "every adopted session stays live");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&spill);
+    }
+
+    #[test]
+    fn restore_from_missing_dir_is_loud() {
+        let mut mgr = SessionManager::new(model(), SessionConfig::default()).unwrap();
+        let ghost = tempdir("ghost");
+        assert!(mgr.restore_from(&ghost).is_err());
     }
 }

@@ -46,6 +46,25 @@ impl StreamState {
         self.tokens_seen
     }
 
+    /// The raw M×(d+1) prefix-sum matrix — read-only view for snapshot
+    /// serialization (`persist/snapshot.rs`).
+    pub fn matrix(&self) -> &Mat {
+        &self.state
+    }
+
+    /// Rebuild a state from snapshot parts: the M×(d+1) prefix-sum
+    /// matrix plus the consumed-token count. Inverse of reading
+    /// [`Self::matrix`]/[`Self::tokens_seen`]; the restored state
+    /// continues the stream bit-for-bit where the captured one stopped.
+    pub fn from_parts(m: usize, d: usize, state: Mat, tokens_seen: u64) -> StreamState {
+        assert_eq!(
+            (state.rows, state.cols),
+            (m, d + 1),
+            "prefix-sum matrix must be M x (d+1)"
+        );
+        StreamState { m, d, state, tokens_seen }
+    }
+
     /// Resident size of the carried state in bytes — constant in the
     /// streamed length, the whole point of the subsystem.
     pub fn state_bytes(&self) -> usize {

@@ -88,6 +88,8 @@ pub struct NativeModel {
     lnf: LayerNorm,
     layers: Vec<Layer>,
     pub attention: NativeAttention,
+    /// lazily computed cache for [`Self::weights_digest`]
+    digest: std::sync::OnceLock<u64>,
 }
 
 fn gelu(x: f32) -> f32 {
@@ -221,6 +223,7 @@ impl NativeModel {
             lnf: LayerNorm { g: fetch_vec("lnf/g")?, b: fetch_vec("lnf/b")? },
             layers,
             attention,
+            digest: std::sync::OnceLock::new(),
         })
     }
 
@@ -362,7 +365,46 @@ impl NativeModel {
     /// weights — the Fig. 11 error-propagation experiment).
     pub fn with_attention(mut self, attention: NativeAttention) -> Self {
         self.attention = attention;
+        // the digest covers the feature map: swapping attention
+        // invalidates any cached value
+        self.digest = std::sync::OnceLock::new();
         self
+    }
+
+    /// FNV-1a digest over every parameter byte — embeddings, all layer
+    /// weights, the final norm and (for FAVOR) the sampled feature map.
+    /// Two models with identical geometry but different weights or
+    /// resampled random features get different digests, so carried
+    /// stream state can never silently cross models
+    /// (`persist::ModelFingerprint` folds this into every snapshot).
+    /// Computed once per model and cached.
+    pub fn weights_digest(&self) -> u64 {
+        *self.digest.get_or_init(|| {
+            fn eat(h: &mut u64, data: &[f32]) {
+                for v in data {
+                    *h = crate::rng::fnv1a64_extend(*h, &v.to_le_bytes());
+                }
+            }
+            let mut h = crate::rng::FNV1A64_SEED;
+            eat(&mut h, &self.embed.data);
+            for layer in &self.layers {
+                for ln in [&layer.ln1, &layer.ln2] {
+                    eat(&mut h, &ln.g);
+                    eat(&mut h, &ln.b);
+                }
+                for dense in [&layer.qkv, &layer.proj, &layer.ff1, &layer.ff2] {
+                    eat(&mut h, &dense.w.data);
+                    eat(&mut h, &dense.b);
+                }
+            }
+            eat(&mut h, &self.lnf.g);
+            eat(&mut h, &self.lnf.b);
+            if let NativeAttention::Favor(fm) = &self.attention {
+                eat(&mut h, &fm.w.data);
+                eat(&mut h, &fm.b);
+            }
+            h
+        })
     }
 
     pub fn n_layers(&self) -> usize {
@@ -500,6 +542,7 @@ impl NativeModel {
             lnf: ln(cfg.d_model),
             layers,
             attention: NativeAttention::Favor(fm),
+            digest: std::sync::OnceLock::new(),
         }
     }
 }

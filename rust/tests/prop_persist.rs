@@ -1,0 +1,262 @@
+//! Property tests of the durable-persistence subsystem (same
+//! seeded-generator harness as `prop_stream.rs` — rerun any failure with
+//! the printed seed):
+//!
+//!   * spill → rehydrate → advance is *bitwise* identical to an
+//!     uninterrupted session, across random chunkings and random
+//!     forced-eviction schedules (the tentpole's core contract);
+//!   * snapshot encode/decode round-trips exactly, and corrupt or
+//!     truncated snapshot files / manifests fail loudly instead of
+//!     restoring garbage;
+//!   * `Coordinator::checkpoint_all` + a fresh coordinator +
+//!     `restore_from` reproduces the exact per-token output of an
+//!     uninterrupted run (in-process kill-and-restore).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use performer::coordinator::Coordinator;
+use performer::persist::{Checkpointer, SessionSnapshot};
+use performer::protein::vocab::{AA_BASE, N_AA};
+use performer::rng::Pcg64;
+use performer::runtime::EngineHandle;
+use performer::stream::{ChunkScorer, ChunkScores, SessionConfig, SessionManager};
+use performer::train::{NativeModel, SyntheticConfig};
+
+const CASES: u64 = 15;
+
+/// Tiny property-test harness: runs `f` across seeded cases, panics with
+/// the failing seed for reproduction.
+fn forall(name: &str, f: impl Fn(&mut Pcg64)) {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(0xd15c ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn aa_tokens(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+}
+
+fn tempdir(tag: &str, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pfrm_prop_{tag}_{seed}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn bits(s: &ChunkScores) -> Vec<u32> {
+    s.logprob.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn prop_spill_rehydrate_is_bitwise_transparent() {
+    let mut mrng = Pcg64::new(7001);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    let per = SessionManager::new(model.clone(), SessionConfig::default())
+        .unwrap()
+        .per_session_bytes();
+    forall("spill -> rehydrate -> advance == uninterrupted", |rng| {
+        let seed_tag = rng.below(1 << 30) as u64;
+        let dir = tempdir("spill", seed_tag);
+        // a one-session budget: every session switch forces a spill of
+        // the previous session and a rehydration of the next
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut spilling = SessionManager::new(model.clone(), cfg).unwrap();
+        let mut reference = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+
+        let n_sessions = 2 + rng.below(3);
+        let rounds = 2 + rng.below(3);
+        for _ in 0..rounds {
+            // random chunking *and* a random forced-eviction schedule:
+            // each round visits the sessions in a fresh random order, so
+            // which stream gets demoted under the 1-session budget (and
+            // when it is pulled back) varies, while every session switch
+            // is guaranteed to force a spill
+            let mut order: Vec<usize> = (0..n_sessions).collect();
+            rng.shuffle(&mut order);
+            for s in order {
+                let chunk = aa_tokens(rng, 1 + rng.below(32));
+                let id = format!("u{s}");
+                let a = spilling.advance(&id, &chunk).unwrap();
+                let b = reference.advance(&id, &chunk).unwrap();
+                assert_eq!(a.offset, b.offset);
+                assert_eq!(
+                    bits(&a),
+                    bits(&b),
+                    "session {id}: spilled path diverged from uninterrupted path"
+                );
+            }
+        }
+        let st = spilling.stats();
+        assert!(st.spills > 0, "the schedule must actually force spills");
+        // every demotion is either promoted back or still on disk
+        assert_eq!(st.spills, st.rehydrations + st.spilled as u64);
+        assert_eq!(st.evicted, 0, "with a spill tier, no context is ever destroyed");
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn prop_snapshot_roundtrip_across_random_chunkings() {
+    let mut mrng = Pcg64::new(7002);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    forall("snapshot -> bytes -> scorer resumes exactly", |rng| {
+        let mut scorer = ChunkScorer::new(model.clone()).unwrap();
+        for _ in 0..rng.below(4) {
+            scorer.advance(&aa_tokens(rng, 1 + rng.below(40))).unwrap();
+        }
+        let snap = SessionSnapshot::capture("p", &scorer).unwrap();
+        let mut restored = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(model.clone())
+            .unwrap();
+        assert_eq!(restored.tokens_seen(), scorer.tokens_seen());
+        let next = aa_tokens(rng, 1 + rng.below(24));
+        assert_eq!(
+            bits(&scorer.advance(&next).unwrap()),
+            bits(&restored.advance(&next).unwrap()),
+        );
+    });
+}
+
+#[test]
+fn prop_corrupt_snapshots_never_restore() {
+    let mut mrng = Pcg64::new(7003);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    forall("corruption fails loudly", |rng| {
+        let mut scorer = ChunkScorer::new(model.clone()).unwrap();
+        scorer.advance(&aa_tokens(rng, 8 + rng.below(24))).unwrap();
+        let bytes = SessionSnapshot::capture("c", &scorer).unwrap().to_bytes();
+        // random truncation
+        let cut = rng.below(bytes.len());
+        assert!(SessionSnapshot::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        // random bit flip
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        bad[pos] ^= 1 << rng.below(8);
+        assert!(SessionSnapshot::from_bytes(&bad).is_err(), "bit flip at {pos}");
+    });
+}
+
+#[test]
+fn corrupt_manifest_blocks_restore() {
+    let mut mrng = Pcg64::new(7004);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    let dir = tempdir("manifest", 0);
+    let mut rng = Pcg64::new(1);
+
+    let mut donor = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+    donor.advance("a", &aa_tokens(&mut rng, 16)).unwrap();
+    donor.checkpoint_all(&dir).unwrap();
+
+    // garbage manifest: restore must fail loudly
+    let manifest = dir.join("manifest.json");
+    let good = std::fs::read(&manifest).unwrap();
+    std::fs::write(&manifest, b"{definitely not json").unwrap();
+    let mut replica = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+    assert!(replica.restore_from(&dir).is_err());
+    assert!(replica.is_empty(), "a failed restore must adopt nothing");
+
+    // a manifest lying about the snapshot's checksum is caught too
+    let lying = String::from_utf8(good.clone())
+        .unwrap()
+        .replacen("\"crc\":", "\"crc\":1e9,\"crc_old\":", 1);
+    std::fs::write(&manifest, lying).unwrap();
+    assert!(replica.restore_from(&dir).is_err());
+    assert!(replica.is_empty());
+
+    // intact manifest restores fine
+    std::fs::write(&manifest, &good).unwrap();
+    assert_eq!(replica.restore_from(&dir).unwrap(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_checkpoint_restart_restore_reproduces_scores() {
+    let mut mrng = Pcg64::new(7005);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    let dir = tempdir("coord", 0);
+    let mut rng = Pcg64::new(5);
+    let streams: Vec<Vec<Vec<u8>>> = (0..3)
+        .map(|_| (0..4).map(|_| aa_tokens(&mut rng, 24)).collect())
+        .collect();
+
+    // uninterrupted run: all 4 chunks per session in one coordinator
+    let mut full_scores: Vec<Vec<u32>> = Vec::new();
+    {
+        let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+        coord.start_stream_pool("native", model.clone(), SessionConfig::default()).unwrap();
+        for c in 0..4 {
+            for (s, stream) in streams.iter().enumerate() {
+                let resp =
+                    coord.stream_chunk("native", &format!("u{s}"), stream[c].clone()).unwrap();
+                full_scores.push(bits(&resp.scores.unwrap()));
+            }
+        }
+        coord.shutdown();
+    }
+
+    // interrupted run: 2 chunks, checkpoint_all, coordinator torn down,
+    // a fresh one restores and serves the remaining 2 chunks
+    let mut split_scores: Vec<Vec<u32>> = Vec::new();
+    {
+        let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+        coord.start_stream_pool("native", model.clone(), SessionConfig::default()).unwrap();
+        for c in 0..2 {
+            for (s, stream) in streams.iter().enumerate() {
+                let resp =
+                    coord.stream_chunk("native", &format!("u{s}"), stream[c].clone()).unwrap();
+                split_scores.push(bits(&resp.scores.unwrap()));
+            }
+        }
+        assert_eq!(coord.checkpoint_all("native", &dir).unwrap(), 3);
+        coord.shutdown();
+    }
+    {
+        let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+        coord.start_stream_pool("native", model.clone(), SessionConfig::default()).unwrap();
+        assert_eq!(coord.restore_from("native", &dir).unwrap(), 3);
+        for c in 2..4 {
+            for (s, stream) in streams.iter().enumerate() {
+                let resp =
+                    coord.stream_chunk("native", &format!("u{s}"), stream[c].clone()).unwrap();
+                let scores = resp.scores.unwrap();
+                assert_eq!(scores.offset, c * 24, "restored session resumes mid-stream");
+                split_scores.push(bits(&scores));
+            }
+        }
+        // restoring again over the live sessions must refuse
+        assert!(coord.restore_from("native", &dir).is_err());
+        coord.shutdown();
+    }
+    assert_eq!(
+        full_scores, split_scores,
+        "checkpoint + restart + restore must reproduce the uninterrupted run exactly"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpointer_rejects_wrong_model_on_load() {
+    let mut rng = Pcg64::new(7006);
+    let big = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let small = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig { d_model: 16, n_heads: 2, n_features: 8, ..Default::default() },
+        &mut rng,
+    ));
+    let dir = tempdir("fingerprint", 0);
+    let mut ck = Checkpointer::create(&dir).unwrap();
+    let mut scorer = ChunkScorer::new(big).unwrap();
+    scorer.advance(&aa_tokens(&mut rng, 12)).unwrap();
+    ck.save("s", &scorer).unwrap();
+    assert!(Checkpointer::open(&dir).unwrap().load("s", &small).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -208,7 +208,7 @@ fn session_budget_evicts_lru_preserves_active() {
         .per_session_bytes();
 
     // budget: exactly three resident sessions
-    let cfg = SessionConfig { max_state_bytes: 3 * per, max_sessions: 0 };
+    let cfg = SessionConfig { max_state_bytes: 3 * per, ..Default::default() };
     let mut mgr = SessionManager::new(model, cfg).unwrap();
     for id in ["a", "b", "c"] {
         mgr.advance(id, &aa_tokens(&mut rng, 16)).unwrap();
