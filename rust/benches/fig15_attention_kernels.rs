@@ -1,19 +1,34 @@
-//! Fig. 15 — model-level forward/backward wall time for the "Small"
-//! (1, 6, 64, 64) and scaled-"Regular" configurations, Transformer vs
-//! Performer, measured on the AOT train-step artifacts (the closest
-//! production analogue of the paper's fwd+bwd timing), plus the
-//! Pallas-interpret overhead quantification.
+//! Fig. 15 — attention-kernel timing, two tiers:
 //!
-//! Run with `cargo bench --bench fig15_attention_kernels`.
+//! 1. **Native kernel sweep** (always runs, no artifacts needed): every
+//!    `FeatureKind` the pluggable kernel layer offers — trig softmax,
+//!    FAVOR+ positive, the generalized-attention family — timed through
+//!    `favor_attention` at fixed (L, d, M) against the exact softmax
+//!    baseline, with the approximation error recorded alongside. Emits
+//!    `BENCH_kernels.json` so CI tracks a per-kernel perf/accuracy
+//!    baseline across PRs.
+//! 2. **AOT train-step timing** (runs only when a PJRT engine and
+//!    compiled artifacts are available): the original model-level
+//!    fwd+bwd wall-time table plus the Pallas-interpret overhead
+//!    quantification.
+//!
+//! Run with `cargo bench --bench fig15_attention_kernels`; pass
+//! `-- --test` for the CI smoke mode (small L, fewer samples).
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use performer::benchlib::{fmt_secs, Bench, Report};
+use performer::favor::{
+    exact_attention, favor_attention, output_error, Direction, FeatureKind, FeatureMap,
+};
+use performer::jsonx::{arr, num, obj, s};
+use performer::linalg::OrfMechanism;
 use performer::protein::{Corpus, CorpusConfig};
 use performer::rng::Pcg64;
 use performer::runtime::{Engine, HostValue};
+use performer::tensor::Mat;
 use performer::train::{DataGen, Split, TrainState};
-use std::sync::Arc;
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("PERFORMER_ARTIFACTS")
@@ -21,9 +36,82 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-fn main() -> anyhow::Result<()> {
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The native sweep: every pluggable kernel at fixed (L, d, M), wall
+/// time + output error vs exact softmax attention.
+fn native_kernel_sweep(smoke: bool) -> anyhow::Result<()> {
+    let (l, samples) = if smoke { (256usize, 2usize) } else { (env_usize("KERNEL_BENCH_L", 2048), 5) };
+    let d = 16usize;
+    let m = env_usize("KERNEL_BENCH_M", 128);
+    let bench = Bench { warmup: 1, samples, max_total_secs: 60.0 };
+
+    let mut rng = Pcg64::new(15);
+    let q = Mat::from_vec(l, d, rng.gaussian_vec(l * d).iter().map(|v| v * 0.5).collect());
+    let k = Mat::from_vec(l, d, rng.gaussian_vec(l * d).iter().map(|v| v * 0.5).collect());
+    let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+    let exact = exact_attention(&q, &k, &v, Direction::Bidirectional);
+    let t_exact = bench.run("exact", || exact_attention(&q, &k, &v, Direction::Bidirectional));
+
+    let mut rep = Report::new(
+        &format!("Fig. 15 — native attention-kernel sweep (L={l}, d={d}, M={m})"),
+        &["kernel", "time", "speedup_vs_exact", "out_mse_vs_exact"],
+    );
+    let mut json_rows = Vec::new();
+    rep.row(vec![
+        "exact".into(),
+        fmt_secs(t_exact.median()),
+        "1.0x".into(),
+        "0".into(),
+    ]);
+    for kind in FeatureKind::ALL {
+        let fm = FeatureMap::sample(kind, m, d, OrfMechanism::Regular, &mut Pcg64::new(99));
+        let t = bench.run(kind.name(), || {
+            favor_attention(&fm, &q, &k, &v, Direction::Bidirectional)
+        });
+        let out = favor_attention(&fm, &q, &k, &v, Direction::Bidirectional);
+        // some GA kinds (identity) are signed estimators that can blow
+        // up on softmax targets; keep the artifact valid JSON regardless
+        let mse = match output_error(&out, &exact) {
+            e if e.is_finite() => e,
+            _ => -1.0,
+        };
+        rep.row(vec![
+            kind.name().into(),
+            fmt_secs(t.median()),
+            format!("{:.1}x", t_exact.median() / t.median()),
+            format!("{mse:.3e}"),
+        ]);
+        json_rows.push(obj(vec![
+            ("kernel", s(kind.name())),
+            ("secs", num(t.median())),
+            ("speedup_vs_exact", num(t_exact.median() / t.median())),
+            ("out_mse_vs_exact", num(mse)),
+        ]));
+    }
+    println!("{}", rep.render());
+    let _ = std::fs::create_dir_all("results");
+    rep.save_csv(std::path::Path::new("results/fig15_kernels.csv"))?;
+
+    let json = obj(vec![
+        ("bench", s("attention_kernels")),
+        ("smoke", performer::jsonx::Json::Bool(smoke)),
+        ("L", num(l as f64)),
+        ("d", num(d as f64)),
+        ("M", num(m as f64)),
+        ("exact_secs", num(t_exact.median())),
+        ("kernels", arr(json_rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", json.to_string() + "\n")?;
+    println!("wrote BENCH_kernels.json");
+    Ok(())
+}
+
+/// The original AOT sections — only when a PJRT engine is available.
+fn aot_sections(engine: &Arc<Engine>) -> anyhow::Result<()> {
     let bench = Bench { warmup: 1, samples: 5, max_total_secs: 60.0 };
-    let engine = Arc::new(Engine::new(artifacts_dir())?);
     let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
 
     // full train-step (fwd+bwd+Adam) timing per model variant
@@ -94,5 +182,15 @@ fn main() -> anyhow::Result<()> {
     }
     println!("{}", rep2.render());
     rep2.save_csv(std::path::Path::new("results/fig15_pallas_overhead.csv"))?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test");
+    native_kernel_sweep(smoke)?;
+    match Engine::new(artifacts_dir()) {
+        Ok(engine) => aot_sections(&Arc::new(engine))?,
+        Err(e) => eprintln!("[fig15] PJRT engine unavailable ({e:#}); skipped AOT sections"),
+    }
     Ok(())
 }

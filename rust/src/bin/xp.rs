@@ -32,8 +32,8 @@ use performer::benchlib::{loglog_slope, Report};
 use performer::favor::analysis::AaSimilarity;
 use performer::favor::exact::raw_attention_matrix;
 use performer::favor::{
-    exact_attention, favor_attention, output_error, raw_attention_matrix_favor, Direction,
-    FeatureKind, FeatureMap,
+    exact_attention, favor_attention, output_error, raw_attention_matrix_favor, AttentionKernel,
+    Direction, FeatureKind, FeatureMap, KernelConfig,
 };
 use performer::linalg::OrfMechanism;
 use performer::protein::blosum::{normalized_blosum, offdiag_correlation};
@@ -639,8 +639,18 @@ fn fig11() -> Result<()> {
                 OrfMechanism::Regular,
                 &mut Pcg64::new(777),
             );
+            let kernel = AttentionKernel::from_feature_map(
+                fm,
+                KernelConfig {
+                    kind: FeatureKind::Softmax,
+                    m,
+                    mech: OrfMechanism::Regular,
+                    seed: 777,
+                    redraw_every: 0,
+                },
+            );
             let favor_t = NativeModel::from_weights(&meta_trunc, &make_lookup()?)?
-                .with_attention(NativeAttention::Favor(fm));
+                .with_attention(NativeAttention::favor_uniform(kernel, depth));
             let out_exact = exact_t.forward(&tokens, false).0;
             let out_favor = favor_t.forward(&tokens, false).0;
             row.push(format!("{:.4e}", output_error(&out_favor, &out_exact)));
@@ -874,31 +884,45 @@ fn stream_scaling() -> Result<()> {
     let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
     let corpus = Corpus::generate(CorpusConfig::default());
 
+    // flatness must hold for every streaming kernel, trig GA and FAVOR+
+    // alike — the kernel column keeps the claim per-kernel
     let mut rep = Report::new(
         "Streaming sessions — per-chunk latency & resident state vs total length (expect flat)",
-        &["total_tokens", "chunks", "first_ms", "last_ms", "last/first", "state_bytes"],
+        &["kernel", "total_tokens", "chunks", "first_ms", "last_ms", "last/first", "state_bytes"],
     );
-    let mut xs = Vec::new();
-    let mut ys = Vec::new();
-    for total in sweep_totals(4096, 4, max_total) {
-        let p = chunked_latency_point(&model, &corpus, chunk, total, &mut rng)?;
-        xs.push(total as f64);
-        ys.push(p.last_secs);
-        rep.row(vec![
-            total.to_string(),
-            p.n_chunks.to_string(),
-            format!("{:.3}", p.first_secs * 1e3),
-            format!("{:.3}", p.last_secs * 1e3),
-            format!("{:.2}", p.flatness_ratio()),
-            p.state_bytes.to_string(),
-        ]);
+    for kind in [FeatureKind::Relu, FeatureKind::Positive] {
+        let kmodel = if kind == FeatureKind::Relu {
+            model.clone()
+        } else {
+            Arc::new(NativeModel::synthetic(
+                &SyntheticConfig { kind, ..Default::default() },
+                &mut Pcg64::new(0),
+            ))
+        };
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for total in sweep_totals(4096, 4, max_total) {
+            let p = chunked_latency_point(&kmodel, &corpus, chunk, total, &mut rng)?;
+            xs.push(total as f64);
+            ys.push(p.last_secs);
+            rep.row(vec![
+                kind.name().to_string(),
+                total.to_string(),
+                p.n_chunks.to_string(),
+                format!("{:.3}", p.first_secs * 1e3),
+                format!("{:.3}", p.last_secs * 1e3),
+                format!("{:.2}", p.flatness_ratio()),
+                p.state_bytes.to_string(),
+            ]);
+        }
+        let slope = if xs.len() > 1 { loglog_slope(&xs, &ys) } else { 0.0 };
+        println!(
+            "[{}] per-chunk latency scaling exponent vs total length: {slope:.3} \
+             (0 = flat; exact attention would be ~1)",
+            kind.name()
+        );
     }
     println!("{}", rep.render());
-    let slope = if xs.len() > 1 { loglog_slope(&xs, &ys) } else { 0.0 };
-    println!(
-        "per-chunk latency scaling exponent vs total length: {slope:.3} \
-         (0 = flat; exact attention would be ~1)\n"
-    );
     rep.save_csv(&results_dir().join("stream_scaling.csv"))?;
 
     // batched execution core: B concurrent sessions, sequential advance

@@ -7,7 +7,7 @@
 use crate::tensor::Mat;
 
 use super::exact::raw_attention_matrix;
-use super::features::FeatureMap;
+use super::kernel::Featurizer;
 use super::linear::STABILIZER;
 use super::Direction;
 
@@ -27,10 +27,11 @@ pub fn attention_matrix_exact(q: &Mat, k: &Mat, dir: Direction) -> Mat {
 
 /// FAVOR's implied attention matrix, reconstructed via the Appendix C.4
 /// one-hot-V probe: running the mechanism with V° = I returns exactly the
-/// renormalized D̂⁻¹Â row by row. O(L²) — analysis only.
-pub fn attention_matrix_favor(fm: &FeatureMap, q: &Mat, k: &Mat, dir: Direction) -> Mat {
-    let qp = fm.apply(q);
-    let kp = fm.apply(k);
+/// renormalized D̂⁻¹Â row by row. O(L²) — analysis only. Generic over
+/// [`Featurizer`]: a raw draw or a kernel handle.
+pub fn attention_matrix_favor<F: Featurizer + ?Sized>(fm: &F, q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let qp = fm.phi(q);
+    let kp = fm.phi(k);
     let l = q.rows;
     let mut a = qp.matmul(&kp.t());
     if dir == Direction::Unidirectional {
@@ -52,9 +53,9 @@ pub fn attention_matrix_favor(fm: &FeatureMap, q: &Mat, k: &Mat, dir: Direction)
 
 /// FAVOR's *unnormalized* estimate Â = Q'(K')ᵀ of A — the quantity
 /// Theorem 1 bounds in L1 norm.
-pub fn raw_attention_matrix_favor(fm: &FeatureMap, q: &Mat, k: &Mat, dir: Direction) -> Mat {
-    let qp = fm.apply(q);
-    let kp = fm.apply(k);
+pub fn raw_attention_matrix_favor<F: Featurizer + ?Sized>(fm: &F, q: &Mat, k: &Mat, dir: Direction) -> Mat {
+    let qp = fm.phi(q);
+    let kp = fm.phi(k);
     let l = q.rows;
     let mut a = qp.matmul(&kp.t());
     if dir == Direction::Unidirectional {
@@ -133,7 +134,7 @@ impl AaSimilarity {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::favor::features::FeatureKind;
+    use crate::favor::features::{FeatureKind, FeatureMap};
     use crate::linalg::OrfMechanism;
     use crate::rng::Pcg64;
 

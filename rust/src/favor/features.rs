@@ -5,19 +5,43 @@
 //!   W rows ~ N(0, I/√d)  (Gaussian kernel bandwidth σ_B = d^{1/4}),
 //!   so that E[phi'(q)·phi'(k)] = exp(q·k/√d) = A_ij exactly.
 //!
+//! FAVOR+ positive features ("Rethinking Attention with Performers",
+//! Lemma 1 — strictly positive, bounded-variance softmax estimator):
+//!   phi(x) = exp(wᵀx̃ − ‖x̃‖²/2 − max_stabilizer) / √M,  x̃ = x/d^{1/4},
+//!   max_stabilizer = max(0, t − EXP_CLAMP) per feature, i.e. the
+//!   running max-subtraction restricted to its own row: inactive on any
+//!   typical exponent (the estimator stays exactly unbiased,
+//!   E[phi(q)·phi(k)] = exp(q·k/√d)), it caps adversarial exponents at
+//!   EXP_CLAMP so features can never overflow. A data-global running
+//!   max (the batch formulation in the Performers reference code) would
+//!   make phi depend on what else streamed through the chunk — breaking
+//!   the chunked == single-shot invariant — which is why the stabilizer
+//!   here is row-local. Trig features have unbounded relative variance
+//!   exactly where attention scores are large; positive features do not.
+//!
 //! Generalized-attention features (Sec. 2.2, Appendix B.3):
 //!   phi(x) = f(Wx)/√M + ε,  W rows ~ N(0, I), f ∈ {ReLU, sigmoid, ...}.
 
 use crate::linalg::{projection_matrix, OrfMechanism};
 use crate::rng::Pcg64;
-use crate::tensor::Mat;
+use crate::tensor::{matmul_block, Mat};
+
+/// `exp` generalized-attention clamp: exp(30) ≈ 1.1e13 preserves the
+/// ordering of any plausible projection while keeping feature products
+/// and prefix sums finite in f32 (1e13² ≈ 1e26 ≪ f32::MAX ≈ 3.4e38).
+/// Unclamped, one large projection overflows to +inf and poisons the
+/// whole attention row through the shared normalizer.
+pub const EXP_CLAMP: f32 = 30.0;
 
 /// The nonlinearity f in phi(x) = c/sqrt(M) f(Wx + b) (Eq. 9).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FeatureKind {
     /// cos features + exp renormalizers: unbiased softmax-attention
-    /// estimator (the paper's "Performer-SOFTMAX").
+    /// estimator (the paper's "Performer-SOFTMAX" trig features).
     Softmax,
+    /// FAVOR+ positive features: unbiased softmax estimator with
+    /// strictly positive features and bounded relative variance.
+    Positive,
     /// Generalized attention with the given f (paper default: ReLU).
     Relu,
     Sigmoid,
@@ -30,9 +54,24 @@ pub enum FeatureKind {
 }
 
 impl FeatureKind {
+    /// Every kind, in the order surfaced by error messages and sweeps.
+    pub const ALL: [FeatureKind; 10] = [
+        Self::Softmax,
+        Self::Positive,
+        Self::Relu,
+        Self::Sigmoid,
+        Self::Exp,
+        Self::Abs,
+        Self::Gelu,
+        Self::Cos,
+        Self::Tanh,
+        Self::Identity,
+    ];
+
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "softmax" => Self::Softmax,
+            "favor+" | "positive" => Self::Positive,
             "relu" => Self::Relu,
             "sigmoid" => Self::Sigmoid,
             "exp" => Self::Exp,
@@ -45,9 +84,19 @@ impl FeatureKind {
         })
     }
 
+    /// Like [`Self::parse`], but an unknown kind names every valid one —
+    /// a config/CLI typo gets a menu, not a silent default.
+    pub fn parse_or_err(s: &str) -> anyhow::Result<Self> {
+        Self::parse(s).ok_or_else(|| {
+            let valid: Vec<&str> = Self::ALL.iter().map(FeatureKind::name).collect();
+            anyhow::anyhow!("unknown feature kind '{s}' (valid kinds: {})", valid.join(", "))
+        })
+    }
+
     pub fn name(&self) -> &'static str {
         match self {
             Self::Softmax => "softmax",
+            Self::Positive => "favor+",
             Self::Relu => "relu",
             Self::Sigmoid => "sigmoid",
             Self::Exp => "exp",
@@ -62,9 +111,10 @@ impl FeatureKind {
     fn apply(&self, t: f32) -> f32 {
         match self {
             Self::Softmax | Self::Cos => t.cos(),
+            // Positive is row-wise (needs ‖x‖²); handled in `activate`
+            Self::Positive | Self::Exp => t.min(EXP_CLAMP).exp(),
             Self::Relu => t.max(0.0),
             Self::Sigmoid => 1.0 / (1.0 + (-t).exp()),
-            Self::Exp => t.exp(),
             Self::Abs => t.abs(),
             Self::Gelu => 0.5 * t * (1.0 + (0.7978845608 * (t + 0.044715 * t * t * t)).tanh()),
             Self::Tanh => t.tanh(),
@@ -96,6 +146,13 @@ impl FeatureMap {
                     (0..m).map(|_| rng.uniform_in(0.0, std::f64::consts::TAU) as f32).collect();
                 FeatureMap { kind, w, b, kernel_eps: 0.0, d }
             }
+            FeatureKind::Positive => {
+                let sigma = 1.0 / (d as f32).powf(0.25);
+                let w = projection_matrix(m, d, mech, sigma, true, rng);
+                // strictly positive floor: the normalizer D of a FAVOR+
+                // row can underflow toward 0 but never reach or cross it
+                FeatureMap { kind, w, b: vec![0.0; m], kernel_eps: 1e-6, d }
+            }
             _ => {
                 let w = projection_matrix(m, d, mech, 1.0, true, rng);
                 FeatureMap { kind, w, b: vec![0.0; m], kernel_eps: 1e-3, d }
@@ -105,6 +162,11 @@ impl FeatureMap {
 
     pub fn m(&self) -> usize {
         self.w.rows
+    }
+
+    /// Input (head) dimension d.
+    pub fn d(&self) -> usize {
+        self.d
     }
 
     /// Construct from raw parts (e.g. weights loaded from a checkpoint);
@@ -124,18 +186,59 @@ impl FeatureMap {
     /// phi'(X) for all rows of X (L×d) -> (L×M).
     pub fn apply(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols, self.d);
-        let m = self.m();
         let mut z = x.matmul(&self.w.t()); // (L, M)
+        self.activate(x, 0, 0, &mut z);
+        z
+    }
+
+    /// phi over the column block `[col_lo, col_lo+d)` of x's rows
+    /// `[row_lo, row_hi)`, reading the block in place — no `slice_head`
+    /// memcpy, no temporary input matrix. Bitwise-identical to
+    /// `apply(&copied_block)` (same matmul kernel, same activation
+    /// pass); this is the fused path the batched model forward uses on
+    /// the stacked QKV matrix.
+    pub fn apply_block(&self, x: &Mat, row_lo: usize, row_hi: usize, col_lo: usize) -> Mat {
+        assert!(col_lo + self.d <= x.cols, "column block exceeds input width");
+        let wt = self.w.t();
+        let mut z = Mat::zeros(row_hi - row_lo, self.m());
+        matmul_block(x, row_lo, row_hi, col_lo, &wt, &mut z);
+        self.activate(x, row_lo, col_lo, &mut z);
+        z
+    }
+
+    /// The post-projection activation pass shared by [`Self::apply`] and
+    /// [`Self::apply_block`]: z already holds X_block · Wᵀ; row i of z
+    /// corresponds to `x.row(row_lo + i)[col_lo..col_lo+d]`.
+    fn activate(&self, x: &Mat, row_lo: usize, col_lo: usize, z: &mut Mat) {
+        let m = self.m();
         match self.kind {
             FeatureKind::Softmax => {
                 let scale = (2.0 / m as f32).sqrt();
                 let r = 2.0 * (self.d as f32).sqrt();
-                for i in 0..x.rows {
-                    let norm_sq: f32 = x.row(i).iter().map(|v| v * v).sum();
+                for i in 0..z.rows {
+                    let xr = &x.row(row_lo + i)[col_lo..col_lo + self.d];
+                    let norm_sq: f32 = xr.iter().map(|v| v * v).sum();
                     let diag = (norm_sq / r).exp();
                     for j in 0..m {
                         let v = z.at(i, j) + self.b[j];
                         *z.at_mut(i, j) = diag * scale * v.cos() + self.kernel_eps;
+                    }
+                }
+            }
+            FeatureKind::Positive => {
+                let scale = 1.0 / (m as f32).sqrt();
+                let r = 2.0 * (self.d as f32).sqrt();
+                for i in 0..z.rows {
+                    let xr = &x.row(row_lo + i)[col_lo..col_lo + self.d];
+                    let norm_sq: f32 = xr.iter().map(|v| v * v).sum();
+                    let diag = norm_sq / r; // = ‖x̃‖²/2
+                    for j in 0..m {
+                        // row-local max-stabilizer max(0, t − EXP_CLAMP):
+                        // inactive on typical exponents (unbiased
+                        // estimator), caps adversarial ones so the
+                        // features can never overflow
+                        let t = (z.at(i, j) - diag).min(EXP_CLAMP);
+                        *z.at_mut(i, j) = scale * t.exp() + self.kernel_eps;
                     }
                 }
             }
@@ -146,7 +249,6 @@ impl FeatureMap {
                 }
             }
         }
-        z
     }
 }
 
@@ -176,6 +278,82 @@ mod tests {
         est /= trials as f64;
         let rel = ((est - exact as f64) / exact as f64).abs();
         assert!(rel < 0.05, "estimate {est} vs exact {exact} (rel {rel})");
+    }
+
+    /// FAVOR+ positive features are an unbiased estimator of the same
+    /// softmax kernel (the stabilizer clamp never engages on typical
+    /// inputs, so no correction factor is needed).
+    #[test]
+    fn positive_features_estimate_attention_kernel() {
+        let d = 8;
+        let mut rng = Pcg64::new(5);
+        let q = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.5).collect());
+        let k = Mat::from_vec(1, d, rng.gaussian_vec(d).iter().map(|v| v * 0.5).collect());
+        let exact = (crate::tensor::dot(q.row(0), k.row(0)) / (d as f32).sqrt()).exp() as f64;
+
+        let mut est = 0.0f64;
+        let trials = 40;
+        for t in 0..trials {
+            let fm = FeatureMap::sample(
+                FeatureKind::Positive, 512, d, OrfMechanism::Regular, &mut rng.fork(t as u64));
+            let qp = fm.apply(&q);
+            let kp = fm.apply(&k);
+            est += crate::tensor::dot(qp.row(0), kp.row(0)) as f64;
+        }
+        est /= trials as f64;
+        let rel = ((est - exact) / exact).abs();
+        assert!(rel < 0.1, "estimate {est} vs exact {exact} (rel {rel})");
+    }
+
+    #[test]
+    fn positive_features_strictly_positive_and_bounded() {
+        let mut rng = Pcg64::new(6);
+        let fm = FeatureMap::sample(FeatureKind::Positive, 32, 8, OrfMechanism::Regular, &mut rng);
+        // adversarially large inputs included: the row-local stabilizer
+        // caps the exponent at EXP_CLAMP, so phi stays finite, strictly
+        // positive and bounded
+        let hi = EXP_CLAMP.exp() / (32f32).sqrt() + fm.kernel_eps;
+        for scale in [1.0f32, 10.0, 100.0, 1000.0] {
+            let x = Mat::from_vec(
+                6, 8, rng.gaussian_vec(48).iter().map(|v| v * scale).collect());
+            let phi = fm.apply(&x);
+            assert!(
+                phi.data.iter().all(|&v| v.is_finite() && v > 0.0 && v <= hi * 1.001),
+                "scale {scale}: features left (0, exp(EXP_CLAMP)/sqrt(M)]"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_features_clamped_not_poisoned() {
+        // regression: unguarded t.exp() overflowed to inf for large
+        // projections and turned the whole row non-finite
+        let mut rng = Pcg64::new(7);
+        let fm = FeatureMap::sample(FeatureKind::Exp, 16, 8, OrfMechanism::Regular, &mut rng);
+        let x = Mat::from_vec(
+            4, 8, rng.gaussian_vec(32).iter().map(|v| v * 1000.0).collect());
+        let phi = fm.apply(&x);
+        assert!(
+            phi.data.iter().all(|v| v.is_finite() && *v > 0.0),
+            "clamped exp features must stay finite and positive"
+        );
+        // the clamp is the documented ceiling
+        let top = (EXP_CLAMP.exp()) / (16f32).sqrt() + fm.kernel_eps;
+        assert!(phi.data.iter().all(|&v| v <= top * 1.001));
+    }
+
+    #[test]
+    fn apply_block_matches_apply_on_copied_slice_bitwise() {
+        let mut rng = Pcg64::new(8);
+        for kind in [FeatureKind::Softmax, FeatureKind::Positive, FeatureKind::Relu] {
+            let fm = FeatureMap::sample(kind, 24, 6, OrfMechanism::Regular, &mut rng);
+            // a wide stacked matrix; the head block lives at columns 4..10
+            let x = Mat::from_vec(9, 16, rng.gaussian_vec(144));
+            let blk = fm.apply_block(&x, 2, 8, 4);
+            let copied = Mat::from_fn(6, 6, |i, j| x.at(2 + i, 4 + j));
+            let direct = fm.apply(&copied);
+            assert_eq!(blk.data, direct.data, "{kind:?}: in-place block phi diverged");
+        }
     }
 
     #[test]
@@ -215,7 +393,7 @@ mod tests {
     #[test]
     fn feature_shapes() {
         let mut rng = Pcg64::new(2);
-        for kind in [FeatureKind::Softmax, FeatureKind::Relu, FeatureKind::Tanh] {
+        for kind in [FeatureKind::Softmax, FeatureKind::Positive, FeatureKind::Relu, FeatureKind::Tanh] {
             let fm = FeatureMap::sample(kind, 24, 8, OrfMechanism::Iid, &mut rng);
             let x = Mat::from_vec(5, 8, rng.gaussian_vec(40));
             let phi = fm.apply(&x);
@@ -236,9 +414,19 @@ mod tests {
 
     #[test]
     fn parse_roundtrip() {
-        for name in ["softmax", "relu", "sigmoid", "exp", "abs", "gelu", "cos", "tanh", "identity"] {
-            assert_eq!(FeatureKind::parse(name).unwrap().name(), name);
+        for kind in FeatureKind::ALL {
+            assert_eq!(FeatureKind::parse(kind.name()), Some(kind));
         }
+        assert_eq!(FeatureKind::parse("positive"), Some(FeatureKind::Positive));
         assert!(FeatureKind::parse("nope").is_none());
+    }
+
+    #[test]
+    fn parse_or_err_lists_valid_kinds() {
+        let err = FeatureKind::parse_or_err("reluu").unwrap_err().to_string();
+        assert!(err.contains("reluu"), "{err}");
+        for name in ["softmax", "favor+", "relu", "identity"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 }

@@ -1,0 +1,363 @@
+//! The pluggable attention-kernel layer: [`AttentionKernel`] owns the
+//! feature map, the feature count M, the ORF mechanism and a
+//! *deterministic redraw schedule*, so every consumer — the FAVOR
+//! estimators, the native model stack, the streaming scorer, snapshots —
+//! holds a kernel handle instead of a baked-in feature formula.
+//!
+//! ## Redraw epochs
+//!
+//! The paper's Sec. 4.2 feature redrawing becomes a serving-side
+//! schedule: token positions `[e·R, (e+1)·R)` form redraw epoch `e`
+//! (`R = redraw_every`; `R = 0` disables redrawing, one eternal epoch).
+//! The draw for epoch `e` is a pure function of `(seed, e)` —
+//! `Pcg64::new(seed).fork(e)` feeds `FeatureMap::sample` — so any
+//! process, any time, reproduces the exact projection for any epoch: a
+//! restored snapshot or a migrated session lands on bit-identical
+//! features without shipping them.
+//!
+//! Because the causal prefix sums live in one draw's feature space, an
+//! epoch boundary *resets* the carried attention state (context restarts
+//! there); the model forward splits chunks internally at boundaries so
+//! chunked == single-shot stays an exact invariant for any chunking —
+//! see `train::NativeModel::forward_chunk_batch`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::jsonx::{num, obj, s, Json};
+use crate::linalg::OrfMechanism;
+use crate::rng::{fnv1a64_extend, Pcg64};
+use crate::tensor::Mat;
+
+use super::features::{FeatureKind, FeatureMap};
+
+/// Cached epoch draws per kernel. Sessions only move forward through
+/// epochs, so a small window is enough; the oldest draw is evicted.
+const DRAW_CACHE: usize = 8;
+
+/// Anything that can featurize query/key rows: a raw draw
+/// ([`FeatureMap`]) or the epoch-aware [`AttentionKernel`] handle. The
+/// FAVOR estimators (`favor::linear`, `favor::analysis`) are generic
+/// over this, which is what makes the kernel layer pluggable.
+pub trait Featurizer {
+    /// Number of random features M.
+    fn features(&self) -> usize;
+    /// phi(X): (L×d) -> (L×M).
+    fn phi(&self, x: &Mat) -> Mat;
+}
+
+impl Featurizer for FeatureMap {
+    fn features(&self) -> usize {
+        self.m()
+    }
+
+    fn phi(&self, x: &Mat) -> Mat {
+        self.apply(x)
+    }
+}
+
+/// The full identity of an attention kernel: feature kind, feature
+/// count, ORF mechanism, and the deterministic redraw schedule
+/// (seed + epoch length). Two models whose kernels differ in *any* of
+/// these fields carry incompatible stream state — [`Self::signature`]
+/// and the snapshot fingerprint are built from exactly these fields.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    pub kind: FeatureKind,
+    /// number of random features M
+    pub m: usize,
+    pub mech: OrfMechanism,
+    /// base seed of the deterministic draw schedule
+    pub seed: u64,
+    /// tokens per redraw epoch; 0 = never redraw
+    pub redraw_every: u64,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        KernelConfig {
+            kind: FeatureKind::Relu,
+            m: 32,
+            mech: OrfMechanism::Regular,
+            seed: 0x5eed,
+            redraw_every: 0,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Canonical one-line identity, used in fingerprints and reports.
+    pub fn signature(&self) -> String {
+        format!(
+            "{}:m{}:{}:seed{:016x}:redraw{}",
+            self.kind.name(),
+            self.m,
+            self.mech.name(),
+            self.seed,
+            self.redraw_every
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(self.kind.name())),
+            ("m", num(self.m as f64)),
+            ("mech", s(self.mech.name())),
+            // hex string: a u64 seed does not fit losslessly in an f64
+            ("seed", s(&format!("{:016x}", self.seed))),
+            ("redraw", num(self.redraw_every as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<KernelConfig> {
+        Ok(KernelConfig {
+            kind: FeatureKind::parse_or_err(j.req("kind")?.as_str()?)?,
+            m: j.req("m")?.as_usize()?,
+            mech: OrfMechanism::parse_or_err(j.req("mech")?.as_str()?)?,
+            seed: u64::from_str_radix(j.req("seed")?.as_str()?, 16)
+                .context("kernel seed is not hex")?,
+            redraw_every: j.req("redraw")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// A configured attention kernel: the [`KernelConfig`] identity plus the
+/// materialized draws. Epoch 0 is held directly (the hot path takes no
+/// lock); later epochs are drawn deterministically on demand and cached.
+#[derive(Debug)]
+pub struct AttentionKernel {
+    cfg: KernelConfig,
+    d: usize,
+    /// the epoch-0 draw: either sampled from `cfg.seed` or supplied by
+    /// [`Self::from_feature_map`] (checkpoint-loaded weights)
+    epoch0: Arc<FeatureMap>,
+    /// deterministic draws for epochs > 0, cached up to [`DRAW_CACHE`]
+    draws: Mutex<HashMap<u64, Arc<FeatureMap>>>,
+}
+
+impl Clone for AttentionKernel {
+    fn clone(&self) -> Self {
+        AttentionKernel {
+            cfg: self.cfg.clone(),
+            d: self.d,
+            epoch0: self.epoch0.clone(),
+            draws: Mutex::new(HashMap::new()),
+        }
+    }
+}
+
+impl AttentionKernel {
+    /// Build a kernel for head dimension `d`, sampling the epoch-0 draw
+    /// from the config's seed.
+    pub fn new(cfg: KernelConfig, d: usize) -> AttentionKernel {
+        assert!(cfg.m > 0 && d > 0, "attention kernel needs M > 0 and d > 0");
+        let epoch0 = Arc::new(Self::draw(&cfg, d, 0));
+        AttentionKernel { cfg, d, epoch0, draws: Mutex::new(HashMap::new()) }
+    }
+
+    /// Wrap an existing draw (e.g. features loaded from a checkpoint) as
+    /// the kernel's eternal epoch 0. Loaded features cannot be redrawn —
+    /// the schedule could not reproduce them — so `redraw_every` must
+    /// be 0.
+    pub fn from_feature_map(fm: FeatureMap, cfg: KernelConfig) -> AttentionKernel {
+        assert_eq!(fm.m(), cfg.m, "feature map M must match the kernel config");
+        assert_eq!(fm.kind, cfg.kind, "feature kind must match the kernel config");
+        assert_eq!(
+            cfg.redraw_every, 0,
+            "a checkpoint-loaded feature map cannot be redrawn"
+        );
+        let d = fm.d();
+        AttentionKernel { cfg, d, epoch0: Arc::new(fm), draws: Mutex::new(HashMap::new()) }
+    }
+
+    /// The deterministic draw for one epoch: a pure function of
+    /// (seed, epoch) — no process state, no draw history.
+    fn draw(cfg: &KernelConfig, d: usize, epoch: u64) -> FeatureMap {
+        let mut base = Pcg64::new(cfg.seed);
+        let mut rng = base.fork(epoch);
+        FeatureMap::sample(cfg.kind, cfg.m, d, cfg.mech, &mut rng)
+    }
+
+    pub fn config(&self) -> &KernelConfig {
+        &self.cfg
+    }
+
+    pub fn kind(&self) -> FeatureKind {
+        self.cfg.kind
+    }
+
+    /// Number of random features M.
+    pub fn m(&self) -> usize {
+        self.cfg.m
+    }
+
+    /// Head dimension d.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// The redraw epoch containing stream position `pos`.
+    pub fn epoch_of(&self, pos: u64) -> u64 {
+        if self.cfg.redraw_every == 0 { 0 } else { pos / self.cfg.redraw_every }
+    }
+
+    /// The next redraw boundary strictly after `pos` (None = never).
+    pub fn next_boundary(&self, pos: u64) -> Option<u64> {
+        if self.cfg.redraw_every == 0 {
+            None
+        } else {
+            Some((pos / self.cfg.redraw_every + 1) * self.cfg.redraw_every)
+        }
+    }
+
+    /// The feature map for a redraw epoch — bit-reproducible for any
+    /// epoch in any process (see module docs).
+    pub fn map_for_epoch(&self, epoch: u64) -> Arc<FeatureMap> {
+        if epoch == 0 {
+            return self.epoch0.clone();
+        }
+        let mut cache = self.draws.lock().expect("kernel draw cache poisoned");
+        if let Some(fm) = cache.get(&epoch) {
+            return fm.clone();
+        }
+        let fm = Arc::new(Self::draw(&self.cfg, self.d, epoch));
+        if cache.len() >= DRAW_CACHE {
+            // sessions stream forward: the smallest epoch is the coldest
+            let oldest = *cache.keys().min().expect("non-empty cache");
+            cache.remove(&oldest);
+        }
+        cache.insert(epoch, fm.clone());
+        fm
+    }
+
+    /// The epoch-0 draw (the kernel's identity draw for stateless uses:
+    /// full-sequence estimators, attention-matrix capture, digests).
+    pub fn feature_map(&self) -> &FeatureMap {
+        &self.epoch0
+    }
+
+    /// Fold the kernel's full identity into a running FNV-1a digest:
+    /// the config signature plus every byte of the epoch-0 draw, so two
+    /// kernels that differ only in schedule (or only in the materialized
+    /// features) digest differently.
+    pub fn digest_into(&self, h: &mut u64) {
+        *h = fnv1a64_extend(*h, self.cfg.signature().as_bytes());
+        for v in &self.epoch0.w.data {
+            *h = fnv1a64_extend(*h, &v.to_le_bytes());
+        }
+        for v in &self.epoch0.b {
+            *h = fnv1a64_extend(*h, &v.to_le_bytes());
+        }
+    }
+}
+
+/// A kernel handle featurizes with its **epoch-0 draw**, always: the
+/// generic estimators are stateless full-sequence views with no stream
+/// position, so there is no epoch to select. On a kernel with a live
+/// redraw schedule this means `favor_attention(&kernel, ...)` /
+/// `attention_matrix_favor(&kernel, ...)` describe epoch 0 only — the
+/// analysis semantics `NativeModel`'s attention capture documents — and
+/// will diverge from a streamed forward past the first boundary. Use
+/// [`AttentionKernel::map_for_epoch`] explicitly to featurize a
+/// specific epoch.
+impl Featurizer for AttentionKernel {
+    fn features(&self) -> usize {
+        self.cfg.m
+    }
+
+    fn phi(&self, x: &Mat) -> Mat {
+        self.epoch0.apply(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(redraw: u64) -> KernelConfig {
+        KernelConfig { kind: FeatureKind::Relu, m: 16, seed: 42, redraw_every: redraw, ..Default::default() }
+    }
+
+    #[test]
+    fn epoch_arithmetic() {
+        let k = AttentionKernel::new(cfg(64), 8);
+        assert_eq!(k.epoch_of(0), 0);
+        assert_eq!(k.epoch_of(63), 0);
+        assert_eq!(k.epoch_of(64), 1);
+        assert_eq!(k.next_boundary(0), Some(64));
+        assert_eq!(k.next_boundary(63), Some(64));
+        assert_eq!(k.next_boundary(64), Some(128));
+        let never = AttentionKernel::new(cfg(0), 8);
+        assert_eq!(never.epoch_of(1 << 40), 0);
+        assert_eq!(never.next_boundary(1 << 40), None);
+    }
+
+    #[test]
+    fn redraws_are_deterministic_and_distinct() {
+        let a = AttentionKernel::new(cfg(32), 8);
+        let b = AttentionKernel::new(cfg(32), 8);
+        for e in [0u64, 1, 2, 7] {
+            // same config => bit-identical draw, in any process
+            assert_eq!(a.map_for_epoch(e).w.data, b.map_for_epoch(e).w.data, "epoch {e}");
+        }
+        // distinct epochs => distinct projections
+        assert!(a.map_for_epoch(0).w.max_abs_diff(&a.map_for_epoch(1).w) > 1e-3);
+        // cached draws are stable across repeated lookups
+        let first = a.map_for_epoch(3).w.data.clone();
+        assert_eq!(first, a.map_for_epoch(3).w.data);
+    }
+
+    #[test]
+    fn kernel_phi_equals_epoch0_feature_map() {
+        let mut rng = Pcg64::new(9);
+        let k = AttentionKernel::new(cfg(0), 8);
+        let x = Mat::from_vec(5, 8, rng.gaussian_vec(40));
+        assert_eq!(k.phi(&x).data, k.feature_map().apply(&x).data);
+        assert_eq!(k.features(), 16);
+    }
+
+    #[test]
+    fn config_json_roundtrip_and_signature() {
+        let c = KernelConfig {
+            kind: FeatureKind::Positive,
+            m: 64,
+            mech: OrfMechanism::Hadamard,
+            seed: 0xdead_beef,
+            redraw_every: 4096,
+        };
+        let back = KernelConfig::from_json(&c.to_json()).unwrap();
+        assert_eq!(back, c);
+        let sig = c.signature();
+        assert!(sig.contains("favor+") && sig.contains("m64") && sig.contains("redraw4096"));
+        assert_ne!(sig, KernelConfig { redraw_every: 0, ..c }.signature());
+    }
+
+    #[test]
+    fn from_feature_map_pins_the_draw() {
+        let mut rng = Pcg64::new(11);
+        let fm = FeatureMap::sample(FeatureKind::Relu, 16, 4, OrfMechanism::Regular, &mut rng);
+        let w = fm.w.clone();
+        let k = AttentionKernel::from_feature_map(
+            fm,
+            KernelConfig { kind: FeatureKind::Relu, m: 16, seed: 0, redraw_every: 0, ..Default::default() },
+        );
+        assert_eq!(k.map_for_epoch(0).w.data, w.data);
+        assert_eq!(k.d(), 4);
+    }
+
+    #[test]
+    fn digest_separates_schedule_and_draw() {
+        let a = AttentionKernel::new(cfg(0), 8);
+        let b = AttentionKernel::new(cfg(64), 8); // same draw, different schedule
+        let c = AttentionKernel::new(KernelConfig { seed: 43, ..cfg(0) }, 8);
+        let digest = |k: &AttentionKernel| {
+            let mut h = crate::rng::FNV1A64_SEED;
+            k.digest_into(&mut h);
+            h
+        };
+        assert_ne!(digest(&a), digest(&b), "redraw schedule must be part of the identity");
+        assert_ne!(digest(&a), digest(&c), "the draw itself must be part of the identity");
+    }
+}

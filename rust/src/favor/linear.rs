@@ -10,7 +10,7 @@
 
 use crate::tensor::{axpy, dot, Mat};
 
-use super::features::FeatureMap;
+use super::kernel::Featurizer;
 use super::Direction;
 
 /// Numerical stabilizer added to the denominator (paper Appendix B.2).
@@ -71,11 +71,13 @@ pub fn favor_unidirectional(qp: &Mat, kp: &Mat, v: &Mat) -> Mat {
     state.advance(qp, kp, v)
 }
 
-/// Full FAVOR attention: map q/k through the feature map, then apply the
-/// direction-appropriate linear attention.
-pub fn favor_attention(fm: &FeatureMap, q: &Mat, k: &Mat, v: &Mat, dir: Direction) -> Mat {
-    let qp = fm.apply(q);
-    let kp = fm.apply(k);
+/// Full FAVOR attention: map q/k through the kernel's feature map, then
+/// apply the direction-appropriate linear attention. Generic over
+/// [`Featurizer`], so it runs the same for a raw [`FeatureMap`] draw and
+/// for an [`crate::favor::AttentionKernel`] handle.
+pub fn favor_attention<F: Featurizer + ?Sized>(fm: &F, q: &Mat, k: &Mat, v: &Mat, dir: Direction) -> Mat {
+    let qp = fm.phi(q);
+    let kp = fm.phi(k);
     match dir {
         Direction::Bidirectional => favor_bidirectional(&qp, &kp, v),
         Direction::Unidirectional => favor_unidirectional(&qp, &kp, v),

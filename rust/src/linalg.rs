@@ -104,6 +104,32 @@ pub enum OrfMechanism {
 }
 
 impl OrfMechanism {
+    /// Every mechanism, in the order surfaced by error messages.
+    pub const ALL: [OrfMechanism; 4] = [
+        OrfMechanism::Iid,
+        OrfMechanism::Regular,
+        OrfMechanism::Hadamard,
+        OrfMechanism::Givens,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OrfMechanism::Iid => "iid",
+            OrfMechanism::Regular => "r-orf",
+            OrfMechanism::Hadamard => "h-orf",
+            OrfMechanism::Givens => "g-orf",
+        }
+    }
+
+    /// Like [`Self::parse`], but an unknown mechanism names every valid
+    /// one — same contract as `FeatureKind::parse_or_err`.
+    pub fn parse_or_err(s: &str) -> anyhow::Result<Self> {
+        Self::parse(s).ok_or_else(|| {
+            let valid: Vec<&str> = Self::ALL.iter().map(OrfMechanism::name).collect();
+            anyhow::anyhow!("unknown ORF mechanism '{s}' (valid: {})", valid.join(", "))
+        })
+    }
+
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "iid" => OrfMechanism::Iid,

@@ -10,18 +10,21 @@
 //! ```
 //!
 //! The JSON header carries the identity and geometry — session id,
-//! stream position, per-state token counts and the
-//! [`ModelFingerprint`]; the payload is a `runtime::TensorFile`
-//! container holding the actual f32 tensors: one `state:{layer}:{head}`
-//! entry per carried M×(d_h+1) prefix sum, plus the vocab-sized
-//! `prev_row` context row once the stream has consumed a chunk. The
-//! trailing CRC32 (IEEE) makes truncation and bit-rot loud: a snapshot
-//! either decodes to exactly the captured state or refuses to decode.
+//! stream position, per-state token counts and redraw epochs, and the
+//! [`ModelFingerprint`] (which includes the per-layer attention-kernel
+//! configs: kind, M, ORF mechanism, redraw seed/schedule); the payload
+//! is a `runtime::TensorFile` container holding the actual f32 tensors:
+//! one `state:{layer}:{head}` entry per carried M×(d_h+1) prefix sum,
+//! plus the vocab-sized `prev_row` context row once the stream has
+//! consumed a chunk. The trailing CRC32 (IEEE) makes truncation and
+//! bit-rot loud: a snapshot either decodes to exactly the captured
+//! state or refuses to decode.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::favor::KernelConfig;
 use crate::jsonx::{num, obj, s, Json};
 use crate::runtime::TensorFile;
 use crate::stream::{ChunkScorer, StreamState};
@@ -32,7 +35,9 @@ const MAGIC: &[u8; 8] = b"PFRMSNAP";
 
 /// Bump on any incompatible change to the envelope or header schema;
 /// readers reject other versions loudly instead of guessing.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// v2: per-layer kernel configs replace the single `m` field, and every
+/// carried state records its redraw epoch.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// IEEE CRC32 (reflected, init/xorout 0xFFFFFFFF) — bitwise variant;
 /// snapshots are tens of kilobytes, so a lookup table buys nothing.
@@ -54,15 +59,19 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 /// exact stack it came from — two models with identical shapes but
 /// different weights (or resampled FAVOR features) would turn the
 /// carried prefix sums into silently wrong scores.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelFingerprint {
     pub layers: usize,
     pub heads: usize,
-    /// random-feature count M of the FAVOR feature map
-    pub m: usize,
     /// per-head value dimension d_h
     pub d_head: usize,
     pub vocab: usize,
+    /// per-layer attention-kernel identity (kind, M, ORF mechanism,
+    /// redraw seed/schedule): a snapshot refuses restore into a model
+    /// whose kernel layer differs in *any* field, even when every
+    /// tensor shape matches — e.g. an identical stack with a different
+    /// redraw schedule would reset context at different positions
+    pub kernels: Vec<KernelConfig>,
     /// [`NativeModel::weights_digest`] over every parameter byte
     pub weights: u64,
 }
@@ -71,26 +80,26 @@ impl ModelFingerprint {
     /// Fingerprint a streamable model. Errors on non-FAVOR attention —
     /// such a model has no carried state to snapshot in the first place.
     pub fn of(model: &NativeModel) -> Result<ModelFingerprint> {
-        let NativeAttention::Favor(fm) = &model.attention else {
+        let NativeAttention::Favor(kernels) = &model.attention else {
             bail!("only FAVOR models carry snapshottable stream state");
         };
         Ok(ModelFingerprint {
             layers: model.n_layers(),
             heads: model.n_heads,
-            m: fm.m(),
             d_head: model.d_model / model.n_heads,
             vocab: model.vocab_size,
+            kernels: kernels.iter().map(|k| k.config().clone()).collect(),
             weights: model.weights_digest(),
         })
     }
 
-    fn to_json(self) -> Json {
+    fn to_json(&self) -> Json {
         obj(vec![
             ("layers", num(self.layers as f64)),
             ("heads", num(self.heads as f64)),
-            ("m", num(self.m as f64)),
             ("d_head", num(self.d_head as f64)),
             ("vocab", num(self.vocab as f64)),
+            ("kernels", Json::Arr(self.kernels.iter().map(KernelConfig::to_json).collect())),
             // hex string: a u64 digest does not fit losslessly in a
             // JSON f64 number
             ("weights", s(&format!("{:016x}", self.weights))),
@@ -98,12 +107,22 @@ impl ModelFingerprint {
     }
 
     fn from_json(j: &Json) -> Result<ModelFingerprint> {
+        let layers = j.req("layers")?.as_usize()?;
+        let kernels = j
+            .req("kernels")?
+            .as_arr()?
+            .iter()
+            .map(KernelConfig::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if kernels.len() != layers {
+            bail!("fingerprint lists {} kernel(s) for {layers} layer(s)", kernels.len());
+        }
         Ok(ModelFingerprint {
-            layers: j.req("layers")?.as_usize()?,
+            layers,
             heads: j.req("heads")?.as_usize()?,
-            m: j.req("m")?.as_usize()?,
             d_head: j.req("d_head")?.as_usize()?,
             vocab: j.req("vocab")?.as_usize()?,
+            kernels,
             weights: u64::from_str_radix(j.req("weights")?.as_str()?, 16)
                 .context("fingerprint weight digest is not hex")?,
         })
@@ -159,9 +178,11 @@ impl SessionSnapshot {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut tensors = TensorFile::default();
         let mut tokens_seen = Vec::new();
+        let mut epochs = Vec::new();
         for (li, layer) in self.states.iter().enumerate() {
             for (hi, st) in layer.iter().enumerate() {
                 tokens_seen.push(num(st.tokens_seen() as f64));
+                epochs.push(num(st.epoch() as f64));
                 tensors.entries.push((
                     format!("state:{li}:{hi}"),
                     vec![st.matrix().rows, st.matrix().cols],
@@ -178,6 +199,7 @@ impl SessionSnapshot {
             ("has_prev_row", Json::Bool(self.prev_row.is_some())),
             ("fingerprint", self.fingerprint.to_json()),
             ("tokens_seen", Json::Arr(tokens_seen)),
+            ("epochs", Json::Arr(epochs)),
         ])
         .to_string();
         let payload = tensors.to_bytes();
@@ -235,25 +257,32 @@ impl SessionSnapshot {
         let pos = header.req("pos")?.as_usize()?;
         let has_prev_row = header.req("has_prev_row")?.as_bool()?;
         let fingerprint = ModelFingerprint::from_json(header.req("fingerprint")?)?;
-        let tokens_seen: Vec<u64> = header
-            .req("tokens_seen")?
-            .as_arr()?
-            .iter()
-            .map(|v| v.as_f64().map(|n| n as u64))
-            .collect::<Result<Vec<_>>>()?;
-        if tokens_seen.len() != fingerprint.layers * fingerprint.heads {
-            bail!(
-                "snapshot lists {} states, fingerprint implies {}",
-                tokens_seen.len(),
-                fingerprint.layers * fingerprint.heads
-            );
-        }
+        let counts_of = |key: &str| -> Result<Vec<u64>> {
+            let vals: Vec<u64> = header
+                .req(key)?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|n| n as u64))
+                .collect::<Result<Vec<_>>>()?;
+            if vals.len() != fingerprint.layers * fingerprint.heads {
+                bail!(
+                    "snapshot lists {} {key} entries, fingerprint implies {}",
+                    vals.len(),
+                    fingerprint.layers * fingerprint.heads
+                );
+            }
+            Ok(vals)
+        };
+        let tokens_seen = counts_of("tokens_seen")?;
+        let epochs = counts_of("epochs")?;
 
         let tensors = TensorFile::from_bytes(&bytes[header_end + 8..payload_end])
             .context("snapshot tensor payload")?;
-        let (m, dh) = (fingerprint.m, fingerprint.d_head);
+        let dh = fingerprint.d_head;
         let mut states = Vec::with_capacity(fingerprint.layers);
         for li in 0..fingerprint.layers {
+            // per-layer M: hybrid stacks carry differently-shaped sums
+            let m = fingerprint.kernels[li].m;
             let mut layer = Vec::with_capacity(fingerprint.heads);
             for hi in 0..fingerprint.heads {
                 let name = format!("state:{li}:{hi}");
@@ -268,6 +297,7 @@ impl SessionSnapshot {
                     dh,
                     Mat::from_vec(m, dh + 1, data.to_vec()),
                     tokens_seen[li * fingerprint.heads + hi],
+                    epochs[li * fingerprint.heads + hi],
                 ));
             }
             states.push(layer);
@@ -411,6 +441,61 @@ mod tests {
             .into_scorer(impostor)
             .unwrap_err();
         assert!(format!("{err:#}").contains("captured from"), "{err:#}");
+    }
+
+    #[test]
+    fn refuses_a_different_kernel_config() {
+        // identical weights and geometry, but the target's kernel layer
+        // has a different redraw schedule: the carried sums would reset
+        // at different positions, so restore must refuse. The kernel
+        // config reaches the fingerprint both through `kernels` and the
+        // weights digest (which folds in each kernel's signature).
+        let mut rng_a = Pcg64::new(33);
+        let mut rng_b = Pcg64::new(33);
+        let donor = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng_a));
+        let rescheduled = Arc::new(NativeModel::synthetic(
+            &SyntheticConfig { redraw_every: 64, ..Default::default() },
+            &mut rng_b,
+        ));
+        let mut scorer = ChunkScorer::new(donor).unwrap();
+        scorer.advance(&tokens(8, 34)).unwrap();
+        let snap = SessionSnapshot::capture("k", &scorer).unwrap();
+        assert_ne!(
+            snap.fingerprint.kernels[0].redraw_every,
+            64,
+            "donor streams without a redraw schedule"
+        );
+        let err = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(rescheduled)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("captured from"), "{err:#}");
+    }
+
+    #[test]
+    fn redraw_session_roundtrips_across_an_epoch_boundary() {
+        // capture mid-stream after crossing a redraw boundary; the
+        // restored scorer must continue bit-for-bit (epoch + sums + pos)
+        let mut rng = Pcg64::new(35);
+        let m = Arc::new(NativeModel::synthetic(
+            &SyntheticConfig { redraw_every: 24, ..Default::default() },
+            &mut rng,
+        ));
+        let mut original = ChunkScorer::new(m.clone()).unwrap();
+        original.advance(&tokens(40, 36)).unwrap(); // epochs 0 -> 1 inside
+        assert!(original.states()[0][0].epoch() > 0, "boundary must have been crossed");
+
+        let snap = SessionSnapshot::capture("re", &original).unwrap();
+        let mut restored =
+            SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap().into_scorer(m).unwrap();
+        let next = tokens(30, 37); // crosses the epoch-2 boundary at 48
+        let a = original.advance(&next).unwrap();
+        let b = restored.advance(&next).unwrap();
+        let (abits, bbits): (Vec<u32>, Vec<u32>) = (
+            a.logprob.iter().map(|v| v.to_bits()).collect(),
+            b.logprob.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(abits, bbits, "restored redraw session diverged");
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! predictions) for sequences far longer than any compiled artifact
 //! length. Resident state is the per-layer per-head FAVOR prefix sums —
 //! constant in the streamed length.
+//!
+//! Redraw awareness: a kernel with a live redraw schedule changes its
+//! feature draw at epoch boundaries (`favor::kernel`). The model
+//! forward splits chunks at those boundaries internally and resets the
+//! per-head sums (the context restarts there), while this scorer's
+//! carried `prev_row` survives the crossing — so per-token scores stay
+//! causal and chunk-boundary-invariant across redraws, and snapshots
+//! capture each state's epoch alongside its sums.
 
 use std::sync::Arc;
 

@@ -635,17 +635,15 @@ mod tests {
 
     #[test]
     fn budget_charges_true_resident_bytes() {
-        use crate::train::NativeAttention;
         let m = model();
         let mgr = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
-        // the estimate must equal the layers × heads × M × (d_h + 1)
+        // the estimate must equal the Σ_layers heads × M_layer × (d_h+1)
         // prefix sums plus the carried vocab-sized context row
-        let NativeAttention::Favor(fm) = &m.attention else {
-            panic!("synthetic model must be FAVOR");
-        };
+        let kernels = m.kernels().expect("synthetic model must be FAVOR");
         let dh = m.d_model / m.n_heads;
         let f32s = std::mem::size_of::<f32>();
-        let expect = m.n_layers() * m.n_heads * fm.m() * (dh + 1) * f32s + m.vocab_size * f32s;
+        let expect = kernels.iter().map(|k| m.n_heads * k.m() * (dh + 1) * f32s).sum::<usize>()
+            + m.vocab_size * f32s;
         assert_eq!(mgr.per_session_bytes(), expect);
 
         // ...and match what a live session actually carries at steady

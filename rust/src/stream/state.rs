@@ -14,7 +14,8 @@ use crate::favor::linear::STABILIZER;
 use crate::tensor::{axpy, Mat};
 
 /// Streaming state of one attention head: the running M×(d+1) prefix-sum
-/// matrix (value columns plus the fused ones-column for the denominator).
+/// matrix (value columns plus the fused ones-column for the denominator),
+/// tagged with the redraw epoch its sums were accumulated under.
 #[derive(Clone, Debug)]
 pub struct StreamState {
     /// number of random features M
@@ -23,14 +24,18 @@ pub struct StreamState {
     d: usize,
     /// running G^PS, shape M×(d+1)
     state: Mat,
-    /// total rows consumed since creation/reset
+    /// total rows consumed since creation/reset (cumulative across
+    /// redraw epochs — epoch transitions do not rewind it)
     tokens_seen: u64,
+    /// the kernel redraw epoch the prefix sums belong to: sums from one
+    /// epoch's feature space can never be mixed with another's
+    epoch: u64,
 }
 
 impl StreamState {
     /// Fresh state for M features and value dimension d.
     pub fn new(m: usize, d: usize) -> StreamState {
-        StreamState { m, d, state: Mat::zeros(m, d + 1), tokens_seen: 0 }
+        StreamState { m, d, state: Mat::zeros(m, d + 1), tokens_seen: 0, epoch: 0 }
     }
 
     pub fn m(&self) -> usize {
@@ -41,9 +46,23 @@ impl StreamState {
         self.d
     }
 
-    /// Rows consumed so far across all chunks.
+    /// Rows consumed so far across all chunks (and all redraw epochs).
     pub fn tokens_seen(&self) -> u64 {
         self.tokens_seen
+    }
+
+    /// The kernel redraw epoch this state's prefix sums belong to.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Cross into a new redraw epoch: zero the prefix sums (they live in
+    /// the previous draw's feature space — attention context restarts at
+    /// the boundary) while the cumulative token count keeps running.
+    /// Called by the model forward when a chunk segment enters `epoch`.
+    pub fn reset_for_epoch(&mut self, epoch: u64) {
+        self.state.data.fill(0.0);
+        self.epoch = epoch;
     }
 
     /// The raw M×(d+1) prefix-sum matrix — read-only view for snapshot
@@ -53,16 +72,18 @@ impl StreamState {
     }
 
     /// Rebuild a state from snapshot parts: the M×(d+1) prefix-sum
-    /// matrix plus the consumed-token count. Inverse of reading
-    /// [`Self::matrix`]/[`Self::tokens_seen`]; the restored state
-    /// continues the stream bit-for-bit where the captured one stopped.
-    pub fn from_parts(m: usize, d: usize, state: Mat, tokens_seen: u64) -> StreamState {
+    /// matrix, the consumed-token count and the redraw epoch the sums
+    /// were accumulated under. Inverse of reading
+    /// [`Self::matrix`]/[`Self::tokens_seen`]/[`Self::epoch`]; the
+    /// restored state continues the stream bit-for-bit where the
+    /// captured one stopped.
+    pub fn from_parts(m: usize, d: usize, state: Mat, tokens_seen: u64, epoch: u64) -> StreamState {
         assert_eq!(
             (state.rows, state.cols),
             (m, d + 1),
             "prefix-sum matrix must be M x (d+1)"
         );
-        StreamState { m, d, state, tokens_seen }
+        StreamState { m, d, state, tokens_seen, epoch }
     }
 
     /// Resident size of the carried state in bytes — constant in the
@@ -75,6 +96,7 @@ impl StreamState {
     pub fn reset(&mut self) {
         self.state.data.fill(0.0);
         self.tokens_seen = 0;
+        self.epoch = 0;
     }
 
     /// Consume one chunk of mapped features/values and return the chunk's
@@ -241,6 +263,29 @@ mod tests {
         }
         let streamed = Mat::from_vec(l, d, rows);
         assert!(streamed.max_abs_diff(&full) < 1e-6);
+    }
+
+    #[test]
+    fn epoch_reset_restarts_context_keeps_token_count() {
+        let (d, m) = (4usize, 8usize);
+        let mut rng = Pcg64::new(9);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, 10, d, 0.5);
+        let k = rand_mat(&mut rng, 10, d, 0.5);
+        let v = rand_mat(&mut rng, 10, d, 1.0);
+        let (qp, kp) = (fm.apply(&q), fm.apply(&k));
+
+        let mut st = StreamState::new(m, d);
+        let first = st.advance(&qp, &kp, &v);
+        st.reset_for_epoch(1);
+        assert_eq!(st.epoch(), 1);
+        assert_eq!(st.tokens_seen(), 10, "token count survives the epoch crossing");
+        // the zeroed sums make the next chunk behave like a fresh stream
+        let again = st.advance(&qp, &kp, &v);
+        assert!(first.max_abs_diff(&again) < 1e-7);
+        assert_eq!(st.tokens_seen(), 20);
+        st.reset();
+        assert_eq!((st.epoch(), st.tokens_seen()), (0, 0));
     }
 
     #[test]

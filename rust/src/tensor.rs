@@ -322,6 +322,40 @@ impl Batch {
     }
 }
 
+/// out = A[row_lo..row_hi, col_lo..col_lo+b.rows] @ B — the same
+/// K-tiled ikj/axpy kernel as [`matmul_into`]'s serial path (and the
+/// parallel path is bitwise-identical to serial), reading the row/column
+/// block of A in place instead of copying it out first. This is what the
+/// fused feature-map application rides on: per-head φ over the stacked
+/// QKV matrix without a `slice_head` memcpy per (sequence, head).
+pub fn matmul_block(
+    a: &Mat,
+    row_lo: usize,
+    row_hi: usize,
+    col_lo: usize,
+    b: &Mat,
+    out: &mut Mat,
+) {
+    let kdim = b.rows;
+    assert!(row_lo <= row_hi && row_hi <= a.rows, "bad row block");
+    assert!(col_lo + kdim <= a.cols, "column block exceeds A");
+    assert_eq!((out.rows, out.cols), (row_hi - row_lo, b.cols));
+    out.data.fill(0.0);
+    let n = b.cols;
+    for k0 in (0..kdim).step_by(K_TILE) {
+        let k1 = (k0 + K_TILE).min(kdim);
+        for i in row_lo..row_hi {
+            let arow = &a.row(i)[col_lo + k0..col_lo + k1];
+            let orow = &mut out.data[(i - row_lo) * n..(i - row_lo + 1) * n];
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik != 0.0 {
+                    axpy(aik, b.row(k0 + k), orow);
+                }
+            }
+        }
+    }
+}
+
 /// C = A^T @ B without materializing A^T.
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows);
@@ -433,6 +467,28 @@ mod tests {
             (0..300).map(|k| a.at(i, k) * b.at(k, j)).sum::<f32>()
         });
         assert!(got.max_abs_diff(&naive) < 1e-3);
+    }
+
+    #[test]
+    fn matmul_block_matches_copied_slice_bitwise() {
+        // reading the block in place must equal slicing it out and
+        // multiplying — bit for bit (same kernel, same order)
+        let a = Mat::from_fn(9, 14, |i, j| ((i * 13 + j * 5) % 11) as f32 * 0.37 - 1.5);
+        let b = Mat::from_fn(6, 4, |i, j| ((i * 3 + j) % 7) as f32 * 0.21 - 0.6);
+        let (row_lo, row_hi, col_lo) = (2, 7, 5);
+        let mut blk = Mat::zeros(row_hi - row_lo, b.cols);
+        matmul_block(&a, row_lo, row_hi, col_lo, &b, &mut blk);
+        let copied = Mat::from_fn(row_hi - row_lo, b.rows, |i, j| a.at(row_lo + i, col_lo + j));
+        assert_eq!(blk.data, copied.matmul(&b).data);
+    }
+
+    #[test]
+    fn matmul_block_full_range_equals_matmul() {
+        let a = Mat::from_fn(5, 300, |i, j| ((i * 7 + j) % 9) as f32 - 4.0);
+        let b = Mat::from_fn(300, 3, |i, j| ((i + j) % 5) as f32 * 0.5);
+        let mut out = Mat::zeros(5, 3);
+        matmul_block(&a, 0, 5, 0, &b, &mut out);
+        assert_eq!(out.data, a.matmul(&b).data);
     }
 
     #[test]

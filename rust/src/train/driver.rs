@@ -269,8 +269,8 @@ impl TrainState {
         if !attention.starts_with("favor-") {
             return Ok(()); // nothing to resample for exact/lsh/identity
         }
-        let kind = FeatureKind::parse(attention.trim_start_matches("favor-"))
-            .ok_or_else(|| anyhow!("unknown attention {attention}"))?;
+        let kind = FeatureKind::parse_or_err(attention.trim_start_matches("favor-"))
+            .map_err(|e| anyhow!("artifact attention '{attention}': {e}"))?;
         let feat_idx = meta.input_indices(Role::Feature);
         for (slot_pos, &i) in feat_idx.iter().enumerate() {
             let slot = &meta.inputs[i];

@@ -12,9 +12,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::favor::linear::{favor_bidirectional, favor_unidirectional};
 use crate::favor::{
-    attention_matrix_exact, attention_matrix_favor, exact_attention, favor_attention,
-    identity_attention, Direction, FeatureKind, FeatureMap,
+    attention_matrix_exact, attention_matrix_favor, exact_attention, AttentionKernel, Direction,
+    FeatureKind, FeatureMap, KernelConfig,
 };
 use crate::linalg::OrfMechanism;
 use crate::rng::Pcg64;
@@ -74,8 +75,58 @@ struct Layer {
 /// Which attention the native model runs (matches the artifact config).
 pub enum NativeAttention {
     Exact,
-    Favor(FeatureMap),
+    /// Kernelized FAVOR attention: one [`AttentionKernel`] handle per
+    /// layer, so hybrid stacks (different kinds/M/redraw schedules per
+    /// layer) are a configuration, not a fork of the forward path.
+    Favor(Vec<AttentionKernel>),
     Identity,
+}
+
+impl NativeAttention {
+    /// The same kernel replicated across every layer — the uniform
+    /// (non-hybrid) configuration.
+    pub fn favor_uniform(kernel: AttentionKernel, n_layers: usize) -> NativeAttention {
+        NativeAttention::Favor((0..n_layers).map(|_| kernel.clone()).collect())
+    }
+}
+
+/// One head's view into the fused QKV matrix: rows `[row_lo,
+/// row_lo+len)` of the (B·stride)×3d stack, with the head's q/k/v
+/// column blocks addressed in place. `phi_q`/`phi_k` featurize a block
+/// without materializing it (`FeatureMap::apply_block` — the fused phi
+/// path); `q`/`k`/`v` copy a block out for consumers that need a dense
+/// `Mat` (exact attention, the value columns of the FAVOR recurrence).
+pub struct HeadView<'a> {
+    qkv: &'a Mat,
+    row_lo: usize,
+    len: usize,
+    d: usize,
+    dh: usize,
+    head: usize,
+}
+
+impl HeadView<'_> {
+    pub fn q(&self) -> Mat {
+        slice_head(self.qkv, self.row_lo, self.len, self.head * self.dh, self.dh)
+    }
+
+    pub fn k(&self) -> Mat {
+        slice_head(self.qkv, self.row_lo, self.len, self.d + self.head * self.dh, self.dh)
+    }
+
+    pub fn v(&self) -> Mat {
+        slice_head(self.qkv, self.row_lo, self.len, 2 * self.d + self.head * self.dh, self.dh)
+    }
+
+    /// phi(q-block) computed in place on the stacked QKV rows.
+    pub fn phi_q(&self, fm: &FeatureMap) -> Mat {
+        fm.apply_block(self.qkv, self.row_lo, self.row_lo + self.len, self.head * self.dh)
+    }
+
+    /// phi(k-block) computed in place on the stacked QKV rows.
+    pub fn phi_k(&self, fm: &FeatureMap) -> Mat {
+        fm.apply_block(self.qkv, self.row_lo, self.row_lo + self.len, self.d + self.head * self.dh)
+    }
 }
 
 /// The assembled native model.
@@ -135,6 +186,16 @@ pub struct SyntheticConfig {
     pub n_features: usize,
     pub kind: FeatureKind,
     pub direction: Direction,
+    /// ORF mechanism for the kernel draws
+    pub mech: OrfMechanism,
+    /// base seed of the deterministic kernel-draw schedule; layer `l`
+    /// draws from `kernel_seed + l·φ` so layers get independent draws
+    pub kernel_seed: u64,
+    /// tokens per redraw epoch (0 = never); causal models only
+    pub redraw_every: u64,
+    /// per-layer feature-kind overrides (hybrid stacks); empty = `kind`
+    /// on every layer, otherwise the length must equal `n_layers`
+    pub layer_kinds: Vec<FeatureKind>,
 }
 
 impl Default for SyntheticConfig {
@@ -148,7 +209,35 @@ impl Default for SyntheticConfig {
             n_features: 32,
             kind: FeatureKind::Relu,
             direction: Direction::Unidirectional,
+            mech: OrfMechanism::Regular,
+            kernel_seed: 0x5eed,
+            redraw_every: 0,
+            layer_kinds: Vec::new(),
         }
+    }
+}
+
+impl SyntheticConfig {
+    /// The per-layer [`KernelConfig`]s this config describes.
+    pub fn layer_kernels(&self) -> Vec<KernelConfig> {
+        assert!(
+            self.layer_kinds.is_empty() || self.layer_kinds.len() == self.n_layers,
+            "layer_kinds must be empty or name all {} layers",
+            self.n_layers
+        );
+        (0..self.n_layers)
+            .map(|li| KernelConfig {
+                kind: self.layer_kinds.get(li).copied().unwrap_or(self.kind),
+                m: self.n_features,
+                mech: self.mech,
+                // golden-ratio stride: distinct, well-separated per-layer
+                // seeds from one base seed
+                seed: self
+                    .kernel_seed
+                    .wrapping_add((li as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+                redraw_every: self.redraw_every,
+            })
+            .collect()
     }
 }
 
@@ -194,13 +283,32 @@ impl NativeModel {
         }
 
         let attention = if cfg.attention.starts_with("favor-") {
-            let kind = FeatureKind::parse(cfg.attention.trim_start_matches("favor-"))
-                .ok_or_else(|| anyhow!("unknown attention {}", cfg.attention))?;
+            let kind = FeatureKind::parse_or_err(cfg.attention.trim_start_matches("favor-"))
+                .map_err(|e| anyhow!("artifact attention '{}': {e}", cfg.attention))?;
             let w_shape = shapes.get("w").copied().unwrap_or(&[0, 0]);
             let w = Mat::from_vec(w_shape[0], w_shape[1], fetch_vec("w")?);
             let b = fetch_vec("b").unwrap_or_else(|_| vec![0.0; w_shape[0]]);
-            let kernel_eps = if kind == FeatureKind::Softmax { 0.0 } else { 1e-3 };
-            NativeAttention::Favor(FeatureMap::from_parts(kind, w, b, kernel_eps))
+            let kernel_eps = match kind {
+                FeatureKind::Softmax => 0.0,
+                FeatureKind::Positive => 1e-6,
+                _ => 1e-3,
+            };
+            // checkpoint-loaded features are the kernel's eternal epoch 0:
+            // a trained draw cannot be redrawn from a schedule
+            let kcfg = KernelConfig {
+                kind,
+                m: w_shape[0],
+                mech: OrfMechanism::Regular,
+                seed: 0,
+                redraw_every: 0,
+            };
+            NativeAttention::favor_uniform(
+                AttentionKernel::from_feature_map(
+                    FeatureMap::from_parts(kind, w, b, kernel_eps),
+                    kcfg,
+                ),
+                cfg.n_layers,
+            )
         } else if cfg.attention == "exact" {
             NativeAttention::Exact
         } else if cfg.attention == "identity" {
@@ -227,21 +335,59 @@ impl NativeModel {
         })
     }
 
-    fn head_attention(&self, q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    /// Stateless full-sequence attention for one head of layer `li`.
+    /// The FAVOR path featurizes the QKV block in place (fused phi) with
+    /// the layer kernel's epoch-0 draw.
+    fn head_attention(&self, li: usize, hv: &HeadView) -> Mat {
         match &self.attention {
-            NativeAttention::Exact => exact_attention(q, k, v, self.direction),
-            NativeAttention::Favor(fm) => favor_attention(fm, q, k, v, self.direction),
-            NativeAttention::Identity => identity_attention(q, k, v, self.direction),
+            NativeAttention::Exact => exact_attention(&hv.q(), &hv.k(), &hv.v(), self.direction),
+            NativeAttention::Favor(kernels) => {
+                let fm = kernels[li].map_for_epoch(0);
+                let qp = hv.phi_q(&fm);
+                let kp = hv.phi_k(&fm);
+                match self.direction {
+                    Direction::Bidirectional => favor_bidirectional(&qp, &kp, &hv.v()),
+                    Direction::Unidirectional => favor_unidirectional(&qp, &kp, &hv.v()),
+                }
+            }
+            NativeAttention::Identity => hv.v(),
         }
     }
 
     /// The attention matrix a head *would* apply (for visualization).
-    fn head_attention_matrix(&self, q: &Mat, k: &Mat) -> Mat {
+    fn head_attention_matrix(&self, li: usize, q: &Mat, k: &Mat) -> Mat {
         match &self.attention {
             NativeAttention::Exact | NativeAttention::Identity => {
                 attention_matrix_exact(q, k, self.direction)
             }
-            NativeAttention::Favor(fm) => attention_matrix_favor(fm, q, k, self.direction),
+            NativeAttention::Favor(kernels) => {
+                attention_matrix_favor(&kernels[li], q, k, self.direction)
+            }
+        }
+    }
+
+    /// Whether any layer kernel has a live redraw schedule.
+    fn has_redraw(&self) -> bool {
+        matches!(&self.attention, NativeAttention::Favor(kernels)
+            if kernels.iter().any(|k| k.config().redraw_every > 0))
+    }
+
+    /// The next stream position (> `pos`) at which any layer's kernel
+    /// redraws. Chunks are split there so no fused segment crosses an
+    /// epoch boundary — the alignment rule that keeps chunked ==
+    /// single-shot exact under redrawing.
+    fn next_redraw_boundary(&self, pos: u64) -> Option<u64> {
+        let NativeAttention::Favor(kernels) = &self.attention else {
+            return None;
+        };
+        kernels.iter().filter_map(|k| k.next_boundary(pos)).min()
+    }
+
+    /// The per-layer attention kernels (None for exact/identity models).
+    pub fn kernels(&self) -> Option<&[AttentionKernel]> {
+        match &self.attention {
+            NativeAttention::Favor(kernels) => Some(kernels),
+            _ => None,
         }
     }
 
@@ -269,23 +415,41 @@ impl NativeModel {
         seqs: &[&[u8]],
         capture_attention: bool,
     ) -> (Vec<Mat>, Vec<Vec<Vec<Mat>>>) {
+        // a redraw-scheduled causal model must score a full sequence
+        // exactly as the streamed path would (chunked == single-shot is
+        // the invariant), so it routes through the epoch-aware chunk
+        // forward with fresh state. Attention capture keeps the
+        // stateless epoch-0 path: the L×L matrices are an analysis view.
+        if !capture_attention && self.has_redraw() && self.is_streamable() {
+            let mut states: Vec<Vec<Vec<StreamState>>> =
+                seqs.iter().map(|_| self.make_stream_states().expect("streamable")).collect();
+            let mut refs: Vec<&mut [Vec<StreamState>]> =
+                states.iter_mut().map(|s| s.as_mut_slice()).collect();
+            let offsets = vec![0usize; seqs.len()];
+            let logits = self
+                .forward_chunk_batch(seqs, &offsets, &mut refs)
+                .expect("fresh-state chunk forward over a streamable model");
+            return (logits, Vec::new());
+        }
         let offsets = vec![0usize; seqs.len()];
-        self.forward_batch_inner(seqs, &offsets, capture_attention, |_, _, _, q, k, v| {
-            self.head_attention(q, k, v)
+        self.forward_batch_inner(seqs, &offsets, capture_attention, |li, _, _, hv| {
+            self.head_attention(li, hv)
         })
     }
 
     /// The shared batched layer stack behind every forward path.
-    /// `attend(layer, seq, head, q, k, v)` supplies the per-head
+    /// `attend(layer, seq, head, head_view)` supplies the per-head
     /// attention outputs — stateless full-sequence attention for
     /// [`Self::forward_batch`], the carried FAVOR prefix-sum recurrence
-    /// for [`Self::forward_chunk_batch`].
+    /// for [`Self::forward_chunk_batch`]. The [`HeadView`] addresses the
+    /// head's q/k/v blocks inside the fused QKV stack in place, so the
+    /// FAVOR paths featurize without per-head `slice_head` memcpys.
     fn forward_batch_inner(
         &self,
         seqs: &[&[u8]],
         offsets: &[usize],
         capture_attention: bool,
-        mut attend: impl FnMut(usize, usize, usize, &Mat, &Mat, &Mat) -> Mat,
+        mut attend: impl FnMut(usize, usize, usize, &HeadView) -> Mat,
     ) -> (Vec<Mat>, Vec<Vec<Vec<Mat>>>) {
         debug_assert_eq!(seqs.len(), offsets.len());
         let bsz = seqs.len();
@@ -326,16 +490,14 @@ impl NativeModel {
                 let l = lens[s];
                 let mut layer_maps = Vec::new();
                 for head in 0..h {
-                    let q = slice_head(&qkv, row_lo, l, head * dh, dh);
-                    let k = slice_head(&qkv, row_lo, l, d + head * dh, dh);
-                    let v = slice_head(&qkv, row_lo, l, 2 * d + head * dh, dh);
-                    let out = attend(li, s, head, &q, &k, &v);
+                    let hv = HeadView { qkv: &qkv, row_lo, len: l, d, dh, head };
+                    let out = attend(li, s, head, &hv);
                     for i in 0..l {
                         head_outs.row_mut(row_lo + i)[head * dh..(head + 1) * dh]
                             .copy_from_slice(out.row(i));
                     }
                     if capture_attention {
-                        layer_maps.push(self.head_attention_matrix(&q, &k));
+                        layer_maps.push(self.head_attention_matrix(li, &hv.q(), &hv.k()));
                     }
                 }
                 if capture_attention {
@@ -364,6 +526,17 @@ impl NativeModel {
     /// Swap the attention mechanism (e.g. exact -> FAVOR on the same
     /// weights — the Fig. 11 error-propagation experiment).
     pub fn with_attention(mut self, attention: NativeAttention) -> Self {
+        // same invariant `synthetic` enforces: a redraw schedule only
+        // means something on the causal (streamable) direction — a
+        // bidirectional model would silently never redraw while its
+        // kernel signature advertises the schedule
+        if let NativeAttention::Favor(kernels) = &attention {
+            assert!(
+                self.direction == Direction::Unidirectional
+                    || kernels.iter().all(|k| k.config().redraw_every == 0),
+                "a redraw schedule needs the causal direction (epochs are stream positions)"
+            );
+        }
         self.attention = attention;
         // the digest covers the feature map: swapping attention
         // invalidates any cached value
@@ -399,9 +572,13 @@ impl NativeModel {
             }
             eat(&mut h, &self.lnf.g);
             eat(&mut h, &self.lnf.b);
-            if let NativeAttention::Favor(fm) = &self.attention {
-                eat(&mut h, &fm.w.data);
-                eat(&mut h, &fm.b);
+            if let NativeAttention::Favor(kernels) = &self.attention {
+                // each kernel folds in its full identity: config
+                // signature (kind/M/mech/seed/redraw schedule) plus the
+                // epoch-0 draw bytes
+                for kernel in kernels {
+                    kernel.digest_into(&mut h);
+                }
             }
             h
         })
@@ -422,15 +599,16 @@ impl NativeModel {
     /// Fresh per-layer, per-head streaming attention states for
     /// [`NativeModel::forward_chunk`].
     pub fn make_stream_states(&self) -> Result<Vec<Vec<StreamState>>> {
-        let NativeAttention::Favor(fm) = &self.attention else {
+        let NativeAttention::Favor(kernels) = &self.attention else {
             bail!("streaming requires FAVOR attention (exact has no constant-size state)");
         };
         if self.direction != Direction::Unidirectional {
             bail!("streaming requires a unidirectional (causal) model");
         }
         let dh = self.d_model / self.n_heads;
-        Ok((0..self.layers.len())
-            .map(|_| (0..self.n_heads).map(|_| StreamState::new(fm.m(), dh)).collect())
+        Ok(kernels
+            .iter()
+            .map(|k| (0..self.n_heads).map(|_| StreamState::new(k.m(), dh)).collect())
             .collect())
     }
 
@@ -469,7 +647,7 @@ impl NativeModel {
         offsets: &[usize],
         states: &mut [&mut [Vec<StreamState>]],
     ) -> Result<Vec<Mat>> {
-        let NativeAttention::Favor(fm) = &self.attention else {
+        let NativeAttention::Favor(kernels) = &self.attention else {
             bail!("streaming requires FAVOR attention");
         };
         if self.direction != Direction::Unidirectional {
@@ -483,27 +661,121 @@ impl NativeModel {
                 states.len()
             );
         }
-        for s in states.iter() {
-            if s.len() != self.layers.len() || s.iter().any(|l| l.len() != self.n_heads) {
+        for st in states.iter() {
+            if st.len() != self.layers.len() || st.iter().any(|l| l.len() != self.n_heads) {
                 bail!(
                     "stream state shape mismatch: expected {} layers x {} heads",
                     self.layers.len(),
                     self.n_heads
                 );
             }
+            for (li, layer) in st.iter().enumerate() {
+                if layer.iter().any(|h| h.m() != kernels[li].m()) {
+                    bail!(
+                        "stream state layer {li} carries M={}, its kernel expects M={}",
+                        layer.first().map_or(0, StreamState::m),
+                        kernels[li].m()
+                    );
+                }
+            }
         }
-        let (logits, _) = self.forward_batch_inner(seqs, offsets, false, |li, s, head, q, k, v| {
-            let qp = fm.apply(q);
-            let kp = fm.apply(k);
-            states[s][li][head].advance(&qp, &kp, v)
-        });
-        Ok(logits)
+
+        // Fast path — no kernel redraws (the only configuration
+        // artifact-backed models can have): every state is pinned to
+        // epoch 0 and no chunk needs splitting, so the logits flow
+        // straight out of the fused forward without the per-segment
+        // accumulation copy below.
+        if !self.has_redraw() {
+            let (logits, _) =
+                self.forward_batch_inner(seqs, offsets, false, |li, s, head, hv| {
+                    let fm = kernels[li].map_for_epoch(0);
+                    let qp = hv.phi_q(&fm);
+                    let kp = hv.phi_k(&fm);
+                    states[s][li][head].advance(&qp, &kp, &hv.v())
+                });
+            return Ok(logits);
+        }
+
+        let bsz = seqs.len();
+        let vocab = self.vocab_size;
+        // Chunks are consumed in *epoch-aligned segments*: each round
+        // takes every session's tokens up to its next redraw boundary,
+        // so no fused segment ever crosses an epoch boundary for any
+        // layer.
+        let mut outs: Vec<Vec<f32>> =
+            seqs.iter().map(|s| Vec::with_capacity(s.len() * vocab)).collect();
+        let mut done = vec![0usize; bsz];
+        loop {
+            let mut idxs: Vec<usize> = Vec::new();
+            let mut segs: Vec<&[u8]> = Vec::new();
+            let mut segoffs: Vec<usize> = Vec::new();
+            for s in 0..bsz {
+                if done[s] >= seqs[s].len() {
+                    continue;
+                }
+                let pos = offsets[s] + done[s];
+                let seg_end = match self.next_redraw_boundary(pos as u64) {
+                    Some(boundary) => {
+                        (done[s] + (boundary - pos as u64) as usize).min(seqs[s].len())
+                    }
+                    None => seqs[s].len(),
+                };
+                idxs.push(s);
+                segs.push(&seqs[s][done[s]..seg_end]);
+                segoffs.push(pos);
+            }
+            if idxs.is_empty() {
+                break;
+            }
+            // entering a new epoch resets the carried prefix sums: they
+            // live in the previous draw's feature space and cannot be
+            // mixed with the new draw's queries
+            for (&s, &off) in idxs.iter().zip(&segoffs) {
+                for (li, kernel) in kernels.iter().enumerate() {
+                    let epoch = kernel.epoch_of(off as u64);
+                    for st in states[s][li].iter_mut() {
+                        if st.epoch() > epoch {
+                            bail!(
+                                "stream state of layer {li} is at redraw epoch {} but the \
+                                 chunk starts in epoch {epoch}: state and offset disagree",
+                                st.epoch()
+                            );
+                        }
+                        if st.epoch() < epoch {
+                            st.reset_for_epoch(epoch);
+                        }
+                    }
+                }
+            }
+            let (logits, _) =
+                self.forward_batch_inner(&segs, &segoffs, false, |li, j, head, hv| {
+                    let kernel = &kernels[li];
+                    let fm = kernel.map_for_epoch(kernel.epoch_of(segoffs[j] as u64));
+                    let qp = hv.phi_q(&fm);
+                    let kp = hv.phi_k(&fm);
+                    states[idxs[j]][li][head].advance(&qp, &kp, &hv.v())
+                });
+            for (j, logit) in logits.into_iter().enumerate() {
+                let s = idxs[j];
+                done[s] += segs[j].len();
+                outs[s].extend(logit.data);
+            }
+        }
+        Ok(outs
+            .into_iter()
+            .zip(seqs)
+            .map(|(data, seq)| Mat::from_vec(seq.len(), vocab, data))
+            .collect())
     }
 
     /// Randomly initialized model for streaming tests, benches and
     /// artifact-free demos (no checkpoint required).
     pub fn synthetic(cfg: &SyntheticConfig, rng: &mut Pcg64) -> NativeModel {
         assert!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0, "d_model % n_heads != 0");
+        assert!(
+            cfg.redraw_every == 0 || cfg.direction == Direction::Unidirectional,
+            "a redraw schedule needs the causal direction (epochs are stream positions)"
+        );
         let dh = cfg.d_model / cfg.n_heads;
         let dense = |din: usize, dout: usize, rng: &mut Pcg64| -> Dense {
             let scale = 1.0 / (din as f32).sqrt();
@@ -532,7 +804,12 @@ impl NativeModel {
             cfg.d_model,
             rng.gaussian_vec(cfg.vocab_size * cfg.d_model).iter().map(|v| v * 0.1).collect(),
         );
-        let fm = FeatureMap::sample(cfg.kind, cfg.n_features, dh, OrfMechanism::Regular, rng);
+        // kernels draw from the deterministic per-layer schedule, not
+        // the model rng: the same KernelConfig always reproduces the
+        // same features, which is what redraw epochs and snapshot
+        // compatibility are built on
+        let kernels: Vec<AttentionKernel> =
+            cfg.layer_kernels().into_iter().map(|kc| AttentionKernel::new(kc, dh)).collect();
         NativeModel {
             d_model: cfg.d_model,
             n_heads: cfg.n_heads,
@@ -541,7 +818,7 @@ impl NativeModel {
             embed,
             lnf: ln(cfg.d_model),
             layers,
-            attention: NativeAttention::Favor(fm),
+            attention: NativeAttention::Favor(kernels),
             digest: std::sync::OnceLock::new(),
         }
     }
@@ -598,6 +875,87 @@ mod tests {
             let diff = batched[s].max_abs_diff(&single);
             assert!(diff < 1e-5, "seq {s}: batched forward diverges by {diff}");
         }
+    }
+
+    #[test]
+    fn hybrid_per_layer_kernels_forward_and_stream() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(31);
+        let cfg = SyntheticConfig {
+            layer_kinds: vec![FeatureKind::Relu, FeatureKind::Positive],
+            ..Default::default()
+        };
+        let model = NativeModel::synthetic(&cfg, &mut rng);
+        let kinds: Vec<FeatureKind> =
+            model.kernels().unwrap().iter().map(AttentionKernel::kind).collect();
+        assert_eq!(kinds, cfg.layer_kinds);
+
+        let toks: Vec<u8> = (0..48).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+        let (single, _) = model.forward(&toks, false);
+        assert!(single.data.iter().all(|v| v.is_finite()));
+
+        // the hybrid stack still streams chunked == single-shot
+        let mut states = model.make_stream_states().unwrap();
+        let mut streamed = Vec::new();
+        for (lo, hi) in [(0usize, 13usize), (13, 30), (30, 48)] {
+            streamed.extend(model.forward_chunk(&toks[lo..hi], lo, &mut states).unwrap().data);
+        }
+        let streamed = Mat::from_vec(48, model.vocab_size, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-4, "hybrid chunked forward diverges by {diff}");
+    }
+
+    #[test]
+    fn redraw_epoch_resets_are_chunk_invariant() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(37);
+        let cfg = SyntheticConfig { redraw_every: 20, ..Default::default() };
+        let model = NativeModel::synthetic(&cfg, &mut rng);
+        let toks: Vec<u8> = (0..64).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+
+        // single-shot routes through the epoch-aware path internally
+        let (single, _) = model.forward(&toks, false);
+
+        // a chunking that crosses the epoch boundaries at 20/40/60
+        // mid-chunk must reproduce it
+        let mut states = model.make_stream_states().unwrap();
+        let mut streamed = Vec::new();
+        for (lo, hi) in [(0usize, 7usize), (7, 33), (33, 64)] {
+            streamed.extend(model.forward_chunk(&toks[lo..hi], lo, &mut states).unwrap().data);
+        }
+        let streamed = Mat::from_vec(64, model.vocab_size, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-4, "redraw chunked forward diverges by {diff}");
+        // and the carried states ended in epoch 3 (position 63)
+        for layer in &states {
+            for st in layer {
+                assert_eq!(st.epoch(), 3, "state should track the final epoch");
+            }
+        }
+        // sanity: the redraw model genuinely differs from a never-redraw
+        // twin past the first boundary
+        let frozen =
+            NativeModel::synthetic(&SyntheticConfig { redraw_every: 0, ..cfg }, &mut Pcg64::new(37));
+        let (frozen_logits, _) = frozen.forward(&toks, false);
+        assert!(
+            single.rows_slice(20, 64).max_abs_diff(&frozen_logits.rows_slice(20, 64)) > 1e-6,
+            "epochs past the first boundary must use a redrawn kernel"
+        );
+    }
+
+    #[test]
+    fn stale_state_epoch_is_rejected() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(41);
+        let model =
+            NativeModel::synthetic(&SyntheticConfig { redraw_every: 16, ..Default::default() }, &mut rng);
+        let toks: Vec<u8> = (0..32).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+        let mut states = model.make_stream_states().unwrap();
+        model.forward_chunk(&toks, 0, &mut states).unwrap();
+        // states are now in epoch 1; replaying an epoch-0 offset must
+        // fail loudly instead of mixing feature spaces
+        let err = model.forward_chunk(&toks[..8], 0, &mut states).unwrap_err();
+        assert!(format!("{err:#}").contains("epoch"), "{err:#}");
     }
 
     #[test]

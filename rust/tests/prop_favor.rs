@@ -191,16 +191,8 @@ fn prop_error_decreases_with_m() {
 fn prop_feature_maps_finite_for_all_kinds() {
     forall("feature finiteness", |rng| {
         let (l, d, m) = rand_dims(rng);
-        for kind in [
-            FeatureKind::Softmax,
-            FeatureKind::Relu,
-            FeatureKind::Sigmoid,
-            FeatureKind::Abs,
-            FeatureKind::Gelu,
-            FeatureKind::Cos,
-            FeatureKind::Tanh,
-            FeatureKind::Identity,
-        ] {
+        // the full pluggable-kernel menu, clamped exp and FAVOR+ included
+        for kind in FeatureKind::ALL {
             let fm = FeatureMap::sample(kind, m, d, OrfMechanism::Regular, rng);
             let x = rand_mat(rng, l, d, 1.0);
             let phi = fm.apply(&x);

@@ -1,0 +1,185 @@
+//! Property tests of the pluggable attention-kernel layer (same
+//! seeded-generator harness as `prop_favor.rs` — rerun any failure with
+//! the printed seed):
+//!
+//!   * FAVOR+ positive features never produce a non-positive attention
+//!     normalizer D, even on adversarially scaled inputs;
+//!   * FAVOR+ approximates exact softmax attention within the same
+//!     tolerance envelope as trig features at equal M, in both
+//!     directions;
+//!   * the kernel handle is a zero-cost seam: `favor_attention` through
+//!     an `AttentionKernel` is bitwise-identical to the raw epoch-0
+//!     `FeatureMap`, and the in-place fused phi equals the copy-and-apply
+//!     path bit for bit;
+//!   * the clamped `exp` generalized-attention kernel survives
+//!     adversarial projections (regression: unguarded exp overflowed to
+//!     inf and poisoned whole rows);
+//!   * FAVOR+ streams: chunked `StreamState::advance` over random splits
+//!     equals the single-shot estimator.
+
+use performer::favor::linear::{favor_unidirectional, row_mass};
+use performer::favor::{
+    exact_attention, favor_attention, AttentionKernel, Direction, FeatureKind, FeatureMap,
+    KernelConfig,
+};
+use performer::linalg::OrfMechanism;
+use performer::rng::Pcg64;
+use performer::stream::StreamState;
+use performer::tensor::Mat;
+
+const CASES: u64 = 25;
+
+/// Tiny property-test harness: runs `f` across seeded cases, panics with
+/// the failing seed for reproduction.
+fn forall(name: &str, f: impl Fn(&mut Pcg64)) {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(0xfeed ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn rand_mat(rng: &mut Pcg64, r: usize, c: usize, scale: f32) -> Mat {
+    Mat::from_vec(r, c, rng.gaussian_vec(r * c).iter().map(|v| v * scale).collect())
+}
+
+#[test]
+fn prop_positive_normalizer_never_nonpositive() {
+    forall("FAVOR+ normalizer D > 0", |rng| {
+        let l = 8 + rng.below(24);
+        let d = [4usize, 8, 16][rng.below(3)];
+        let m = [8usize, 16, 32][rng.below(3)];
+        // adversarial scales included: huge activations once overflowed
+        // unstabilized positive features
+        let scale = [0.5f32, 2.0, 50.0, 500.0][rng.below(4)];
+        let fm = FeatureMap::sample(FeatureKind::Positive, m, d, OrfMechanism::Regular, rng);
+        let qp = fm.apply(&rand_mat(rng, l, d, scale));
+        let kp = fm.apply(&rand_mat(rng, l, d, scale));
+        assert!(qp.data.iter().chain(&kp.data).all(|v| v.is_finite() && *v > 0.0));
+        for (i, mass) in row_mass(&qp, &kp).iter().enumerate() {
+            assert!(
+                mass.is_finite() && *mass > 0.0,
+                "row {i}: normalizer mass {mass} must be strictly positive (scale {scale})"
+            );
+        }
+    });
+}
+
+#[test]
+fn positive_matches_exact_attention_within_trig_envelope() {
+    // the satellite contract: FAVOR+ at equal M lands inside the same
+    // tolerance envelope the trig estimator is pinned to (0.05 bid /
+    // 0.08 uni in favor::linear's tests)
+    let (l, d, m) = (24usize, 8usize, 1024usize);
+    for (dir, tol, seed) in [
+        (Direction::Bidirectional, 0.05f64, 61u64),
+        (Direction::Unidirectional, 0.08, 62),
+    ] {
+        let mut rng = Pcg64::new(seed);
+        let q = rand_mat(&mut rng, l, d, 0.4);
+        let k = rand_mat(&mut rng, l, d, 0.4);
+        let v = rand_mat(&mut rng, l, d, 1.0);
+        let exact = exact_attention(&q, &k, &v, dir);
+        let pos = FeatureMap::sample(FeatureKind::Positive, m, d, OrfMechanism::Regular, &mut rng);
+        let err_pos = exact.mean_abs_diff(&favor_attention(&pos, &q, &k, &v, dir));
+        assert!(err_pos < tol, "{dir:?}: FAVOR+ error {err_pos} exceeds the {tol} envelope");
+
+        // and it should not be wildly worse than trig on the same draw
+        // budget (positive features exist to *reduce* variance)
+        let trig = FeatureMap::sample(FeatureKind::Softmax, m, d, OrfMechanism::Regular, &mut rng);
+        let err_trig = exact.mean_abs_diff(&favor_attention(&trig, &q, &k, &v, dir));
+        assert!(
+            err_pos < err_trig * 3.0 + 1e-3,
+            "{dir:?}: FAVOR+ {err_pos} should be comparable to trig {err_trig}"
+        );
+    }
+}
+
+#[test]
+fn kernel_handle_is_bitwise_transparent() {
+    forall("favor_attention(kernel) == favor_attention(feature_map)", |rng| {
+        let l = 8 + rng.below(16);
+        let d = [4usize, 8][rng.below(2)];
+        let kind = [FeatureKind::Relu, FeatureKind::Positive, FeatureKind::Softmax]
+            [rng.below(3)];
+        let kernel = AttentionKernel::new(
+            KernelConfig { kind, m: 16, seed: rng.next_u64(), ..Default::default() },
+            d,
+        );
+        let q = rand_mat(rng, l, d, 0.5);
+        let k = rand_mat(rng, l, d, 0.5);
+        let v = rand_mat(rng, l, d, 1.0);
+        for dir in [Direction::Bidirectional, Direction::Unidirectional] {
+            let via_kernel = favor_attention(&kernel, &q, &k, &v, dir);
+            let via_map = favor_attention(kernel.feature_map(), &q, &k, &v, dir);
+            assert_eq!(via_kernel.data, via_map.data, "{kind:?} {dir:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_fused_phi_block_equals_copied_block() {
+    forall("apply_block == apply(copied slice)", |rng| {
+        let rows = 6 + rng.below(10);
+        let d = [4usize, 8][rng.below(2)];
+        let width = 3 * d; // a QKV-like stack
+        let col_lo = d * rng.below(3);
+        let kind = [FeatureKind::Relu, FeatureKind::Positive, FeatureKind::Softmax, FeatureKind::Exp]
+            [rng.below(4)];
+        let fm = FeatureMap::sample(kind, 12, d, OrfMechanism::Regular, rng);
+        let x = rand_mat(rng, rows, width, 0.8);
+        let lo = rng.below(rows / 2);
+        let hi = lo + 1 + rng.below(rows - lo - 1);
+        let blk = fm.apply_block(&x, lo, hi, col_lo);
+        let copied = Mat::from_fn(hi - lo, d, |i, j| x.at(lo + i, col_lo + j));
+        assert_eq!(blk.data, fm.apply(&copied).data, "{kind:?}");
+    });
+}
+
+#[test]
+fn exp_kernel_survives_adversarial_inputs_end_to_end() {
+    // regression for the unguarded exp overflow: run the whole linear
+    // attention, not just the feature map
+    let mut rng = Pcg64::new(77);
+    let (l, d, m) = (16usize, 8usize, 16usize);
+    let fm = FeatureMap::sample(FeatureKind::Exp, m, d, OrfMechanism::Regular, &mut rng);
+    for scale in [1.0f32, 30.0, 300.0, 3000.0] {
+        let q = rand_mat(&mut rng, l, d, scale);
+        let k = rand_mat(&mut rng, l, d, scale);
+        let v = rand_mat(&mut rng, l, d, 1.0);
+        for dir in [Direction::Bidirectional, Direction::Unidirectional] {
+            let out = favor_attention(&fm, &q, &k, &v, dir);
+            assert!(
+                out.data.iter().all(|x| x.is_finite()),
+                "scale {scale} {dir:?}: exp kernel output went non-finite"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_positive_features_stream_chunked_equals_single_shot() {
+    forall("FAVOR+ chunked == single shot", |rng| {
+        let l = 16 + rng.below(48);
+        let (d, m) = (8usize, 16usize);
+        let fm = FeatureMap::sample(FeatureKind::Positive, m, d, OrfMechanism::Regular, rng);
+        let qp = fm.apply(&rand_mat(rng, l, d, 0.5));
+        let kp = fm.apply(&rand_mat(rng, l, d, 0.5));
+        let v = rand_mat(rng, l, d, 1.0);
+        let single = favor_unidirectional(&qp, &kp, &v);
+
+        let mut st = StreamState::new(m, d);
+        let mut rows = Vec::with_capacity(l * d);
+        let mut lo = 0;
+        while lo < l {
+            let hi = (lo + 1 + rng.below(11)).min(l);
+            rows.extend(st.advance(&qp.rows_slice(lo, hi), &kp.rows_slice(lo, hi), &v.rows_slice(lo, hi)).data);
+            lo = hi;
+        }
+        let streamed = Mat::from_vec(l, d, rows);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-6, "FAVOR+ chunked stream diverges by {diff}");
+    });
+}

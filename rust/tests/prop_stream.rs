@@ -115,6 +115,83 @@ fn prop_chunked_model_forward_equals_single_shot() {
 }
 
 #[test]
+fn prop_redraw_chunked_equals_single_shot() {
+    // a kernel with a live redraw schedule: epoch boundaries at every 24
+    // tokens redraw the features and reset the attention context. Any
+    // chunking — boundaries mid-chunk included — must reproduce the
+    // single-shot forward, because the model splits chunks into
+    // epoch-aligned segments internally.
+    let mut mrng = Pcg64::new(103);
+    let model = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig {
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            redraw_every: 24,
+            ..Default::default()
+        },
+        &mut mrng,
+    ));
+    forall("redraw: chunked forward == forward", |rng| {
+        let l = 30 + rng.below(70); // always crosses >= 1 boundary
+        let toks = aa_tokens(rng, l);
+        let (single, _) = model.forward(&toks, false);
+
+        let mut states = model.make_stream_states().unwrap();
+        let mut streamed = Vec::new();
+        for (lo, hi) in rand_splits(rng, l) {
+            let logits = model.forward_chunk(&toks[lo..hi], lo, &mut states).unwrap();
+            streamed.extend(logits.data);
+        }
+        let streamed = Mat::from_vec(l, model.vocab_size, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-4, "redraw chunked forward diverges by {diff}");
+    });
+}
+
+#[test]
+fn scorer_pins_chunked_scoring_across_a_forced_redraw_boundary() {
+    // the prop_stream satellite case: a session whose chunk sizes force
+    // a redraw-epoch boundary mid-chunk and mid-session must score
+    // exactly like the single-chunk session
+    let mut rng = Pcg64::new(104);
+    let model = Arc::new(NativeModel::synthetic(
+        &SyntheticConfig { redraw_every: 16, ..Default::default() },
+        &mut rng,
+    ));
+    let toks = aa_tokens(&mut rng, 45); // boundaries at 16 and 32
+
+    let mut one = ChunkScorer::new(model.clone()).unwrap();
+    let whole = one.advance(&toks).unwrap();
+
+    let mut many = ChunkScorer::new(model.clone()).unwrap();
+    let mut got = Vec::new();
+    for (lo, hi) in [(0usize, 10usize), (10, 37), (37, 45)] {
+        got.extend(many.advance(&toks[lo..hi]).unwrap().logprob);
+    }
+    assert_eq!(whole.logprob.len(), got.len());
+    let max_diff = whole
+        .logprob
+        .iter()
+        .zip(&got)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(
+        max_diff < 1e-5,
+        "redraw boundaries must be chunk-invariant (diff {max_diff})"
+    );
+    // both scorers ended in epoch 2 (position 44)
+    for scorer in [&one, &many] {
+        for layer in scorer.states() {
+            for st in layer {
+                assert_eq!(st.epoch(), 2);
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_forward_batch_equals_independent_forwards() {
     let mut mrng = Pcg64::new(101);
     let model = Arc::new(NativeModel::synthetic(
