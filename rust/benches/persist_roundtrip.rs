@@ -1,17 +1,20 @@
 //! Durable-persistence bench: what session durability costs. Measures
 //! snapshot encode/save latency, load/rehydrate latency and snapshot
-//! size for one session, then the end-to-end spill/rehydrate churn a
-//! budget-constrained `SessionManager` pays per chunk, and a full
+//! size for one session, the end-to-end spill/rehydrate churn a
+//! budget-constrained `SessionManager` pays per chunk, the **eviction
+//! enqueue latency of the background spill writer vs the old blocking
+//! write** (the serving thread no longer pays the fsync), **delta vs
+//! full `checkpoint_all`** on N sessions with k dirty, and a full
 //! `checkpoint_all` → `restore_from` migration.
 //!
 //!   cargo bench --bench persist_roundtrip            # full sweep
 //!   cargo bench --bench persist_roundtrip -- --test  # smoke mode (CI)
 //!
 //! Exits non-zero if a spill/rehydrate round trip ever changes a score
-//! bit, or if the per-session snapshot stops being constant-size (it is
+//! bit, if the per-session snapshot stops being constant-size (it is
 //! the FAVOR carried state — growing with stream length would mean the
-//! subsystem's core claim broke). Writes BENCH_persist.json for the
-//! perf trajectory.
+//! subsystem's core claim broke), or if a delta export writes more than
+//! its dirty set. Writes BENCH_persist.json for the perf trajectory.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -114,6 +117,7 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let churn_secs = t0.elapsed().as_secs_f64();
+    mgr.sync_spills()?; // settle the write-back queue: exact counters
     let st = mgr.stats();
     assert!(bitwise, "spill/rehydrate changed scores");
     assert!(st.spills > 0 && st.rehydrations > 0, "churn loop must hit the spill tier");
@@ -129,6 +133,80 @@ fn main() -> anyhow::Result<()> {
         st.checkpoint_bytes.to_string(),
         fmt_secs(mean_rehydrate),
         format!("{:.0}", (2 * rounds * chunk) as f64 / churn_secs.max(1e-12)),
+    ]);
+    println!("{}", rep.render());
+
+    // ---- eviction enqueue latency vs the old blocking spill write ----
+    // The serving thread now pays a capture+encode (memcpy scale) per
+    // eviction; the fsynced write happens on the background writer. The
+    // blocking comparator is `Checkpointer::save` on the same state —
+    // exactly what PR 3's eviction path executed inline.
+    let enqueue_secs = st.spill_enqueue_nanos as f64 / 1e9 / st.spills.max(1) as f64;
+    let write_secs = st.spill_write_nanos as f64 / 1e9 / st.spill_commits.max(1) as f64;
+    let mut rep = Report::new(
+        "Async spill writer — serving-thread eviction cost vs the old blocking write",
+        &["spills", "commits", "cancels", "enqueue", "bg_write", "blocking_save", "speedup"],
+    );
+    rep.row(vec![
+        st.spills.to_string(),
+        st.spill_commits.to_string(),
+        st.spill_cancels.to_string(),
+        fmt_secs(enqueue_secs),
+        fmt_secs(write_secs),
+        fmt_secs(save_s),
+        format!("{:.1}x", save_s / enqueue_secs.max(1e-12)),
+    ]);
+    println!("{}", rep.render());
+
+    // ---- delta vs full checkpoint_all: k dirty of N sessions ----
+    let n_sessions = if smoke { 4usize } else { env_usize("PERSIST_SESSIONS", 16) };
+    let k_dirty = (n_sessions / 4).max(1);
+    let delta_dir = dir.join("delta");
+    let mut fleet = SessionManager::new(model.clone(), SessionConfig::default())?;
+    for s in 0..n_sessions {
+        let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+        fleet.advance(&format!("u{s}"), &toks)?;
+    }
+    let t0 = Instant::now();
+    let full_written = fleet.checkpoint_all(&delta_dir)?;
+    let full_secs = t0.elapsed().as_secs_f64();
+    for s in 0..k_dirty {
+        let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+        fleet.advance(&format!("u{s}"), &toks)?;
+    }
+    let t1 = Instant::now();
+    let d = fleet.checkpoint_delta(&delta_dir)?;
+    let delta_secs = t1.elapsed().as_secs_f64();
+    assert_eq!(full_written, n_sessions);
+    assert_eq!(
+        (d.written, d.retained),
+        (k_dirty, n_sessions - k_dirty),
+        "delta must write O(k): exactly the dirty sessions"
+    );
+    // a delta-chain restore must match the live state bitwise
+    let mut replica2 = SessionManager::new(model.clone(), SessionConfig::default())?;
+    assert_eq!(replica2.restore_from(&delta_dir)?, n_sessions);
+    let probe = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+    let a = fleet.advance("u0", &probe)?;
+    let b = replica2.advance("u0", &probe)?;
+    assert!(
+        a.logprob.iter().zip(&b.logprob).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "delta-chain restore diverged from the live stream"
+    );
+    let mut rep = Report::new(
+        &format!(
+            "Incremental checkpoint_all — {n_sessions} sessions, {k_dirty} dirty \
+             (delta re-snapshots only the dirty ones)"
+        ),
+        &["sessions", "dirty", "full", "delta", "delta_written", "delta_retained"],
+    );
+    rep.row(vec![
+        n_sessions.to_string(),
+        k_dirty.to_string(),
+        fmt_secs(full_secs),
+        fmt_secs(delta_secs),
+        d.written.to_string(),
+        d.retained.to_string(),
     ]);
     println!("{}", rep.render());
 
@@ -157,6 +235,20 @@ fn main() -> anyhow::Result<()> {
         ("spills", num(st.spills as f64)),
         ("rehydrations", num(st.rehydrations as f64)),
         ("mean_rehydrate_secs", num(mean_rehydrate)),
+        // async spill writer: what eviction costs the serving thread now
+        // vs the blocking write it used to pay inline
+        ("spill_enqueue_secs", num(enqueue_secs)),
+        ("spill_bg_write_secs", num(write_secs)),
+        ("blocking_save_secs", num(save_s)),
+        ("spill_commits", num(st.spill_commits as f64)),
+        ("spill_cancels", num(st.spill_cancels as f64)),
+        // delta vs full export on n_sessions with k_dirty dirty
+        ("delta_sessions", num(n_sessions as f64)),
+        ("delta_dirty", num(k_dirty as f64)),
+        ("full_export_secs", num(full_secs)),
+        ("delta_export_secs", num(delta_secs)),
+        ("delta_written", num(d.written as f64)),
+        ("delta_retained", num(d.retained as f64)),
         ("export_secs", num(export_secs)),
         ("adopt_secs", num(adopt_secs)),
     ]);

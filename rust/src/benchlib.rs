@@ -8,12 +8,14 @@ use std::time::Instant;
 /// One benchmark measurement series.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// label of the series (what was measured)
     pub name: String,
     /// per-iteration wall times, seconds
     pub times: Vec<f64>,
 }
 
 impl Sample {
+    /// Median of the sample times.
     pub fn median(&self) -> f64 {
         let mut t = self.times.clone();
         t.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -24,10 +26,12 @@ impl Sample {
         if n % 2 == 0 { (t[n / 2 - 1] + t[n / 2]) / 2.0 } else { t[n / 2] }
     }
 
+    /// Mean of the sample times.
     pub fn mean(&self) -> f64 {
         self.times.iter().sum::<f64>() / self.times.len().max(1) as f64
     }
 
+    /// Standard deviation of the sample times.
     pub fn std(&self) -> f64 {
         let m = self.mean();
         (self.times.iter().map(|t| (t - m) * (t - m)).sum::<f64>()
@@ -35,6 +39,7 @@ impl Sample {
             .sqrt()
     }
 
+    /// Fastest sample time.
     pub fn min(&self) -> f64 {
         self.times.iter().copied().fold(f64::INFINITY, f64::min)
     }
@@ -43,8 +48,11 @@ impl Sample {
 /// Benchmark runner: fixed warmup iterations then `samples` timed runs,
 /// with a wall-clock budget so quadratic baselines can't stall a sweep.
 pub struct Bench {
+    /// untimed iterations before sampling
     pub warmup: usize,
+    /// timed iterations
     pub samples: usize,
+    /// wall-clock budget for one run (warmup + samples)
     pub max_total_secs: f64,
 }
 
@@ -55,6 +63,7 @@ impl Default for Bench {
 }
 
 impl Bench {
+    /// Short configuration for smoke modes.
     pub fn quick() -> Self {
         Bench { warmup: 1, samples: 3, max_total_secs: 10.0 }
     }
@@ -83,12 +92,16 @@ impl Bench {
 
 /// Accumulates rows of a figure/table and renders them.
 pub struct Report {
+    /// report title line
     pub title: String,
+    /// column headers
     pub columns: Vec<String>,
+    /// data rows, each matching the column arity
     pub rows: Vec<Vec<String>>,
 }
 
 impl Report {
+    /// Empty report with the given title and columns.
     pub fn new(title: &str, columns: &[&str]) -> Self {
         Report {
             title: title.to_string(),
@@ -97,6 +110,7 @@ impl Report {
         }
     }
 
+    /// Append one row (must match the column arity).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
         self.rows.push(cells);

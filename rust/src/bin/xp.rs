@@ -957,9 +957,13 @@ fn stream_scaling() -> Result<()> {
 }
 
 /// Durable session persistence: force spill/rehydrate churn under a
-/// two-session byte budget, then a full checkpoint_all → restore_from
-/// migration, verifying scores stay *bitwise* identical to an
-/// unevicted reference manager throughout.
+/// two-session byte budget (spill writes now run on the background
+/// writer — the table shows the serving-thread enqueue cost next to the
+/// writer-thread commit cost), then a full checkpoint_all → restore_from
+/// migration, verifying scores stay *bitwise* identical to an unevicted
+/// reference manager throughout. A redraw-scheduled row exercises the
+/// epoch-crossing/state-reset churn gauges, and a second table compares
+/// delta vs full `checkpoint_all` exports.
 fn stream_persist() -> Result<()> {
     let chunk = env_usize("XP_PERSIST_CHUNK", 128);
     let rounds = env_usize("XP_PERSIST_ROUNDS", 4);
@@ -970,22 +974,37 @@ fn stream_persist() -> Result<()> {
 
     let mut rep = Report::new(
         &format!(
-            "Durable session persistence — spill/rehydrate churn under a 2-session \
+            "Durable session persistence — async spill churn under a 2-session \
              budget + full migration ({rounds} rounds x {chunk}-token chunks; \
-             scores must stay bitwise identical)"
+             scores must stay bitwise identical; redraw>0 rows also count \
+             epoch crossings / state resets)"
         ),
-        &["sessions", "spills", "rehydrations", "ckpt_KiB", "rehydrate_us", "restore_ms", "bitwise"],
+        &[
+            "sessions", "redraw", "spills", "commits", "rehydr", "enq_us", "write_us",
+            "epoch_x", "resets", "restore_ms", "bitwise",
+        ],
     );
-    for &k in &[2usize, 4, 8] {
-        let dir = std::env::temp_dir().join(format!("xp_persist_{k}_{}", std::process::id()));
+    // (session count, redraw_every): the last row streams through a live
+    // redraw schedule so the churn gauges are exercised end to end
+    for &(k, redraw) in &[(2usize, 0u64), (4, 0), (8, 0), (4, 96)] {
+        let kmodel = if redraw == 0 {
+            model.clone()
+        } else {
+            Arc::new(NativeModel::synthetic(
+                &SyntheticConfig { redraw_every: redraw, ..Default::default() },
+                &mut Pcg64::new(7),
+            ))
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("xp_persist_{k}_{redraw}_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let cfg = SessionConfig {
             max_state_bytes: 2 * per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
         };
-        let mut mgr = SessionManager::new(model.clone(), cfg)?;
-        let mut reference = SessionManager::new(model.clone(), SessionConfig::default())?;
+        let mut mgr = SessionManager::new(kmodel.clone(), cfg)?;
+        let mut reference = SessionManager::new(kmodel.clone(), SessionConfig::default())?;
         let mut bitwise = true;
         for _ in 0..rounds {
             for s in 0..k {
@@ -1001,12 +1020,14 @@ fn stream_persist() -> Result<()> {
                         .all(|(x, y)| x.to_bits() == y.to_bits());
             }
         }
+        // settle the write-back queue so commit counters are exact
+        mgr.sync_spills()?;
         // migration: export every session (resident + spilled), adopt
         // into a fresh replica, and time the adoption
         let export = dir.join("export");
         let written = mgr.checkpoint_all(&export)?;
         let t0 = std::time::Instant::now();
-        let mut replica = SessionManager::new(model.clone(), SessionConfig::default())?;
+        let mut replica = SessionManager::new(kmodel, SessionConfig::default())?;
         let adopted = replica.restore_from(&export)?;
         let restore_ms = t0.elapsed().as_secs_f64() * 1e3;
         anyhow::ensure!(
@@ -1014,12 +1035,25 @@ fn stream_persist() -> Result<()> {
             "migration must carry all {k} sessions (wrote {written}, adopted {adopted})"
         );
         let st = mgr.stats();
+        if redraw > 0 {
+            anyhow::ensure!(
+                st.epoch_crossings > 0 && st.state_resets > 0,
+                "a live redraw schedule must register churn"
+            );
+        }
         rep.row(vec![
             k.to_string(),
+            redraw.to_string(),
             st.spills.to_string(),
+            st.spill_commits.to_string(),
             st.rehydrations.to_string(),
-            format!("{:.1}", st.checkpoint_bytes as f64 / 1024.0),
-            format!("{:.0}", st.rehydrate_nanos as f64 / 1e3 / st.rehydrations.max(1) as f64),
+            format!("{:.0}", st.spill_enqueue_nanos as f64 / 1e3 / st.spills.max(1) as f64),
+            format!(
+                "{:.0}",
+                st.spill_write_nanos as f64 / 1e3 / st.spill_commits.max(1) as f64
+            ),
+            st.epoch_crossings.to_string(),
+            st.state_resets.to_string(),
             format!("{restore_ms:.2}"),
             if bitwise { "yes".into() } else { "NO".into() },
         ]);
@@ -1028,6 +1062,48 @@ fn stream_persist() -> Result<()> {
     }
     println!("{}", rep.render());
     rep.save_csv(&results_dir().join("stream_persist.csv"))?;
+
+    // ---- delta vs full checkpoint_all: k dirty of N sessions ----
+    let n = env_usize("XP_PERSIST_SESSIONS", 8);
+    let dirty = (n / 4).max(1);
+    let dir = std::env::temp_dir().join(format!("xp_persist_delta_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut mgr = SessionManager::new(model, SessionConfig::default())?;
+    for s in 0..n {
+        let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+        mgr.advance(&format!("u{s}"), &toks)?;
+    }
+    let t0 = std::time::Instant::now();
+    mgr.checkpoint_all(&dir)?;
+    let full_ms = t0.elapsed().as_secs_f64() * 1e3;
+    for s in 0..dirty {
+        let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
+        mgr.advance(&format!("u{s}"), &toks)?;
+    }
+    let t1 = std::time::Instant::now();
+    let d = mgr.checkpoint_delta(&dir)?;
+    let delta_ms = t1.elapsed().as_secs_f64() * 1e3;
+    anyhow::ensure!(
+        d.written == dirty && d.retained == n - dirty,
+        "delta must write exactly the {dirty} dirty session(s) (wrote {}, kept {})",
+        d.written,
+        d.retained
+    );
+    let mut rep = Report::new(
+        "Incremental checkpoint_all — delta re-snapshots only dirty sessions",
+        &["sessions", "dirty", "full_ms", "delta_ms", "delta_written", "delta_retained"],
+    );
+    rep.row(vec![
+        n.to_string(),
+        dirty.to_string(),
+        format!("{full_ms:.2}"),
+        format!("{delta_ms:.2}"),
+        d.written.to_string(),
+        d.retained.to_string(),
+    ]);
+    println!("{}", rep.render());
+    rep.save_csv(&results_dir().join("stream_persist_delta.csv"))?;
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
 

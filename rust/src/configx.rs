@@ -18,15 +18,22 @@ use crate::protein::CorpusConfig;
 pub struct TrainConfig {
     /// artifact tag, e.g. "base_perf_relu_bid"
     pub artifact: String,
+    /// optimizer steps to run
     pub steps: usize,
+    /// validation cadence in steps (0 = never)
     pub eval_every: usize,
+    /// batches per evaluation
     pub eval_batches: usize,
+    /// logging cadence in steps
     pub log_every: usize,
+    /// rng seed for data/masking
     pub seed: u64,
     /// resample FAVOR features every N steps (0 = never) — the paper's
     /// feature-redrawing strategy, Sec. 4.2
     pub resample_every: usize,
+    /// path to save/load the training checkpoint
     pub checkpoint: Option<String>,
+    /// synthetic corpus parameters
     pub corpus: CorpusConfig,
 }
 
@@ -49,12 +56,15 @@ impl Default for TrainConfig {
 /// Serving configuration for the coordinator.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
+    /// artifact tag to serve
     pub artifact: String,
     /// max requests fused into one executable call (≤ compiled batch)
     pub max_batch: usize,
     /// how long the batcher waits to fill a batch
     pub max_wait_ms: u64,
+    /// serving worker threads per pool
     pub workers: usize,
+    /// rng seed for the demo request load
     pub seed: u64,
 }
 
@@ -83,6 +93,7 @@ fn apply_corpus_key(c: &mut CorpusConfig, key: &str, val: &Json) -> Result<bool>
 }
 
 impl TrainConfig {
+    /// Apply one `key=value` override (JSON-typed value).
     pub fn apply_key(&mut self, key: &str, val: &Json) -> Result<()> {
         match key {
             "artifact" => self.artifact = val.as_str()?.to_string(),
@@ -102,6 +113,7 @@ impl TrainConfig {
         Ok(())
     }
 
+    /// Defaults, then a JSON config file (if given), then CLI overrides.
     pub fn from_sources(file: Option<&Path>, overrides: &[String]) -> Result<TrainConfig> {
         let mut cfg = TrainConfig::default();
         if let Some(path) = file {
@@ -125,6 +137,7 @@ impl TrainConfig {
 }
 
 impl ServeConfig {
+    /// Apply one `key=value` override (JSON-typed value).
     pub fn apply_key(&mut self, key: &str, val: &Json) -> Result<()> {
         match key {
             "artifact" => self.artifact = val.as_str()?.to_string(),
@@ -137,6 +150,7 @@ impl ServeConfig {
         Ok(())
     }
 
+    /// Defaults, then a JSON config file (if given), then CLI overrides.
     pub fn from_sources(file: Option<&Path>, overrides: &[String]) -> Result<ServeConfig> {
         let mut cfg = ServeConfig::default();
         if let Some(path) = file {

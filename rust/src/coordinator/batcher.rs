@@ -20,15 +20,20 @@ use super::metrics::Metrics;
 
 /// A fill-mask request: a token sequence containing MASK tokens.
 pub struct Request {
+    /// request id (unique per coordinator)
     pub id: u64,
+    /// token sequence containing MASK positions
     pub tokens: Vec<u8>,
+    /// where the worker sends the response
     pub respond: Sender<Response>,
+    /// submission time, for latency accounting
     pub submitted: Instant,
 }
 
 /// The response: predictions + probabilities at each masked position.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// id of the request this answers
     pub id: u64,
     /// (position, predicted_token, probability)
     pub predictions: Vec<(usize, u8, f32)>,
@@ -39,6 +44,7 @@ pub struct Response {
     /// silently dropped; route these through the streaming path or a
     /// longer-window artifact
     pub truncated: Vec<usize>,
+    /// end-to-end latency from submission to response
     pub latency: Duration,
 }
 
@@ -65,10 +71,15 @@ pub fn truncated_masks(tokens: &[u8], max_len: usize) -> Vec<usize> {
 /// Model state the batcher serves (params/features in artifact order).
 /// Execution goes through the engine actor handle, so this is Send.
 pub struct ModelState {
+    /// engine actor handle executions go through
     pub engine: EngineHandle,
+    /// compiled forward-artifact name
     pub artifact: String,
+    /// the artifact's I/O contract
     pub meta: ArtifactMeta,
+    /// model parameters in artifact slot order
     pub params: Vec<Vec<f32>>,
+    /// FAVOR feature draws in artifact slot order
     pub features: Vec<Vec<f32>>,
 }
 

@@ -10,9 +10,13 @@ use crate::stream::SessionStats;
 
 /// Lock-free latency histogram with exponential buckets (µs scale).
 pub struct Metrics {
+    /// requests answered
     pub requests: AtomicU64,
+    /// batches executed
     pub batches: AtomicU64,
+    /// tokens processed
     pub tokens: AtomicU64,
+    /// failed batches
     pub errors: AtomicU64,
     /// bucket i counts latencies in [2^i, 2^{i+1}) microseconds
     buckets: [AtomicU64; 32],
@@ -35,6 +39,7 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// Record one request's end-to-end latency.
     pub fn observe_latency(&self, d: Duration) {
         let us = d.as_micros().max(1) as u64;
         let bucket = (63 - us.leading_zeros() as usize).min(31);
@@ -43,17 +48,20 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one executed batch (its request count and token count).
     pub fn observe_batch(&self, size: usize, tokens: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
         self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
     }
 
+    /// Mean request latency over every observation.
     pub fn mean_latency(&self) -> Duration {
         let n = self.requests.load(Ordering::Relaxed).max(1);
         Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
     }
 
+    /// Mean requests fused per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed).max(1);
         self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
@@ -77,6 +85,7 @@ impl Metrics {
         Duration::from_micros(1 << 31)
     }
 
+    /// One-line human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} mean_latency={:?} p50<={:?} p99<={:?} errors={}",
@@ -91,23 +100,45 @@ impl Metrics {
     }
 }
 
-/// Durability gauges for one streaming pool's persistence tier: spills,
-/// rehydrations, checkpoint bytes written and rehydration latency. The
-/// stream worker mirrors its `SessionManager` counters in here after
-/// every drain window, so readers on other threads (the `xp stream`
-/// report, ops tooling) see them without touching the worker's state.
+/// Durability gauges for one streaming pool's persistence tier: spill
+/// write-back progress, rehydrations, checkpoint bytes, delta-export
+/// retention and kernel-redraw churn. The stream worker mirrors its
+/// `SessionManager` counters in here after every drain window, so
+/// readers on other threads (the `xp stream` report, ops tooling) see
+/// them without touching the worker's state; background spill commits
+/// land on the *next* mirror after they complete.
 #[derive(Default)]
 pub struct PersistMetrics {
-    /// sessions currently demoted to the spill tier
+    /// sessions currently demoted to the spill tier (in flight + on disk)
     pub spilled_sessions: AtomicU64,
-    /// cumulative demote-to-disk events
+    /// cumulative demote-to-spill events (enqueues)
     pub spills: AtomicU64,
-    /// cumulative disk-to-RAM promotions
+    /// cumulative spill-to-RAM promotions
     pub rehydrations: AtomicU64,
     /// cumulative snapshot bytes written (spills + checkpoint exports)
     pub checkpoint_bytes: AtomicU64,
     /// cumulative wall time spent rehydrating, nanoseconds
     pub rehydrate_nanos: AtomicU64,
+    /// spills parked awaiting their background write (gauge)
+    pub pending_spills: AtomicU64,
+    /// background spill writes committed to the spill manifest
+    pub spill_commits: AtomicU64,
+    /// queued spill writes canceled by a take-back or close
+    pub spill_cancels: AtomicU64,
+    /// background spill writes that failed (sessions stay resident-readable)
+    pub spill_write_failures: AtomicU64,
+    /// serving-thread nanoseconds spent enqueueing spills
+    pub spill_enqueue_nanos: AtomicU64,
+    /// writer-thread nanoseconds spent writing + committing spills
+    pub spill_write_nanos: AtomicU64,
+    /// advances that crossed ≥1 kernel-redraw epoch boundary
+    pub epoch_crossings: AtomicU64,
+    /// per-(layer, head) state resets caused by redraw crossings
+    pub state_resets: AtomicU64,
+    /// snapshot records written by delta exports
+    pub delta_written: AtomicU64,
+    /// clean records retained (no snapshot IO) by delta exports
+    pub delta_retained: AtomicU64,
 }
 
 impl PersistMetrics {
@@ -118,9 +149,19 @@ impl PersistMetrics {
         self.rehydrations.store(st.rehydrations, Ordering::Relaxed);
         self.checkpoint_bytes.store(st.checkpoint_bytes, Ordering::Relaxed);
         self.rehydrate_nanos.store(st.rehydrate_nanos, Ordering::Relaxed);
+        self.pending_spills.store(st.pending_spills as u64, Ordering::Relaxed);
+        self.spill_commits.store(st.spill_commits, Ordering::Relaxed);
+        self.spill_cancels.store(st.spill_cancels, Ordering::Relaxed);
+        self.spill_write_failures.store(st.spill_write_failures, Ordering::Relaxed);
+        self.spill_enqueue_nanos.store(st.spill_enqueue_nanos, Ordering::Relaxed);
+        self.spill_write_nanos.store(st.spill_write_nanos, Ordering::Relaxed);
+        self.epoch_crossings.store(st.epoch_crossings, Ordering::Relaxed);
+        self.state_resets.store(st.state_resets, Ordering::Relaxed);
+        self.delta_written.store(st.delta_written, Ordering::Relaxed);
+        self.delta_retained.store(st.delta_retained, Ordering::Relaxed);
     }
 
-    /// Mean wall time of one disk-to-RAM promotion.
+    /// Mean wall time of one spill-to-RAM promotion.
     pub fn mean_rehydrate_latency(&self) -> Duration {
         let n = self.rehydrations.load(Ordering::Relaxed);
         if n == 0 {
@@ -129,14 +170,45 @@ impl PersistMetrics {
         Duration::from_nanos(self.rehydrate_nanos.load(Ordering::Relaxed) / n)
     }
 
+    /// Mean serving-thread cost of enqueueing one spill — what eviction
+    /// pays now that the write itself runs on the background thread.
+    pub fn mean_spill_enqueue_latency(&self) -> Duration {
+        let n = self.spills.load(Ordering::Relaxed);
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.spill_enqueue_nanos.load(Ordering::Relaxed) / n)
+    }
+
+    /// Mean writer-thread cost of one committed background spill write.
+    pub fn mean_spill_write_latency(&self) -> Duration {
+        let n = self.spill_commits.load(Ordering::Relaxed);
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.spill_write_nanos.load(Ordering::Relaxed) / n)
+    }
+
+    /// One-line human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "spilled={} spills={} rehydrations={} checkpoint_bytes={} mean_rehydrate={:?}",
+            "spilled={} spills={} pending={} commits={} cancels={} rehydrations={} \
+             checkpoint_bytes={} mean_enqueue={:?} mean_write={:?} mean_rehydrate={:?} \
+             epoch_crossings={} state_resets={} delta_written={} delta_retained={}",
             self.spilled_sessions.load(Ordering::Relaxed),
             self.spills.load(Ordering::Relaxed),
+            self.pending_spills.load(Ordering::Relaxed),
+            self.spill_commits.load(Ordering::Relaxed),
+            self.spill_cancels.load(Ordering::Relaxed),
             self.rehydrations.load(Ordering::Relaxed),
             self.checkpoint_bytes.load(Ordering::Relaxed),
+            self.mean_spill_enqueue_latency(),
+            self.mean_spill_write_latency(),
             self.mean_rehydrate_latency(),
+            self.epoch_crossings.load(Ordering::Relaxed),
+            self.state_resets.load(Ordering::Relaxed),
+            self.delta_written.load(Ordering::Relaxed),
+            self.delta_retained.load(Ordering::Relaxed),
         )
     }
 }
@@ -181,18 +253,33 @@ mod tests {
     fn persist_gauges_mirror_session_stats() {
         let p = PersistMetrics::default();
         assert_eq!(p.mean_rehydrate_latency(), Duration::ZERO);
+        assert_eq!(p.mean_spill_enqueue_latency(), Duration::ZERO);
+        assert_eq!(p.mean_spill_write_latency(), Duration::ZERO);
         let st = SessionStats {
             spilled: 3,
             spills: 7,
             rehydrations: 4,
             checkpoint_bytes: 9000,
             rehydrate_nanos: 8_000_000,
+            pending_spills: 2,
+            spill_commits: 5,
+            spill_cancels: 1,
+            spill_enqueue_nanos: 700,
+            spill_write_nanos: 10_000,
+            epoch_crossings: 6,
+            state_resets: 24,
+            delta_written: 3,
+            delta_retained: 9,
             ..Default::default()
         };
         p.record(&st);
         assert_eq!(p.spills.load(Ordering::Relaxed), 7);
         assert_eq!(p.mean_rehydrate_latency(), Duration::from_nanos(2_000_000));
+        assert_eq!(p.mean_spill_enqueue_latency(), Duration::from_nanos(100));
+        assert_eq!(p.mean_spill_write_latency(), Duration::from_nanos(2_000));
         let s = p.summary();
         assert!(s.contains("spills=7") && s.contains("checkpoint_bytes=9000"), "{s}");
+        assert!(s.contains("pending=2") && s.contains("commits=5"), "{s}");
+        assert!(s.contains("epoch_crossings=6") && s.contains("delta_retained=9"), "{s}");
     }
 }

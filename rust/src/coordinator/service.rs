@@ -49,6 +49,7 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// A coordinator over one engine handle, with no pools started yet.
     pub fn new(engine: EngineHandle) -> Coordinator {
         Coordinator {
             engine,
@@ -249,6 +250,18 @@ impl Coordinator {
         self.stream_control(pool, StreamOp::CheckpointAll(dir.to_path_buf()))
     }
 
+    /// Incremental export of a stream pool: bring `dir` (a previous
+    /// export target) up to date, re-snapshotting **only the sessions
+    /// that advanced** since the last export and retaining the rest —
+    /// the hot-checkpoint path: cost scales with the write rate, not the
+    /// session count. Same queue-barrier semantics as
+    /// [`Self::checkpoint_all`]; restoring from the resulting directory
+    /// is bitwise identical to restoring from a full export. Returns the
+    /// number of sessions re-snapshotted.
+    pub fn checkpoint_delta(&self, pool: &str, dir: &std::path::Path) -> Result<usize> {
+        self.stream_control(pool, StreamOp::CheckpointDelta(dir.to_path_buf()))
+    }
+
     /// Adopt every session checkpointed in `dir` into a stream pool.
     /// All-or-nothing, and an id collision with a live session is an
     /// error. Returns the number of sessions adopted.
@@ -262,6 +275,7 @@ impl Coordinator {
         self.streams.get(pool).map(|p| p.persist.clone())
     }
 
+    /// Names of the running stream pools.
     pub fn stream_pools(&self) -> Vec<String> {
         self.streams.keys().cloned().collect()
     }
@@ -312,10 +326,12 @@ impl Coordinator {
         Ok(rrx)
     }
 
+    /// Serving metrics of a batched fill-mask pool.
     pub fn metrics(&self, model: &str) -> Option<Arc<Metrics>> {
         self.pools.get(model).map(|p| p.metrics.clone())
     }
 
+    /// Names of the running fill-mask model pools.
     pub fn models(&self) -> Vec<String> {
         self.pools.keys().cloned().collect()
     }

@@ -53,6 +53,10 @@ pub enum StreamOp {
     /// export); acts as a barrier, capturing exactly the chunks
     /// submitted before it
     CheckpointAll(PathBuf),
+    /// incremental export: re-snapshot only the sessions dirty since
+    /// the directory's previous export, retain the rest (same barrier
+    /// semantics as [`Self::CheckpointAll`])
+    CheckpointDelta(PathBuf),
     /// adopt every session checkpointed in the directory
     RestoreFrom(PathBuf),
 }
@@ -60,25 +64,33 @@ pub enum StreamOp {
 /// One streaming request: the next chunk of a session's token stream, a
 /// close notice (empty `tokens` + `close`), or a persistence control op.
 pub struct StreamRequest {
+    /// session id the request addresses (empty for control ops)
     pub session: String,
+    /// the session's next chunk of tokens (empty for close/control)
     pub tokens: Vec<u8>,
     /// release the session's state after processing this request
     pub close: bool,
+    /// what to do (score a chunk, checkpoint, restore)
     pub op: StreamOp,
+    /// where the worker sends the [`StreamResponse`]
     pub respond: Sender<StreamResponse>,
+    /// submission time, for end-to-end latency accounting
     pub submitted: Instant,
 }
 
 /// Incremental answer for one chunk.
 #[derive(Clone, Debug)]
 pub struct StreamResponse {
+    /// session id the response belongs to
     pub session: String,
     /// per-token scores for this chunk (None for a close-only request,
     /// a control op, or an error)
     pub scores: Option<ChunkScores>,
+    /// error message when the request failed (None on success)
     pub error: Option<String>,
     /// sessions written/adopted by a control op (0 for chunk requests)
     pub affected: usize,
+    /// end-to-end latency from submission to response
     pub latency: Duration,
     /// sessions resident after this request
     pub resident_sessions: usize,
@@ -87,6 +99,7 @@ pub struct StreamResponse {
 }
 
 impl StreamResponse {
+    /// Whether the request succeeded.
     pub fn ok(&self) -> bool {
         self.error.is_none()
     }
@@ -196,6 +209,10 @@ fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
             StreamOp::CheckpointAll(dir) => {
                 flush_run(&mut run, &batch, mgr, &mut outcomes);
                 outcomes[i] = Outcome::Control(mgr.checkpoint_all(dir));
+            }
+            StreamOp::CheckpointDelta(dir) => {
+                flush_run(&mut run, &batch, mgr, &mut outcomes);
+                outcomes[i] = Outcome::Control(mgr.checkpoint_delta(dir).map(|d| d.written));
             }
             StreamOp::RestoreFrom(dir) => {
                 flush_run(&mut run, &batch, mgr, &mut outcomes);

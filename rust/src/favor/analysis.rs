@@ -84,11 +84,14 @@ pub fn l1_error(a: &Mat, b: &Mat) -> f64 {
 /// Fig. 10): S[a][b] = mean attention weight from tokens of type a to
 /// tokens of type b, aggregated over sequences.
 pub struct AaSimilarity {
+    /// pair observation counts per (row token, col token)
     pub counts: Mat,
+    /// accumulated attention mass per (row token, col token)
     pub weights: Mat,
 }
 
 impl AaSimilarity {
+    /// Empty accumulator over a vocab × vocab grid.
     pub fn new(vocab: usize) -> Self {
         AaSimilarity { counts: Mat::zeros(vocab, vocab), weights: Mat::zeros(vocab, vocab) }
     }

@@ -44,12 +44,19 @@ pub enum FeatureKind {
     Positive,
     /// Generalized attention with the given f (paper default: ReLU).
     Relu,
+    /// generalized attention with a sigmoid f
     Sigmoid,
+    /// generalized attention with a clamped exp f (see [`EXP_CLAMP`])
     Exp,
+    /// generalized attention with f(x) = |x|
     Abs,
+    /// generalized attention with GELU
     Gelu,
+    /// generalized attention with cos (no softmax renormalizers)
     Cos,
+    /// generalized attention with tanh
     Tanh,
+    /// linear (identity f) attention
     Identity,
 }
 
@@ -68,6 +75,7 @@ impl FeatureKind {
         Self::Identity,
     ];
 
+    /// Parse a kind name (as printed by [`Self::name`]); None if unknown.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "softmax" => Self::Softmax,
@@ -93,6 +101,7 @@ impl FeatureKind {
         })
     }
 
+    /// Canonical name (CLI/report spelling).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Softmax => "softmax",
@@ -127,9 +136,13 @@ impl FeatureKind {
 /// conventions for the chosen kind.
 #[derive(Clone, Debug)]
 pub struct FeatureMap {
+    /// the nonlinearity family this map was sampled for
     pub kind: FeatureKind,
+    /// projection matrix W (M×d)
     pub w: Mat,
+    /// bias b (length M; zero except for trig features)
     pub b: Vec<f32>,
+    /// additive stabilizer ε keeping features/denominators positive
     pub kernel_eps: f32,
     d: usize,
 }
@@ -160,6 +173,7 @@ impl FeatureMap {
         }
     }
 
+    /// Number of random features M.
     pub fn m(&self) -> usize {
         self.w.rows
     }

@@ -65,9 +65,11 @@ impl Featurizer for FeatureMap {
 /// and the snapshot fingerprint are built from exactly these fields.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct KernelConfig {
+    /// feature kind (nonlinearity family)
     pub kind: FeatureKind,
     /// number of random features M
     pub m: usize,
+    /// ORF mechanism for the projection draws
     pub mech: OrfMechanism,
     /// base seed of the deterministic draw schedule
     pub seed: u64,
@@ -100,6 +102,7 @@ impl KernelConfig {
         )
     }
 
+    /// JSON form (inverse of [`Self::from_json`]).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("kind", s(self.kind.name())),
@@ -111,6 +114,7 @@ impl KernelConfig {
         ])
     }
 
+    /// Parse the JSON form produced by [`Self::to_json`].
     pub fn from_json(j: &Json) -> Result<KernelConfig> {
         Ok(KernelConfig {
             kind: FeatureKind::parse_or_err(j.req("kind")?.as_str()?)?,
@@ -180,10 +184,12 @@ impl AttentionKernel {
         FeatureMap::sample(cfg.kind, cfg.m, d, cfg.mech, &mut rng)
     }
 
+    /// The kernel's full identity.
     pub fn config(&self) -> &KernelConfig {
         &self.cfg
     }
 
+    /// Feature-kind shorthand for [`Self::config`].
     pub fn kind(&self) -> FeatureKind {
         self.cfg.kind
     }

@@ -12,12 +12,16 @@ use crate::tensor::Mat;
 use super::Direction;
 
 #[derive(Clone, Debug)]
+/// Bucketing geometry for the LSH attention baseline.
 pub struct LshConfig {
+    /// number of hash buckets
     pub n_buckets: usize,
+    /// rows per sorted chunk (attention looks back one chunk)
     pub chunk: usize,
 }
 
 impl LshConfig {
+    /// Reasonable geometry for sequence length l.
     pub fn for_len(l: usize) -> Self {
         let chunk = (l / 8).max(8).min(64);
         LshConfig { n_buckets: (l / chunk).max(2), chunk }

@@ -28,6 +28,8 @@ pub use lsh::{lsh_attention, LshConfig};
 /// Direction of the attention mechanism (Eq. 1 vs Eq. 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Direction {
+    /// every position attends to every position (MLM encoder)
     Bidirectional,
+    /// causal: position i attends to positions ≤ i (LM / streaming)
     Unidirectional,
 }

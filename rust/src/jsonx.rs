@@ -11,16 +11,24 @@ use std::fmt::Write as _;
 use anyhow::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
+/// A parsed JSON value.
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// any JSON number (f64 precision)
     Num(f64),
+    /// string
     Str(String),
+    /// array
     Arr(Vec<Json>),
+    /// object (sorted keys — serialization is canonical)
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (trailing garbage is an error).
     pub fn parse(s: &str) -> Result<Json> {
         let mut p = Parser { bytes: s.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -34,6 +42,7 @@ impl Json {
 
     // -- typed accessors ---------------------------------------------------
 
+    /// Object field lookup (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -41,10 +50,12 @@ impl Json {
         }
     }
 
+    /// Object field lookup; a missing key is a loud error.
     pub fn req(&self, key: &str) -> Result<&Json> {
         self.get(key).ok_or_else(|| anyhow!("missing key '{key}'"))
     }
 
+    /// The string value, or an error for other types.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, or an error for other types.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -59,10 +71,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to usize.
     pub fn as_usize(&self) -> Result<usize> {
         Ok(self.as_f64()? as usize)
     }
 
+    /// The boolean value, or an error for other types.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -70,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or an error for other types.
     pub fn as_arr(&self) -> Result<&[Json]> {
         match self {
             Json::Arr(a) => Ok(a),
@@ -77,24 +92,29 @@ impl Json {
         }
     }
 
+    /// Field as string, with a default.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).and_then(|v| v.as_str().ok()).unwrap_or(default).to_string()
     }
 
+    /// Field as usize, with a default.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_f64().ok()).map(|v| v as usize).unwrap_or(default)
     }
 
+    /// Field as f64, with a default.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64().ok()).unwrap_or(default)
     }
 
+    /// Field as bool, with a default.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool().ok()).unwrap_or(default)
     }
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize (canonical: sorted object keys, minimal whitespace).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         self.write(&mut out);
@@ -160,14 +180,17 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// Array builder.
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }
 
+/// Number builder.
 pub fn num(n: f64) -> Json {
     Json::Num(n)
 }
 
+/// String builder.
 pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }

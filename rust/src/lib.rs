@@ -23,6 +23,9 @@
 // rows where iterator chains obscure the stride arithmetic); silence the
 // corresponding style lint crate-wide rather than per-loop.
 #![allow(clippy::needless_range_loop)]
+// Every public item carries rustdoc; CI builds the docs with
+// RUSTDOCFLAGS="-D warnings", so doc rot fails the build.
+#![warn(missing_docs)]
 
 pub mod benchlib;
 pub mod configx;

@@ -61,11 +61,14 @@ pub fn fwht(x: &mut [f32]) {
 /// Apply a random Givens rotation sequence (indices + angles) to rows.
 #[derive(Clone, Debug)]
 pub struct GivensSeq {
+    /// (i, j, theta) rotations, applied in order
     pub rotations: Vec<(usize, usize, f32)>, // (i, j, theta)
+    /// dimensionality the rotations act on
     pub dim: usize,
 }
 
 impl GivensSeq {
+    /// Sample `count` random rotations in `dim` dimensions.
     pub fn random(dim: usize, count: usize, rng: &mut Pcg64) -> Self {
         let mut rotations = Vec::with_capacity(count);
         for _ in 0..count {
@@ -97,9 +100,13 @@ impl GivensSeq {
 /// Which projection-matrix mechanism to use for FAVOR features.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum OrfMechanism {
+    /// unstructured i.i.d. Gaussian rows
     Iid,
+    /// exactly orthogonal blocks via Gram–Schmidt (R-ORF)
     Regular,  // R-ORF
+    /// Hadamard-diagonal block products (H-ORF)
     Hadamard, // H-ORF
+    /// random Givens-rotation products (G-ORF)
     Givens,   // G-ORF
 }
 
@@ -112,6 +119,7 @@ impl OrfMechanism {
         OrfMechanism::Givens,
     ];
 
+    /// Canonical name (CLI/report spelling).
     pub fn name(&self) -> &'static str {
         match self {
             OrfMechanism::Iid => "iid",
@@ -130,6 +138,7 @@ impl OrfMechanism {
         })
     }
 
+    /// Parse a mechanism name; None if unknown.
     pub fn parse(s: &str) -> Option<Self> {
         Some(match s {
             "iid" => OrfMechanism::Iid,

@@ -32,12 +32,17 @@ use super::snapshot::{crc32, SessionSnapshot};
 
 const MANIFEST: &str = "manifest.json";
 const MANIFEST_FORMAT: &str = "pfrm-session-manifest";
-const MANIFEST_VERSION: usize = 1;
+/// v2 adds a top-level manifest `generation` plus per-record dirty
+/// markers (`exporter`, `dirty_gen`) — the bookkeeping behind delta
+/// exports. v1 manifests are still readable (markers default to
+/// "unknown", so a delta export re-writes every record once).
+const MANIFEST_VERSION: usize = 2;
 
 /// One manifest entry: where a session's snapshot lives and what its
 /// bytes must look like.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SnapshotRecord {
+    /// session id the snapshot belongs to
     pub id: String,
     /// file name inside the checkpoint directory
     pub file: String,
@@ -47,6 +52,15 @@ pub struct SnapshotRecord {
     pub crc: u32,
     /// stream position the snapshot was taken at
     pub pos: u64,
+    /// identity token of the `SessionManager` that captured the
+    /// snapshot (0 = unknown/foreign). Together with [`Self::dirty_gen`]
+    /// this is the delta-export dirty marker: a later export from the
+    /// *same* manager can prove the session has not advanced since this
+    /// record was written and retain it instead of re-snapshotting.
+    pub exporter: u64,
+    /// the session's dirty generation at capture time (meaningful only
+    /// when `exporter` matches the asking manager)
+    pub dirty_gen: u64,
 }
 
 /// A checkpoint directory: save/load/remove session snapshots, with the
@@ -54,6 +68,15 @@ pub struct SnapshotRecord {
 pub struct Checkpointer {
     dir: PathBuf,
     records: BTreeMap<String, SnapshotRecord>,
+    /// manifest generation: bumped by [`Self::commit_new_generation`]
+    /// (every full or delta export), so observers can tell exports
+    /// apart even when the record set is unchanged
+    generation: u64,
+    /// files superseded by staged-but-uncommitted changes (replaced or
+    /// unstaged records). Deleted only *after* the next manifest commit:
+    /// until then the on-disk manifest still references them, so a crash
+    /// mid-export must leave every previously committed snapshot intact
+    garbage: Vec<String>,
 }
 
 impl Checkpointer {
@@ -63,8 +86,12 @@ impl Checkpointer {
     pub fn create(dir: &Path) -> Result<Checkpointer> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
-        let records = if dir.join(MANIFEST).exists() { read_manifest(dir)? } else { BTreeMap::new() };
-        Ok(Checkpointer { dir: dir.to_path_buf(), records })
+        let (records, generation) = if dir.join(MANIFEST).exists() {
+            read_manifest(dir)?
+        } else {
+            (BTreeMap::new(), 0)
+        };
+        Ok(Checkpointer { dir: dir.to_path_buf(), records, generation, garbage: Vec::new() })
     }
 
     /// Open an existing checkpoint directory for restore. A missing or
@@ -74,21 +101,31 @@ impl Checkpointer {
         if !dir.join(MANIFEST).exists() {
             bail!("{} has no {MANIFEST}: not a checkpoint directory", dir.display());
         }
-        Ok(Checkpointer { dir: dir.to_path_buf(), records: read_manifest(dir)? })
+        let (records, generation) = read_manifest(dir)?;
+        Ok(Checkpointer { dir: dir.to_path_buf(), records, generation, garbage: Vec::new() })
     }
 
+    /// The directory this checkpointer owns.
     pub fn dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Current manifest generation (0 for a fresh or v1 directory).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Number of restorable snapshots.
     pub fn len(&self) -> usize {
         self.records.len()
     }
 
+    /// Whether the directory holds no snapshots.
     pub fn is_empty(&self) -> bool {
         self.records.is_empty()
     }
 
+    /// Whether a restorable snapshot exists for `id`.
     pub fn contains(&self, id: &str) -> bool {
         self.records.contains_key(id)
     }
@@ -98,6 +135,7 @@ impl Checkpointer {
         self.records.keys().cloned().collect()
     }
 
+    /// The manifest record for `id`, if one exists.
     pub fn record(&self, id: &str) -> Option<&SnapshotRecord> {
         self.records.get(id)
     }
@@ -123,25 +161,164 @@ impl Checkpointer {
     /// to restores: the on-disk manifest still describes the previous
     /// state — old or new, never torn.
     pub fn stage(&mut self, id: &str, scorer: &ChunkScorer) -> Result<SnapshotRecord> {
+        self.stage_marked(id, scorer, 0, 0)
+    }
+
+    /// [`Self::stage`] carrying the delta-export dirty marker: the
+    /// capturing manager's identity token plus the session's dirty
+    /// generation, so a later delta export from the same manager can
+    /// retain this record without re-reading the session.
+    pub fn stage_marked(
+        &mut self,
+        id: &str,
+        scorer: &ChunkScorer,
+        exporter: u64,
+        dirty_gen: u64,
+    ) -> Result<SnapshotRecord> {
         let snap = SessionSnapshot::capture(id, scorer)?;
-        let bytes = snap.to_bytes();
-        let file = snapshot_filename(id);
-        write_atomic(&self.dir.join(&file), &bytes)
-            .with_context(|| format!("spilling session '{id}'"))?;
+        self.stage_encoded(id, &snap.to_bytes(), scorer.tokens_seen() as u64, exporter, dirty_gen)
+    }
+
+    /// The file name a staged snapshot is written under. Committed
+    /// exports must never have their referenced files replaced in place
+    /// (a crash before the manifest commit would brick the previous
+    /// generation), so the name embeds the generation being staged:
+    /// re-staging a session writes a *new* file and queues the old one
+    /// as post-commit garbage. Plain `save`/`stage` (no generation bump
+    /// between commits) keeps overwriting one name, as before.
+    fn staged_filename(&self, id: &str) -> String {
+        let base = snapshot_filename(id);
+        let stem = base.strip_suffix(".snap").unwrap_or(&base);
+        format!("{stem}-g{}.snap", self.generation + 1)
+    }
+
+    /// Queue `record`'s file for deletion after the next manifest
+    /// commit, unless a staged record still references the same name.
+    fn retire_file(&mut self, record: &SnapshotRecord) {
+        if self.records.values().all(|r| r.file != record.file) {
+            self.garbage.push(record.file.clone());
+        }
+    }
+
+    /// Stage an already-encoded `PFRMSNAP` envelope. This is the entry
+    /// point for callers that hold snapshot bytes rather than a live
+    /// scorer: the background spill writer (bytes were encoded on the
+    /// serving thread at enqueue time) and exports of in-flight spills.
+    pub fn stage_encoded(
+        &mut self,
+        id: &str,
+        bytes: &[u8],
+        pos: u64,
+        exporter: u64,
+        dirty_gen: u64,
+    ) -> Result<SnapshotRecord> {
+        let file = self.staged_filename(id);
+        write_atomic(&self.dir.join(&file), bytes)
+            .with_context(|| format!("writing snapshot for session '{id}'"))?;
         let record = SnapshotRecord {
             id: id.to_string(),
             file,
             bytes: bytes.len() as u64,
-            crc: crc32(&bytes),
-            pos: scorer.tokens_seen() as u64,
+            crc: crc32(bytes),
+            pos,
+            exporter,
+            dirty_gen,
         };
-        self.records.insert(id.to_string(), record.clone());
+        if let Some(old) = self.records.insert(id.to_string(), record.clone()) {
+            self.retire_file(&old);
+        }
         Ok(record)
     }
 
-    /// Persist the manifest, making every staged snapshot restorable.
+    /// Stage a snapshot by *linking* an existing verified file (a spill
+    /// snapshot or a previous export's record) into this directory
+    /// instead of decoding and re-encoding it — O(1) IO per clean
+    /// session. Hard-links when the filesystem allows (snapshot files
+    /// are immutable once written: replacement always goes through a
+    /// temp-file rename, never an in-place write, so a shared inode can
+    /// never change under us), falling back to a byte copy. `src_record`
+    /// supplies the verified length/CRC/position; only the dirty marker
+    /// is re-stamped.
+    pub fn stage_linked(
+        &mut self,
+        src: &Path,
+        src_record: &SnapshotRecord,
+        exporter: u64,
+        dirty_gen: u64,
+    ) -> Result<SnapshotRecord> {
+        let file = self.staged_filename(&src_record.id);
+        let dst = self.dir.join(&file);
+        match std::fs::remove_file(&dst) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(anyhow!("clearing stale {}: {e}", dst.display())),
+        }
+        if std::fs::hard_link(src, &dst).is_err() {
+            // cross-device or unsupported: fall back to a durable copy
+            let bytes = std::fs::read(src)
+                .with_context(|| format!("reading {} for linking", src.display()))?;
+            write_atomic(&dst, &bytes)
+                .with_context(|| format!("copying snapshot for '{}'", src_record.id))?;
+        }
+        let record = SnapshotRecord { file, exporter, dirty_gen, ..src_record.clone() };
+        if let Some(old) = self.records.insert(record.id.clone(), record.clone()) {
+            self.retire_file(&old);
+        }
+        Ok(record)
+    }
+
+    /// Drop a staged record WITHOUT rewriting the manifest — the
+    /// delta-export building block for retiring records of sessions
+    /// that have since closed; the caller commits once at the end. The
+    /// file itself is deleted only after that commit (it is still
+    /// referenced by the on-disk manifest until then). Returns whether
+    /// a record existed.
+    pub fn unstage(&mut self, id: &str) -> Result<bool> {
+        let Some(record) = self.records.remove(id) else {
+            return Ok(false);
+        };
+        self.retire_file(&record);
+        Ok(true)
+    }
+
+    /// Insert one record in memory WITHOUT touching the manifest — the
+    /// spill writer's publish step: the record becomes loadable through
+    /// this handle immediately (the snapshot file is already on disk);
+    /// a following [`Self::commit`] persists it for other processes.
+    pub fn stage_record(&mut self, record: SnapshotRecord) {
+        if let Some(old) = self.records.insert(record.id.clone(), record) {
+            self.retire_file(&old);
+        }
+    }
+
+    /// Persist the manifest, making every staged snapshot restorable,
+    /// then delete files superseded since the previous commit.
     pub fn commit(&mut self) -> Result<()> {
-        self.write_manifest()
+        self.write_manifest()?;
+        self.collect_garbage();
+        Ok(())
+    }
+
+    /// Bump the manifest generation and persist — one atomic rename
+    /// publishes the whole staged export (full or delta): a reader sees
+    /// the previous generation or this one, never a mix. Files the
+    /// previous generation referenced are deleted only now, after the
+    /// new manifest is durable, so a crash at any earlier point leaves
+    /// the previous generation fully restorable (at worst with a few
+    /// orphaned staged files).
+    pub fn commit_new_generation(&mut self) -> Result<()> {
+        self.generation += 1;
+        self.write_manifest()?;
+        self.collect_garbage();
+        Ok(())
+    }
+
+    /// Best-effort deletion of files superseded by the just-committed
+    /// manifest (failures leave harmless orphans, never broken records).
+    fn collect_garbage(&mut self) {
+        for file in std::mem::take(&mut self.garbage) {
+            let _ = std::fs::remove_file(self.dir.join(&file));
+        }
     }
 
     /// Drop every snapshot (files + records) and persist the now-empty
@@ -153,9 +330,13 @@ impl Checkpointer {
     /// `restore_from`). Returns how many snapshots were removed.
     pub fn clear(&mut self) -> Result<usize> {
         let records = std::mem::take(&mut self.records);
-        if records.is_empty() {
+        if records.is_empty() && self.garbage.is_empty() {
             return Ok(0);
         }
+        // manifest first: a crash mid-clear leaves a valid (empty)
+        // directory plus orphan files, never a manifest pointing at
+        // deleted snapshots
+        self.write_manifest()?;
         for r in records.values() {
             let path = self.dir.join(&r.file);
             match std::fs::remove_file(&path) {
@@ -164,7 +345,7 @@ impl Checkpointer {
                 Err(e) => return Err(anyhow!("removing {}: {e}", path.display())),
             }
         }
-        self.write_manifest()?;
+        self.collect_garbage();
         Ok(records.len())
     }
 
@@ -213,13 +394,15 @@ impl Checkpointer {
         let Some(record) = self.records.remove(id) else {
             return Ok(false);
         };
+        // manifest first, file second: the reverse order would leave a
+        // manifest referencing a deleted snapshot after a crash
+        self.write_manifest()?;
         let path = self.dir.join(&record.file);
         match std::fs::remove_file(&path) {
             Ok(()) => {}
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(anyhow!("removing {}: {e}", path.display())),
         }
-        self.write_manifest()?;
         Ok(true)
     }
 
@@ -227,6 +410,7 @@ impl Checkpointer {
         let manifest = obj(vec![
             ("format", s(MANIFEST_FORMAT)),
             ("version", num(MANIFEST_VERSION as f64)),
+            ("generation", num(self.generation as f64)),
             (
                 "sessions",
                 arr(self.records.values().map(|r| {
@@ -236,6 +420,10 @@ impl Checkpointer {
                         ("bytes", num(r.bytes as f64)),
                         ("crc", num(r.crc as f64)),
                         ("pos", num(r.pos as f64)),
+                        // hex string: a u64 token does not fit losslessly
+                        // in a JSON f64 number
+                        ("exporter", s(&format!("{:016x}", r.exporter))),
+                        ("dirty_gen", num(r.dirty_gen as f64)),
                     ])
                 })),
             ),
@@ -245,7 +433,7 @@ impl Checkpointer {
     }
 }
 
-fn read_manifest(dir: &Path) -> Result<BTreeMap<String, SnapshotRecord>> {
+fn read_manifest(dir: &Path) -> Result<(BTreeMap<String, SnapshotRecord>, u64)> {
     let path = dir.join(MANIFEST);
     let text =
         std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
@@ -255,24 +443,34 @@ fn read_manifest(dir: &Path) -> Result<BTreeMap<String, SnapshotRecord>> {
         bail!("{}: format '{format}' is not a session manifest", path.display());
     }
     let version = j.req("version")?.as_usize()?;
-    if version != MANIFEST_VERSION {
+    // v1 manifests lack the generation counter and dirty markers: still
+    // fully restorable, only un-retainable by a delta export
+    if version == 0 || version > MANIFEST_VERSION {
         bail!("{}: unsupported manifest version {version}", path.display());
     }
+    let generation = j.usize_or("generation", 0) as u64;
     let mut records = BTreeMap::new();
     for e in j.req("sessions")?.as_arr()? {
+        let exporter = match e.get("exporter") {
+            Some(v) => u64::from_str_radix(v.as_str()?, 16)
+                .context("manifest exporter token is not hex")?,
+            None => 0,
+        };
         let r = SnapshotRecord {
             id: e.req("id")?.as_str()?.to_string(),
             file: e.req("file")?.as_str()?.to_string(),
             bytes: e.req("bytes")?.as_f64()? as u64,
             crc: e.req("crc")?.as_f64()? as u32,
             pos: e.req("pos")?.as_f64()? as u64,
+            exporter,
+            dirty_gen: e.f64_or("dirty_gen", 0.0) as u64,
         };
         if r.file.contains('/') || r.file.contains("..") {
             bail!("{}: record '{}' escapes the checkpoint dir", path.display(), r.file);
         }
         records.insert(r.id.clone(), r);
     }
-    Ok(records)
+    Ok((records, generation))
 }
 
 /// Write bytes to `path` via a `.tmp` sibling + fsync + rename + parent
@@ -281,7 +479,7 @@ fn read_manifest(dir: &Path) -> Result<BTreeMap<String, SnapshotRecord>> {
 /// not durable across power loss on journaling filesystems; it is
 /// best-effort because not every platform lets a directory be opened
 /// for syncing.
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = path.with_extension("tmp");
     {
         let mut f = std::fs::File::create(&tmp)
@@ -300,7 +498,7 @@ fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// Filesystem-safe snapshot name: a sanitized prefix of the id for
 /// humans, plus an FNV-1a hash of the full id so distinct sessions can
 /// never collide on a shared sanitized prefix.
-fn snapshot_filename(id: &str) -> String {
+pub(crate) fn snapshot_filename(id: &str) -> String {
     let safe: String = id
         .chars()
         .take(40)
@@ -453,6 +651,126 @@ mod tests {
         let dir = tempdir("missing");
         let ck = Checkpointer::create(&dir).unwrap();
         assert!(ck.load("ghost", &model()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_survives_reopen_and_bumps_on_commit() {
+        let dir = tempdir("generation");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        assert_eq!(ck.generation(), 0);
+        let mut scorer = ChunkScorer::new(m).unwrap();
+        scorer.advance(&tokens(8, 50)).unwrap();
+        ck.stage_marked("g", &scorer, 7, 3).unwrap();
+        ck.commit_new_generation().unwrap();
+        assert_eq!(ck.generation(), 1);
+
+        let ck2 = Checkpointer::open(&dir).unwrap();
+        assert_eq!(ck2.generation(), 1);
+        let rec = ck2.record("g").unwrap();
+        assert_eq!((rec.exporter, rec.dirty_gen), (7, 3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_manifests_still_open_with_default_markers() {
+        let dir = tempdir("v1compat");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join(MANIFEST),
+            br#"{"format":"pfrm-session-manifest","version":1,
+                "sessions":[{"id":"x","file":"x.snap","bytes":1,"crc":0,"pos":4}]}"#,
+        )
+        .unwrap();
+        let ck = Checkpointer::open(&dir).unwrap();
+        assert_eq!(ck.generation(), 0);
+        let rec = ck.record("x").unwrap();
+        assert_eq!((rec.exporter, rec.dirty_gen, rec.pos), (0, 0, 4));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stage_linked_reuses_bytes_and_restamps_markers() {
+        let src_dir = tempdir("link_src");
+        let dst_dir = tempdir("link_dst");
+        let m = model();
+        let mut src = Checkpointer::create(&src_dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(16, 51)).unwrap();
+        let rec = src.save("linked", &scorer).unwrap();
+
+        let mut dst = Checkpointer::create(&dst_dir).unwrap();
+        let lrec = dst
+            .stage_linked(&src_dir.join(&rec.file), &rec, 99, 5)
+            .unwrap();
+        dst.commit_new_generation().unwrap();
+        assert_eq!((lrec.bytes, lrec.crc), (rec.bytes, rec.crc));
+        assert_eq!((lrec.exporter, lrec.dirty_gen), (99, 5));
+        // the linked record restores like a first-class snapshot, even
+        // after the source file's *name* disappears (the inode lives on)
+        std::fs::remove_file(src_dir.join(&rec.file)).unwrap();
+        let restored = Checkpointer::open(&dst_dir).unwrap().load("linked", &m).unwrap();
+        assert_eq!(restored.tokens_seen(), 16);
+        let _ = std::fs::remove_dir_all(&src_dir);
+        let _ = std::fs::remove_dir_all(&dst_dir);
+    }
+
+    #[test]
+    fn stage_record_publishes_in_memory_and_unstage_defers_deletion() {
+        let dir = tempdir("adopt");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(8, 52)).unwrap();
+        // stage writes the file; the record is loadable through this
+        // handle, while other processes see it only after commit
+        let rec = ck.stage("a", &scorer).unwrap();
+        assert!(Checkpointer::create(&dir).unwrap().is_empty());
+        ck.stage_record(rec.clone());
+        assert!(ck.load("a", &m).is_ok(), "staged record loads through this handle");
+        ck.commit().unwrap();
+        assert!(Checkpointer::open(&dir).unwrap().contains("a"));
+
+        // unstage drops the record but defers the file delete to commit
+        // (the on-disk manifest still references it until then)
+        assert!(ck.unstage("a").unwrap());
+        assert!(!ck.unstage("a").unwrap());
+        assert!(Checkpointer::open(&dir).unwrap().contains("a"), "not yet committed");
+        assert!(dir.join(&rec.file).exists(), "file must outlive the stale manifest");
+        ck.commit().unwrap();
+        assert!(Checkpointer::open(&dir).unwrap().is_empty());
+        assert!(!dir.join(&rec.file).exists(), "commit reclaims the unstaged file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restaging_never_replaces_a_committed_file_in_place() {
+        // the crash-consistency contract of delta exports: files a
+        // committed manifest references are not touched until the next
+        // generation commits, so re-staging a dirty session writes a
+        // NEW file and the old one survives (and restores) up to commit
+        let dir = tempdir("restaging");
+        let m = model();
+        let mut ck = Checkpointer::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(8, 53)).unwrap();
+        ck.stage("s", &scorer).unwrap();
+        ck.commit_new_generation().unwrap();
+        let gen1 = Checkpointer::open(&dir).unwrap();
+        let old_file = gen1.record("s").unwrap().file.clone();
+
+        scorer.advance(&tokens(8, 54)).unwrap();
+        let new = ck.stage("s", &scorer).unwrap();
+        assert_ne!(new.file, old_file, "re-staging must not reuse the committed name");
+        assert!(dir.join(&old_file).exists(), "committed snapshot untouched pre-commit");
+        // a crash here (simulated by a fresh handle) restores generation 1
+        assert_eq!(gen1.load("s", &m).unwrap().tokens_seen(), 8);
+
+        ck.commit_new_generation().unwrap();
+        assert!(!dir.join(&old_file).exists(), "superseded file reclaimed at commit");
+        let restored = Checkpointer::open(&dir).unwrap().load("s", &m).unwrap();
+        assert_eq!(restored.tokens_seen(), 16);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

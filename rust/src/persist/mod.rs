@@ -16,20 +16,30 @@
 //!   it was captured from so it can never be rehydrated into a
 //!   mismatched stack;
 //! * [`checkpointer`] — [`Checkpointer`], a directory of snapshots with
-//!   a crash-safe manifest (every write goes temp-file-then-rename, and
-//!   every record carries the snapshot's byte length and CRC32, so a
-//!   torn write is detected loudly instead of restoring garbage);
-//! * the spill tier in `stream::SessionManager` — LRU eviction under a
-//!   byte budget demotes cold sessions to a [`Checkpointer`] instead of
-//!   destroying their context, and the next chunk for a spilled id
-//!   transparently rehydrates it — and the migration APIs on
-//!   `coordinator::Coordinator` (`checkpoint_all` / `restore_from`),
-//!   which let a warm replica adopt another coordinator's sessions.
+//!   a crash-safe, *generation-counted* manifest (every write goes
+//!   temp-file-then-rename, every record carries the snapshot's byte
+//!   length and CRC32 plus a delta-export dirty marker, so a torn write
+//!   is detected loudly and a clean session can be retained across
+//!   exports without re-snapshotting);
+//! * [`spill`] — [`SpillTier`], the asynchronous write-back spill tier:
+//!   LRU eviction in `stream::SessionManager` *enqueues* a demotion to
+//!   a background writer thread instead of blocking the serving thread
+//!   on an fsync; in-flight spills stay resident-readable until their
+//!   write commits, and rehydration of one short-circuits to the
+//!   resident copy;
+//! * the migration + export APIs on `coordinator::Coordinator`
+//!   (`checkpoint_all` / `checkpoint_delta` / `restore_from`), which
+//!   let a warm replica adopt another coordinator's sessions and let a
+//!   hot export re-snapshot only the sessions that advanced since the
+//!   previous one.
 //!
-//! See DESIGN.md §Durable session persistence for the byte-level format.
+//! See DESIGN.md §Durable session persistence for the byte-level format,
+//! the write-back protocol and the delta-manifest generation scheme.
 
 pub mod checkpointer;
 pub mod snapshot;
+pub mod spill;
 
 pub use checkpointer::{Checkpointer, SnapshotRecord};
 pub use snapshot::{crc32, ModelFingerprint, SessionSnapshot, SNAPSHOT_VERSION};
+pub use spill::{SpillCounters, SpillTier};

@@ -61,10 +61,13 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 /// carried prefix sums into silently wrong scores.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ModelFingerprint {
+    /// number of transformer layers
     pub layers: usize,
+    /// attention heads per layer
     pub heads: usize,
     /// per-head value dimension d_h
     pub d_head: usize,
+    /// vocabulary size (length of the carried context row)
     pub vocab: usize,
     /// per-layer attention-kernel identity (kind, M, ORF mechanism,
     /// redraw seed/schedule): a snapshot refuses restore into a model

@@ -1,0 +1,616 @@
+//! The asynchronous spill tier: write-back demotion of cold sessions to
+//! disk, off the serving thread.
+//!
+//! PR 3's spill tier paid a full fsynced snapshot write inside
+//! `SessionManager::advance_batch` every time eviction fired — a hot
+//! checkpoint stalled every in-flight stream. This module moves the
+//! write behind a dedicated writer thread:
+//!
+//! ```text
+//!   serving thread                      spill-writer thread
+//!   ──────────────                      ───────────────────
+//!   evict: capture+encode ──channel──▶  write_atomic(.snap)
+//!          park scorer in `pending`     publish record + retire entry
+//!          (resident-readable!)         commit the manifest
+//! ```
+//!
+//! Invariants:
+//!
+//! * **Write-back, not write-through** — until the background write
+//!   commits, the evicted session's scorer stays parked in the
+//!   `pending` map. Rehydration of a pending id takes the resident copy
+//!   back (and thereby cancels the queued write), so an
+//!   advance-after-evict never blocks on, or races with, disk.
+//! * **Exactly-one-owner** — at any observable point a live session is
+//!   resident in the manager, parked in `pending`, or committed in the
+//!   tier. The writer publishes a finished write (in-memory record +
+//!   committed-id mirror) and retires the pending entry in one critical
+//!   section under the pending lock, so there is no window where a
+//!   demoted session is invisible or where a take-back races a commit.
+//! * **Shutdown drains** — dropping the tier closes the channel, and
+//!   the writer finishes every queued job before exiting; nothing that
+//!   was enqueued is lost on an orderly shutdown.
+//! * **Failed writes degrade loudly, not leakily** — a session whose
+//!   spill write fails is queued on a failure list that the
+//!   `SessionManager` reaps at its next batch, converting it to the old
+//!   synchronous path's loud eviction; parked scorers can never
+//!   accumulate unboundedly behind a bad disk.
+//! * **A closed id can never resurrect** — publication (in-memory
+//!   record + committed mirror + pending retire) happens atomically
+//!   under the pending lock, so a job whose session was closed or taken
+//!   back after the pre-check is simply discarded, orphan file removed.
+
+use std::collections::{BTreeSet, HashMap};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::stream::ChunkScorer;
+use crate::train::NativeModel;
+
+use super::checkpointer::{snapshot_filename, Checkpointer, SnapshotRecord};
+use super::snapshot::{crc32, SessionSnapshot};
+
+/// A spill captured on the serving thread, parked in RAM until its
+/// background write commits.
+struct PendingSpill {
+    scorer: ChunkScorer,
+    /// the session's dirty generation at capture (travels with the
+    /// snapshot so a rehydrated-but-unchanged session stays "clean"
+    /// for delta exports)
+    dirty_gen: u64,
+    /// enqueue sequence number: a writer job commits only if the
+    /// pending entry still carries its sequence — a take-back or a
+    /// newer spill of the same id supersedes it
+    seq: u64,
+}
+
+enum Job {
+    Write {
+        id: String,
+        seq: u64,
+        bytes: Vec<u8>,
+        pos: u64,
+        exporter: u64,
+        dirty_gen: u64,
+    },
+    /// barrier: acked once every job queued before it has been handled
+    Flush(Sender<()>),
+}
+
+/// Writer-side counters, written by the spill thread and read (lock-free)
+/// by `SessionManager::stats`.
+#[derive(Default)]
+struct WriterStats {
+    commits: AtomicU64,
+    cancels: AtomicU64,
+    write_failures: AtomicU64,
+    write_nanos: AtomicU64,
+}
+
+/// A point-in-time copy of the tier's counters, merged into
+/// `stream::SessionStats` by the manager.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpillCounters {
+    /// background writes committed to the manifest
+    pub commits: u64,
+    /// queued writes skipped or undone (take-back, close, or a newer
+    /// spill of the same id superseded them)
+    pub cancels: u64,
+    /// background writes that failed (the session is converted to a
+    /// loud eviction at the manager's next batch)
+    pub write_failures: u64,
+    /// cumulative serving-thread time spent enqueueing spills, ns
+    pub enqueue_nanos: u64,
+    /// cumulative writer-thread time spent writing + committing, ns
+    pub write_nanos: u64,
+    /// spills currently parked awaiting their background write
+    pub pending: u64,
+}
+
+struct Shared {
+    ck: Mutex<Checkpointer>,
+    pending: Mutex<HashMap<String, PendingSpill>>,
+    /// ids with a committed snapshot, mirrored from `ck` so membership
+    /// checks on the serving path (`contains`, gauges) never wait on a
+    /// manifest fsync the writer is running under the `ck` lock. The
+    /// writer inserts here *before* retiring the pending entry, so a
+    /// demoted session is never transiently invisible
+    committed: Mutex<BTreeSet<String>>,
+    /// (id, seq) of spills whose background write failed. The serving
+    /// thread reaps these at its next batch and converts them to loud
+    /// evictions — the same degradation a failed synchronous spill had —
+    /// so parked scorers never accumulate unboundedly behind a bad disk
+    failed: Mutex<Vec<(String, u64)>>,
+    stats: WriterStats,
+    /// serving-thread enqueue time lives here too so `SpillCounters`
+    /// can be read from one place
+    enqueue_nanos: AtomicU64,
+    /// test/ops hook: while true, the writer parks before each job
+    gate: (Mutex<bool>, Condvar),
+}
+
+impl Shared {
+    fn wait_gate(&self) {
+        let (lock, cvar) = &self.gate;
+        let mut held = lock.lock().expect("spill gate poisoned");
+        while *held {
+            held = cvar.wait(held).expect("spill gate poisoned");
+        }
+    }
+}
+
+/// The spill tier handle owned by a `SessionManager`: a checkpoint
+/// directory, the pending (write-back) map, and the writer thread.
+pub struct SpillTier {
+    shared: Arc<Shared>,
+    tx: Option<Sender<Job>>,
+    worker: Option<JoinHandle<()>>,
+    next_seq: u64,
+}
+
+impl SpillTier {
+    /// Open the spill directory (clearing any stale snapshots from a
+    /// previous process — the spill tier caches one process's live
+    /// sessions, never a dead one's) and start the writer thread.
+    pub fn create(dir: &Path) -> Result<SpillTier> {
+        let mut ck = Checkpointer::create(dir).context("opening spill directory")?;
+        let stale = ck.clear().context("clearing stale spill snapshots")?;
+        if stale > 0 {
+            eprintln!("[spill] cleared {stale} stale spill snapshot(s) in {}", dir.display());
+        }
+        let shared = Arc::new(Shared {
+            ck: Mutex::new(ck),
+            pending: Mutex::new(HashMap::new()),
+            committed: Mutex::new(BTreeSet::new()),
+            failed: Mutex::new(Vec::new()),
+            stats: WriterStats::default(),
+            enqueue_nanos: AtomicU64::new(0),
+            gate: (Mutex::new(false), Condvar::new()),
+        });
+        let (tx, rx) = channel::<Job>();
+        let shared2 = shared.clone();
+        let worker = std::thread::Builder::new()
+            .name("spill-writer".to_string())
+            .spawn(move || writer_loop(&rx, &shared2))?;
+        Ok(SpillTier { shared, tx: Some(tx), worker: Some(worker), next_seq: 0 })
+    }
+
+    /// The spill directory path.
+    pub fn dir(&self) -> PathBuf {
+        self.shared.ck.lock().expect("spill checkpointer poisoned").dir().to_path_buf()
+    }
+
+    /// Demote a session: capture + encode its snapshot on the calling
+    /// thread (a few tens of kilobytes of memcpy), park the scorer in
+    /// the pending map and hand the bytes to the writer. Returns the
+    /// encoded snapshot size. On capture failure the session's context
+    /// is dropped — the caller falls back to a loud eviction, exactly
+    /// as a failed synchronous spill did.
+    pub fn enqueue(
+        &mut self,
+        id: &str,
+        scorer: ChunkScorer,
+        dirty_gen: u64,
+        exporter: u64,
+    ) -> Result<u64> {
+        let t0 = Instant::now();
+        let snap = SessionSnapshot::capture(id, &scorer)?;
+        let bytes = snap.to_bytes();
+        let size = bytes.len() as u64;
+        let pos = scorer.tokens_seen() as u64;
+        self.next_seq += 1;
+        let seq = self.next_seq;
+        self.shared
+            .pending
+            .lock()
+            .expect("spill pending map poisoned")
+            .insert(id.to_string(), PendingSpill { scorer, dirty_gen, seq });
+        let job = Job::Write { id: id.to_string(), seq, bytes, pos, exporter, dirty_gen };
+        let sent = self.tx.as_ref().is_some_and(|tx| tx.send(job).is_ok());
+        if !sent {
+            // writer died: un-park the entry and fail the enqueue so the
+            // caller degrades to a loud eviction — parking a scorer no
+            // one will ever write would leak it past the byte budget
+            self.shared.stats.write_failures.fetch_add(1, Ordering::Relaxed);
+            self.shared.pending.lock().expect("spill pending map poisoned").remove(id);
+            bail!("spill writer thread is gone");
+        }
+        self.shared
+            .enqueue_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(size)
+    }
+
+    /// Drain the failed-write list: (id, seq) pairs whose background
+    /// write failed since the last call. For each, the caller should
+    /// [`Self::drop_failed_pending`] and treat the session as loudly
+    /// evicted.
+    pub fn take_failed(&self) -> Vec<(String, u64)> {
+        std::mem::take(&mut *self.shared.failed.lock().expect("spill failed list poisoned"))
+    }
+
+    /// Drop the parked scorer of a failed spill, if it is still the one
+    /// that failed (a rehydration may have reclaimed it meanwhile — then
+    /// nothing was lost and nothing is dropped). Returns whether the
+    /// entry was dropped.
+    pub fn drop_failed_pending(&self, id: &str, seq: u64) -> bool {
+        let mut pending = self.shared.pending.lock().expect("spill pending map poisoned");
+        if pending.get(id).is_some_and(|p| p.seq == seq) {
+            pending.remove(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Take back a pending (in-flight) spill's resident copy, canceling
+    /// its queued write. Returns the scorer and its dirty generation.
+    pub fn take_pending(&self, id: &str) -> Option<(ChunkScorer, u64)> {
+        self.shared
+            .pending
+            .lock()
+            .expect("spill pending map poisoned")
+            .remove(id)
+            .map(|p| (p.scorer, p.dirty_gen))
+    }
+
+    /// Whether `id` is demoted to this tier — parked awaiting its write
+    /// or already committed on disk. Never waits on snapshot/manifest
+    /// IO: membership reads the mirrored id set, not the checkpointer.
+    pub fn contains(&self, id: &str) -> bool {
+        if self.shared.pending.lock().expect("spill pending map poisoned").contains_key(id) {
+            return true;
+        }
+        self.shared.committed.lock().expect("spill committed set poisoned").contains(id)
+    }
+
+    /// Number of spills parked awaiting their background write.
+    pub fn pending_count(&self) -> usize {
+        self.shared.pending.lock().expect("spill pending map poisoned").len()
+    }
+
+    /// Number of spills committed on disk.
+    pub fn committed_count(&self) -> usize {
+        self.shared.committed.lock().expect("spill committed set poisoned").len()
+    }
+
+    /// Ids parked in the pending map, sorted.
+    pub fn pending_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> = self
+            .shared
+            .pending
+            .lock()
+            .expect("spill pending map poisoned")
+            .keys()
+            .cloned()
+            .collect();
+        ids.sort();
+        ids
+    }
+
+    /// Ids with a committed snapshot on disk, sorted.
+    pub fn committed_ids(&self) -> Vec<String> {
+        self.shared
+            .committed
+            .lock()
+            .expect("spill committed set poisoned")
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    /// The committed manifest record for `id`, if one exists.
+    pub fn committed_record(&self, id: &str) -> Option<SnapshotRecord> {
+        self.shared.ck.lock().expect("spill checkpointer poisoned").record(id).cloned()
+    }
+
+    /// Capture an encoded snapshot of every *pending* spill (for
+    /// exports: in-flight spills are live sessions too). The callback
+    /// runs under the pending lock; entries are visited in sorted-id
+    /// order for deterministic exports.
+    pub fn for_each_pending(
+        &self,
+        mut f: impl FnMut(&str, &[u8], u64, u64) -> Result<()>,
+    ) -> Result<()> {
+        let pending = self.shared.pending.lock().expect("spill pending map poisoned");
+        let mut ids: Vec<&String> = pending.keys().collect();
+        ids.sort();
+        for id in ids {
+            let p = &pending[id.as_str()];
+            let bytes = SessionSnapshot::capture(id, &p.scorer)?.to_bytes();
+            f(id, &bytes, p.scorer.tokens_seen() as u64, p.dirty_gen)?;
+        }
+        Ok(())
+    }
+
+    /// Rehydrate a *committed* spill, consuming its snapshot (the
+    /// returned scorer owns the stream from here on). Returns the
+    /// scorer and the dirty generation recorded at spill time.
+    pub fn load_committed(
+        &self,
+        id: &str,
+        model: &Arc<NativeModel>,
+    ) -> Result<(ChunkScorer, u64)> {
+        let mut ck = self.shared.ck.lock().expect("spill checkpointer poisoned");
+        let dirty_gen = ck.record(id).map(|r| r.dirty_gen).unwrap_or(0);
+        let scorer = ck.load(id, model)?;
+        ck.remove(id)?;
+        self.shared.committed.lock().expect("spill committed set poisoned").remove(id);
+        Ok((scorer, dirty_gen))
+    }
+
+    /// Drop a session from the tier — cancel a pending spill and/or
+    /// remove a committed snapshot. Returns whether anything existed.
+    pub fn remove(&self, id: &str) -> Result<bool> {
+        let pending = self
+            .shared
+            .pending
+            .lock()
+            .expect("spill pending map poisoned")
+            .remove(id)
+            .is_some();
+        let committed =
+            self.shared.ck.lock().expect("spill checkpointer poisoned").remove(id)?;
+        self.shared.committed.lock().expect("spill committed set poisoned").remove(id);
+        Ok(pending || committed)
+    }
+
+    /// Block until every spill enqueued so far has been written (or
+    /// canceled) — the shutdown/test barrier. Fails if the writer died.
+    pub fn flush(&self) -> Result<()> {
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow!("spill writer already shut down"))?;
+        let (ack_tx, ack_rx) = channel();
+        tx.send(Job::Flush(ack_tx)).map_err(|_| anyhow!("spill writer is gone"))?;
+        ack_rx.recv().map_err(|_| anyhow!("spill writer died mid-flush"))
+    }
+
+    /// Test/ops hook: while held, the writer parks before each job, so
+    /// spills stay observably in-flight. Release wakes it.
+    pub fn hold_writes(&self, on: bool) {
+        let (lock, cvar) = &self.shared.gate;
+        *lock.lock().expect("spill gate poisoned") = on;
+        cvar.notify_all();
+    }
+
+    /// Point-in-time counters for metrics.
+    pub fn counters(&self) -> SpillCounters {
+        SpillCounters {
+            commits: self.shared.stats.commits.load(Ordering::Relaxed),
+            cancels: self.shared.stats.cancels.load(Ordering::Relaxed),
+            write_failures: self.shared.stats.write_failures.load(Ordering::Relaxed),
+            enqueue_nanos: self.shared.enqueue_nanos.load(Ordering::Relaxed),
+            write_nanos: self.shared.stats.write_nanos.load(Ordering::Relaxed),
+            pending: self.pending_count() as u64,
+        }
+    }
+}
+
+impl Drop for SpillTier {
+    fn drop(&mut self) {
+        // release a held gate so the drain cannot deadlock, close the
+        // channel, and wait for the writer to finish every queued job
+        self.hold_writes(false);
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn writer_loop(rx: &Receiver<Job>, shared: &Shared) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Flush(ack) => {
+                let _ = ack.send(());
+            }
+            Job::Write { id, seq, bytes, pos, exporter, dirty_gen } => {
+                shared.wait_gate();
+                // superseded, taken back or closed before we got here:
+                // skip the write entirely
+                let live = shared
+                    .pending
+                    .lock()
+                    .expect("spill pending map poisoned")
+                    .get(&id)
+                    .is_some_and(|p| p.seq == seq);
+                if !live {
+                    shared.stats.cancels.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let t0 = Instant::now();
+                let file = snapshot_filename(&id);
+                let path = {
+                    shared.ck.lock().expect("spill checkpointer poisoned").dir().join(&file)
+                };
+                // the file write holds no lock: rehydrations and metric
+                // reads proceed while the fsync runs
+                if let Err(e) = super::checkpointer::write_atomic(&path, &bytes) {
+                    eprintln!(
+                        "[spill] background write for '{id}' failed ({e:#}); \
+                         the session will be evicted loudly"
+                    );
+                    shared.stats.write_failures.fetch_add(1, Ordering::Relaxed);
+                    shared
+                        .failed
+                        .lock()
+                        .expect("spill failed list poisoned")
+                        .push((id, seq));
+                    continue;
+                }
+                // PUBLISH atomically with respect to the serving thread:
+                // while holding the pending lock (so no take-back or
+                // close can interleave), verify the entry still expects
+                // this job, insert the in-memory record + the committed
+                // mirror, and retire the entry. A session closed or
+                // taken back after the pre-check is therefore never
+                // published — its stale snapshot can never resurrect —
+                // and a published session is loadable before the entry
+                // disappears, so it is never transiently invisible. The
+                // locks guard only in-memory maps here; the manifest
+                // fsync happens after, outside the pending lock.
+                let published = {
+                    let mut pending =
+                        shared.pending.lock().expect("spill pending map poisoned");
+                    if pending.get(&id).is_some_and(|p| p.seq == seq) {
+                        let record = SnapshotRecord {
+                            id: id.clone(),
+                            file,
+                            bytes: bytes.len() as u64,
+                            crc: crc32(&bytes),
+                            pos,
+                            exporter,
+                            dirty_gen,
+                        };
+                        shared
+                            .ck
+                            .lock()
+                            .expect("spill checkpointer poisoned")
+                            .stage_record(record);
+                        shared
+                            .committed
+                            .lock()
+                            .expect("spill committed set poisoned")
+                            .insert(id.clone());
+                        pending.remove(&id);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if published {
+                    // persist the manifest for out-of-process readers;
+                    // in-memory state is already consistent, and the
+                    // spill dir is a per-process cache, so a failure
+                    // here only costs durability of this one manifest
+                    // write (logged, not fatal)
+                    if let Err(e) =
+                        shared.ck.lock().expect("spill checkpointer poisoned").commit()
+                    {
+                        eprintln!("[spill] manifest write for a spill failed: {e:#}");
+                    }
+                    shared.stats.commits.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    // canceled between pre-check and publish: the file
+                    // we wrote is an unreferenced orphan — reclaim it
+                    shared.stats.cancels.fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(&path);
+                }
+                shared
+                    .stats
+                    .write_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protein::vocab::{AA_BASE, N_AA};
+    use crate::rng::Pcg64;
+    use crate::train::SyntheticConfig;
+
+    fn model() -> Arc<NativeModel> {
+        let mut rng = Pcg64::new(41);
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng))
+    }
+
+    fn tokens(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+    }
+
+    fn tempdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("pfrm_spill_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn enqueue_commits_in_background_and_flush_waits() {
+        let dir = tempdir("commit");
+        let m = model();
+        let mut tier = SpillTier::create(&dir).unwrap();
+        let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+        scorer.advance(&tokens(16, 1)).unwrap();
+        let size = tier.enqueue("a", scorer, 3, 42).unwrap();
+        assert!(size > 0);
+        assert!(tier.contains("a"), "pending spill is part of the tier");
+        tier.flush().unwrap();
+        assert_eq!(tier.pending_count(), 0, "flush drains the queue");
+        assert_eq!(tier.committed_count(), 1);
+        let rec = tier.committed_record("a").unwrap();
+        assert_eq!((rec.exporter, rec.dirty_gen, rec.pos), (42, 3, 16));
+        let c = tier.counters();
+        assert_eq!((c.commits, c.cancels, c.write_failures), (1, 0, 0));
+        assert!(c.enqueue_nanos > 0 && c.write_nanos > 0);
+
+        let (restored, dirty) = tier.load_committed("a", &m).unwrap();
+        assert_eq!((restored.tokens_seen(), dirty), (16, 3));
+        assert!(!tier.contains("a"), "load_committed consumes the snapshot");
+        drop(tier);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn take_pending_cancels_the_queued_write() {
+        let dir = tempdir("cancel");
+        let m = model();
+        let mut tier = SpillTier::create(&dir).unwrap();
+        tier.hold_writes(true);
+        let mut scorer = ChunkScorer::new(m).unwrap();
+        scorer.advance(&tokens(16, 2)).unwrap();
+        tier.enqueue("a", scorer, 5, 9).unwrap();
+        // take the resident copy back while the write is held in flight
+        let (scorer, dirty) = tier.take_pending("a").expect("pending copy available");
+        assert_eq!((scorer.tokens_seen(), dirty), (16, 5));
+        tier.hold_writes(false);
+        tier.flush().unwrap();
+        assert_eq!(tier.committed_count(), 0, "canceled write must not commit");
+        let c = tier.counters();
+        assert_eq!((c.commits, c.cancels), (0, 1));
+        drop(tier);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_drains_queued_writes() {
+        let dir = tempdir("drain");
+        let m = model();
+        {
+            let mut tier = SpillTier::create(&dir).unwrap();
+            for (i, id) in ["a", "b", "c"].iter().enumerate() {
+                let mut scorer = ChunkScorer::new(m.clone()).unwrap();
+                scorer.advance(&tokens(8, 10 + i as u64)).unwrap();
+                tier.enqueue(id, scorer, i as u64, 1).unwrap();
+            }
+        } // drop: shutdown must drain all three writes
+        let ck = Checkpointer::open(&dir).unwrap();
+        assert_eq!(ck.ids(), vec!["a".to_string(), "b".into(), "c".into()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn startup_clears_stale_snapshots() {
+        let dir = tempdir("stale");
+        let m = model();
+        {
+            let mut tier = SpillTier::create(&dir).unwrap();
+            let mut scorer = ChunkScorer::new(m).unwrap();
+            scorer.advance(&tokens(8, 20)).unwrap();
+            tier.enqueue("old", scorer, 1, 1).unwrap();
+            tier.flush().unwrap();
+        }
+        let tier = SpillTier::create(&dir).unwrap();
+        assert!(!tier.contains("old"), "a fresh tier must not resurrect old spills");
+        drop(tier);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -22,7 +22,9 @@ use super::vocab::{self, aa_weights, AA_BASE};
 /// One protein family: a consensus sequence + mutation parameters.
 #[derive(Clone, Debug)]
 pub struct Family {
+    /// stable family id (OOD families number after IID ones)
     pub id: usize,
+    /// the family's consensus residues (token ids)
     pub consensus: Vec<u8>,
     /// per-position substitution probability
     pub sub_rate: f64,
@@ -33,15 +35,23 @@ pub struct Family {
 /// Corpus generation parameters.
 #[derive(Clone, Debug)]
 pub struct CorpusConfig {
+    /// in-distribution families (train/valid/test)
     pub n_families: usize,
+    /// held-out families for the OOD split
     pub n_ood_families: usize,
     /// log-normal length parameters — defaults match Table 1
     pub len_mu: f64,
+    /// log-normal σ of consensus lengths
     pub len_sigma: f64,
+    /// shortest consensus length
     pub min_len: usize,
+    /// longest consensus length
     pub max_len: usize,
+    /// per-position substitution probability applied to copies
     pub sub_rate: f64,
+    /// insertion/deletion probability per position
     pub indel_rate: f64,
+    /// generation seed (the corpus is fully deterministic)
     pub seed: u64,
 }
 
@@ -64,13 +74,17 @@ impl Default for CorpusConfig {
 
 /// A generated corpus: IID families (train/valid/test) + OOD families.
 pub struct Corpus {
+    /// the parameters the corpus was generated with
     pub cfg: CorpusConfig,
+    /// in-distribution families
     pub families: Vec<Family>,
+    /// held-out families (OOD split)
     pub ood_families: Vec<Family>,
     aa_w: Vec<f64>,
 }
 
 impl Corpus {
+    /// Deterministically generate the corpus from its config.
     pub fn generate(cfg: CorpusConfig) -> Self {
         let mut rng = Pcg64::new(cfg.seed);
         let aa_w = aa_weights();

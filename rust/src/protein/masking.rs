@@ -10,14 +10,20 @@ use super::vocab::{self, AA_BASE, MASK, N_AA, PAD};
 /// weights (1.0 where the loss counts).
 #[derive(Clone, Debug)]
 pub struct Batch {
+    /// batch size
     pub b: usize,
+    /// sequence length
     pub l: usize,
+    /// input token ids, row-major (b, l)
     pub tokens: Vec<i32>,
+    /// prediction targets, row-major (b, l)
     pub targets: Vec<i32>,
+    /// loss weights (1.0 where the loss counts)
     pub weights: Vec<f32>,
 }
 
 impl Batch {
+    /// All-PAD batch of shape (b, l).
     pub fn new(b: usize, l: usize) -> Self {
         Batch {
             b,
@@ -28,6 +34,7 @@ impl Batch {
         }
     }
 
+    /// Fraction of positions that contribute to the loss.
     pub fn masked_fraction(&self) -> f64 {
         let nz = self.weights.iter().filter(|&&w| w > 0.0).count();
         nz as f64 / self.weights.len() as f64
@@ -38,8 +45,11 @@ impl Batch {
 /// 15% probability", BERT's 80/10/10 replacement split.
 #[derive(Clone, Copy, Debug)]
 pub struct MaskPolicy {
+    /// per-token masking probability (paper: 0.15)
     pub rate: f64,
+    /// of masked tokens, fraction replaced by MASK (BERT: 0.8)
     pub mask_prob: f64,
+    /// of masked tokens, fraction replaced by a random residue (0.1)
     pub random_prob: f64,
 }
 

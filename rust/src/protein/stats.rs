@@ -6,14 +6,21 @@ use super::vocab::{aa_class, token_letter, AA_BASE, N_STANDARD_AA};
 /// Length summary statistics in the exact columns of Table 1.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LengthStats {
+    /// number of sequences
     pub count: usize,
+    /// shortest length
     pub min: usize,
+    /// longest length
     pub max: usize,
+    /// mean length
     pub mean: f64,
+    /// standard deviation of lengths
     pub std: f64,
+    /// median length
     pub median: f64,
 }
 
+/// Summarize a length sample in Table 1's columns.
 pub fn length_stats(lengths: &[usize]) -> LengthStats {
     assert!(!lengths.is_empty());
     let count = lengths.len();

@@ -4,8 +4,11 @@
 
 /// Special tokens.
 pub const PAD: u8 = 0;
+/// the MLM mask token
 pub const MASK: u8 = 1;
+/// beginning-of-sequence
 pub const BOS: u8 = 2;
+/// end-of-sequence (doubles as the separator in concatenated mode)
 pub const EOS: u8 = 3; // also the protein separator in concatenated mode
 
 /// First amino-acid token id.
@@ -18,8 +21,11 @@ pub const AA_LETTERS: [char; 25] = [
     'S', 'T', 'V', 'W', 'Y', 'B', 'O', 'U', 'X', 'Z',
 ];
 
+/// count of standard amino acids
 pub const N_STANDARD_AA: usize = 20;
+/// count of all amino-acid tokens (standard + anomalous)
 pub const N_AA: usize = 25;
+/// total vocabulary size the models are compiled against
 pub const VOCAB_SIZE: usize = AA_BASE as usize + N_AA + 1; // 30 (one reserved)
 
 /// Empirical amino-acid frequencies (%) in TrEMBL, matching the UniProt

@@ -36,6 +36,7 @@ pub struct Pcg64 {
 const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
 
 impl Pcg64 {
+    /// Seed a generator (full 128-bit state scrambled from the u64).
     pub fn new(seed: u64) -> Self {
         // splitmix-style scrambling to fill 128-bit state from a u64 seed
         let mut s = Self {
@@ -54,6 +55,7 @@ impl Pcg64 {
     }
 
     #[inline]
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let rot = (self.state >> 122) as u32;

@@ -68,6 +68,7 @@ impl EngineHandle {
         EngineHandle { tx, dir: artifacts_dir.as_ref().to_path_buf() }
     }
 
+    /// The artifacts directory this handle resolves names against.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }
@@ -120,6 +121,7 @@ impl EngineActor {
         Ok(EngineActor { handle: EngineHandle { tx, dir }, join: Some(join) })
     }
 
+    /// A new handle to the running engine thread.
     pub fn handle(&self) -> EngineHandle {
         self.handle.clone()
     }

@@ -13,17 +13,29 @@ use crate::jsonx::Json;
 /// What an input/output slot means to the training/serving driver.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Role {
+    /// model parameter
     Param,
+    /// Adam first-moment slot
     OptM,
+    /// Adam second-moment slot
     OptV,
+    /// optimizer step counter
     OptStep,
+    /// FAVOR random-feature draw
     Feature,
+    /// input token ids
     Tokens,
+    /// prediction targets
     Targets,
+    /// per-position loss weights
     Weights,
+    /// generic input
     Input,
+    /// scalar loss output
     Loss,
+    /// scalar accuracy output
     Acc,
+    /// unrecognized role
     Other,
 }
 
@@ -47,8 +59,11 @@ impl Role {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Element type of a slot.
 pub enum Dtype {
+    /// 32-bit float
     F32,
+    /// 32-bit integer
     I32,
 }
 
@@ -65,13 +80,18 @@ impl Dtype {
 /// One input or output slot.
 #[derive(Clone, Debug)]
 pub struct Slot {
+    /// slot name (as lowered by aot.py)
     pub name: String,
+    /// what the slot means to the driver
     pub role: Role,
+    /// tensor shape
     pub shape: Vec<usize>,
+    /// element type
     pub dtype: Dtype,
 }
 
 impl Slot {
+    /// Number of elements the slot holds.
     pub fn elements(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -95,32 +115,51 @@ impl Slot {
 /// Model configuration echoed into the metadata by aot.py.
 #[derive(Clone, Debug, Default)]
 pub struct ArtifactConfig {
+    /// model width
     pub d_model: usize,
+    /// attention heads per layer
     pub n_heads: usize,
+    /// number of transformer layers
     pub n_layers: usize,
+    /// feed-forward hidden width
     pub d_ff: usize,
+    /// compiled sequence length
     pub max_len: usize,
+    /// FAVOR feature count M
     pub n_features: usize,
+    /// compiled batch size
     pub batch: usize,
+    /// vocabulary size
     pub vocab_size: usize,
+    /// attention family ("favor-relu", "exact", ...)
     pub attention: String,
+    /// causal (true) vs bidirectional (false)
     pub unidirectional: bool,
+    /// total trainable parameters
     pub param_count: usize,
+    /// extra numeric config echoed by aot.py
     pub extra: BTreeMap<String, f64>,
 }
 
 /// A parsed artifact contract.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// artifact name (file stem)
     pub name: String,
+    /// artifact kind ("fwd", "train", "eval")
     pub kind: String,
+    /// the model configuration it was lowered with
     pub config: ArtifactConfig,
+    /// input slots in call order
     pub inputs: Vec<Slot>,
+    /// output slots in return order
     pub outputs: Vec<Slot>,
+    /// path to the HLO text module
     pub hlo_path: PathBuf,
 }
 
 impl ArtifactMeta {
+    /// Read `<dir>/<name>.meta.json`.
     pub fn load(dir: &Path, name: &str) -> Result<ArtifactMeta> {
         let meta_path = dir.join(format!("{name}.meta.json"));
         let text = std::fs::read_to_string(&meta_path)

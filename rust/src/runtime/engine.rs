@@ -22,11 +22,14 @@ use super::xla_stub as xla;
 /// A typed host-side value fed to / read from an executable.
 #[derive(Clone, Debug)]
 pub enum HostValue {
+    /// packed f32 tensor data
     F32(Vec<f32>),
+    /// packed i32 tensor data
     I32(Vec<i32>),
 }
 
 impl HostValue {
+    /// The f32 data, or an error for i32 values.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             HostValue::F32(v) => Ok(v),
@@ -34,6 +37,7 @@ impl HostValue {
         }
     }
 
+    /// The i32 data, or an error for f32 values.
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             HostValue::I32(v) => Ok(v),
@@ -41,11 +45,13 @@ impl HostValue {
         }
     }
 
+    /// First f32 element (scalar outputs).
     pub fn scalar_f32(&self) -> Result<f32> {
         let v = self.as_f32()?;
         v.first().copied().ok_or_else(|| anyhow!("empty value"))
     }
 
+    /// Number of elements.
     pub fn len(&self) -> usize {
         match self {
             HostValue::F32(v) => v.len(),
@@ -53,6 +59,7 @@ impl HostValue {
         }
     }
 
+    /// Whether the value holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -60,6 +67,7 @@ impl HostValue {
 
 /// Compiled artifact + its metadata contract.
 pub struct Executable {
+    /// the artifact's I/O contract
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
     /// cumulative execute statistics (wall time, call count)
@@ -67,8 +75,11 @@ pub struct Executable {
 }
 
 #[derive(Clone, Copy, Debug, Default)]
+/// Cumulative execution statistics of one executable.
 pub struct ExecStats {
+    /// executions performed
     pub calls: u64,
+    /// total wall time inside PJRT execute
     pub total_secs: f64,
 }
 
@@ -125,6 +136,7 @@ impl Executable {
         Ok(out)
     }
 
+    /// Snapshot of the execution statistics.
     pub fn stats(&self) -> ExecStats {
         *self.stats.lock().unwrap()
     }
@@ -149,10 +161,12 @@ impl Engine {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The artifacts directory this engine loads from.
     pub fn artifacts_dir(&self) -> &Path {
         &self.dir
     }
@@ -205,6 +219,7 @@ pub struct InputBuilder<'a> {
 }
 
 impl<'a> InputBuilder<'a> {
+    /// Empty builder over an artifact's input slots.
     pub fn new(meta: &'a ArtifactMeta) -> Self {
         InputBuilder { meta, values: vec![None; meta.inputs.len()] }
     }
@@ -225,12 +240,14 @@ impl<'a> InputBuilder<'a> {
         Ok(self)
     }
 
+    /// Fill the single slot of a role.
     pub fn set(mut self, role: Role, val: HostValue) -> Result<Self> {
         let i = self.meta.input_index(role)?;
         self.values[i] = Some(val);
         Ok(self)
     }
 
+    /// The complete input vector; any unfilled slot is an error.
     pub fn finish(self) -> Result<Vec<HostValue>> {
         let mut out = Vec::with_capacity(self.values.len());
         for (i, v) in self.values.into_iter().enumerate() {

@@ -18,10 +18,12 @@ const MAGIC: &[u8; 8] = b"PFRMTENS";
 /// A named collection of f32 tensors (order preserved).
 #[derive(Clone, Debug, Default)]
 pub struct TensorFile {
+    /// (name, shape, data) tensors in file order
     pub entries: Vec<(String, Vec<usize>, Vec<f32>)>,
 }
 
 impl TensorFile {
+    /// Read a PFRMTENS container from disk.
     pub fn read(path: &Path) -> Result<TensorFile> {
         let bytes =
             std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
@@ -101,6 +103,8 @@ impl TensorFile {
         out
     }
 
+    /// Write the container to disk (not atomic — the persist layer
+    /// wraps its copies in temp-file-then-rename).
     pub fn write(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
@@ -108,6 +112,7 @@ impl TensorFile {
         Ok(())
     }
 
+    /// Look up one tensor by name.
     pub fn get(&self, name: &str) -> Option<(&[usize], &[f32])> {
         self.entries
             .iter()
@@ -126,6 +131,7 @@ impl TensorFile {
             .collect()
     }
 
+    /// Clone the entries into a name-keyed map.
     pub fn to_map(&self) -> BTreeMap<String, (Vec<usize>, Vec<f32>)> {
         self.entries
             .iter()

@@ -35,14 +35,17 @@ fn unavailable<T>() -> Result<T, XlaError> {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Always fails: no PJRT in stub builds.
     pub fn cpu() -> Result<PjRtClient, XlaError> {
         unavailable()
     }
 
+    /// Stub platform marker.
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
+    /// Always fails in stub builds.
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
         unavailable()
     }
@@ -52,6 +55,7 @@ impl PjRtClient {
 pub struct PjRtLoadedExecutable;
 
 impl PjRtLoadedExecutable {
+    /// Always fails in stub builds.
     pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
         unavailable()
     }
@@ -61,6 +65,7 @@ impl PjRtLoadedExecutable {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Always fails in stub builds.
     pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
         unavailable()
     }
@@ -70,18 +75,22 @@ impl PjRtBuffer {
 pub struct Literal;
 
 impl Literal {
+    /// Constructs an inert literal (execution fails later, loudly).
     pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
         Literal
     }
 
+    /// Always fails in stub builds.
     pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
         unavailable()
     }
 
+    /// Always fails in stub builds.
     pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
         unavailable()
     }
 
+    /// Always fails in stub builds.
     pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
         unavailable()
     }
@@ -91,6 +100,7 @@ impl Literal {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Always fails in stub builds.
     pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
         unavailable()
     }
@@ -100,6 +110,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Constructs an inert computation handle.
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }

@@ -13,7 +13,9 @@
 //!   layer-by-layer over chunks, yielding per-token MLM scores for
 //!   genome-scale inputs;
 //! * [`session`] — [`SessionManager`], many concurrent keyed streams
-//!   under a global memory budget with LRU eviction.
+//!   under a global memory budget with LRU eviction — backed by the
+//!   asynchronous write-back spill tier (`persist::SpillTier`), full and
+//!   delta checkpoint exports, and redraw-churn accounting.
 //!
 //! The serving-side request path lives in `coordinator::streamer`; the
 //! `performer stream` CLI, `xp stream` report and the
@@ -25,7 +27,7 @@ pub mod state;
 pub mod sweep;
 
 pub use scorer::{ChunkScorer, ChunkScores};
-pub use session::{SessionConfig, SessionManager, SessionStats};
+pub use session::{DeltaStats, SessionConfig, SessionManager, SessionStats};
 pub use state::{FavorStream, StreamState};
 pub use sweep::{
     chunked_latency_point, fused_throughput_point, sweep_totals, FusedPoint, SweepPoint,

@@ -42,10 +42,12 @@ pub struct ChunkScores {
 }
 
 impl ChunkScores {
+    /// Number of scored positions (the chunk length).
     pub fn len(&self) -> usize {
         self.logprob.len()
     }
 
+    /// Whether the chunk scored no positions.
     pub fn is_empty(&self) -> bool {
         self.logprob.is_empty()
     }
@@ -78,8 +80,23 @@ impl ChunkScorer {
         Ok(ChunkScorer { model, states, prev_row: None, pos: 0 })
     }
 
+    /// The shared model this stream scores against.
     pub fn model(&self) -> &Arc<NativeModel> {
         &self.model
+    }
+
+    /// Sum of the carried states' redraw epochs. The serving layer
+    /// samples this before and after an advance: the difference is the
+    /// number of state resets the chunk caused (each state's epoch
+    /// increments once per boundary it crossed), and any increase marks
+    /// an epoch crossing for the session — the redraw-churn signal
+    /// `coordinator::PersistMetrics` surfaces.
+    pub fn epoch_sum(&self) -> u64 {
+        self.states
+            .iter()
+            .flat_map(|layer| layer.iter())
+            .map(StreamState::epoch)
+            .sum()
     }
 
     /// The carried per-layer per-head attention states — read-only view

@@ -4,22 +4,27 @@
 //! LRU eviction keeps residency bounded no matter how many streams are
 //! opened and abandoned.
 //!
-//! With a spill directory configured, eviction becomes *demotion*: the
-//! LRU session's state is snapshotted to disk (`persist::Checkpointer`)
-//! instead of destroyed, and its next chunk transparently rehydrates it
-//! — scores are bitwise identical to a never-evicted stream. The same
-//! machinery backs [`SessionManager::checkpoint_all`] /
-//! [`SessionManager::restore_from`], the migration path that lets a
-//! warm replica adopt another coordinator's sessions.
+//! With a spill directory configured, eviction becomes *asynchronous
+//! demotion*: the LRU session's state is captured and enqueued to a
+//! background writer thread (`persist::SpillTier`) instead of being
+//! written — or destroyed — on the serving thread. Until the write
+//! commits, the demoted session stays resident-readable (write-back),
+//! so `advance`/`advance_batch` never block on a spill write, and its
+//! next chunk transparently rehydrates it — from RAM if the write is
+//! still in flight, from disk after it commits — with scores bitwise
+//! identical to a never-evicted stream. The same machinery backs
+//! [`SessionManager::checkpoint_all`] / [`SessionManager::restore_from`]
+//! (warm-replica migration) and [`SessionManager::checkpoint_delta`]
+//! (incremental hot exports that re-snapshot only dirty sessions).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::persist::Checkpointer;
+use crate::persist::{Checkpointer, SpillTier};
 use crate::train::NativeModel;
 
 use super::scorer::{ChunkScorer, ChunkScores};
@@ -35,7 +40,8 @@ pub struct SessionConfig {
     pub max_sessions: usize,
     /// when set, budget eviction demotes cold sessions to snapshots in
     /// this directory instead of destroying their context; their next
-    /// chunk rehydrates them transparently
+    /// chunk rehydrates them transparently. Writes run on a background
+    /// thread — eviction enqueues instead of blocking the serving path
     pub spill_dir: Option<PathBuf>,
 }
 
@@ -54,28 +60,93 @@ const COMPAT_LEN_RATIO: usize = 2;
 /// Aggregate counters, cheap to copy out for metrics/logging.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SessionStats {
+    /// sessions currently resident in RAM
     pub active: usize,
+    /// total resident carried-state bytes
     pub resident_bytes: usize,
+    /// sessions opened since startup
     pub opened: u64,
+    /// sessions explicitly closed
     pub closed: u64,
+    /// sessions whose context was destroyed under memory pressure
     pub evicted: u64,
+    /// chunks served
     pub chunks: u64,
+    /// tokens consumed
     pub tokens: u64,
-    /// sessions currently demoted to the spill tier
+    /// sessions currently demoted to the spill tier (pending + on disk)
     pub spilled: usize,
-    /// cumulative demote-to-disk events
+    /// cumulative demote-to-spill events (enqueues)
     pub spills: u64,
-    /// cumulative disk-to-RAM promotions
+    /// cumulative spill-to-RAM promotions (from the pending map or disk)
     pub rehydrations: u64,
-    /// cumulative snapshot bytes written (spills + checkpoint_all)
+    /// cumulative snapshot bytes written (spills + checkpoint exports)
     pub checkpoint_bytes: u64,
     /// cumulative wall time spent rehydrating, nanoseconds
     pub rehydrate_nanos: u64,
+    /// spills parked awaiting their background write (gauge)
+    pub pending_spills: usize,
+    /// background spill writes committed to the spill manifest
+    pub spill_commits: u64,
+    /// queued spill writes canceled (taken back by a rehydration or a
+    /// close before the write committed)
+    pub spill_cancels: u64,
+    /// background spill writes that failed — each is converted to a
+    /// loud eviction at the manager's next batch, so the byte budget
+    /// stays enforceable behind a failing disk
+    pub spill_write_failures: u64,
+    /// serving-thread nanoseconds spent *enqueueing* spills — the cost
+    /// eviction now pays instead of a full fsynced write
+    pub spill_enqueue_nanos: u64,
+    /// writer-thread nanoseconds spent writing + committing spills
+    pub spill_write_nanos: u64,
+    /// advances that crossed ≥1 kernel-redraw epoch boundary (the
+    /// session's attention context restarted there)
+    pub epoch_crossings: u64,
+    /// per-(layer, head) state resets caused by redraw crossings (one
+    /// per state per boundary crossed)
+    pub state_resets: u64,
+    /// snapshot records written by delta exports
+    pub delta_written: u64,
+    /// clean records retained (not re-snapshotted) by delta exports
+    pub delta_retained: u64,
+}
+
+/// What one [`SessionManager::checkpoint_delta`] export did.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaStats {
+    /// sessions re-snapshotted (dirty since the previous export)
+    pub written: usize,
+    /// clean records carried forward without any snapshot IO
+    pub retained: usize,
+    /// stale records dropped (sessions closed since the previous export)
+    pub removed: usize,
+    /// manifest generation the export committed
+    pub generation: u64,
 }
 
 struct Session {
     scorer: ChunkScorer,
     last_used: u64,
+    /// monotone per-manager generation stamped at the session's last
+    /// state change — the delta-export dirty marker
+    dirty_gen: u64,
+}
+
+/// Process-unique identity token for a manager's exports: a record in a
+/// checkpoint directory is provably clean only if it carries this
+/// manager's token *and* the session's current dirty generation.
+fn exporter_token() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut h = crate::rng::fnv1a64(&nanos.to_le_bytes());
+    h = crate::rng::fnv1a64_extend(h, &u64::from(std::process::id()).to_le_bytes());
+    h = crate::rng::fnv1a64_extend(h, &COUNTER.fetch_add(1, Ordering::Relaxed).to_le_bytes());
+    h.max(1) // 0 is reserved for "unknown/foreign"
 }
 
 /// Keyed store of open streams over one model, with budgeted residency.
@@ -83,15 +154,20 @@ pub struct SessionManager {
     model: Arc<NativeModel>,
     cfg: SessionConfig,
     sessions: HashMap<String, Session>,
-    /// spill tier: snapshots of demoted-but-live sessions (None when no
+    /// asynchronous spill tier: demoted-but-live sessions, parked in RAM
+    /// until their background write commits, then on disk (None when no
     /// spill directory is configured — eviction then destroys context)
-    spill: Option<Checkpointer>,
+    spill: Option<SpillTier>,
     /// ids dropped under memory pressure: a later chunk for one of these
     /// must fail loudly (the causal context is gone) rather than
     /// silently reopen at offset 0 with context-free scores
     evicted_ids: HashSet<String>,
     /// logical clock for LRU ordering
     clock: u64,
+    /// monotone counter behind each session's `dirty_gen`
+    dirty_clock: u64,
+    /// this manager's identity token in export dirty markers
+    exporter: u64,
     /// bytes of carried state per session (uniform: one model)
     per_session_bytes: usize,
     opened: u64,
@@ -103,6 +179,10 @@ pub struct SessionManager {
     rehydrations: u64,
     checkpoint_bytes: u64,
     rehydrate_nanos: u64,
+    epoch_crossings: u64,
+    state_resets: u64,
+    delta_written: u64,
+    delta_retained: u64,
 }
 
 impl SessionManager {
@@ -118,21 +198,7 @@ impl SessionManager {
         let probe = ChunkScorer::new(model.clone())?;
         let per_session_bytes = probe.steady_state_bytes();
         let spill = match &cfg.spill_dir {
-            Some(dir) => {
-                let mut ck = Checkpointer::create(dir).context("opening spill directory")?;
-                // the spill tier caches *this* manager's demoted
-                // sessions; stale snapshots from a previous process must
-                // not silently resume mid-stream (restart recovery is
-                // checkpoint_all / restore_from, not the spill dir)
-                let stale = ck.clear().context("clearing stale spill snapshots")?;
-                if stale > 0 {
-                    eprintln!(
-                        "[session] cleared {stale} stale spill snapshot(s) in {}",
-                        dir.display()
-                    );
-                }
-                Some(ck)
-            }
+            Some(dir) => Some(SpillTier::create(dir)?),
             None => None,
         };
         Ok(SessionManager {
@@ -142,6 +208,8 @@ impl SessionManager {
             spill,
             evicted_ids: HashSet::new(),
             clock: 0,
+            dirty_clock: 0,
+            exporter: exporter_token(),
             per_session_bytes,
             opened: 0,
             closed: 0,
@@ -152,6 +220,10 @@ impl SessionManager {
             rehydrations: 0,
             checkpoint_bytes: 0,
             rehydrate_nanos: 0,
+            epoch_crossings: 0,
+            state_resets: 0,
+            delta_written: 0,
+            delta_retained: 0,
         })
     }
 
@@ -160,14 +232,17 @@ impl SessionManager {
         self.per_session_bytes
     }
 
+    /// Number of resident sessions.
     pub fn len(&self) -> usize {
         self.sessions.len()
     }
 
+    /// Whether no sessions are resident.
     pub fn is_empty(&self) -> bool {
         self.sessions.is_empty()
     }
 
+    /// Whether a session is resident in RAM.
     pub fn contains(&self, id: &str) -> bool {
         self.sessions.contains_key(id)
     }
@@ -177,13 +252,20 @@ impl SessionManager {
         self.sessions.len() * self.per_session_bytes
     }
 
-    /// Whether a session is currently demoted to the spill tier (its
-    /// next chunk will rehydrate it).
+    /// Whether a session is currently demoted to the spill tier — its
+    /// write still in flight (resident-readable) or committed on disk.
+    /// Either way its next chunk will rehydrate it.
     pub fn is_spilled(&self, id: &str) -> bool {
-        self.spill.as_ref().is_some_and(|ck| ck.contains(id))
+        self.spill.as_ref().is_some_and(|tier| tier.contains(id))
     }
 
+    /// Aggregate counters for metrics/logging.
     pub fn stats(&self) -> SessionStats {
+        let spill = self.spill.as_ref().map(SpillTier::counters).unwrap_or_default();
+        let spilled = self
+            .spill
+            .as_ref()
+            .map_or(0, |t| t.pending_count() + t.committed_count());
         SessionStats {
             active: self.sessions.len(),
             resident_bytes: self.resident_bytes(),
@@ -192,17 +274,46 @@ impl SessionManager {
             evicted: self.evicted,
             chunks: self.chunks,
             tokens: self.tokens,
-            spilled: self.spill.as_ref().map_or(0, Checkpointer::len),
+            spilled,
             spills: self.spills,
             rehydrations: self.rehydrations,
             checkpoint_bytes: self.checkpoint_bytes,
             rehydrate_nanos: self.rehydrate_nanos,
+            pending_spills: spill.pending as usize,
+            spill_commits: spill.commits,
+            spill_cancels: spill.cancels,
+            spill_write_failures: spill.write_failures,
+            spill_enqueue_nanos: spill.enqueue_nanos,
+            spill_write_nanos: spill.write_nanos,
+            epoch_crossings: self.epoch_crossings,
+            state_resets: self.state_resets,
+            delta_written: self.delta_written,
+            delta_retained: self.delta_retained,
         }
     }
 
     /// Tokens consumed so far by a resident session.
     pub fn tokens_seen(&self, id: &str) -> Option<usize> {
         self.sessions.get(id).map(|s| s.scorer.tokens_seen())
+    }
+
+    /// Block until every spill enqueued so far has committed (or been
+    /// canceled) — the test/shutdown barrier. A manager without a spill
+    /// tier returns immediately. Dropping the manager drains implicitly.
+    pub fn sync_spills(&self) -> Result<()> {
+        match &self.spill {
+            Some(tier) => tier.flush(),
+            None => Ok(()),
+        }
+    }
+
+    /// Test/ops hook: hold (or release) the background spill writer, so
+    /// in-flight spills stay observably pending. Used by tests that pin
+    /// the write-back protocol; a no-op without a spill tier.
+    pub fn set_spill_hold(&self, on: bool) {
+        if let Some(tier) = &self.spill {
+            tier.hold_writes(on);
+        }
     }
 
     /// Feed the next chunk of stream `id` (opening it on first use) and
@@ -230,9 +341,11 @@ impl SessionManager {
     /// [`COMPAT_LEN_RATIO`]× of each other in length (beyond that, the
     /// padding rows the fused `Batch` would carry outweigh the fusion
     /// win). None of the batch's sessions is evicted while serving any
-    /// part of it.
+    /// part of it, and evictions triggered here only *enqueue* spill
+    /// writes — the serving path never waits on the disk.
     pub fn advance_batch(&mut self, ids: &[&str], chunks: &[&[u8]]) -> Vec<Result<ChunkScores>> {
         assert_eq!(ids.len(), chunks.len(), "{} ids fed {} chunks", ids.len(), chunks.len());
+        self.reap_failed_spills();
         let mut results: Vec<Option<Result<ChunkScores>>> =
             (0..ids.len()).map(|_| None).collect();
 
@@ -267,8 +380,10 @@ impl SessionManager {
                 } else {
                     match ChunkScorer::new(self.model.clone()) {
                         Ok(scorer) => {
-                            self.sessions
-                                .insert(id.to_string(), Session { scorer, last_used: self.clock });
+                            self.sessions.insert(
+                                id.to_string(),
+                                Session { scorer, last_used: self.clock, dirty_gen: 0 },
+                            );
                             self.opened += 1;
                         }
                         Err(e) => {
@@ -321,22 +436,40 @@ impl SessionManager {
             // own clock tick, in submission order, so LRU ordering stays
             // a deterministic total order exactly as sequential advances
             // would produce)
+            let mut old_dirty: Vec<u64> = Vec::with_capacity(wave.len());
             let mut scorers: Vec<ChunkScorer> = wave
                 .iter()
                 .map(|&i| {
-                    self.sessions.remove(ids[i]).expect("admitted session resident").scorer
+                    let sess =
+                        self.sessions.remove(ids[i]).expect("admitted session resident");
+                    old_dirty.push(sess.dirty_gen);
+                    sess.scorer
                 })
                 .collect();
+            // redraw accounting: epoch sums before/after the advance
+            let epochs_before: Vec<u64> = scorers.iter().map(ChunkScorer::epoch_sum).collect();
             let wave_chunks: Vec<&[u8]> = wave.iter().map(|&i| chunks[i]).collect();
             match ChunkScorer::advance_batch(&mut scorers, &wave_chunks) {
                 Ok(scores) => {
-                    for ((&i, scorer), sc) in wave.iter().zip(scorers).zip(scores) {
+                    for (j, ((&i, scorer), sc)) in
+                        wave.iter().zip(scorers).zip(scores).enumerate()
+                    {
+                        let resets = scorer.epoch_sum().saturating_sub(epochs_before[j]);
+                        if resets > 0 {
+                            self.epoch_crossings += 1;
+                            self.state_resets += resets;
+                        }
                         self.chunks += 1;
                         self.tokens += chunks[i].len() as u64;
                         self.clock += 1;
+                        self.dirty_clock += 1;
                         self.sessions.insert(
                             ids[i].to_string(),
-                            Session { scorer, last_used: self.clock },
+                            Session {
+                                scorer,
+                                last_used: self.clock,
+                                dirty_gen: self.dirty_clock,
+                            },
                         );
                         results[i] = Some(Ok(sc));
                     }
@@ -345,11 +478,13 @@ impl SessionManager {
                     // advance_batch validates before touching any state,
                     // so the scorers are unmodified: keep them resident
                     let msg = format!("{e:#}");
-                    for (&i, scorer) in wave.iter().zip(scorers) {
+                    for ((&i, scorer), dirty_gen) in
+                        wave.iter().zip(scorers).zip(old_dirty)
+                    {
                         self.clock += 1;
                         self.sessions.insert(
                             ids[i].to_string(),
-                            Session { scorer, last_used: self.clock },
+                            Session { scorer, last_used: self.clock, dirty_gen },
                         );
                         results[i] = Some(Err(anyhow!("{msg}")));
                     }
@@ -361,13 +496,14 @@ impl SessionManager {
     }
 
     /// Explicitly end a stream, releasing its state immediately —
-    /// resident or spilled — (and acknowledging a prior eviction,
-    /// freeing the id for reuse). Returns whether the session existed.
+    /// resident, spill-pending or spilled — (and acknowledging a prior
+    /// eviction, freeing the id for reuse). Returns whether the session
+    /// existed.
     pub fn close(&mut self, id: &str) -> bool {
         self.evicted_ids.remove(id);
         let mut existed = self.sessions.remove(id).is_some();
-        if let Some(ck) = &mut self.spill {
-            match ck.remove(id) {
+        if let Some(tier) = &self.spill {
+            match tier.remove(id) {
                 Ok(removed) => existed |= removed,
                 Err(e) => eprintln!("[session] dropping spilled '{id}' failed: {e:#}"),
             }
@@ -378,35 +514,57 @@ impl SessionManager {
         existed
     }
 
-    /// Promote a spilled session back into residency, consuming its
-    /// snapshot (the resident copy owns the stream from here on).
+    /// Convert spills whose background write failed into loud evictions
+    /// — the degradation a failed *synchronous* spill always had. Runs
+    /// at the top of every batch, so parked scorers never accumulate
+    /// unboundedly behind a failing disk; a session that was already
+    /// rehydrated (write-back take-back) lost nothing and is skipped.
+    fn reap_failed_spills(&mut self) {
+        let Some(tier) = &self.spill else { return };
+        for (id, seq) in tier.take_failed() {
+            if tier.drop_failed_pending(&id, seq) {
+                eprintln!("[session] spill write for '{id}' failed; dropping its context");
+                self.evicted_ids.insert(id);
+                self.evicted += 1;
+            }
+        }
+    }
+
+    /// Promote a demoted session back into residency. A spill whose
+    /// background write is still in flight short-circuits to the parked
+    /// resident copy (canceling the queued write — no disk touched at
+    /// all); a committed spill is loaded and its snapshot consumed (the
+    /// resident copy owns the stream from here on). Either way the
+    /// session's dirty generation survives, so an untouched rehydrated
+    /// session stays "clean" for delta exports.
     fn rehydrate(&mut self, id: &str) -> Result<()> {
         let t0 = Instant::now();
-        let ck = self.spill.as_mut().expect("rehydrate requires a spill tier");
-        let scorer =
-            ck.load(id, &self.model).with_context(|| format!("rehydrating session '{id}'"))?;
-        ck.remove(id)?;
+        let tier = self.spill.as_ref().expect("rehydrate requires a spill tier");
+        let (scorer, dirty_gen) = match tier.take_pending(id) {
+            Some(hot) => hot,
+            None => tier
+                .load_committed(id, &self.model)
+                .with_context(|| format!("rehydrating session '{id}'"))?,
+        };
         self.clock += 1;
-        self.sessions.insert(id.to_string(), Session { scorer, last_used: self.clock });
+        self.sessions.insert(
+            id.to_string(),
+            Session { scorer, last_used: self.clock, dirty_gen },
+        );
         self.rehydrations += 1;
         self.rehydrate_nanos += t0.elapsed().as_nanos() as u64;
         Ok(())
     }
 
-    /// Snapshot every live session — resident and spilled — into `dir`
-    /// (which must not be the spill directory itself), leaving the
-    /// manager untouched. The target is cleared first: the export
-    /// describes exactly the sessions live *now*, so a reused directory
-    /// can never resurrect ones that have since closed. Returns the
-    /// number of sessions written; this is the coordinator's migration
-    /// export.
-    pub fn checkpoint_all(&mut self, dir: &Path) -> Result<usize> {
-        // resolve aliases (relative paths, symlinks) before comparing —
-        // clearing the live spill directory would destroy the spilled
-        // sessions' only copies. A target that does not exist yet
-        // cannot alias the (existing) spill dir, so the textual
-        // fallback only has to cover equal spellings.
+    /// Refuse export targets that alias the live spill directory —
+    /// clearing or rewriting it would destroy the spilled sessions' only
+    /// durable copies.
+    fn guard_export_target(&self, dir: &Path) -> Result<()> {
         if let Some(spill_dir) = self.cfg.spill_dir.as_deref() {
+            // resolve aliases (relative paths, symlinks) before
+            // comparing; a target that does not exist yet cannot alias
+            // the (existing) spill dir, so the textual fallback only has
+            // to cover equal spellings
             let same = match (std::fs::canonicalize(spill_dir), std::fs::canonicalize(dir)) {
                 (Ok(a), Ok(b)) => a == b,
                 _ => spill_dir == dir,
@@ -415,42 +573,171 @@ impl SessionManager {
                 bail!("checkpoint target must differ from the spill directory");
             }
         }
+        Ok(())
+    }
+
+    /// Snapshot every live session — resident, spill-pending and
+    /// spilled — into `dir` (which must not be the spill directory
+    /// itself), leaving the manager untouched. The target is cleared
+    /// first: the export describes exactly the sessions live *now*, so a
+    /// reused directory can never resurrect ones that have since closed.
+    /// Already-committed spill snapshots are hard-linked (or copied)
+    /// into the export instead of being decoded and re-encoded. Returns
+    /// the number of sessions written; this is the coordinator's
+    /// migration export. For hot repeated exports, prefer
+    /// [`Self::checkpoint_delta`].
+    pub fn checkpoint_all(&mut self, dir: &Path) -> Result<usize> {
+        self.guard_export_target(dir)?;
         let mut ck = Checkpointer::create(dir).context("opening checkpoint directory")?;
         ck.clear().context("clearing previous export")?;
+        let exporter = self.exporter;
+        let mut written = 0usize;
         let mut ids: Vec<&String> = self.sessions.keys().collect();
         ids.sort();
-        let mut written = 0usize;
         for id in ids {
-            let rec = ck.stage(id, &self.sessions[id].scorer)?;
+            let sess = &self.sessions[id];
+            let rec = ck.stage_marked(id, &sess.scorer, exporter, sess.dirty_gen)?;
             self.checkpoint_bytes += rec.bytes;
             written += 1;
         }
-        // spilled sessions migrate too: copy through their snapshots
-        if let Some(spill) = &self.spill {
-            for id in spill.ids() {
-                if self.sessions.contains_key(&id) {
+        if let Some(tier) = &self.spill {
+            // in-flight spills are live sessions too: export their
+            // parked resident copies
+            let mut extra_bytes = 0u64;
+            let mut pending_exported: BTreeSet<String> = BTreeSet::new();
+            tier.for_each_pending(|id, bytes, pos, dirty_gen| {
+                let rec = ck.stage_encoded(id, bytes, pos, exporter, dirty_gen)?;
+                extra_bytes += rec.bytes;
+                pending_exported.insert(id.to_string());
+                Ok(())
+            })?;
+            written += pending_exported.len();
+            // committed spills migrate by linking their verified bytes
+            for id in tier.committed_ids() {
+                if self.sessions.contains_key(&id) || pending_exported.contains(&id) {
                     continue;
                 }
-                let scorer = spill.load(&id, &self.model)?;
-                let rec = ck.stage(&id, &scorer)?;
-                self.checkpoint_bytes += rec.bytes;
+                let rec = tier
+                    .committed_record(&id)
+                    .ok_or_else(|| anyhow!("spill record for '{id}' vanished mid-export"))?;
+                let staged =
+                    ck.stage_linked(&tier.dir().join(&rec.file), &rec, exporter, rec.dirty_gen)?;
+                extra_bytes += staged.bytes;
                 written += 1;
             }
+            self.checkpoint_bytes += extra_bytes;
         }
-        // one manifest write for the whole export
-        ck.commit()?;
+        // one manifest write publishes the whole export
+        ck.commit_new_generation()?;
         Ok(written)
     }
 
-    /// Adopt every session checkpointed in `dir` (a `checkpoint_all`
-    /// export from this or another coordinator). All-or-nothing: every
-    /// snapshot is decoded and verified before any session becomes
-    /// visible; an id collision with a live session is an error
-    /// (silently overwriting an advancing stream would corrupt it); and
-    /// without a spill tier, an export that cannot fit in the budget is
-    /// refused up front — adopting it would immediately destroy the
-    /// overflow's context while reporting success. Returns the number
-    /// of sessions adopted; the source directory is left intact.
+    /// Incremental export: bring `dir` (a previous [`Self::checkpoint_all`]
+    /// or `checkpoint_delta` target, or an empty directory) up to date
+    /// with the sessions live now, re-snapshotting **only the dirty
+    /// ones**. A record is provably clean — and retained with zero
+    /// snapshot IO — when it carries this manager's exporter token and
+    /// the session's current dirty generation; anything else (advanced
+    /// sessions, foreign records, v1 manifests) is re-written. Records
+    /// for sessions that have since closed are dropped. The new record
+    /// set is published as one atomically-committed manifest generation;
+    /// restoring from any chain of full + delta exports is bitwise
+    /// identical to restoring from a single full export.
+    pub fn checkpoint_delta(&mut self, dir: &Path) -> Result<DeltaStats> {
+        self.guard_export_target(dir)?;
+        let mut ck = Checkpointer::create(dir).context("opening checkpoint directory")?;
+        let exporter = self.exporter;
+        let mut stats = DeltaStats::default();
+
+        // the live set: resident ∪ spill-pending ∪ spill-committed
+        let mut live: BTreeSet<String> = self.sessions.keys().cloned().collect();
+        if let Some(tier) = &self.spill {
+            live.extend(tier.pending_ids());
+            live.extend(tier.committed_ids());
+        }
+        // drop records of sessions that closed since the last export
+        for id in ck.ids() {
+            if !live.contains(&id) {
+                ck.unstage(&id)?;
+                stats.removed += 1;
+            }
+        }
+        let clean = |ck: &Checkpointer, id: &str, dirty_gen: u64| -> bool {
+            ck.record(id)
+                .is_some_and(|r| r.exporter == exporter && r.dirty_gen == dirty_gen)
+        };
+        // resident sessions
+        let mut ids: Vec<&String> = self.sessions.keys().collect();
+        ids.sort();
+        for id in ids {
+            let sess = &self.sessions[id];
+            if clean(&ck, id, sess.dirty_gen) {
+                stats.retained += 1;
+            } else {
+                let rec = ck.stage_marked(id, &sess.scorer, exporter, sess.dirty_gen)?;
+                self.checkpoint_bytes += rec.bytes;
+                stats.written += 1;
+            }
+        }
+        if let Some(tier) = &self.spill {
+            // in-flight spills: retain if clean, else export the parked copy
+            let mut extra_bytes = 0u64;
+            let mut written = 0usize;
+            let mut retained = 0usize;
+            let mut pending_seen: BTreeSet<String> = BTreeSet::new();
+            tier.for_each_pending(|id, bytes, pos, dirty_gen| {
+                pending_seen.insert(id.to_string());
+                if clean(&ck, id, dirty_gen) {
+                    retained += 1;
+                } else {
+                    let rec = ck.stage_encoded(id, bytes, pos, exporter, dirty_gen)?;
+                    extra_bytes += rec.bytes;
+                    written += 1;
+                }
+                Ok(())
+            })?;
+            // committed spills: retain if clean, else link their bytes
+            for id in tier.committed_ids() {
+                if self.sessions.contains_key(&id) || pending_seen.contains(&id) {
+                    continue;
+                }
+                let rec = tier
+                    .committed_record(&id)
+                    .ok_or_else(|| anyhow!("spill record for '{id}' vanished mid-export"))?;
+                if clean(&ck, &id, rec.dirty_gen) {
+                    retained += 1;
+                } else {
+                    let staged = ck.stage_linked(
+                        &tier.dir().join(&rec.file),
+                        &rec,
+                        exporter,
+                        rec.dirty_gen,
+                    )?;
+                    extra_bytes += staged.bytes;
+                    written += 1;
+                }
+            }
+            self.checkpoint_bytes += extra_bytes;
+            stats.written += written;
+            stats.retained += retained;
+        }
+        ck.commit_new_generation()?;
+        stats.generation = ck.generation();
+        self.delta_written += stats.written as u64;
+        self.delta_retained += stats.retained as u64;
+        Ok(stats)
+    }
+
+    /// Adopt every session checkpointed in `dir` (a `checkpoint_all` /
+    /// `checkpoint_delta` export from this or another coordinator).
+    /// All-or-nothing: every snapshot is decoded and verified before any
+    /// session becomes visible; an id collision with a live session is
+    /// an error (silently overwriting an advancing stream would corrupt
+    /// it); and without a spill tier, an export that cannot fit in the
+    /// budget is refused up front — adopting it would immediately
+    /// destroy the overflow's context while reporting success. Returns
+    /// the number of sessions adopted; the source directory is left
+    /// intact.
     pub fn restore_from(&mut self, dir: &Path) -> Result<usize> {
         let ck = Checkpointer::open(dir)?;
         let ids = ck.ids();
@@ -482,8 +769,12 @@ impl SessionManager {
         let n = adopted.len();
         for (id, scorer) in adopted {
             self.clock += 1;
+            self.dirty_clock += 1;
             self.evicted_ids.remove(&id);
-            self.sessions.insert(id, Session { scorer, last_used: self.clock });
+            self.sessions.insert(
+                id,
+                Session { scorer, last_used: self.clock, dirty_gen: self.dirty_clock },
+            );
             self.opened += 1;
         }
         // adopted sessions count against the budget like any others
@@ -494,9 +785,11 @@ impl SessionManager {
 
     /// Evict least-recently-used sessions (never one in `keep`) until
     /// both the byte budget and the session cap hold. With a spill tier
-    /// the victim is demoted to disk and stays transparently resumable;
-    /// without one (or if the spill write fails) its context is
-    /// destroyed and later chunks for the id fail loudly.
+    /// the victim's snapshot is *enqueued* to the background writer —
+    /// the serving thread pays a capture + encode (memcpy-scale), never
+    /// an fsync — and the victim stays transparently resumable; without
+    /// one (or if the capture fails) its context is destroyed and later
+    /// chunks for the id fail loudly.
     fn enforce_budget(&mut self, keep: &HashSet<&str>) {
         loop {
             let over_bytes = self.resident_bytes() > self.cfg.max_state_bytes;
@@ -515,20 +808,23 @@ impl SessionManager {
                 Some(k) => {
                     let sess = self.sessions.remove(&k).expect("victim is resident");
                     match &mut self.spill {
-                        Some(ck) => match ck.save(&k, &sess.scorer) {
-                            Ok(rec) => {
-                                self.spills += 1;
-                                self.checkpoint_bytes += rec.bytes;
+                        Some(tier) => {
+                            match tier.enqueue(&k, sess.scorer, sess.dirty_gen, self.exporter)
+                            {
+                                Ok(bytes) => {
+                                    self.spills += 1;
+                                    self.checkpoint_bytes += bytes;
+                                }
+                                Err(e) => {
+                                    eprintln!(
+                                        "[session] spilling '{k}' failed ({e:#}); \
+                                         dropping its context"
+                                    );
+                                    self.evicted_ids.insert(k);
+                                    self.evicted += 1;
+                                }
                             }
-                            Err(e) => {
-                                eprintln!(
-                                    "[session] spilling '{k}' failed ({e:#}); \
-                                     dropping its context"
-                                );
-                                self.evicted_ids.insert(k);
-                                self.evicted += 1;
-                            }
-                        },
+                        }
                         None => {
                             self.evicted_ids.insert(k);
                             self.evicted += 1;
@@ -769,7 +1065,8 @@ mod tests {
             bits(&mgr.advance("a", &c0).unwrap()),
             bits(&ref_mgr.advance("a", &c0).unwrap())
         );
-        // opening "b" demotes "a" to disk instead of destroying it
+        // opening "b" demotes "a" to the spill tier instead of
+        // destroying it — the eviction only *enqueues* the write
         mgr.advance("b", &chunk(24, 82)).unwrap();
         assert!(!mgr.contains("a") && mgr.is_spilled("a"));
         assert_eq!(mgr.stats().spills, 1);
@@ -785,6 +1082,110 @@ mod tests {
         let st = mgr.stats();
         assert_eq!((st.spills, st.rehydrations), (2, 1), "advancing 'a' demoted 'b'");
         assert_eq!(st.evicted, 0, "a spill is not a context-destroying eviction");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn advance_while_spill_in_flight_never_serves_stale_state() {
+        let dir = tempdir("inflight");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
+        let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
+        let (c0, c1, c2) = (chunk(24, 180), chunk(24, 181), chunk(24, 182));
+
+        mgr.advance("a", &c0).unwrap();
+        ref_mgr.advance("a", &c0).unwrap();
+        // hold the background writer, then evict "a": its spill stays
+        // observably in flight
+        mgr.set_spill_hold(true);
+        mgr.advance("b", &c1).unwrap();
+        ref_mgr.advance("b", &c1).unwrap();
+        assert!(mgr.is_spilled("a"));
+        assert_eq!(mgr.stats().pending_spills, 1, "write must still be in flight");
+
+        // advancing "a" with its spill in flight must take the parked
+        // resident copy (no disk read possible — nothing committed yet)
+        // and must be bitwise identical to the uninterrupted stream
+        assert_eq!(
+            bits(&mgr.advance("a", &c2).unwrap()),
+            bits(&ref_mgr.advance("a", &c2).unwrap()),
+            "in-flight spill served stale state"
+        );
+        assert!(mgr.contains("a"));
+
+        // release the writer: the canceled write must never commit a
+        // stale snapshot that a later rehydration could pick up
+        mgr.set_spill_hold(false);
+        mgr.sync_spills().unwrap();
+        let st = mgr.stats();
+        assert!(st.spill_cancels >= 1, "the superseded write must be canceled");
+        // "a" is resident; the only tier occupant may be "b"'s spill
+        assert!(mgr.contains("a") && !mgr.is_spilled("a"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn close_during_inflight_spill_never_resurrects_the_dead_stream() {
+        let dir = tempdir("close_inflight");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("a", &chunk(24, 190)).unwrap();
+        // hold the writer, evict "a" (spill in flight), then close it
+        mgr.set_spill_hold(true);
+        mgr.advance("b", &chunk(24, 191)).unwrap();
+        assert!(mgr.is_spilled("a"));
+        assert!(mgr.close("a"));
+        // reopening the id starts a FRESH stream at offset 0 — and must
+        // keep doing so even after the lagging write is released: the
+        // canceled job must never publish the dead stream's snapshot
+        assert_eq!(mgr.advance("a", &chunk(24, 192)).unwrap().offset, 0);
+        mgr.set_spill_hold(false);
+        mgr.sync_spills().unwrap();
+        assert!(mgr.stats().spill_cancels >= 1);
+        // the fresh stream continues from ITS own position, not the dead one's
+        assert_eq!(mgr.advance("a", &chunk(24, 193)).unwrap().offset, 24);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_enqueues_and_background_commit_lands() {
+        let dir = tempdir("async_commit");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("a", &chunk(16, 90)).unwrap();
+        mgr.advance("b", &chunk(16, 91)).unwrap(); // evicts "a" (enqueue)
+        mgr.sync_spills().unwrap();
+        let st = mgr.stats();
+        assert_eq!(st.pending_spills, 0, "sync drains the queue");
+        assert_eq!(st.spill_commits, 1);
+        assert!(st.spill_enqueue_nanos > 0 && st.spill_write_nanos > 0);
+        // the committed snapshot is on disk and rehydratable
+        assert!(mgr.is_spilled("a"));
+        assert_eq!(mgr.advance("a", &chunk(16, 92)).unwrap().offset, 16);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -828,7 +1229,9 @@ mod tests {
         mgr.advance("a", &chunk(16, 86)).unwrap();
         mgr.advance("b", &chunk(16, 87)).unwrap();
         assert!(mgr.is_spilled("a"));
-        // flip one byte of the spilled snapshot
+        // wait for the background write to commit, then flip one byte of
+        // the spilled snapshot
+        mgr.sync_spills().unwrap();
         let snap = std::fs::read_dir(&dir)
             .unwrap()
             .filter_map(|e| e.ok())
@@ -908,6 +1311,106 @@ mod tests {
         assert!(replica.contains("b"));
         assert!(!replica.contains("a"), "closed session resurrected from a stale export");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn delta_checkpoint_writes_only_dirty_sessions() {
+        let dir = tempdir("delta");
+        let m = model();
+        let mut mgr = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        for (i, id) in ["a", "b", "c"].iter().enumerate() {
+            mgr.advance(id, &chunk(16, 120 + i as u64)).unwrap();
+        }
+        // first export seeds the dirty markers (full)
+        assert_eq!(mgr.checkpoint_all(&dir).unwrap(), 3);
+        let gen0 = Checkpointer::open(&dir).unwrap().generation();
+
+        // advancing only "b" must make the next delta write exactly one
+        // record (O(k) for k dirty) and retain the other two untouched
+        mgr.advance("b", &chunk(16, 130)).unwrap();
+        let d = mgr.checkpoint_delta(&dir).unwrap();
+        assert_eq!((d.written, d.retained, d.removed), (1, 2, 0));
+        assert!(d.generation > gen0, "each export commits a new generation");
+
+        // a clean delta writes nothing at all
+        let d = mgr.checkpoint_delta(&dir).unwrap();
+        assert_eq!((d.written, d.retained), (0, 3));
+
+        // closing "c" retires its record on the next delta
+        mgr.close("c");
+        let d = mgr.checkpoint_delta(&dir).unwrap();
+        assert_eq!((d.written, d.retained, d.removed), (0, 2, 1));
+
+        // the delta chain restores exactly what a fresh full export would
+        let full = tempdir("delta_full");
+        mgr.checkpoint_all(&full).unwrap();
+        let mut from_delta = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        let mut from_full = SessionManager::new(m, SessionConfig::default()).unwrap();
+        assert_eq!(from_delta.restore_from(&dir).unwrap(), 2);
+        assert_eq!(from_full.restore_from(&full).unwrap(), 2);
+        for id in ["a", "b"] {
+            let next = chunk(16, 140);
+            assert_eq!(
+                bits(&from_delta.advance(id, &next).unwrap()),
+                bits(&from_full.advance(id, &next).unwrap()),
+                "delta-chain restore diverged for '{id}'"
+            );
+        }
+        let st = mgr.stats();
+        assert_eq!((st.delta_written, st.delta_retained), (1, 7));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&full);
+    }
+
+    #[test]
+    fn delta_retains_clean_spilled_sessions() {
+        let dir = tempdir("delta_spill");
+        let spill = tempdir("delta_spill_tier");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(spill.clone()),
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        mgr.advance("a", &chunk(16, 150)).unwrap();
+        mgr.advance("b", &chunk(16, 151)).unwrap(); // spills "a"
+        mgr.sync_spills().unwrap();
+        assert_eq!(mgr.checkpoint_delta(&dir).unwrap().written, 2);
+        // nothing advanced: the committed spill and the resident session
+        // are both provably clean
+        let d = mgr.checkpoint_delta(&dir).unwrap();
+        assert_eq!((d.written, d.retained), (0, 2));
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&spill);
+    }
+
+    #[test]
+    fn redraw_crossings_are_counted() {
+        let mut rng = Pcg64::new(61);
+        // redraw every 24 tokens: a 40-token advance crosses one boundary
+        let m = Arc::new(NativeModel::synthetic(
+            &SyntheticConfig { redraw_every: 24, ..Default::default() },
+            &mut rng,
+        ));
+        let mut mgr = SessionManager::new(m.clone(), SessionConfig::default()).unwrap();
+        mgr.advance("r", &chunk(20, 160)).unwrap();
+        let st = mgr.stats();
+        assert_eq!((st.epoch_crossings, st.state_resets), (0, 0), "no boundary yet");
+        mgr.advance("r", &chunk(20, 161)).unwrap(); // crosses 24
+        let st = mgr.stats();
+        assert_eq!(st.epoch_crossings, 1);
+        // every (layer, head) state resets once per crossing
+        let states = m.n_layers() * m.n_heads;
+        assert_eq!(st.state_resets, states as u64);
+        // two more boundaries (48, 72) in one big chunk
+        mgr.advance("r", &chunk(48, 162)).unwrap();
+        let st = mgr.stats();
+        assert_eq!(st.epoch_crossings, 2);
+        assert_eq!(st.state_resets, 3 * states as u64);
     }
 
     #[test]

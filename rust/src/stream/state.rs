@@ -38,10 +38,12 @@ impl StreamState {
         StreamState { m, d, state: Mat::zeros(m, d + 1), tokens_seen: 0, epoch: 0 }
     }
 
+    /// Number of random features M.
     pub fn m(&self) -> usize {
         self.m
     }
 
+    /// Value/head dimension d.
     pub fn d(&self) -> usize {
         self.d
     }
@@ -160,14 +162,17 @@ impl FavorStream {
         FavorStream { fm, state: StreamState::new(m, d) }
     }
 
+    /// The running prefix-sum state.
     pub fn state(&self) -> &StreamState {
         &self.state
     }
 
+    /// The feature map φ this stream applies.
     pub fn feature_map(&self) -> &FeatureMap {
         &self.fm
     }
 
+    /// Forget everything and start a new stream.
     pub fn reset(&mut self) {
         self.state.reset();
     }

@@ -20,8 +20,11 @@ use super::scorer::ChunkScorer;
 /// One measured total-length point of a chunked-latency sweep.
 #[derive(Clone, Copy, Debug)]
 pub struct SweepPoint {
+    /// total tokens streamed
     pub total: usize,
+    /// tokens per chunk
     pub chunk: usize,
+    /// number of chunks consumed
     pub n_chunks: usize,
     /// mean per-chunk seconds over the first decile of chunks
     pub first_secs: f64,
@@ -39,6 +42,7 @@ impl SweepPoint {
         self.last_secs / self.first_secs.max(1e-12)
     }
 
+    /// Aggregate streaming throughput of the point.
     pub fn tokens_per_sec(&self) -> f64 {
         (self.n_chunks * self.chunk) as f64 / self.wall_secs.max(1e-12)
     }
@@ -82,8 +86,11 @@ pub fn chunked_latency_point(
 /// [`ChunkScorer::advance_batch`].
 #[derive(Clone, Copy, Debug)]
 pub struct FusedPoint {
+    /// concurrent sessions B
     pub n_sessions: usize,
+    /// tokens per chunk
     pub chunk: usize,
+    /// chunks advanced per session
     pub n_chunks: usize,
     /// wall seconds to advance every session sequentially
     pub seq_secs: f64,
@@ -100,10 +107,12 @@ impl FusedPoint {
         self.n_sessions * self.chunk * self.n_chunks
     }
 
+    /// Aggregate throughput of the sequential path.
     pub fn seq_tokens_per_sec(&self) -> f64 {
         self.total_tokens() as f64 / self.seq_secs.max(1e-12)
     }
 
+    /// Aggregate throughput of the fused path.
     pub fn fused_tokens_per_sec(&self) -> f64 {
         self.total_tokens() as f64 / self.fused_secs.max(1e-12)
     }

@@ -19,8 +19,11 @@ use std::sync::OnceLock;
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, PartialEq)]
 pub struct Mat {
+    /// number of rows
     pub rows: usize,
+    /// number of columns
     pub cols: usize,
+    /// row-major element storage (rows × cols)
     pub data: Vec<f32>,
 }
 
@@ -31,15 +34,18 @@ impl fmt::Debug for Mat {
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Wrap row-major data (length must equal rows × cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         Mat { rows, cols, data }
     }
 
+    /// Build element-wise from f(row, col).
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -50,30 +56,36 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// n×n identity.
     pub fn eye(n: usize) -> Self {
         Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
     }
 
     #[inline]
+    /// Element (i, j).
     pub fn at(&self, i: usize, j: usize) -> f32 {
         self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Mutable element (i, j).
     pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
         &mut self.data[i * self.cols + j]
     }
 
     #[inline]
+    /// Row i as a slice.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
     #[inline]
+    /// Row i as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Transpose.
     pub fn t(&self) -> Mat {
         let mut out = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -100,6 +112,7 @@ impl Mat {
             .collect()
     }
 
+    /// Multiply every element by s, in place.
     pub fn scale(&mut self, s: f32) -> &mut Self {
         for v in &mut self.data {
             *v *= s;
@@ -107,6 +120,7 @@ impl Mat {
         self
     }
 
+    /// Element-wise self += other.
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         for (a, b) in self.data.iter_mut().zip(&other.data) {
@@ -114,6 +128,7 @@ impl Mat {
         }
     }
 
+    /// Element-wise difference self − other.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat::from_vec(
@@ -123,6 +138,7 @@ impl Mat {
         )
     }
 
+    /// Element-wise map into a new matrix.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
         Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| f(v)).collect())
     }
@@ -181,6 +197,7 @@ impl Mat {
 }
 
 #[inline]
+/// Dense dot product (4-lane unrolled).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     // 4-lane unrolled accumulation: lets LLVM vectorize without fast-math

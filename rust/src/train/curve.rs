@@ -4,41 +4,54 @@
 use std::fmt::Write as _;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
+/// One (step, loss, accuracy) observation.
 pub struct Point {
+    /// optimizer step
     pub step: usize,
+    /// loss at the step
     pub loss: f64,
+    /// accuracy at the step
     pub acc: f64,
 }
 
 /// Train + validation series for one run.
 #[derive(Clone, Debug, Default)]
 pub struct Curve {
+    /// run label (artifact tag)
     pub name: String,
+    /// training series
     pub train: Vec<Point>,
+    /// validation series
     pub valid: Vec<Point>,
 }
 
 impl Curve {
+    /// Empty curve for a named run.
     pub fn new(name: &str) -> Self {
         Curve { name: name.to_string(), ..Default::default() }
     }
 
+    /// Append a training observation.
     pub fn push_train(&mut self, step: usize, loss: f64, acc: f64) {
         self.train.push(Point { step, loss, acc });
     }
 
+    /// Append a validation observation.
     pub fn push_valid(&mut self, step: usize, loss: f64, acc: f64) {
         self.valid.push(Point { step, loss, acc });
     }
 
+    /// Last recorded training accuracy (NaN if none).
     pub fn final_train_acc(&self) -> f64 {
         self.train.last().map(|p| p.acc).unwrap_or(f64::NAN)
     }
 
+    /// Last recorded validation accuracy (NaN if none).
     pub fn final_valid_acc(&self) -> f64 {
         self.valid.last().map(|p| p.acc).unwrap_or(f64::NAN)
     }
 
+    /// Best validation accuracy seen (NaN if none).
     pub fn best_valid_acc(&self) -> f64 {
         self.valid.iter().map(|p| p.acc).fold(f64::NAN, f64::max)
     }

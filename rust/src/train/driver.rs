@@ -22,17 +22,25 @@ use super::curve::Curve;
 /// Which data split a batch is drawn from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Split {
+    /// training draw of the IID families
     Train,
+    /// validation draw of the IID families
     Valid,
+    /// test draw of the IID families
     Test,
+    /// held-out families
     Ood,
 }
 
 /// Streams fixed-shape batches for a given artifact config.
 pub struct DataGen {
+    /// corpus batches are drawn from
     pub corpus: Arc<Corpus>,
+    /// sequence length per row
     pub l: usize,
+    /// batch size
     pub b: usize,
+    /// next-token LM targets (true) vs BERT-style MLM (false)
     pub unidirectional: bool,
     /// long-context concatenated-protein task (Fig. 5) vs single-sequence
     pub concat: bool,
@@ -41,6 +49,7 @@ pub struct DataGen {
 }
 
 impl DataGen {
+    /// Generator with per-split independent rng streams.
     pub fn new(corpus: Arc<Corpus>, l: usize, b: usize, unidirectional: bool,
                concat: bool, seed: u64) -> Self {
         let mut root = Pcg64::new(seed ^ 0x9e3779b97f4a7c15);
@@ -55,6 +64,7 @@ impl DataGen {
         }
     }
 
+    /// The next fixed-shape batch of the split.
     pub fn next_batch(&mut self, split: Split) -> Batch {
         let rng = &mut self.rngs[match split {
             Split::Train => 0,
@@ -85,18 +95,28 @@ impl DataGen {
 
 /// Host-resident model/optimizer state, in the artifact's slot order.
 pub struct TrainState {
+    /// engine executions go through
     pub engine: Arc<Engine>,
+    /// artifact tag
     pub tag: String,
+    /// compiled train step
     pub train_exe: Arc<Executable>,
+    /// compiled eval step (if the artifact ships one)
     pub eval_exe: Option<Arc<Executable>>,
+    /// parameters in artifact slot order
     pub params: Vec<Vec<f32>>,
+    /// Adam first moments
     pub opt_m: Vec<Vec<f32>>,
+    /// Adam second moments
     pub opt_v: Vec<Vec<f32>>,
+    /// optimizer step counter (f32: fed to the artifact)
     pub step: f32,
+    /// FAVOR feature draws in artifact slot order
     pub features: Vec<Vec<f32>>,
     /// names of the param slots (artifact order), for checkpoints and
     /// weight transplant
     pub param_names: Vec<String>,
+    /// names of the feature slots (artifact order)
     pub feature_names: Vec<String>,
 }
 
@@ -157,6 +177,7 @@ impl TrainState {
         })
     }
 
+    /// A generator matching this artifact's shapes.
     pub fn data_gen(&self, corpus: Arc<Corpus>, seed: u64) -> DataGen {
         let cfg = &self.train_exe.meta.config;
         DataGen::new(
@@ -357,16 +378,23 @@ impl TrainState {
     }
 }
 
-/// Run a full training loop per the config; returns the curve.
+/// Knobs for [`run_training`].
 pub struct LoopOptions {
+    /// optimizer steps
     pub steps: usize,
+    /// validation cadence (0 = never)
     pub eval_every: usize,
+    /// batches per evaluation
     pub eval_batches: usize,
+    /// logging cadence
     pub log_every: usize,
+    /// redraw FAVOR features every N steps (0 = never)
     pub resample_every: usize,
+    /// suppress progress logging
     pub quiet: bool,
 }
 
+/// Run the training loop per the options; returns the recorded curve.
 pub fn run_training(
     state: &mut TrainState,
     gen: &mut DataGen,

@@ -74,11 +74,13 @@ struct Layer {
 
 /// Which attention the native model runs (matches the artifact config).
 pub enum NativeAttention {
+    /// exact softmax attention (the quadratic baseline)
     Exact,
     /// Kernelized FAVOR attention: one [`AttentionKernel`] handle per
     /// layer, so hybrid stacks (different kinds/M/redraw schedules per
     /// layer) are a configuration, not a fork of the forward path.
     Favor(Vec<AttentionKernel>),
+    /// pass-through attention (ablation/debug stack)
     Identity,
 }
 
@@ -106,14 +108,17 @@ pub struct HeadView<'a> {
 }
 
 impl HeadView<'_> {
+    /// Copy this head's query block out as a dense matrix.
     pub fn q(&self) -> Mat {
         slice_head(self.qkv, self.row_lo, self.len, self.head * self.dh, self.dh)
     }
 
+    /// Copy this head's key block out as a dense matrix.
     pub fn k(&self) -> Mat {
         slice_head(self.qkv, self.row_lo, self.len, self.d + self.head * self.dh, self.dh)
     }
 
+    /// Copy this head's value block out as a dense matrix.
     pub fn v(&self) -> Mat {
         slice_head(self.qkv, self.row_lo, self.len, 2 * self.d + self.head * self.dh, self.dh)
     }
@@ -131,13 +136,18 @@ impl HeadView<'_> {
 
 /// The assembled native model.
 pub struct NativeModel {
+    /// model width
     pub d_model: usize,
+    /// attention heads per layer
     pub n_heads: usize,
+    /// vocabulary size (logit width)
     pub vocab_size: usize,
+    /// attention direction (Eq. 1 vs Eq. 2)
     pub direction: Direction,
     embed: Mat,
     lnf: LayerNorm,
     layers: Vec<Layer>,
+    /// which attention mechanism the stack runs
     pub attention: NativeAttention,
     /// lazily computed cache for [`Self::weights_digest`]
     digest: std::sync::OnceLock<u64>,
@@ -178,13 +188,23 @@ fn positions_from(offset: usize, l: usize, d: usize) -> Mat {
 /// Performer stack without compiled artifacts on disk.
 #[derive(Clone, Debug)]
 pub struct SyntheticConfig {
+    /// model width
     pub d_model: usize,
+    /// attention heads per layer
     pub n_heads: usize,
+    /// number of transformer layers
     pub n_layers: usize,
+    /// feed-forward hidden width
     pub d_ff: usize,
+    /// vocabulary size
     pub vocab_size: usize,
+    /// number of random features M (every layer, unless overridden
+    /// per-layer via [`Self::layer_features`])
     pub n_features: usize,
+    /// attention-kernel feature kind (every layer, unless overridden
+    /// per-layer via [`Self::layer_kinds`])
     pub kind: FeatureKind,
+    /// attention direction (causal streams need `Unidirectional`)
     pub direction: Direction,
     /// ORF mechanism for the kernel draws
     pub mech: OrfMechanism,
@@ -196,6 +216,11 @@ pub struct SyntheticConfig {
     /// per-layer feature-kind overrides (hybrid stacks); empty = `kind`
     /// on every layer, otherwise the length must equal `n_layers`
     pub layer_kinds: Vec<FeatureKind>,
+    /// per-layer feature-count overrides, mirroring `layer_kinds`:
+    /// empty = `n_features` on every layer, otherwise the length must
+    /// equal `n_layers`. Snapshots, budgets and fingerprints already
+    /// carry per-layer M, so a hybrid-M stack is pure configuration
+    pub layer_features: Vec<usize>,
 }
 
 impl Default for SyntheticConfig {
@@ -213,6 +238,7 @@ impl Default for SyntheticConfig {
             kernel_seed: 0x5eed,
             redraw_every: 0,
             layer_kinds: Vec::new(),
+            layer_features: Vec::new(),
         }
     }
 }
@@ -225,10 +251,15 @@ impl SyntheticConfig {
             "layer_kinds must be empty or name all {} layers",
             self.n_layers
         );
+        assert!(
+            self.layer_features.is_empty() || self.layer_features.len() == self.n_layers,
+            "layer_features must be empty or size all {} layers",
+            self.n_layers
+        );
         (0..self.n_layers)
             .map(|li| KernelConfig {
                 kind: self.layer_kinds.get(li).copied().unwrap_or(self.kind),
-                m: self.n_features,
+                m: self.layer_features.get(li).copied().unwrap_or(self.n_features),
                 mech: self.mech,
                 // golden-ratio stride: distinct, well-separated per-layer
                 // seeds from one base seed
@@ -584,6 +615,7 @@ impl NativeModel {
         })
     }
 
+    /// Number of transformer layers.
     pub fn n_layers(&self) -> usize {
         self.layers.len()
     }
@@ -875,6 +907,43 @@ mod tests {
             let diff = batched[s].max_abs_diff(&single);
             assert!(diff < 1e-5, "seq {s}: batched forward diverges by {diff}");
         }
+    }
+
+    #[test]
+    fn per_layer_feature_counts_forward_and_stream() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(53);
+        let cfg = SyntheticConfig {
+            layer_features: vec![48, 16],
+            ..Default::default()
+        };
+        let model = NativeModel::synthetic(&cfg, &mut rng);
+        let ms: Vec<usize> = model.kernels().unwrap().iter().map(AttentionKernel::m).collect();
+        assert_eq!(ms, cfg.layer_features);
+
+        let toks: Vec<u8> = (0..40).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+        let (single, _) = model.forward(&toks, false);
+        assert!(single.data.iter().all(|v| v.is_finite()));
+
+        // per-layer M streams chunked == single-shot (states are shaped
+        // per layer: 48×(d_h+1) then 16×(d_h+1))
+        let mut states = model.make_stream_states().unwrap();
+        assert_eq!(states[0][0].m(), 48);
+        assert_eq!(states[1][0].m(), 16);
+        let mut streamed = Vec::new();
+        for (lo, hi) in [(0usize, 11usize), (11, 25), (25, 40)] {
+            streamed.extend(model.forward_chunk(&toks[lo..hi], lo, &mut states).unwrap().data);
+        }
+        let streamed = Mat::from_vec(40, model.vocab_size, streamed);
+        let diff = streamed.max_abs_diff(&single);
+        assert!(diff < 1e-4, "per-layer-M chunked forward diverges by {diff}");
+    }
+
+    #[test]
+    #[should_panic(expected = "layer_features")]
+    fn mismatched_layer_features_length_panics() {
+        let cfg = SyntheticConfig { layer_features: vec![8], ..Default::default() };
+        let _ = cfg.layer_kernels(); // 1 count for 2 layers must refuse
     }
 
     #[test]

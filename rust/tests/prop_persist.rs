@@ -10,7 +10,10 @@
 //!     restoring garbage;
 //!   * `Coordinator::checkpoint_all` + a fresh coordinator +
 //!     `restore_from` reproduces the exact per-token output of an
-//!     uninterrupted run (in-process kill-and-restore).
+//!     uninterrupted run (in-process kill-and-restore);
+//!   * any interleaving of full + delta checkpoints restores bitwise
+//!     identical to one full export, and every delta writes exactly the
+//!     sessions dirtied since the previous export (O(k) snapshot IO).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -95,11 +98,16 @@ fn prop_spill_rehydrate_is_bitwise_transparent() {
                 );
             }
         }
+        // settle the background writer so the conservation law below is
+        // exact (an in-flight commit/take-back would be a transient)
+        spilling.sync_spills().unwrap();
         let st = spilling.stats();
         assert!(st.spills > 0, "the schedule must actually force spills");
-        // every demotion is either promoted back or still on disk
+        // every demotion is either promoted back or still in the tier
+        // (parked or committed)
         assert_eq!(st.spills, st.rehydrations + st.spilled as u64);
         assert_eq!(st.evicted, 0, "with a spill tier, no context is ever destroyed");
+        assert_eq!(st.spill_write_failures, 0);
         let _ = std::fs::remove_dir_all(&dir);
     });
 }
@@ -144,6 +152,96 @@ fn prop_corrupt_snapshots_never_restore() {
         bad[pos] ^= 1 << rng.below(8);
         assert!(SessionSnapshot::from_bytes(&bad).is_err(), "bit flip at {pos}");
     });
+}
+
+#[test]
+fn prop_delta_chain_restores_bitwise_identical_to_full() {
+    let mut mrng = Pcg64::new(7007);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    forall("any full/delta interleaving == one full export", |rng| {
+        let seed_tag = rng.below(1 << 30) as u64;
+        let chain_dir = tempdir("chain", seed_tag);
+        let full_dir = tempdir("chain_full", seed_tag);
+        let mut mgr = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+        let n_sessions = 2 + rng.below(3);
+        for s in 0..n_sessions {
+            mgr.advance(&format!("u{s}"), &aa_tokens(rng, 8 + rng.below(16))).unwrap();
+        }
+        // seed the chain with a full export, then interleave random
+        // advances with full/delta exports; each delta must write
+        // exactly the sessions dirtied since the previous export (O(k))
+        mgr.checkpoint_all(&chain_dir).unwrap();
+        let exports = 1 + rng.below(3);
+        for _ in 0..exports {
+            let mut dirty: Vec<usize> = (0..n_sessions).collect();
+            rng.shuffle(&mut dirty);
+            dirty.truncate(rng.below(n_sessions + 1));
+            dirty.sort_unstable();
+            dirty.dedup();
+            for &s in &dirty {
+                mgr.advance(&format!("u{s}"), &aa_tokens(rng, 4 + rng.below(12))).unwrap();
+            }
+            if rng.below(2) == 0 {
+                mgr.checkpoint_all(&chain_dir).unwrap();
+            } else {
+                let d = mgr.checkpoint_delta(&chain_dir).unwrap();
+                assert_eq!(
+                    (d.written, d.retained),
+                    (dirty.len(), n_sessions - dirty.len()),
+                    "delta must write exactly the dirty set"
+                );
+            }
+        }
+        // the chain's final state must restore bitwise identical to one
+        // fresh full export of the same live sessions
+        mgr.checkpoint_all(&full_dir).unwrap();
+        let mut from_chain = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+        let mut from_full = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+        assert_eq!(from_chain.restore_from(&chain_dir).unwrap(), n_sessions);
+        assert_eq!(from_full.restore_from(&full_dir).unwrap(), n_sessions);
+        for s in 0..n_sessions {
+            let id = format!("u{s}");
+            let next = aa_tokens(rng, 1 + rng.below(16));
+            assert_eq!(
+                bits(&from_chain.advance(&id, &next).unwrap()),
+                bits(&from_full.advance(&id, &next).unwrap()),
+                "delta-chain restore diverged for '{id}'"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&chain_dir);
+        let _ = std::fs::remove_dir_all(&full_dir);
+    });
+}
+
+#[test]
+fn coordinator_delta_checkpoint_is_a_barrier_and_restores() {
+    let mut mrng = Pcg64::new(7008);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut mrng));
+    let dir = tempdir("coord_delta", 0);
+    let mut rng = Pcg64::new(9);
+    let chunks: Vec<Vec<u8>> = (0..3).map(|_| aa_tokens(&mut rng, 20)).collect();
+
+    let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+    coord.start_stream_pool("native", model.clone(), SessionConfig::default()).unwrap();
+    for (s, c) in chunks.iter().enumerate() {
+        coord.stream_chunk("native", &format!("u{s}"), c.clone()).unwrap();
+    }
+    // first delta into an empty dir writes everything...
+    assert_eq!(coord.checkpoint_delta("native", &dir).unwrap(), 3);
+    // ...an untouched second delta writes nothing
+    assert_eq!(coord.checkpoint_delta("native", &dir).unwrap(), 0);
+    // one session advances; only it is re-snapshotted
+    coord.stream_chunk("native", "u1", chunks[1].clone()).unwrap();
+    assert_eq!(coord.checkpoint_delta("native", &dir).unwrap(), 1);
+    coord.shutdown();
+
+    let mut replica = Coordinator::new(EngineHandle::disconnected("artifacts"));
+    replica.start_stream_pool("native", model, SessionConfig::default()).unwrap();
+    assert_eq!(replica.restore_from("native", &dir).unwrap(), 3);
+    let resp = replica.stream_chunk("native", "u1", chunks[2].clone()).unwrap();
+    assert_eq!(resp.scores.unwrap().offset, 40, "u1 resumes after both its chunks");
+    replica.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
