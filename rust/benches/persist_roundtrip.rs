@@ -99,6 +99,7 @@ fn main() -> anyhow::Result<()> {
         max_state_bytes: per,
         max_sessions: 0,
         spill_dir: Some(dir.join("spill")),
+        spill_pending_limit: 0,
     };
     let mut mgr = SessionManager::new(model.clone(), cfg)?;
     let mut reference = SessionManager::new(model.clone(), SessionConfig::default())?;

@@ -135,6 +135,25 @@ fn main() -> anyhow::Result<()> {
     println!("{}", rep.render());
     rep.save_csv(std::path::Path::new("results/stream_batched.csv"))?;
 
+    // ---- tracing overhead: the same fused advance, spans off vs on ----
+    // the disabled path is one relaxed atomic load per span site, so the
+    // instrumentation must be ~free when off; the enabled run records
+    // real spans into the per-thread rings
+    let ob = *sessions.last().expect("at least one batch size");
+    let off = fused_throughput_point(&model, &corpus, ob, fused_chunk, n_chunks, &mut rng)?;
+    performer::obs::trace::set_enabled(true);
+    let on = fused_throughput_point(&model, &corpus, ob, fused_chunk, n_chunks, &mut rng)?;
+    performer::obs::trace::set_enabled(false);
+    let traced_spans: usize =
+        performer::obs::trace::drain().iter().map(|t| t.events.len() / 2).sum();
+    let overhead_pct = (off.fused_tokens_per_sec() / on.fused_tokens_per_sec() - 1.0) * 100.0;
+    println!(
+        "trace overhead at B={ob}: disabled {:.0} tok/s, enabled {:.0} tok/s \
+         ({overhead_pct:+.2}%, {traced_spans} spans recorded)",
+        off.fused_tokens_per_sec(),
+        on.fused_tokens_per_sec()
+    );
+
     // perf-trajectory artifact: tokens/sec sequential vs fused per B
     let json = obj(vec![
         ("bench", s("stream_batched")),
@@ -153,6 +172,18 @@ fn main() -> anyhow::Result<()> {
                     ("max_abs_diff", num(p.max_diff)),
                 ])
             })),
+        ),
+        // recorded, not asserted: CI machines are too noisy for a hard
+        // 2% gate, but the trajectory file keeps the number honest
+        (
+            "trace_overhead",
+            obj(vec![
+                ("sessions", num(ob as f64)),
+                ("disabled_tokens_per_sec", num(off.fused_tokens_per_sec())),
+                ("enabled_tokens_per_sec", num(on.fused_tokens_per_sec())),
+                ("overhead_pct", num(overhead_pct)),
+                ("spans_recorded", num(traced_spans as f64)),
+            ]),
         ),
     ]);
     std::fs::write("BENCH_stream_batched.json", json.to_string() + "\n")?;

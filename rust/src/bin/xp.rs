@@ -41,6 +41,7 @@ use performer::protein::vocab::{self, AA_BASE, N_STANDARD_AA};
 use performer::protein::{
     aa_histogram, empirical_baseline, length_stats, token_frequencies, Corpus, CorpusConfig,
 };
+use performer::obs::{export, MetricsRegistry};
 use performer::rng::Pcg64;
 use performer::runtime::{ArtifactMeta, Engine, TensorFile};
 use performer::stream::{
@@ -972,6 +973,12 @@ fn stream_persist() -> Result<()> {
     let corpus = Corpus::generate(CorpusConfig::default());
     let per = SessionManager::new(model.clone(), SessionConfig::default())?.per_session_bytes();
 
+    // one bounded histogram collects every budgeted advance across the
+    // whole sweep; the registry is dumped as Prometheus text next to
+    // the CSVs so the run is inspectable without re-running
+    let reg = MetricsRegistry::new();
+    let advance_us = reg.histogram("xp_persist_advance_us");
+
     let mut rep = Report::new(
         &format!(
             "Durable session persistence — async spill churn under a 2-session \
@@ -1002,6 +1009,7 @@ fn stream_persist() -> Result<()> {
             max_state_bytes: 2 * per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(kmodel.clone(), cfg)?;
         let mut reference = SessionManager::new(kmodel.clone(), SessionConfig::default())?;
@@ -1010,7 +1018,9 @@ fn stream_persist() -> Result<()> {
             for s in 0..k {
                 let toks = corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap();
                 let id = format!("u{s}");
+                let t_adv = std::time::Instant::now();
                 let a = mgr.advance(&id, &toks)?;
+                advance_us.observe_duration(t_adv.elapsed());
                 let b = reference.advance(&id, &toks)?;
                 bitwise &= a.logprob.len() == b.logprob.len()
                     && a
@@ -1062,6 +1072,17 @@ fn stream_persist() -> Result<()> {
     }
     println!("{}", rep.render());
     rep.save_csv(&results_dir().join("stream_persist.csv"))?;
+    println!(
+        "[obs] budgeted advance latency over {} calls: p50 {}us p95 {}us p99 {}us \
+         (log2 buckets; quantiles are bucket upper bounds)",
+        advance_us.count(),
+        advance_us.quantile(0.50),
+        advance_us.quantile(0.95),
+        advance_us.quantile(0.99),
+    );
+    let prom = results_dir().join("stream_persist.prom");
+    std::fs::write(&prom, export::prometheus(&reg))?;
+    println!("[obs] Prometheus dump written to {}", prom.display());
 
     // ---- delta vs full checkpoint_all: k dirty of N sessions ----
     let n = env_usize("XP_PERSIST_SESSIONS", 8);

@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs::trace;
 use crate::protein::vocab::{self, MASK, PAD};
 use crate::runtime::{ArtifactMeta, EngineHandle, HostValue, Role};
 
@@ -132,6 +133,10 @@ pub fn collect_batch<T>(
     max_batch: usize,
     max_wait: Duration,
 ) -> Option<Vec<T>> {
+    // the span covers idle blocking too: in a trace, batch_wait is
+    // "time this worker was not serving", and its tail is the drain
+    // window actually spent waiting for traffic to fuse
+    let _wait = trace::span("batch_wait");
     // block for the first request (queue closed -> shut down)
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
@@ -165,6 +170,7 @@ pub fn collect_batch<T>(
 
 /// Run one fused batch through the model and answer every request.
 pub fn serve_batch(model: &ModelState, batch: Vec<Request>, metrics: &Metrics) -> Result<()> {
+    let _span = trace::span_n("serve_batch", batch.len() as u64);
     let meta = &model.meta;
     let (b, l) = (meta.config.batch, meta.config.max_len);
     let vocab_size = meta.outputs[0].shape[2];

@@ -2,213 +2,249 @@
 //! distribution — what the paper's throughput claims are measured with
 //! on this testbed — plus the durability gauges of a streaming pool's
 //! spill/checkpoint tier.
+//!
+//! Both structs are built on the `obs` registry types ([`Counter`],
+//! [`Gauge`], [`Histogram`]): every field is a lock-free handle with
+//! bounded memory (the latency distribution lives in 32 fixed log2
+//! buckets, never a sample vector), and the `registered` constructors
+//! publish the same handles into a [`MetricsRegistry`] so one
+//! Prometheus dump covers every pool.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::obs::{Counter, Gauge, Histogram, MetricsRegistry};
 use crate::stream::SessionStats;
 
-/// Lock-free latency histogram with exponential buckets (µs scale).
+/// Lock-free serving counters + a bounded log2 latency histogram.
+#[derive(Default)]
 pub struct Metrics {
     /// requests answered
-    pub requests: AtomicU64,
+    pub requests: Counter,
     /// batches executed
-    pub batches: AtomicU64,
+    pub batches: Counter,
     /// tokens processed
-    pub tokens: AtomicU64,
+    pub tokens: Counter,
     /// failed batches
-    pub errors: AtomicU64,
-    /// bucket i counts latencies in [2^i, 2^{i+1}) microseconds
-    buckets: [AtomicU64; 32],
-    total_latency_us: AtomicU64,
-    batch_size_sum: AtomicU64,
-}
-
-impl Default for Metrics {
-    fn default() -> Self {
-        Metrics {
-            requests: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            tokens: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
-            total_latency_us: AtomicU64::new(0),
-            batch_size_sum: AtomicU64::new(0),
-        }
-    }
+    pub errors: Counter,
+    /// request latency distribution, µs log2 buckets (O(1) memory in
+    /// the request count)
+    latency_us: Histogram,
+    batch_size_sum: Counter,
 }
 
 impl Metrics {
+    /// Metrics whose instruments are registered under `prefix_*` in
+    /// `reg` — the registry's Prometheus dump then exposes them; the
+    /// returned struct records through the very same atomics.
+    pub fn registered(reg: &MetricsRegistry, prefix: &str) -> Metrics {
+        Metrics {
+            requests: reg.counter(&format!("{prefix}_requests_total")),
+            batches: reg.counter(&format!("{prefix}_batches_total")),
+            tokens: reg.counter(&format!("{prefix}_tokens_total")),
+            errors: reg.counter(&format!("{prefix}_errors_total")),
+            latency_us: reg.histogram(&format!("{prefix}_latency_us")),
+            batch_size_sum: reg.counter(&format!("{prefix}_batch_size_sum")),
+        }
+    }
+
     /// Record one request's end-to-end latency.
     pub fn observe_latency(&self, d: Duration) {
-        let us = d.as_micros().max(1) as u64;
-        let bucket = (63 - us.leading_zeros() as usize).min(31);
-        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
-        self.total_latency_us.fetch_add(us, Ordering::Relaxed);
-        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latency_us.observe_duration(d);
+        self.requests.inc();
     }
 
     /// Record one executed batch (its request count and token count).
     pub fn observe_batch(&self, size: usize, tokens: usize) {
-        self.batches.fetch_add(1, Ordering::Relaxed);
-        self.batch_size_sum.fetch_add(size as u64, Ordering::Relaxed);
-        self.tokens.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.batches.inc();
+        self.batch_size_sum.add(size as u64);
+        self.tokens.add(tokens as u64);
     }
 
     /// Mean request latency over every observation.
     pub fn mean_latency(&self) -> Duration {
-        let n = self.requests.load(Ordering::Relaxed).max(1);
-        Duration::from_micros(self.total_latency_us.load(Ordering::Relaxed) / n)
+        let n = self.latency_us.count().max(1);
+        Duration::from_micros(self.latency_us.sum() / n)
     }
 
     /// Mean requests fused per executed batch.
     pub fn mean_batch_size(&self) -> f64 {
-        let b = self.batches.load(Ordering::Relaxed).max(1);
-        self.batch_size_sum.load(Ordering::Relaxed) as f64 / b as f64
+        let b = self.batches.get().max(1);
+        self.batch_size_sum.get() as f64 / b as f64
     }
 
     /// Approximate latency quantile from the histogram (upper bound of
     /// the bucket containing the q-quantile).
     pub fn latency_quantile(&self, q: f64) -> Duration {
-        let total: u64 = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum();
-        if total == 0 {
-            return Duration::ZERO;
-        }
-        let target = (q * total as f64).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return Duration::from_micros(1u64 << (i + 1));
-            }
-        }
-        Duration::from_micros(1 << 31)
+        self.latency_us.quantile_duration(q)
+    }
+
+    /// The latency distribution itself (for exports and tests).
+    pub fn latency_histogram(&self) -> &Histogram {
+        &self.latency_us
     }
 
     /// One-line human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} mean_latency={:?} p50<={:?} p99<={:?} errors={}",
-            self.requests.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
+            self.requests.get(),
+            self.batches.get(),
             self.mean_batch_size(),
             self.mean_latency(),
             self.latency_quantile(0.5),
             self.latency_quantile(0.99),
-            self.errors.load(Ordering::Relaxed),
+            self.errors.get(),
         )
     }
 }
 
 /// Durability gauges for one streaming pool's persistence tier: spill
 /// write-back progress, rehydrations, checkpoint bytes, delta-export
-/// retention and kernel-redraw churn. The stream worker mirrors its
-/// `SessionManager` counters in here after every drain window, so
-/// readers on other threads (the `xp stream` report, ops tooling) see
-/// them without touching the worker's state; background spill commits
-/// land on the *next* mirror after they complete.
+/// retention, write-back staging pressure and kernel-redraw churn. The
+/// stream worker mirrors its `SessionManager` counters in here after
+/// every drain window, so readers on other threads (the `xp stream`
+/// report, ops tooling) see them without touching the worker's state;
+/// background spill commits land on the *next* mirror after they
+/// complete.
 #[derive(Default)]
 pub struct PersistMetrics {
     /// sessions currently demoted to the spill tier (in flight + on disk)
-    pub spilled_sessions: AtomicU64,
+    pub spilled_sessions: Gauge,
     /// cumulative demote-to-spill events (enqueues)
-    pub spills: AtomicU64,
+    pub spills: Gauge,
     /// cumulative spill-to-RAM promotions
-    pub rehydrations: AtomicU64,
+    pub rehydrations: Gauge,
     /// cumulative snapshot bytes written (spills + checkpoint exports)
-    pub checkpoint_bytes: AtomicU64,
+    pub checkpoint_bytes: Gauge,
     /// cumulative wall time spent rehydrating, nanoseconds
-    pub rehydrate_nanos: AtomicU64,
+    pub rehydrate_nanos: Gauge,
     /// spills parked awaiting their background write (gauge)
-    pub pending_spills: AtomicU64,
+    pub pending_spills: Gauge,
+    /// bytes of encoded snapshots parked awaiting their background
+    /// write — the write-back staging footprint the high-water mark
+    /// bounds
+    pub pending_spill_bytes: Gauge,
+    /// spills refused at the pending-byte high-water mark (each degraded
+    /// to a loud eviction)
+    pub spill_sheds: Gauge,
     /// background spill writes committed to the spill manifest
-    pub spill_commits: AtomicU64,
+    pub spill_commits: Gauge,
     /// queued spill writes canceled by a take-back or close
-    pub spill_cancels: AtomicU64,
+    pub spill_cancels: Gauge,
     /// background spill writes that failed (sessions stay resident-readable)
-    pub spill_write_failures: AtomicU64,
+    pub spill_write_failures: Gauge,
     /// serving-thread nanoseconds spent enqueueing spills
-    pub spill_enqueue_nanos: AtomicU64,
+    pub spill_enqueue_nanos: Gauge,
     /// writer-thread nanoseconds spent writing + committing spills
-    pub spill_write_nanos: AtomicU64,
+    pub spill_write_nanos: Gauge,
     /// advances that crossed ≥1 kernel-redraw epoch boundary
-    pub epoch_crossings: AtomicU64,
+    pub epoch_crossings: Gauge,
     /// per-(layer, head) state resets caused by redraw crossings
-    pub state_resets: AtomicU64,
+    pub state_resets: Gauge,
     /// snapshot records written by delta exports
-    pub delta_written: AtomicU64,
+    pub delta_written: Gauge,
     /// clean records retained (no snapshot IO) by delta exports
-    pub delta_retained: AtomicU64,
+    pub delta_retained: Gauge,
 }
 
 impl PersistMetrics {
+    /// PersistMetrics whose gauges are registered under `prefix_*` in
+    /// `reg`, for the registry's Prometheus dump.
+    pub fn registered(reg: &MetricsRegistry, prefix: &str) -> PersistMetrics {
+        let g = |name: &str| reg.gauge(&format!("{prefix}_{name}"));
+        PersistMetrics {
+            spilled_sessions: g("spilled_sessions"),
+            spills: g("spills_total"),
+            rehydrations: g("rehydrations_total"),
+            checkpoint_bytes: g("checkpoint_bytes_total"),
+            rehydrate_nanos: g("rehydrate_nanos_total"),
+            pending_spills: g("pending_spills"),
+            pending_spill_bytes: g("pending_spill_bytes"),
+            spill_sheds: g("spill_sheds_total"),
+            spill_commits: g("spill_commits_total"),
+            spill_cancels: g("spill_cancels_total"),
+            spill_write_failures: g("spill_write_failures_total"),
+            spill_enqueue_nanos: g("spill_enqueue_nanos_total"),
+            spill_write_nanos: g("spill_write_nanos_total"),
+            epoch_crossings: g("epoch_crossings_total"),
+            state_resets: g("state_resets_total"),
+            delta_written: g("delta_written_total"),
+            delta_retained: g("delta_retained_total"),
+        }
+    }
+
     /// Mirror the manager's counters (gauge semantics: last write wins).
     pub fn record(&self, st: &SessionStats) {
-        self.spilled_sessions.store(st.spilled as u64, Ordering::Relaxed);
-        self.spills.store(st.spills, Ordering::Relaxed);
-        self.rehydrations.store(st.rehydrations, Ordering::Relaxed);
-        self.checkpoint_bytes.store(st.checkpoint_bytes, Ordering::Relaxed);
-        self.rehydrate_nanos.store(st.rehydrate_nanos, Ordering::Relaxed);
-        self.pending_spills.store(st.pending_spills as u64, Ordering::Relaxed);
-        self.spill_commits.store(st.spill_commits, Ordering::Relaxed);
-        self.spill_cancels.store(st.spill_cancels, Ordering::Relaxed);
-        self.spill_write_failures.store(st.spill_write_failures, Ordering::Relaxed);
-        self.spill_enqueue_nanos.store(st.spill_enqueue_nanos, Ordering::Relaxed);
-        self.spill_write_nanos.store(st.spill_write_nanos, Ordering::Relaxed);
-        self.epoch_crossings.store(st.epoch_crossings, Ordering::Relaxed);
-        self.state_resets.store(st.state_resets, Ordering::Relaxed);
-        self.delta_written.store(st.delta_written, Ordering::Relaxed);
-        self.delta_retained.store(st.delta_retained, Ordering::Relaxed);
+        self.spilled_sessions.set(st.spilled as u64);
+        self.spills.set(st.spills);
+        self.rehydrations.set(st.rehydrations);
+        self.checkpoint_bytes.set(st.checkpoint_bytes);
+        self.rehydrate_nanos.set(st.rehydrate_nanos);
+        self.pending_spills.set(st.pending_spills as u64);
+        self.pending_spill_bytes.set(st.spill_pending_bytes);
+        self.spill_sheds.set(st.spill_sheds);
+        self.spill_commits.set(st.spill_commits);
+        self.spill_cancels.set(st.spill_cancels);
+        self.spill_write_failures.set(st.spill_write_failures);
+        self.spill_enqueue_nanos.set(st.spill_enqueue_nanos);
+        self.spill_write_nanos.set(st.spill_write_nanos);
+        self.epoch_crossings.set(st.epoch_crossings);
+        self.state_resets.set(st.state_resets);
+        self.delta_written.set(st.delta_written);
+        self.delta_retained.set(st.delta_retained);
     }
 
     /// Mean wall time of one spill-to-RAM promotion.
     pub fn mean_rehydrate_latency(&self) -> Duration {
-        let n = self.rehydrations.load(Ordering::Relaxed);
+        let n = self.rehydrations.get();
         if n == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.rehydrate_nanos.load(Ordering::Relaxed) / n)
+        Duration::from_nanos(self.rehydrate_nanos.get() / n)
     }
 
     /// Mean serving-thread cost of enqueueing one spill — what eviction
     /// pays now that the write itself runs on the background thread.
     pub fn mean_spill_enqueue_latency(&self) -> Duration {
-        let n = self.spills.load(Ordering::Relaxed);
+        let n = self.spills.get();
         if n == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.spill_enqueue_nanos.load(Ordering::Relaxed) / n)
+        Duration::from_nanos(self.spill_enqueue_nanos.get() / n)
     }
 
     /// Mean writer-thread cost of one committed background spill write.
     pub fn mean_spill_write_latency(&self) -> Duration {
-        let n = self.spill_commits.load(Ordering::Relaxed);
+        let n = self.spill_commits.get();
         if n == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.spill_write_nanos.load(Ordering::Relaxed) / n)
+        Duration::from_nanos(self.spill_write_nanos.get() / n)
     }
 
     /// One-line human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "spilled={} spills={} pending={} commits={} cancels={} rehydrations={} \
-             checkpoint_bytes={} mean_enqueue={:?} mean_write={:?} mean_rehydrate={:?} \
-             epoch_crossings={} state_resets={} delta_written={} delta_retained={}",
-            self.spilled_sessions.load(Ordering::Relaxed),
-            self.spills.load(Ordering::Relaxed),
-            self.pending_spills.load(Ordering::Relaxed),
-            self.spill_commits.load(Ordering::Relaxed),
-            self.spill_cancels.load(Ordering::Relaxed),
-            self.rehydrations.load(Ordering::Relaxed),
-            self.checkpoint_bytes.load(Ordering::Relaxed),
+            "spilled={} spills={} pending={} pending_bytes={} sheds={} commits={} \
+             cancels={} rehydrations={} checkpoint_bytes={} mean_enqueue={:?} \
+             mean_write={:?} mean_rehydrate={:?} epoch_crossings={} state_resets={} \
+             delta_written={} delta_retained={}",
+            self.spilled_sessions.get(),
+            self.spills.get(),
+            self.pending_spills.get(),
+            self.pending_spill_bytes.get(),
+            self.spill_sheds.get(),
+            self.spill_commits.get(),
+            self.spill_cancels.get(),
+            self.rehydrations.get(),
+            self.checkpoint_bytes.get(),
             self.mean_spill_enqueue_latency(),
             self.mean_spill_write_latency(),
             self.mean_rehydrate_latency(),
-            self.epoch_crossings.load(Ordering::Relaxed),
-            self.state_resets.load(Ordering::Relaxed),
-            self.delta_written.load(Ordering::Relaxed),
-            self.delta_retained.load(Ordering::Relaxed),
+            self.epoch_crossings.get(),
+            self.state_resets.get(),
+            self.delta_written.get(),
+            self.delta_retained.get(),
         )
     }
 }
@@ -216,13 +252,14 @@ impl PersistMetrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::HISTOGRAM_BUCKETS;
 
     #[test]
     fn latency_accumulates() {
         let m = Metrics::default();
         m.observe_latency(Duration::from_micros(100));
         m.observe_latency(Duration::from_micros(300));
-        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.requests.get(), 2);
         let mean = m.mean_latency();
         assert!(mean >= Duration::from_micros(190) && mean <= Duration::from_micros(210));
     }
@@ -246,7 +283,31 @@ mod tests {
         m.observe_batch(4, 512);
         m.observe_batch(8, 1024);
         assert_eq!(m.mean_batch_size(), 6.0);
-        assert_eq!(m.tokens.load(Ordering::Relaxed), 1536);
+        assert_eq!(m.tokens.get(), 1536);
+    }
+
+    #[test]
+    fn latency_memory_is_bounded_in_requests() {
+        // regression for the unbounded-sample-vector failure mode: the
+        // distribution must stay a fixed bucket array however many
+        // requests are observed
+        let m = Metrics::default();
+        assert_eq!(m.latency_histogram().bucket_counts().len(), HISTOGRAM_BUCKETS);
+        for i in 0..50_000u64 {
+            m.observe_latency(Duration::from_micros(1 + i % 4096));
+        }
+        assert_eq!(m.latency_histogram().bucket_counts().len(), HISTOGRAM_BUCKETS);
+        assert_eq!(m.latency_histogram().count(), 50_000);
+        assert_eq!(m.requests.get(), 50_000);
+    }
+
+    #[test]
+    fn registered_metrics_share_the_registry_series() {
+        let reg = MetricsRegistry::new();
+        let m = Metrics::registered(&reg, "serve_test");
+        m.observe_latency(Duration::from_micros(10));
+        assert_eq!(reg.counter("serve_test_requests_total").get(), 1);
+        assert_eq!(reg.histogram("serve_test_latency_us").count(), 1);
     }
 
     #[test]
@@ -262,6 +323,8 @@ mod tests {
             checkpoint_bytes: 9000,
             rehydrate_nanos: 8_000_000,
             pending_spills: 2,
+            spill_pending_bytes: 1234,
+            spill_sheds: 1,
             spill_commits: 5,
             spill_cancels: 1,
             spill_enqueue_nanos: 700,
@@ -273,13 +336,14 @@ mod tests {
             ..Default::default()
         };
         p.record(&st);
-        assert_eq!(p.spills.load(Ordering::Relaxed), 7);
+        assert_eq!(p.spills.get(), 7);
         assert_eq!(p.mean_rehydrate_latency(), Duration::from_nanos(2_000_000));
         assert_eq!(p.mean_spill_enqueue_latency(), Duration::from_nanos(100));
         assert_eq!(p.mean_spill_write_latency(), Duration::from_nanos(2_000));
         let s = p.summary();
         assert!(s.contains("spills=7") && s.contains("checkpoint_bytes=9000"), "{s}");
         assert!(s.contains("pending=2") && s.contains("commits=5"), "{s}");
+        assert!(s.contains("pending_bytes=1234") && s.contains("sheds=1"), "{s}");
         assert!(s.contains("epoch_crossings=6") && s.contains("delta_retained=9"), "{s}");
     }
 }

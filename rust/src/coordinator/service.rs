@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::configx::ServeConfig;
+use crate::obs::MetricsRegistry;
 use crate::runtime::{EngineHandle, Role, TensorFile};
 use crate::stream::SessionConfig;
 use crate::train::NativeModel;
@@ -39,12 +40,14 @@ struct Pool {
     workers: Vec<JoinHandle<()>>,
 }
 
-/// The coordinator: owns the engine handle, all batched model pools and
-/// all streaming session pools.
+/// The coordinator: owns the engine handle, all batched model pools,
+/// all streaming session pools, and the metrics registry every pool's
+/// instruments are published in.
 pub struct Coordinator {
     engine: EngineHandle,
     pools: HashMap<String, Pool>,
     streams: HashMap<String, StreamPool>,
+    registry: Arc<MetricsRegistry>,
     next_id: AtomicU64,
 }
 
@@ -55,8 +58,16 @@ impl Coordinator {
             engine,
             pools: HashMap::new(),
             streams: HashMap::new(),
+            registry: Arc::new(MetricsRegistry::new()),
             next_id: AtomicU64::new(1),
         }
+    }
+
+    /// The metrics registry all of this coordinator's pools register
+    /// their instruments in — snapshot it (e.g. via
+    /// [`crate::obs::export::prometheus`]) for a full metrics dump.
+    pub fn registry(&self) -> Arc<MetricsRegistry> {
+        self.registry.clone()
     }
 
     /// Start a model pool serving `{artifact}_fwd` with weights from
@@ -99,7 +110,7 @@ impl Coordinator {
 
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(std::sync::Mutex::new(rx));
-        let metrics = Arc::new(Metrics::default());
+        let metrics = Arc::new(Metrics::registered(&self.registry, &format!("serve_{tag}")));
         let max_batch = cfg.max_batch.min(meta.config.batch.max(1));
         let max_wait = Duration::from_millis(cfg.max_wait_ms);
 
@@ -192,7 +203,7 @@ impl Coordinator {
         max_batch: usize,
         max_wait: Duration,
     ) -> Result<()> {
-        let pool = StreamPool::spawn(name, model, cfg, max_batch, max_wait)?;
+        let pool = StreamPool::spawn(name, model, cfg, max_batch, max_wait, &self.registry)?;
         self.streams.insert(name.to_string(), pool);
         Ok(())
     }
@@ -273,6 +284,12 @@ impl Coordinator {
     /// checkpoint bytes, rehydration latency).
     pub fn stream_persist_metrics(&self, pool: &str) -> Option<Arc<PersistMetrics>> {
         self.streams.get(pool).map(|p| p.persist.clone())
+    }
+
+    /// Serving metrics of a stream pool (chunk requests, fused-window
+    /// sizes, chunk latency histogram).
+    pub fn stream_metrics(&self, pool: &str) -> Option<Arc<Metrics>> {
+        self.streams.get(pool).map(|p| p.metrics.clone())
     }
 
     /// Names of the running stream pools.
@@ -374,7 +391,7 @@ fn worker_loop(
         };
         let Some(batch) = batch else { break };
         if let Err(e) = serve_batch(&state, batch, &metrics) {
-            metrics.errors.fetch_add(1, Ordering::Relaxed);
+            metrics.errors.inc();
             eprintln!("[serve-{tag}] batch failed: {e:#}");
         }
     }

@@ -30,11 +30,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::{trace, MetricsRegistry};
 use crate::stream::{ChunkScores, SessionConfig, SessionManager};
 use crate::train::NativeModel;
 
 use super::batcher::collect_batch;
-use super::metrics::PersistMetrics;
+use super::metrics::{Metrics, PersistMetrics};
 
 /// Most chunk submissions one drain fuses into a batched forward.
 pub const STREAM_MAX_BATCH: usize = 8;
@@ -111,28 +112,35 @@ pub(crate) struct StreamPool {
     pub(crate) worker: Option<JoinHandle<()>>,
     /// durability gauges, mirrored from the worker's session manager
     pub(crate) persist: Arc<PersistMetrics>,
+    /// serving metrics: chunk requests, fused-window sizes, latency
+    pub(crate) metrics: Arc<Metrics>,
 }
 
 impl StreamPool {
     /// Spawn the worker owning a session manager over `model`, fusing
-    /// up to `max_batch` same-window submissions per forward.
+    /// up to `max_batch` same-window submissions per forward. The
+    /// pool's instruments are registered under `stream_{name}_*` /
+    /// `persist_{name}_*` in `reg`.
     pub(crate) fn spawn(
         name: &str,
         model: Arc<NativeModel>,
         cfg: SessionConfig,
         max_batch: usize,
         max_wait: Duration,
+        reg: &MetricsRegistry,
     ) -> Result<StreamPool> {
         // validate streamability up front, on the caller's thread
         let mut mgr = SessionManager::new(model, cfg)?;
         let (tx, rx) = channel::<StreamRequest>();
         let max_batch = max_batch.max(1);
-        let persist = Arc::new(PersistMetrics::default());
+        let persist = Arc::new(PersistMetrics::registered(reg, &format!("persist_{name}")));
+        let metrics = Arc::new(Metrics::registered(reg, &format!("stream_{name}")));
         let persist2 = persist.clone();
+        let metrics2 = metrics.clone();
         let worker = std::thread::Builder::new()
             .name(format!("stream-{name}"))
-            .spawn(move || stream_loop(&rx, &mut mgr, max_batch, max_wait, &persist2))?;
-        Ok(StreamPool { tx, worker: Some(worker), persist })
+            .spawn(move || stream_loop(&rx, &mut mgr, max_batch, max_wait, &persist2, &metrics2))?;
+        Ok(StreamPool { tx, worker: Some(worker), persist, metrics })
     }
 
     pub(crate) fn shutdown(mut self) {
@@ -149,9 +157,11 @@ fn stream_loop(
     max_batch: usize,
     max_wait: Duration,
     persist: &PersistMetrics,
+    metrics: &Metrics,
 ) {
     while let Some(batch) = collect_batch(rx, max_batch, max_wait) {
-        serve_stream_batch(batch, mgr);
+        let _window = trace::span_n("serve_window", batch.len() as u64);
+        serve_stream_batch(batch, mgr, metrics);
         persist.record(&mgr.stats());
     }
 }
@@ -195,7 +205,9 @@ fn flush_run(
 /// after the whole window's scoring — a chunk for the same session
 /// queued behind a close-carrying chunk in one drain window continues
 /// the stream rather than racing the teardown.
-fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
+fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager, metrics: &Metrics) {
+    let tokens: usize = batch.iter().map(|r| r.tokens.len()).sum();
+    metrics.observe_batch(batch.len(), tokens);
     let mut outcomes: Vec<Outcome> = (0..batch.len()).map(|_| Outcome::Nothing).collect();
 
     let mut run: Vec<usize> = Vec::new();
@@ -233,6 +245,10 @@ fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager) {
                 (None, Some("empty chunk (and close not requested)".to_string()), 0)
             }
         };
+        if error.is_some() {
+            metrics.errors.inc();
+        }
+        metrics.observe_latency(req.submitted.elapsed());
         if req.close {
             mgr.close(&req.session);
         }

@@ -228,6 +228,7 @@ impl AttentionKernel {
         if let Some(fm) = cache.get(&epoch) {
             return fm.clone();
         }
+        let _span = crate::obs::trace::span_n("kernel_redraw", epoch);
         let fm = Arc::new(Self::draw(&self.cfg, self.d, epoch));
         if cache.len() >= DRAW_CACHE {
             // sessions stream forward: the smallest epoch is the coldest

@@ -33,6 +33,7 @@ pub mod coordinator;
 pub mod favor;
 pub mod jsonx;
 pub mod linalg;
+pub mod obs;
 pub mod persist;
 pub mod protein;
 pub mod rng;

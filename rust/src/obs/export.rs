@@ -1,0 +1,227 @@
+//! Exporters: Chrome-trace JSON for span traces and Prometheus-style
+//! text exposition for the metrics registry.
+//!
+//! The trace format is the Chrome Trace Event JSON object form —
+//! `{"traceEvents": [...]}` with `B`/`E` duration events and one
+//! `thread_name` metadata event per thread — loadable directly in
+//! `chrome://tracing` or Perfetto. [`validate_chrome_trace`] re-parses
+//! an emitted document and checks that every thread's begin/end events
+//! balance and nest, which is what the CI trace smoke asserts.
+
+use anyhow::{bail, Result};
+
+use crate::jsonx::{arr, num, obj, s, Json};
+
+use super::registry::{Metric, MetricsRegistry};
+use super::trace::{Phase, ThreadTrace};
+
+/// Render drained thread traces as a Chrome Trace Event JSON document.
+pub fn chrome_trace(traces: &[ThreadTrace]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for t in traces {
+        if t.events.is_empty() && t.dropped == 0 {
+            continue;
+        }
+        let tid = num(t.thread_id as f64);
+        // name the thread row (metadata event)
+        events.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(1.0)),
+            ("tid", tid.clone()),
+            (
+                "args",
+                obj(vec![(
+                    "name",
+                    s(if t.thread_name.is_empty() { "unnamed" } else { &t.thread_name }),
+                )]),
+            ),
+        ]));
+        for e in &t.events {
+            let mut fields = vec![
+                ("name", s(e.name)),
+                ("ph", s(match e.phase {
+                    Phase::Begin => "B",
+                    Phase::End => "E",
+                })),
+                ("pid", num(1.0)),
+                ("tid", tid.clone()),
+                ("ts", num(e.t_us as f64)),
+                ("cat", s("performer")),
+            ];
+            if let Some(a) = e.arg {
+                fields.push(("args", obj(vec![("n", num(a as f64))])));
+            }
+            events.push(obj(fields));
+        }
+    }
+    let dropped: u64 = traces.iter().map(|t| t.dropped).sum();
+    obj(vec![
+        ("traceEvents", arr(events)),
+        ("displayTimeUnit", s("ms")),
+        ("droppedEvents", num(dropped as f64)),
+    ])
+}
+
+/// What [`validate_chrome_trace`] measured.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TraceSummary {
+    /// begin/end event pairs (complete spans)
+    pub spans: usize,
+    /// distinct thread rows carrying events
+    pub threads: usize,
+    /// events overwritten by ring overflow before export
+    pub dropped: u64,
+}
+
+/// Check a Chrome-trace document for balanced, properly nested spans:
+/// on every thread each `E` must close the most recent open `B` of the
+/// same name, and no span may stay open. Returns the span/thread counts
+/// on success; any orphan or crossing is a loud error.
+pub fn validate_chrome_trace(doc: &Json) -> Result<TraceSummary> {
+    let events = doc.req("traceEvents")?.as_arr()?;
+    let mut stacks: std::collections::BTreeMap<u64, Vec<String>> = Default::default();
+    let mut spans = 0usize;
+    for e in events {
+        let ph = e.req("ph")?.as_str()?;
+        if ph == "M" {
+            continue;
+        }
+        let tid = e.req("tid")?.as_f64()? as u64;
+        let name = e.req("name")?.as_str()?;
+        match ph {
+            "B" => stacks.entry(tid).or_default().push(name.to_string()),
+            "E" => {
+                let open = stacks.entry(tid).or_default().pop();
+                match open {
+                    Some(top) if top == name => spans += 1,
+                    Some(top) => bail!("span crossing on tid {tid}: '{name}' ends inside '{top}'"),
+                    None => bail!("orphan end event '{name}' on tid {tid}"),
+                }
+            }
+            other => bail!("unexpected event phase '{other}'"),
+        }
+    }
+    for (tid, stack) in &stacks {
+        if !stack.is_empty() {
+            bail!("unbalanced spans on tid {tid}: {stack:?} never ended");
+        }
+    }
+    Ok(TraceSummary {
+        spans,
+        threads: stacks.len(),
+        dropped: doc.f64_or("droppedEvents", 0.0) as u64,
+    })
+}
+
+/// Render the registry in Prometheus text exposition format: counters
+/// and gauges as single samples, histograms as cumulative `_bucket`
+/// series with log2 `le` labels plus `_sum` and `_count`.
+pub fn prometheus(reg: &MetricsRegistry) -> String {
+    let mut out = String::new();
+    for (name, metric) in reg.snapshot() {
+        match metric {
+            Metric::Counter(c) => {
+                out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+            }
+            Metric::Gauge(g) => {
+                out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+            }
+            Metric::Histogram(h) => {
+                out.push_str(&format!("# TYPE {name} histogram\n"));
+                let counts = h.bucket_counts();
+                let mut cum = 0u64;
+                for (i, c) in counts.iter().enumerate() {
+                    cum += c;
+                    if *c > 0 || i + 1 == counts.len() {
+                        out.push_str(&format!(
+                            "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                            super::registry::Histogram::bucket_upper_bound(i)
+                        ));
+                    }
+                }
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                out.push_str(&format!("{name}_sum {}\n", h.sum()));
+                out.push_str(&format!("{name}_count {}\n", h.count()));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Event;
+
+    fn ev(name: &'static str, phase: Phase, t_us: u64) -> Event {
+        Event { name, phase, t_us, arg: None }
+    }
+
+    fn thread(id: u64, events: Vec<Event>) -> ThreadTrace {
+        ThreadTrace {
+            thread_id: id,
+            thread_name: format!("t{id}"),
+            events,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_validates() {
+        let traces = vec![
+            thread(
+                1,
+                vec![
+                    ev("outer", Phase::Begin, 0),
+                    ev("inner", Phase::Begin, 5),
+                    ev("inner", Phase::End, 9),
+                    ev("outer", Phase::End, 12),
+                ],
+            ),
+            thread(2, vec![ev("write", Phase::Begin, 2), ev("write", Phase::End, 8)]),
+        ];
+        let doc = chrome_trace(&traces);
+        // must be loadable JSON, not just our in-memory tree
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let summary = validate_chrome_trace(&parsed).unwrap();
+        assert_eq!((summary.spans, summary.threads, summary.dropped), (3, 2, 0));
+    }
+
+    #[test]
+    fn validation_rejects_orphans_and_crossings() {
+        let orphan = chrome_trace(&[thread(1, vec![ev("a", Phase::End, 1)])]);
+        assert!(validate_chrome_trace(&orphan).is_err());
+        let open = chrome_trace(&[thread(1, vec![ev("a", Phase::Begin, 1)])]);
+        assert!(validate_chrome_trace(&open).is_err());
+        let crossed = chrome_trace(&[thread(
+            1,
+            vec![
+                ev("a", Phase::Begin, 1),
+                ev("b", Phase::Begin, 2),
+                ev("a", Phase::End, 3),
+                ev("b", Phase::End, 4),
+            ],
+        )]);
+        assert!(validate_chrome_trace(&crossed).is_err());
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let reg = MetricsRegistry::new();
+        reg.counter("req_total").add(7);
+        reg.gauge("resident_bytes").set(4096);
+        let h = reg.histogram("latency_us");
+        h.observe(10);
+        h.observe(3000);
+        let text = prometheus(&reg);
+        assert!(text.contains("# TYPE req_total counter\nreq_total 7\n"), "{text}");
+        assert!(text.contains("# TYPE resident_bytes gauge\nresident_bytes 4096\n"), "{text}");
+        assert!(text.contains("# TYPE latency_us histogram\n"), "{text}");
+        assert!(text.contains("latency_us_bucket{le=\"16\"} 1\n"), "{text}");
+        assert!(text.contains("latency_us_bucket{le=\"4096\"} 2\n"), "{text}");
+        assert!(text.contains("latency_us_bucket{le=\"+Inf\"} 2\n"), "{text}");
+        assert!(text.contains("latency_us_sum 3010\n"), "{text}");
+        assert!(text.contains("latency_us_count 2\n"), "{text}");
+    }
+}

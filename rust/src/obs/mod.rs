@@ -1,0 +1,22 @@
+//! Observability: a dependency-free metrics + tracing substrate for the
+//! serving pipeline.
+//!
+//! Three pieces (see DESIGN.md §Observability):
+//!
+//! * [`registry`] — named atomic [`Counter`]s/[`Gauge`]s and fixed-bucket
+//!   log2 [`Histogram`]s behind a [`MetricsRegistry`]; every instrument
+//!   is a cheap-clone lock-free handle with bounded memory, and the
+//!   coordinator's `Metrics`/`PersistMetrics` are built on these types.
+//! * [`trace`] — span-based tracing: begin/end events in per-thread
+//!   fixed-capacity ring buffers, runtime-disabled by default (the off
+//!   path is a single relaxed atomic load), instrumenting batcher wait →
+//!   wave grouping → per-layer forward → spill enqueue/write → rehydrate.
+//! * [`export`] — Chrome-trace JSON (`chrome://tracing`-loadable) and
+//!   Prometheus-style text exposition, wired into `performer stream`
+//!   (`trace=out.json`, `metrics=out.prom`) and the `xp` reports.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, Metric, MetricsRegistry, HISTOGRAM_BUCKETS};

@@ -1,0 +1,287 @@
+//! Span tracing: begin/end events in per-thread fixed-capacity ring
+//! buffers, compiled in everywhere and runtime-disabled by default.
+//!
+//! Protocol:
+//!
+//! * Instrumented code calls [`span`]/[`span_n`] and holds the returned
+//!   guard for the region's lifetime; the guard records a `Begin` event
+//!   at creation and the matching `End` on drop, so spans on one thread
+//!   always nest and balance by construction.
+//! * When tracing is **off** (the default), [`span`] is a single relaxed
+//!   atomic load and the guard's drop is a branch on a local bool —
+//!   cheap enough to leave compiled into the per-layer forward loop.
+//! * When **on**, each event is one `Instant` read plus a push into the
+//!   calling thread's ring buffer behind an uncontended per-thread
+//!   mutex (contended only while an exporter drains). Buffers hold
+//!   [`RING_CAPACITY`] events; overflow overwrites the oldest events
+//!   and counts them in `dropped`, so memory stays bounded no matter
+//!   how long tracing stays enabled.
+//! * A guard created while tracing was on records its `End` even if
+//!   tracing was disabled meanwhile — balance is never sacrificed to
+//!   the toggle.
+//!
+//! [`drain`] snapshots and clears every thread's buffer (including
+//! threads that have since exited); the Chrome-trace exporter in
+//! [`crate::obs::export`] turns the result into a `chrome://tracing`
+//! -loadable JSON file.
+
+use std::cell::OnceCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events retained per thread; one event is ~32 bytes, so a thread's
+/// buffer tops out around 2 MiB.
+pub const RING_CAPACITY: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on or off at runtime.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently recorded — the disabled fast path is
+/// exactly this one relaxed load.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Begin or end of a span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// span opened
+    Begin,
+    /// span closed
+    End,
+}
+
+/// One recorded event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// static span name (e.g. `"forward_chunk_batch"`)
+    pub name: &'static str,
+    /// begin or end
+    pub phase: Phase,
+    /// microseconds since the process's trace epoch
+    pub t_us: u64,
+    /// optional numeric argument (batch size, layer index, …)
+    pub arg: Option<u64>,
+}
+
+/// Everything one thread recorded, as drained by [`drain`].
+#[derive(Clone, Debug)]
+pub struct ThreadTrace {
+    /// stable per-thread id (registration order, starting at 1)
+    pub thread_id: u64,
+    /// the thread's name at first event (empty if unnamed)
+    pub thread_name: String,
+    /// events in recording order
+    pub events: Vec<Event>,
+    /// events overwritten by ring overflow since the last drain
+    pub dropped: u64,
+}
+
+struct Ring {
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+struct ThreadBuf {
+    id: u64,
+    name: String,
+    ring: Mutex<Ring>,
+}
+
+static THREADS: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+thread_local! {
+    static LOCAL: OnceCell<Arc<ThreadBuf>> = const { OnceCell::new() };
+}
+
+fn local_buf(f: impl FnOnce(&ThreadBuf)) {
+    LOCAL.with(|cell| {
+        let buf = cell.get_or_init(|| {
+            let buf = Arc::new(ThreadBuf {
+                id: NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed),
+                name: std::thread::current().name().unwrap_or("").to_string(),
+                ring: Mutex::new(Ring { events: VecDeque::new(), dropped: 0 }),
+            });
+            THREADS.lock().expect("trace thread registry poisoned").push(buf.clone());
+            buf
+        });
+        f(buf);
+    });
+}
+
+fn push(ev: Event) {
+    local_buf(|buf| {
+        let mut ring = buf.ring.lock().expect("trace ring poisoned");
+        if ring.events.len() >= RING_CAPACITY {
+            ring.events.pop_front();
+            ring.dropped += 1;
+        }
+        ring.events.push_back(ev);
+    });
+}
+
+/// The calling thread's trace id (registering it if needed) — lets
+/// tests attribute drained events to themselves.
+pub fn this_thread_id() -> u64 {
+    let mut id = 0;
+    local_buf(|buf| id = buf.id);
+    id
+}
+
+/// RAII span guard: records `Begin` on creation (when tracing is on)
+/// and the matching `End` on drop.
+#[must_use = "a span measures the region the guard is alive for"]
+pub struct Span {
+    name: &'static str,
+    arg: Option<u64>,
+    active: bool,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.active {
+            push(Event { name: self.name, phase: Phase::End, t_us: now_us(), arg: self.arg });
+        }
+    }
+}
+
+fn begin(name: &'static str, arg: Option<u64>) -> Span {
+    if !enabled() {
+        return Span { name, arg, active: false };
+    }
+    push(Event { name, phase: Phase::Begin, t_us: now_us(), arg });
+    Span { name, arg, active: true }
+}
+
+/// Open a span named `name` on the calling thread.
+pub fn span(name: &'static str) -> Span {
+    begin(name, None)
+}
+
+/// Open a span carrying a numeric argument (batch size, layer index…).
+pub fn span_n(name: &'static str, arg: u64) -> Span {
+    begin(name, Some(arg))
+}
+
+/// Snapshot and clear every thread's ring buffer. Threads that exited
+/// since their last event are included; buffers stay registered, so a
+/// later drain picks up whatever was recorded after this one.
+pub fn drain() -> Vec<ThreadTrace> {
+    let threads = THREADS.lock().expect("trace thread registry poisoned");
+    threads
+        .iter()
+        .map(|buf| {
+            let mut ring = buf.ring.lock().expect("trace ring poisoned");
+            ThreadTrace {
+                thread_id: buf.id,
+                thread_name: buf.name.clone(),
+                events: ring.events.drain(..).collect(),
+                dropped: std::mem::take(&mut ring.dropped),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // tracing is process-global state: serialize the tests that toggle it
+    static LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = LOCK.lock().unwrap();
+        set_enabled(false);
+        let me = this_thread_id();
+        let _ = drain();
+        {
+            let _s = span("quiet");
+        }
+        let mine: Vec<Event> = drain()
+            .into_iter()
+            .filter(|t| t.thread_id == me)
+            .flat_map(|t| t.events)
+            .collect();
+        assert!(mine.is_empty(), "disabled tracing must record nothing: {mine:?}");
+    }
+
+    #[test]
+    fn spans_nest_and_balance() {
+        let _g = LOCK.lock().unwrap();
+        let me = this_thread_id();
+        let _ = drain();
+        set_enabled(true);
+        {
+            let _outer = span_n("outer", 2);
+            let _inner = span("inner");
+        }
+        set_enabled(false);
+        let mine: Vec<Event> = drain()
+            .into_iter()
+            .filter(|t| t.thread_id == me)
+            .flat_map(|t| t.events)
+            .collect();
+        let shape: Vec<(&str, Phase)> = mine.iter().map(|e| (e.name, e.phase)).collect();
+        assert_eq!(
+            shape,
+            vec![
+                ("outer", Phase::Begin),
+                ("inner", Phase::Begin),
+                ("inner", Phase::End),
+                ("outer", Phase::End),
+            ]
+        );
+        assert_eq!(mine[0].arg, Some(2));
+        assert!(mine.windows(2).all(|w| w[0].t_us <= w[1].t_us), "timestamps monotone");
+    }
+
+    #[test]
+    fn end_survives_mid_span_disable() {
+        let _g = LOCK.lock().unwrap();
+        let me = this_thread_id();
+        let _ = drain();
+        set_enabled(true);
+        let s = span("toggled");
+        set_enabled(false);
+        drop(s);
+        let mine: Vec<Event> = drain()
+            .into_iter()
+            .filter(|t| t.thread_id == me)
+            .flat_map(|t| t.events)
+            .collect();
+        assert_eq!(mine.len(), 2, "begin must still get its end: {mine:?}");
+        assert_eq!((mine[0].phase, mine[1].phase), (Phase::Begin, Phase::End));
+    }
+
+    #[test]
+    fn ring_overflow_is_bounded_and_counted() {
+        let _g = LOCK.lock().unwrap();
+        let me = this_thread_id();
+        let _ = drain();
+        set_enabled(true);
+        for _ in 0..(RING_CAPACITY / 2 + 10) {
+            let _s = span("tick"); // 2 events each
+        }
+        set_enabled(false);
+        let mine = drain().into_iter().find(|t| t.thread_id == me).unwrap();
+        assert_eq!(mine.events.len(), RING_CAPACITY, "buffer must cap at RING_CAPACITY");
+        assert_eq!(mine.dropped, 20, "overwritten events are counted");
+    }
+}

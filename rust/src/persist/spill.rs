@@ -50,6 +50,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::trace;
 use crate::stream::ChunkScorer;
 use crate::train::NativeModel;
 
@@ -68,6 +69,9 @@ struct PendingSpill {
     /// pending entry still carries its sequence — a take-back or a
     /// newer spill of the same id supersedes it
     seq: u64,
+    /// encoded snapshot size, charged against the staging high-water
+    /// mark while the entry is parked
+    bytes: u64,
 }
 
 enum Job {
@@ -111,6 +115,11 @@ pub struct SpillCounters {
     pub write_nanos: u64,
     /// spills currently parked awaiting their background write
     pub pending: u64,
+    /// bytes of encoded snapshots currently parked awaiting their
+    /// background write (the write-back staging footprint)
+    pub pending_bytes: u64,
+    /// enqueues refused at the pending-byte high-water mark
+    pub sheds: u64,
 }
 
 struct Shared {
@@ -131,6 +140,16 @@ struct Shared {
     /// serving-thread enqueue time lives here too so `SpillCounters`
     /// can be read from one place
     enqueue_nanos: AtomicU64,
+    /// bytes of encoded snapshots currently parked in `pending` —
+    /// updated under the pending lock at every insert/remove, read
+    /// lock-free by the gauges
+    pending_bytes: AtomicU64,
+    /// high-water mark on `pending_bytes` (0 = unbounded): an enqueue
+    /// that would cross it is refused (shed), bounding the staging
+    /// memory a stalled writer can pin
+    pending_limit: AtomicU64,
+    /// enqueues refused at the high-water mark
+    sheds: AtomicU64,
     /// test/ops hook: while true, the writer parks before each job
     gate: (Mutex<bool>, Condvar),
 }
@@ -171,6 +190,9 @@ impl SpillTier {
             failed: Mutex::new(Vec::new()),
             stats: WriterStats::default(),
             enqueue_nanos: AtomicU64::new(0),
+            pending_bytes: AtomicU64::new(0),
+            pending_limit: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
             gate: (Mutex::new(false), Condvar::new()),
         });
         let (tx, rx) = channel::<Job>();
@@ -184,6 +206,14 @@ impl SpillTier {
     /// The spill directory path.
     pub fn dir(&self) -> PathBuf {
         self.shared.ck.lock().expect("spill checkpointer poisoned").dir().to_path_buf()
+    }
+
+    /// Bound the write-back staging footprint: an enqueue that would
+    /// push the parked-snapshot bytes past `limit` is refused (shed),
+    /// so a stalled writer can pin at most `limit` bytes of encoded
+    /// snapshots. 0 (the default) means unbounded.
+    pub fn set_pending_limit(&self, limit: usize) {
+        self.shared.pending_limit.store(limit as u64, Ordering::Relaxed);
     }
 
     /// Demote a session: capture + encode its snapshot on the calling
@@ -204,13 +234,34 @@ impl SpillTier {
         let bytes = snap.to_bytes();
         let size = bytes.len() as u64;
         let pos = scorer.tokens_seen() as u64;
+        // staging high-water mark: refuse (shed) an enqueue that would
+        // pin more encoded bytes than the limit allows — the caller
+        // degrades to a loud eviction, and the bounded-memory contract
+        // survives a stalled writer
+        let limit = self.shared.pending_limit.load(Ordering::Relaxed);
+        if limit > 0 {
+            let staged = self.shared.pending_bytes.load(Ordering::Relaxed);
+            if staged + size > limit {
+                self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "spill staging high-water mark: {staged} pending + {size} new > {limit}"
+                );
+            }
+        }
         self.next_seq += 1;
         let seq = self.next_seq;
-        self.shared
-            .pending
-            .lock()
-            .expect("spill pending map poisoned")
-            .insert(id.to_string(), PendingSpill { scorer, dirty_gen, seq });
+        {
+            let mut pending = self.shared.pending.lock().expect("spill pending map poisoned");
+            let old = pending
+                .insert(id.to_string(), PendingSpill { scorer, dirty_gen, seq, bytes: size });
+            // a superseded same-id entry releases its staged bytes
+            let delta = size as i64 - old.map_or(0, |p| p.bytes as i64);
+            if delta >= 0 {
+                self.shared.pending_bytes.fetch_add(delta as u64, Ordering::Relaxed);
+            } else {
+                self.shared.pending_bytes.fetch_sub((-delta) as u64, Ordering::Relaxed);
+            }
+        }
         let job = Job::Write { id: id.to_string(), seq, bytes, pos, exporter, dirty_gen };
         let sent = self.tx.as_ref().is_some_and(|tx| tx.send(job).is_ok());
         if !sent {
@@ -218,7 +269,10 @@ impl SpillTier {
             // caller degrades to a loud eviction — parking a scorer no
             // one will ever write would leak it past the byte budget
             self.shared.stats.write_failures.fetch_add(1, Ordering::Relaxed);
-            self.shared.pending.lock().expect("spill pending map poisoned").remove(id);
+            let mut pending = self.shared.pending.lock().expect("spill pending map poisoned");
+            if let Some(p) = pending.remove(id) {
+                self.shared.pending_bytes.fetch_sub(p.bytes, Ordering::Relaxed);
+            }
             bail!("spill writer thread is gone");
         }
         self.shared
@@ -242,7 +296,9 @@ impl SpillTier {
     pub fn drop_failed_pending(&self, id: &str, seq: u64) -> bool {
         let mut pending = self.shared.pending.lock().expect("spill pending map poisoned");
         if pending.get(id).is_some_and(|p| p.seq == seq) {
-            pending.remove(id);
+            if let Some(p) = pending.remove(id) {
+                self.shared.pending_bytes.fetch_sub(p.bytes, Ordering::Relaxed);
+            }
             true
         } else {
             false
@@ -257,7 +313,10 @@ impl SpillTier {
             .lock()
             .expect("spill pending map poisoned")
             .remove(id)
-            .map(|p| (p.scorer, p.dirty_gen))
+            .map(|p| {
+                self.shared.pending_bytes.fetch_sub(p.bytes, Ordering::Relaxed);
+                (p.scorer, p.dirty_gen)
+            })
     }
 
     /// Whether `id` is demoted to this tier — parked awaiting its write
@@ -348,13 +407,15 @@ impl SpillTier {
     /// Drop a session from the tier — cancel a pending spill and/or
     /// remove a committed snapshot. Returns whether anything existed.
     pub fn remove(&self, id: &str) -> Result<bool> {
-        let pending = self
-            .shared
-            .pending
-            .lock()
-            .expect("spill pending map poisoned")
-            .remove(id)
-            .is_some();
+        let pending = {
+            match self.shared.pending.lock().expect("spill pending map poisoned").remove(id) {
+                Some(p) => {
+                    self.shared.pending_bytes.fetch_sub(p.bytes, Ordering::Relaxed);
+                    true
+                }
+                None => false,
+            }
+        };
         let committed =
             self.shared.ck.lock().expect("spill checkpointer poisoned").remove(id)?;
         self.shared.committed.lock().expect("spill committed set poisoned").remove(id);
@@ -387,6 +448,8 @@ impl SpillTier {
             enqueue_nanos: self.shared.enqueue_nanos.load(Ordering::Relaxed),
             write_nanos: self.shared.stats.write_nanos.load(Ordering::Relaxed),
             pending: self.pending_count() as u64,
+            pending_bytes: self.shared.pending_bytes.load(Ordering::Relaxed),
+            sheds: self.shared.sheds.load(Ordering::Relaxed),
         }
     }
 }
@@ -411,6 +474,7 @@ fn writer_loop(rx: &Receiver<Job>, shared: &Shared) {
             }
             Job::Write { id, seq, bytes, pos, exporter, dirty_gen } => {
                 shared.wait_gate();
+                let _span = trace::span_n("spill_write", bytes.len() as u64);
                 // superseded, taken back or closed before we got here:
                 // skip the write entirely
                 let live = shared
@@ -477,7 +541,9 @@ fn writer_loop(rx: &Receiver<Job>, shared: &Shared) {
                             .lock()
                             .expect("spill committed set poisoned")
                             .insert(id.clone());
-                        pending.remove(&id);
+                        if let Some(p) = pending.remove(&id) {
+                            shared.pending_bytes.fetch_sub(p.bytes, Ordering::Relaxed);
+                        }
                         true
                     } else {
                         false
@@ -594,6 +660,41 @@ mod tests {
         } // drop: shutdown must drain all three writes
         let ck = Checkpointer::open(&dir).unwrap();
         assert_eq!(ck.ids(), vec!["a".to_string(), "b".into(), "c".into()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pending_limit_sheds_and_accounts_bytes_exactly() {
+        let dir = tempdir("hwm");
+        let m = model();
+        let mut tier = SpillTier::create(&dir).unwrap();
+        tier.hold_writes(true);
+
+        // first spill fits under a mark sized for exactly one snapshot
+        let mut a = ChunkScorer::new(m.clone()).unwrap();
+        a.advance(&tokens(16, 30)).unwrap();
+        let size_a = tier.enqueue("a", a, 1, 7).unwrap();
+        tier.set_pending_limit(size_a as usize);
+        let c = tier.counters();
+        assert_eq!((c.pending, c.pending_bytes, c.sheds), (1, size_a, 0));
+
+        // the second would cross the mark: shed, nothing parked
+        let mut b = ChunkScorer::new(m).unwrap();
+        b.advance(&tokens(16, 31)).unwrap();
+        let err = tier.enqueue("b", b, 2, 7).unwrap_err();
+        assert!(format!("{err:#}").contains("high-water mark"), "{err:#}");
+        let c = tier.counters();
+        assert_eq!((c.pending, c.pending_bytes, c.sheds), (1, size_a, 1));
+        assert!(!tier.contains("b"));
+
+        // draining the writer releases the staged bytes to exactly zero
+        tier.hold_writes(false);
+        tier.flush().unwrap();
+        let c = tier.counters();
+        assert_eq!((c.pending, c.pending_bytes), (0, 0));
+        assert_eq!(c.commits, 1);
+        assert!(tier.contains("a"), "the spill that fit still committed");
+        drop(tier);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

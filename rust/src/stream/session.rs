@@ -24,6 +24,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::obs::trace;
 use crate::persist::{Checkpointer, SpillTier};
 use crate::train::NativeModel;
 
@@ -43,12 +44,25 @@ pub struct SessionConfig {
     /// chunk rehydrates them transparently. Writes run on a background
     /// thread — eviction enqueues instead of blocking the serving path
     pub spill_dir: Option<PathBuf>,
+    /// high-water mark, in bytes, on encoded snapshots parked awaiting
+    /// their background spill write (0 = unbounded). When an eviction
+    /// would push the staging footprint past this, the spill is *shed*:
+    /// the tier refuses the enqueue (counting it in `spill_sheds`) and
+    /// the eviction degrades to the loud context-destroying kind — the
+    /// bounded-memory contract a slow disk must not be able to break
+    pub spill_pending_limit: usize,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        // 64 MiB of stream state, no session-count cap, no spill tier
-        SessionConfig { max_state_bytes: 64 << 20, max_sessions: 0, spill_dir: None }
+        // 64 MiB of stream state, no session-count cap, no spill tier,
+        // unbounded write-back staging
+        SessionConfig {
+            max_state_bytes: 64 << 20,
+            max_sessions: 0,
+            spill_dir: None,
+            spill_pending_limit: 0,
+        }
     }
 }
 
@@ -86,6 +100,12 @@ pub struct SessionStats {
     pub rehydrate_nanos: u64,
     /// spills parked awaiting their background write (gauge)
     pub pending_spills: usize,
+    /// bytes of encoded snapshots parked awaiting their background
+    /// write (gauge) — bounded by `SessionConfig::spill_pending_limit`
+    pub spill_pending_bytes: u64,
+    /// spills refused at the pending-byte high-water mark, each
+    /// degraded to a loud eviction
+    pub spill_sheds: u64,
     /// background spill writes committed to the spill manifest
     pub spill_commits: u64,
     /// queued spill writes canceled (taken back by a rehydration or a
@@ -198,7 +218,11 @@ impl SessionManager {
         let probe = ChunkScorer::new(model.clone())?;
         let per_session_bytes = probe.steady_state_bytes();
         let spill = match &cfg.spill_dir {
-            Some(dir) => Some(SpillTier::create(dir)?),
+            Some(dir) => {
+                let tier = SpillTier::create(dir)?;
+                tier.set_pending_limit(cfg.spill_pending_limit);
+                Some(tier)
+            }
             None => None,
         };
         Ok(SessionManager {
@@ -280,6 +304,8 @@ impl SessionManager {
             checkpoint_bytes: self.checkpoint_bytes,
             rehydrate_nanos: self.rehydrate_nanos,
             pending_spills: spill.pending as usize,
+            spill_pending_bytes: spill.pending_bytes,
+            spill_sheds: spill.sheds,
             spill_commits: spill.commits,
             spill_cancels: spill.cancels,
             spill_write_failures: spill.write_failures,
@@ -345,6 +371,7 @@ impl SessionManager {
     /// writes — the serving path never waits on the disk.
     pub fn advance_batch(&mut self, ids: &[&str], chunks: &[&[u8]]) -> Vec<Result<ChunkScores>> {
         assert_eq!(ids.len(), chunks.len(), "{} ids fed {} chunks", ids.len(), chunks.len());
+        let _span = trace::span_n("advance_batch", ids.len() as u64);
         self.reap_failed_spills();
         let mut results: Vec<Option<Result<ChunkScores>>> =
             (0..ids.len()).map(|_| None).collect();
@@ -449,6 +476,7 @@ impl SessionManager {
             // redraw accounting: epoch sums before/after the advance
             let epochs_before: Vec<u64> = scorers.iter().map(ChunkScorer::epoch_sum).collect();
             let wave_chunks: Vec<&[u8]> = wave.iter().map(|&i| chunks[i]).collect();
+            let _wave_span = trace::span_n("wave", wave.len() as u64);
             match ChunkScorer::advance_batch(&mut scorers, &wave_chunks) {
                 Ok(scores) => {
                     for (j, ((&i, scorer), sc)) in
@@ -538,6 +566,7 @@ impl SessionManager {
     /// session's dirty generation survives, so an untouched rehydrated
     /// session stays "clean" for delta exports.
     fn rehydrate(&mut self, id: &str) -> Result<()> {
+        let _span = trace::span("rehydrate");
         let t0 = Instant::now();
         let tier = self.spill.as_ref().expect("rehydrate requires a spill tier");
         let (scorer, dirty_gen) = match tier.take_pending(id) {
@@ -587,6 +616,7 @@ impl SessionManager {
     /// migration export. For hot repeated exports, prefer
     /// [`Self::checkpoint_delta`].
     pub fn checkpoint_all(&mut self, dir: &Path) -> Result<usize> {
+        let _span = trace::span("checkpoint_all");
         self.guard_export_target(dir)?;
         let mut ck = Checkpointer::create(dir).context("opening checkpoint directory")?;
         ck.clear().context("clearing previous export")?;
@@ -644,6 +674,7 @@ impl SessionManager {
     /// restoring from any chain of full + delta exports is bitwise
     /// identical to restoring from a single full export.
     pub fn checkpoint_delta(&mut self, dir: &Path) -> Result<DeltaStats> {
+        let _span = trace::span("checkpoint_delta");
         self.guard_export_target(dir)?;
         let mut ck = Checkpointer::create(dir).context("opening checkpoint directory")?;
         let exporter = self.exporter;
@@ -739,6 +770,7 @@ impl SessionManager {
     /// the number of sessions adopted; the source directory is left
     /// intact.
     pub fn restore_from(&mut self, dir: &Path) -> Result<usize> {
+        let _span = trace::span("restore_from");
         let ck = Checkpointer::open(dir)?;
         let ids = ck.ids();
         for id in &ids {
@@ -809,6 +841,7 @@ impl SessionManager {
                     let sess = self.sessions.remove(&k).expect("victim is resident");
                     match &mut self.spill {
                         Some(tier) => {
+                            let _span = trace::span("spill_enqueue");
                             match tier.enqueue(&k, sess.scorer, sess.dirty_gen, self.exporter)
                             {
                                 Ok(bytes) => {
@@ -907,7 +940,12 @@ mod tests {
 
     #[test]
     fn session_cap_is_enforced() {
-        let cfg = SessionConfig { max_state_bytes: usize::MAX, max_sessions: 2, spill_dir: None };
+        let cfg = SessionConfig {
+            max_state_bytes: usize::MAX,
+            max_sessions: 2,
+            spill_dir: None,
+            spill_pending_limit: 0,
+        };
         let mut mgr = SessionManager::new(model(), cfg).unwrap();
         for (i, id) in ["a", "b", "c", "d"].iter().enumerate() {
             mgr.advance(id, &chunk(8, 10 + i as u64)).unwrap();
@@ -1056,6 +1094,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
         let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
@@ -1096,6 +1135,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
         let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
@@ -1143,6 +1183,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(24, 190)).unwrap();
@@ -1174,6 +1215,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 90)).unwrap();
@@ -1190,6 +1232,53 @@ mod tests {
     }
 
     #[test]
+    fn pending_limit_sheds_to_loud_eviction() {
+        let dir = tempdir("shed");
+        let m = model();
+        let per = SessionManager::new(m.clone(), SessionConfig::default())
+            .unwrap()
+            .per_session_bytes();
+        // one resident slot; staging bounded to roughly one encoded
+        // snapshot (a snapshot carries at least the per-session state,
+        // so two can never fit under 2×per)
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+            spill_pending_limit: 2 * per,
+        };
+        let mut mgr = SessionManager::new(m, cfg).unwrap();
+        // hold the writer: parked snapshots accumulate instead of draining
+        mgr.set_spill_hold(true);
+        mgr.advance("a", &chunk(16, 200)).unwrap();
+        mgr.advance("b", &chunk(16, 201)).unwrap(); // spills "a" (fits)
+        let st = mgr.stats();
+        assert!(mgr.is_spilled("a"));
+        assert_eq!(st.spill_sheds, 0);
+        assert!(st.spill_pending_bytes > 0, "staged bytes must be visible");
+        assert!(st.spill_pending_bytes <= 2 * per as u64, "high-water mark respected");
+
+        // evicting "b" would stage a second snapshot past the mark: the
+        // spill is shed and the eviction degrades to the loud kind
+        mgr.advance("c", &chunk(16, 202)).unwrap();
+        let st = mgr.stats();
+        assert_eq!(st.spill_sheds, 1, "over-mark spill must shed");
+        assert_eq!(st.evicted, 1, "the shed spill becomes a loud eviction");
+        assert!(!mgr.is_spilled("b"));
+        let err = mgr.advance("b", &chunk(16, 203)).unwrap_err();
+        assert!(format!("{err:#}").contains("evicted"), "{err:#}");
+
+        // draining the writer releases the staged bytes; the spill that
+        // did fit stays transparently resumable
+        mgr.set_spill_hold(false);
+        mgr.sync_spills().unwrap();
+        let st = mgr.stats();
+        assert_eq!((st.pending_spills, st.spill_pending_bytes), (0, 0));
+        assert_eq!(mgr.advance("a", &chunk(16, 204)).unwrap().offset, 16);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn close_drops_spilled_snapshots_too() {
         let dir = tempdir("close");
         let m = model();
@@ -1200,6 +1289,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 83)).unwrap();
@@ -1224,6 +1314,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 86)).unwrap();
@@ -1264,6 +1355,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(spill_dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut donor = SessionManager::new(m.clone(), cfg).unwrap();
         let (ca, cb) = (chunk(20, 90), chunk(20, 91));
@@ -1374,6 +1466,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(spill.clone()),
+            spill_pending_limit: 0,
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 150)).unwrap();
@@ -1424,6 +1517,7 @@ mod tests {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut first = SessionManager::new(m.clone(), cfg.clone()).unwrap();
         first.advance("a", &chunk(16, 102)).unwrap();
@@ -1465,6 +1559,7 @@ mod tests {
             max_state_bytes: 2 * per,
             max_sessions: 0,
             spill_dir: Some(spill.clone()),
+            spill_pending_limit: 0,
         };
         let mut replica = SessionManager::new(m, cfg).unwrap();
         assert_eq!(replica.restore_from(&dir).unwrap(), 3);

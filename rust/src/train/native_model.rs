@@ -18,6 +18,7 @@ use crate::favor::{
     FeatureKind, FeatureMap, KernelConfig,
 };
 use crate::linalg::OrfMechanism;
+use crate::obs::trace;
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, Role};
 use crate::stream::StreamState;
@@ -511,6 +512,7 @@ impl NativeModel {
         let mut attn_maps: Vec<Vec<Vec<Mat>>> =
             if capture_attention { (0..bsz).map(|_| Vec::new()).collect() } else { Vec::new() };
         for (li, layer) in self.layers.iter().enumerate() {
+            let _layer_span = trace::span_n("layer", li as u64);
             // attention block: one fused LayerNorm + QKV over the stack,
             // then per-(sequence, head) attention on real rows
             let normed = layer.ln1.apply(&x);
@@ -679,6 +681,7 @@ impl NativeModel {
         offsets: &[usize],
         states: &mut [&mut [Vec<StreamState>]],
     ) -> Result<Vec<Mat>> {
+        let _span = trace::span_n("forward_chunk_batch", seqs.len() as u64);
         let NativeAttention::Favor(kernels) = &self.attention else {
             bail!("streaming requires FAVOR attention");
         };

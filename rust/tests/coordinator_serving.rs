@@ -10,7 +10,9 @@ use performer::coordinator::Coordinator;
 use performer::protein::vocab::{AA_BASE, BOS, EOS, MASK, N_AA};
 use performer::protein::{Corpus, CorpusConfig};
 use performer::rng::Pcg64;
-use performer::runtime::EngineActor;
+use performer::runtime::{EngineActor, EngineHandle};
+use performer::stream::SessionConfig;
+use performer::train::{NativeModel, SyntheticConfig};
 
 fn built() -> bool {
     PathBuf::from("artifacts").join("tiny_relu_bid_fwd.hlo.txt").exists()
@@ -86,7 +88,7 @@ fn concurrent_clients_all_get_answers() {
         h.join().unwrap();
     }
     let m = coord.metrics("tiny_relu_bid").unwrap();
-    assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 24);
+    assert_eq!(m.requests.get(), 24);
     // dynamic batching must have fused at least some requests
     assert!(m.mean_batch_size() >= 1.0);
 }
@@ -116,6 +118,54 @@ fn batching_fuses_under_load() {
         "burst should fuse into batches, got mean {}",
         m.mean_batch_size()
     );
+}
+
+#[test]
+fn stream_pool_metrics_survive_parallel_hammering() {
+    // synthetic stack + disconnected engine: no artifacts needed, so
+    // this concurrency test runs everywhere
+    let model =
+        Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut Pcg64::new(1)));
+    let mut coord = Coordinator::new(EngineHandle::disconnected("artifacts"));
+    coord.start_stream_pool("pool", model, SessionConfig::default()).unwrap();
+    let coord = Arc::new(coord);
+    let corpus = Arc::new(Corpus::generate(CorpusConfig::default()));
+
+    const THREADS: u64 = 4;
+    const CHUNKS: usize = 6;
+    const CHUNK_LEN: usize = 32;
+    let mut handles = Vec::new();
+    for t in 0..THREADS {
+        let coord = coord.clone();
+        let corpus = corpus.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(100 + t);
+            let id = format!("s{t}");
+            for c in 0..CHUNKS {
+                let toks = corpus.concat_stream(CHUNK_LEN, 1, &mut rng).pop().unwrap();
+                let resp = coord.submit_chunk("pool", &id, toks).unwrap().recv().unwrap();
+                assert!(resp.error.is_none(), "chunk {c}: {:?}", resp.error);
+                let scores = resp.scores.expect("chunk response carries scores");
+                assert_eq!(scores.offset, c * CHUNK_LEN);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // every submission must be accounted exactly once under contention
+    let m = coord.stream_metrics("pool").unwrap();
+    let want = THREADS * CHUNKS as u64;
+    assert_eq!(m.requests.get(), want);
+    assert_eq!(m.tokens.get(), want * CHUNK_LEN as u64);
+    assert_eq!(m.latency_histogram().count(), want);
+    assert!(m.mean_batch_size() >= 1.0);
+    assert_eq!(m.errors.get(), 0);
+    // the pool's series live on the coordinator's shared registry
+    let names = coord.registry().names();
+    assert!(names.iter().any(|n| n == "stream_pool_requests_total"), "{names:?}");
+    assert!(names.iter().any(|n| n == "persist_pool_pending_spill_bytes"), "{names:?}");
 }
 
 #[test]

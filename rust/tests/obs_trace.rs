@@ -1,0 +1,107 @@
+//! End-to-end span-tracing test: drive a budgeted [`SessionManager`]
+//! through forced spill/rehydrate churn with tracing enabled, then
+//! assert the drained spans render as a loadable Chrome-trace document
+//! whose begin/end events balance and nest on every thread, covering
+//! the whole pipeline (advance → wave → forward → spill → rehydrate).
+
+use std::sync::{Arc, Mutex};
+
+use performer::jsonx::Json;
+use performer::obs::export::{chrome_trace, validate_chrome_trace};
+use performer::obs::trace;
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::stream::{SessionConfig, SessionManager};
+use performer::train::{NativeModel, SyntheticConfig};
+
+// tracing is process-global: serialize the tests that toggle it
+static LOCK: Mutex<()> = Mutex::new(());
+
+fn tempdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("obs_trace_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn forced_churn_produces_a_balanced_loadable_trace() {
+    let _g = LOCK.lock().unwrap();
+    let mut rng = Pcg64::new(3);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let per = SessionManager::new(model.clone(), SessionConfig::default())
+        .unwrap()
+        .per_session_bytes();
+    let dir = tempdir("churn");
+    let cfg = SessionConfig {
+        // a one-session budget: every session switch spills the previous
+        // stream and rehydrates the next
+        max_state_bytes: per,
+        max_sessions: 0,
+        spill_dir: Some(dir.clone()),
+        spill_pending_limit: 0,
+    };
+
+    let _ = trace::drain(); // shed anything an earlier test left behind
+    trace::set_enabled(true);
+    {
+        let mut mgr = SessionManager::new(model, cfg).unwrap();
+        for round in 0..3 {
+            for id in ["a", "b"] {
+                let toks = corpus.concat_stream(24, 1, &mut rng).pop().unwrap();
+                mgr.advance(id, &toks).unwrap();
+            }
+            if round == 1 {
+                // settle the write-back queue mid-run so later
+                // rehydrations exercise the committed-read path, not
+                // just the pending take-back
+                mgr.sync_spills().unwrap();
+            }
+        }
+        let st = mgr.stats();
+        assert!(st.spills > 0 && st.rehydrations > 0, "churn must actually happen: {st:?}");
+        // dropping the manager joins the background writer, so its
+        // spill_write spans are closed before the drain below
+    }
+    trace::set_enabled(false);
+
+    let traces = trace::drain();
+    let doc = chrome_trace(&traces);
+    // validate the serialized form, exactly as the CI smoke will
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    let summary = validate_chrome_trace(&parsed).unwrap();
+    assert!(summary.spans > 0, "churn with tracing on must record spans");
+    assert!(summary.threads >= 2, "serving and writer threads both trace: {summary:?}");
+
+    let names: std::collections::BTreeSet<&str> =
+        traces.iter().flat_map(|t| t.events.iter().map(|e| e.name)).collect();
+    for want in [
+        "advance_batch",
+        "wave",
+        "forward_chunk_batch",
+        "layer",
+        "spill_enqueue",
+        "rehydrate",
+        "spill_write",
+    ] {
+        assert!(names.contains(want), "expected a '{want}' span; saw {names:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn disabled_tracing_stays_silent_through_the_full_pipeline() {
+    let _g = LOCK.lock().unwrap();
+    trace::set_enabled(false);
+    let mut rng = Pcg64::new(4);
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut rng));
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let _ = trace::drain();
+    let mut mgr = SessionManager::new(model, SessionConfig::default()).unwrap();
+    for _ in 0..2 {
+        let toks = corpus.concat_stream(16, 1, &mut rng).pop().unwrap();
+        mgr.advance("quiet", &toks).unwrap();
+    }
+    let events: usize = trace::drain().iter().map(|t| t.events.len()).sum();
+    assert_eq!(events, 0, "instrumentation must record nothing while disabled");
+}

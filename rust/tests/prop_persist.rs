@@ -71,6 +71,7 @@ fn prop_spill_rehydrate_is_bitwise_transparent() {
             max_state_bytes: per,
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
         };
         let mut spilling = SessionManager::new(model.clone(), cfg).unwrap();
         let mut reference = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
