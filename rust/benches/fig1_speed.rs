@@ -4,22 +4,31 @@
 //! Two measurement series per point:
 //!   * AOT/HLO — the attention-op artifacts executed through PJRT, i.e.
 //!     exactly what the production stack runs (includes the backward
-//!     pass via the *_bwd artifacts);
+//!     pass via the *_bwd artifacts); skipped cleanly when no compiled
+//!     artifacts are available (CI smoke runs);
 //!   * native — the rust FAVOR/exact implementations, isolating
 //!     algorithmic scaling from XLA overheads.
 //!
+//! Plus the dense-core microbench behind both: square matmuls with the
+//! SIMD dispatch active vs pinned to the scalar kernels, recording the
+//! speedup to `BENCH_fig1_speed.json`. The ≥2× AVX2 target is
+//! soft-gated — recorded and warned on, never hard-failed, because CI
+//! runners are too noisy for a hard wall-clock gate.
+//!
 //! The paper's claim reproduced here is the *shape*: exact is ~quadratic
 //! in L and dies early; FAVOR is ~linear and tracks the identity "OPT"
-//! ceiling. Run with `cargo bench --bench fig1_speed`.
+//! ceiling. Run with `cargo bench --bench fig1_speed`
+//! (`-- --test` or `FIG1_SMOKE=1` for the CI-fast smoke mode).
 
 use std::path::PathBuf;
 
 use performer::benchlib::{fmt_secs, loglog_slope, Bench, Report};
 use performer::favor::{exact_attention, favor_attention, Direction, FeatureKind, FeatureMap};
+use performer::jsonx::{arr, num, obj, s};
 use performer::linalg::OrfMechanism;
 use performer::rng::Pcg64;
 use performer::runtime::{Engine, HostValue};
-use performer::tensor::Mat;
+use performer::tensor::{active_level, set_level_override, Mat, SimdLevel};
 
 fn artifacts_dir() -> PathBuf {
     std::env::var("PERFORMER_ARTIFACTS")
@@ -27,18 +36,15 @@ fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-fn main() -> anyhow::Result<()> {
-    let bench = Bench { warmup: 1, samples: 5, max_total_secs: 25.0 };
-    let engine = Engine::new(artifacts_dir())?;
-
-    // --- series 1: AOT attention ops through PJRT ---------------------
+fn aot_series(bench: &Bench, engine: &Engine, ls: &[usize]) -> anyhow::Result<()> {
     let mut rep = Report::new(
         "Fig. 1 — attention op wall time via PJRT (bh=4, d_head=64, M=128)",
         &["L", "pass", "exact", "favor", "identity(OPT)"],
     );
     let mut series: std::collections::BTreeMap<(String, String), Vec<(f64, f64)>> =
         Default::default();
-    for l in [128usize, 256, 512, 1024, 2048, 4096] {
+    let mut measured = 0usize;
+    for &l in ls {
         for pass in ["fwd", "bwd"] {
             let mut cells = vec![l.to_string(), pass.to_string()];
             for mech in ["exact", "favor", "identity"] {
@@ -55,15 +61,20 @@ fn main() -> anyhow::Result<()> {
                     .iter()
                     .map(|slot| HostValue::F32(rng.gaussian_vec(slot.elements())))
                     .collect();
-                let s = bench.run(&name, || exe.run(&inputs).expect("exec"));
-                cells.push(fmt_secs(s.median()));
+                let st = bench.run(&name, || exe.run(&inputs).expect("exec"));
+                cells.push(fmt_secs(st.median()));
                 series
                     .entry((mech.into(), pass.into()))
                     .or_default()
-                    .push((l as f64, s.median()));
+                    .push((l as f64, st.median()));
+                measured += 1;
             }
             rep.row(cells);
         }
+    }
+    if measured == 0 {
+        println!("AOT series skipped: no attention artifacts compiled");
+        return Ok(());
     }
     println!("{}", rep.render());
     rep.save_csv(std::path::Path::new("results/fig1_hlo.csv"))?;
@@ -76,6 +87,27 @@ fn main() -> anyhow::Result<()> {
             println!("  {mech:>8} {pass}: {:.2}", loglog_slope(&xs, &ys));
         }
     }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke =
+        std::env::args().any(|a| a == "--test") || std::env::var("FIG1_SMOKE").is_ok();
+    let bench = if smoke {
+        Bench { warmup: 1, samples: 2, max_total_secs: 3.0 }
+    } else {
+        Bench { warmup: 1, samples: 5, max_total_secs: 25.0 }
+    };
+
+    // --- series 1: AOT attention ops through PJRT ---------------------
+    // a missing PJRT plugin / artifacts dir must not sink the native and
+    // SIMD series, which need no compiled artifacts at all
+    let aot_ls: &[usize] =
+        if smoke { &[128, 256] } else { &[128, 256, 512, 1024, 2048, 4096] };
+    match Engine::new(artifacts_dir()) {
+        Ok(engine) => aot_series(&bench, &engine, aot_ls)?,
+        Err(e) => println!("AOT series skipped (engine unavailable: {e:#})"),
+    }
 
     // --- series 2: native implementations ------------------------------
     let d = 64;
@@ -85,10 +117,11 @@ fn main() -> anyhow::Result<()> {
         "Fig. 1 (native series) — rust implementations, bidirectional",
         &["L", "exact", "favor", "ratio"],
     );
+    let native_ls: &[usize] = if smoke { &[128, 256] } else { &[128, 256, 512, 1024, 2048] };
     let mut ls = Vec::new();
     let mut favor_t = Vec::new();
     let mut exact_t = Vec::new();
-    for l in [128usize, 256, 512, 1024, 2048] {
+    for &l in native_ls {
         let q = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
         let k = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
         let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
@@ -115,5 +148,85 @@ fn main() -> anyhow::Result<()> {
         loglog_slope(&ls, &favor_t)
     );
     rep2.save_csv(std::path::Path::new("results/fig1_native.csv"))?;
+
+    // --- series 3: dense-core SIMD microbench --------------------------
+    // square matmuls, dispatch active vs pinned to the scalar kernels.
+    // The speedup is the SIMD-on vs SIMD-off delta the BENCH JSON tracks;
+    // the ≥2× AVX2 target is soft-gated (warned, never failed) because
+    // shared runners are too noisy for a hard wall-clock assert
+    let level = active_level();
+    let mut rep3 = Report::new(
+        &format!("Dense-core matmul — SIMD dispatch ({}) vs scalar kernels", level.name()),
+        &["N", "scalar", "simd", "speedup"],
+    );
+    let simd_ns: &[usize] = if smoke { &[256] } else { &[256, 512] };
+    let mut simd_points = Vec::new();
+    for &n in simd_ns {
+        let a = Mat::from_vec(n, n, rng.gaussian_vec(n * n));
+        let b = Mat::from_vec(n, n, rng.gaussian_vec(n * n));
+        let effective = set_level_override(Some(SimdLevel::Scalar));
+        assert_eq!(effective, SimdLevel::Scalar, "scalar pin must always hold");
+        let s_scalar = bench.run(&format!("matmul_{n}_scalar"), || a.matmul(&b));
+        set_level_override(None);
+        let s_simd = bench.run(&format!("matmul_{n}_{}", level.name()), || a.matmul(&b));
+        let speedup = s_scalar.median() / s_simd.median();
+        rep3.row(vec![
+            n.to_string(),
+            fmt_secs(s_scalar.median()),
+            fmt_secs(s_simd.median()),
+            format!("{speedup:.2}x"),
+        ]);
+        simd_points.push((n, s_scalar.median(), s_simd.median(), speedup));
+    }
+    println!("{}", rep3.render());
+    let worst = simd_points.iter().map(|p| p.3).fold(f64::INFINITY, f64::min);
+    if level == SimdLevel::Scalar {
+        println!("SIMD dispatch inactive (scalar build or override): speedup ~1x expected");
+    } else if worst < 2.0 {
+        println!(
+            "WARN: SIMD matmul speedup {worst:.2}x under the 2x target at level {} \
+             (recorded, soft-gated)",
+            level.name()
+        );
+    } else {
+        println!("PASS: SIMD matmul clears the 2x target ({worst:.2}x at level {})", level.name());
+    }
+
+    // perf-trajectory artifact: native scaling + SIMD on/off deltas
+    let json = obj(vec![
+        ("bench", s("fig1_speed")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("simd_level", s(level.name())),
+        (
+            "native",
+            arr(ls.iter().zip(exact_t.iter().zip(&favor_t)).map(|(&l, (&e, &f))| {
+                obj(vec![
+                    ("l", num(l)),
+                    ("exact_secs", num(e)),
+                    ("favor_secs", num(f)),
+                ])
+            })),
+        ),
+        (
+            "native_exponents",
+            obj(vec![
+                ("exact", num(loglog_slope(&ls, &exact_t))),
+                ("favor", num(loglog_slope(&ls, &favor_t))),
+            ]),
+        ),
+        (
+            "simd_matmul",
+            arr(simd_points.iter().map(|&(n, sc, si, sp)| {
+                obj(vec![
+                    ("n", num(n as f64)),
+                    ("scalar_secs", num(sc)),
+                    ("simd_secs", num(si)),
+                    ("speedup", num(sp)),
+                ])
+            })),
+        ),
+    ]);
+    std::fs::write("BENCH_fig1_speed.json", json.to_string() + "\n")?;
+    println!("wrote BENCH_fig1_speed.json");
     Ok(())
 }

@@ -100,6 +100,7 @@ fn main() -> anyhow::Result<()> {
         max_sessions: 0,
         spill_dir: Some(dir.join("spill")),
         spill_pending_limit: 0,
+        ..Default::default()
     };
     let mut mgr = SessionManager::new(model.clone(), cfg)?;
     let mut reference = SessionManager::new(model.clone(), SessionConfig::default())?;

@@ -27,7 +27,7 @@ use performer::jsonx::{arr, num, obj, s};
 use performer::protein::{Corpus, CorpusConfig};
 use performer::rng::Pcg64;
 use performer::stream::{chunked_latency_point, fused_throughput_point, sweep_totals};
-use performer::tensor::matmul_threads;
+use performer::tensor::{active_level, matmul_threads, set_level_override, SimdLevel};
 use performer::train::{NativeModel, SyntheticConfig};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -154,6 +154,22 @@ fn main() -> anyhow::Result<()> {
         on.fused_tokens_per_sec()
     );
 
+    // ---- SIMD on/off: the same fused advance, dispatch vs scalar pin ----
+    // records what the dense-core kernels buy the end-to-end stream path;
+    // recorded, not asserted — the per-size gate lives in fig1_speed
+    let level = active_level();
+    set_level_override(Some(SimdLevel::Scalar));
+    let scalar_run = fused_throughput_point(&model, &corpus, ob, fused_chunk, n_chunks, &mut rng)?;
+    set_level_override(None);
+    let simd_run = fused_throughput_point(&model, &corpus, ob, fused_chunk, n_chunks, &mut rng)?;
+    let simd_speedup = simd_run.fused_tokens_per_sec() / scalar_run.fused_tokens_per_sec();
+    println!(
+        "simd dispatch at B={ob}: scalar {:.0} tok/s, {} {:.0} tok/s ({simd_speedup:.2}x)",
+        scalar_run.fused_tokens_per_sec(),
+        level.name(),
+        simd_run.fused_tokens_per_sec()
+    );
+
     // perf-trajectory artifact: tokens/sec sequential vs fused per B
     let json = obj(vec![
         ("bench", s("stream_batched")),
@@ -183,6 +199,18 @@ fn main() -> anyhow::Result<()> {
                 ("enabled_tokens_per_sec", num(on.fused_tokens_per_sec())),
                 ("overhead_pct", num(overhead_pct)),
                 ("spans_recorded", num(traced_spans as f64)),
+            ]),
+        ),
+        // SIMD-on vs SIMD-off fused throughput at the largest batch size;
+        // recorded, not asserted (see fig1_speed for the microbench gate)
+        (
+            "simd",
+            obj(vec![
+                ("level", s(level.name())),
+                ("sessions", num(ob as f64)),
+                ("scalar_tokens_per_sec", num(scalar_run.fused_tokens_per_sec())),
+                ("simd_tokens_per_sec", num(simd_run.fused_tokens_per_sec())),
+                ("speedup", num(simd_speedup)),
             ]),
         ),
     ]);

@@ -1010,6 +1010,7 @@ fn stream_persist() -> Result<()> {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(kmodel.clone(), cfg)?;
         let mut reference = SessionManager::new(kmodel.clone(), SessionConfig::default())?;

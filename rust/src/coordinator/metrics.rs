@@ -108,6 +108,12 @@ impl Metrics {
 /// complete.
 #[derive(Default)]
 pub struct PersistMetrics {
+    /// total resident carried-state bytes across the pool's sessions
+    pub resident_bytes: Gauge,
+    /// steady-state resident bytes one session costs under the pool's
+    /// configured state precision — bf16 mode reads ~2× lower than f32,
+    /// which is the whole point of the reduced-precision state
+    pub per_session_bytes: Gauge,
     /// sessions currently demoted to the spill tier (in flight + on disk)
     pub spilled_sessions: Gauge,
     /// cumulative demote-to-spill events (enqueues)
@@ -153,6 +159,8 @@ impl PersistMetrics {
     pub fn registered(reg: &MetricsRegistry, prefix: &str) -> PersistMetrics {
         let g = |name: &str| reg.gauge(&format!("{prefix}_{name}"));
         PersistMetrics {
+            resident_bytes: g("resident_bytes"),
+            per_session_bytes: g("per_session_bytes"),
             spilled_sessions: g("spilled_sessions"),
             spills: g("spills_total"),
             rehydrations: g("rehydrations_total"),
@@ -175,6 +183,8 @@ impl PersistMetrics {
 
     /// Mirror the manager's counters (gauge semantics: last write wins).
     pub fn record(&self, st: &SessionStats) {
+        self.resident_bytes.set(st.resident_bytes as u64);
+        self.per_session_bytes.set(st.per_session_bytes as u64);
         self.spilled_sessions.set(st.spilled as u64);
         self.spills.set(st.spills);
         self.rehydrations.set(st.rehydrations);
@@ -225,10 +235,13 @@ impl PersistMetrics {
     /// One-line human-readable summary for logs.
     pub fn summary(&self) -> String {
         format!(
-            "spilled={} spills={} pending={} pending_bytes={} sheds={} commits={} \
+            "resident_bytes={} per_session_bytes={} spilled={} spills={} pending={} \
+             pending_bytes={} sheds={} commits={} \
              cancels={} rehydrations={} checkpoint_bytes={} mean_enqueue={:?} \
              mean_write={:?} mean_rehydrate={:?} epoch_crossings={} state_resets={} \
              delta_written={} delta_retained={}",
+            self.resident_bytes.get(),
+            self.per_session_bytes.get(),
             self.spilled_sessions.get(),
             self.spills.get(),
             self.pending_spills.get(),
@@ -317,6 +330,8 @@ mod tests {
         assert_eq!(p.mean_spill_enqueue_latency(), Duration::ZERO);
         assert_eq!(p.mean_spill_write_latency(), Duration::ZERO);
         let st = SessionStats {
+            resident_bytes: 4096,
+            per_session_bytes: 2048,
             spilled: 3,
             spills: 7,
             rehydrations: 4,
@@ -345,5 +360,9 @@ mod tests {
         assert!(s.contains("pending=2") && s.contains("commits=5"), "{s}");
         assert!(s.contains("pending_bytes=1234") && s.contains("sheds=1"), "{s}");
         assert!(s.contains("epoch_crossings=6") && s.contains("delta_retained=9"), "{s}");
+        assert!(
+            s.contains("resident_bytes=4096") && s.contains("per_session_bytes=2048"),
+            "{s}"
+        );
     }
 }

@@ -24,7 +24,7 @@
 
 use crate::linalg::{projection_matrix, OrfMechanism};
 use crate::rng::Pcg64;
-use crate::tensor::{matmul_block, Mat};
+use crate::tensor::{matmul_block, simd, Mat};
 
 /// `exp` generalized-attention clamp: exp(30) ≈ 1.1e13 preserves the
 /// ordering of any plausible projection while keeping feature products
@@ -242,18 +242,42 @@ impl FeatureMap {
             FeatureKind::Positive => {
                 let scale = 1.0 / (m as f32).sqrt();
                 let r = 2.0 * (self.d as f32).sqrt();
+                // one vectorized-exp dispatch level for the whole pass,
+                // so apply and apply_block stay bitwise-identical
+                let level = simd::active_level();
                 for i in 0..z.rows {
                     let xr = &x.row(row_lo + i)[col_lo..col_lo + self.d];
                     let norm_sq: f32 = xr.iter().map(|v| v * v).sum();
                     let diag = norm_sq / r; // = ‖x̃‖²/2
-                    for j in 0..m {
-                        // row-local max-stabilizer max(0, t − EXP_CLAMP):
-                        // inactive on typical exponents (unbiased
-                        // estimator), caps adversarial ones so the
-                        // features can never overflow
-                        let t = (z.at(i, j) - diag).min(EXP_CLAMP);
-                        *z.at_mut(i, j) = scale * t.exp() + self.kernel_eps;
-                    }
+                    // per row: scale · exp(min(z − diag, EXP_CLAMP)) + ε.
+                    // The row-local max-stabilizer min(·, EXP_CLAMP) is
+                    // inactive on typical exponents (unbiased estimator),
+                    // caps adversarial ones so the features can never
+                    // overflow — fused into the vectorized exp kernel.
+                    simd::fused_exp_scale_at(
+                        level,
+                        z.row_mut(i),
+                        diag,
+                        EXP_CLAMP,
+                        scale,
+                        self.kernel_eps,
+                    );
+                }
+            }
+            FeatureKind::Exp => {
+                // exp(min(t, EXP_CLAMP)) with no diag term: the same
+                // fused vectorized kernel with sub = 0
+                let scale = 1.0 / (m as f32).sqrt();
+                let level = simd::active_level();
+                for i in 0..z.rows {
+                    simd::fused_exp_scale_at(
+                        level,
+                        z.row_mut(i),
+                        0.0,
+                        EXP_CLAMP,
+                        scale,
+                        self.kernel_eps,
+                    );
                 }
             }
             kind => {

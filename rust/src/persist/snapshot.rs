@@ -27,7 +27,7 @@ use anyhow::{bail, Context, Result};
 use crate::favor::KernelConfig;
 use crate::jsonx::{num, obj, s, Json};
 use crate::runtime::TensorFile;
-use crate::stream::{ChunkScorer, StreamState};
+use crate::stream::{ChunkScorer, StatePrecision, StreamState};
 use crate::tensor::Mat;
 use crate::train::{NativeAttention, NativeModel};
 
@@ -37,7 +37,12 @@ const MAGIC: &[u8; 8] = b"PFRMSNAP";
 /// readers reject other versions loudly instead of guessing.
 /// v2: per-layer kernel configs replace the single `m` field, and every
 /// carried state records its redraw epoch.
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// v3: the fingerprint embeds the state storage precision; bf16 states
+/// serialize their raw bf16 words (`qstate:{l}:{h}`, two words packed
+/// per f32 bit pattern) plus per-state requantize scales, so a
+/// quantized snapshot costs half the payload of an f32 one and f32/bf16
+/// snapshots refuse each other.
+pub const SNAPSHOT_VERSION: u32 = 3;
 
 /// IEEE CRC32 (reflected, init/xorout 0xFFFFFFFF) — bitwise variant;
 /// snapshots are tens of kilobytes, so a lookup table buys nothing.
@@ -77,11 +82,18 @@ pub struct ModelFingerprint {
     pub kernels: Vec<KernelConfig>,
     /// [`NativeModel::weights_digest`] over every parameter byte
     pub weights: u64,
+    /// storage precision the carried states were captured under —
+    /// embedded here so f32 and bf16 snapshots can never be confused
+    /// (the adopting [`crate::stream::SessionManager`] additionally
+    /// refuses a precision that differs from its configured mode)
+    pub precision: StatePrecision,
 }
 
 impl ModelFingerprint {
-    /// Fingerprint a streamable model. Errors on non-FAVOR attention —
-    /// such a model has no carried state to snapshot in the first place.
+    /// Fingerprint a streamable model (at the default f32 state
+    /// precision — see [`Self::precision`]). Errors on non-FAVOR
+    /// attention — such a model has no carried state to snapshot in the
+    /// first place.
     pub fn of(model: &NativeModel) -> Result<ModelFingerprint> {
         let NativeAttention::Favor(kernels) = &model.attention else {
             bail!("only FAVOR models carry snapshottable stream state");
@@ -93,6 +105,7 @@ impl ModelFingerprint {
             vocab: model.vocab_size,
             kernels: kernels.iter().map(|k| k.config().clone()).collect(),
             weights: model.weights_digest(),
+            precision: StatePrecision::F32,
         })
     }
 
@@ -106,6 +119,7 @@ impl ModelFingerprint {
             // hex string: a u64 digest does not fit losslessly in a
             // JSON f64 number
             ("weights", s(&format!("{:016x}", self.weights))),
+            ("precision", s(self.precision.name())),
         ])
     }
 
@@ -120,6 +134,9 @@ impl ModelFingerprint {
         if kernels.len() != layers {
             bail!("fingerprint lists {} kernel(s) for {layers} layer(s)", kernels.len());
         }
+        let precision_name = j.req("precision")?.as_str()?;
+        let precision = StatePrecision::parse(precision_name)
+            .ok_or_else(|| anyhow::anyhow!("unknown state precision '{precision_name}'"))?;
         Ok(ModelFingerprint {
             layers,
             heads: j.req("heads")?.as_usize()?,
@@ -128,6 +145,7 @@ impl ModelFingerprint {
             kernels,
             weights: u64::from_str_radix(j.req("weights")?.as_str()?, 16)
                 .context("fingerprint weight digest is not hex")?,
+            precision,
         })
     }
 }
@@ -149,22 +167,35 @@ pub struct SessionSnapshot {
 }
 
 impl SessionSnapshot {
-    /// Capture a live scorer's carried state.
+    /// Capture a live scorer's carried state (at the scorer's own
+    /// storage precision — the fingerprint records which).
     pub fn capture(session: &str, scorer: &ChunkScorer) -> Result<SessionSnapshot> {
+        let mut fingerprint = ModelFingerprint::of(scorer.model())?;
+        fingerprint.precision = scorer.precision();
         Ok(SessionSnapshot {
             session: session.to_string(),
             pos: scorer.tokens_seen(),
             prev_row: scorer.prev_row().map(<[f32]>::to_vec),
-            fingerprint: ModelFingerprint::of(scorer.model())?,
+            fingerprint,
             states: scorer.states().to_vec(),
         })
     }
 
+    /// The storage precision the snapshot's states were captured under.
+    pub fn precision(&self) -> StatePrecision {
+        self.fingerprint.precision
+    }
+
     /// Rehydrate into a scorer over `model`, refusing a geometry
     /// mismatch — restoring state into the wrong model would stream
-    /// plausible-looking garbage.
+    /// plausible-looking garbage. The scorer resumes at the snapshot's
+    /// own storage precision; whether that precision is *acceptable* is
+    /// the adopting manager's policy ([`crate::stream::SessionConfig`]).
     pub fn into_scorer(self, model: Arc<NativeModel>) -> Result<ChunkScorer> {
-        let target = ModelFingerprint::of(&model)?;
+        let mut target = ModelFingerprint::of(&model)?;
+        // precision is a property of the captured session, not of the
+        // model: align it so the comparison below checks model identity
+        target.precision = self.fingerprint.precision;
         if target != self.fingerprint {
             bail!(
                 "snapshot for session '{}' was captured from {:?}, target model is {:?}",
@@ -182,29 +213,60 @@ impl SessionSnapshot {
         let mut tensors = TensorFile::default();
         let mut tokens_seen = Vec::new();
         let mut epochs = Vec::new();
+        let mut scale_bits = Vec::new();
         for (li, layer) in self.states.iter().enumerate() {
             for (hi, st) in layer.iter().enumerate() {
                 tokens_seen.push(num(st.tokens_seen() as f64));
                 epochs.push(num(st.epoch() as f64));
-                tensors.entries.push((
-                    format!("state:{li}:{hi}"),
-                    vec![st.matrix().rows, st.matrix().cols],
-                    st.matrix().data.clone(),
-                ));
+                match st.precision() {
+                    StatePrecision::F32 => {
+                        let dense = st.dense();
+                        tensors.entries.push((
+                            format!("state:{li}:{hi}"),
+                            vec![dense.rows, dense.cols],
+                            dense.data,
+                        ));
+                    }
+                    StatePrecision::Bf16 => {
+                        // half-size payload: two raw bf16 words packed
+                        // per f32 bit pattern (the tensor container is
+                        // bit-preserving, never arithmetic). The
+                        // requantize scale rides in the header as exact
+                        // f32 bits
+                        scale_bits.push(num(st.scale().to_bits() as f64));
+                        let words = st.quant_state();
+                        let packed: Vec<f32> = words
+                            .chunks(2)
+                            .map(|pair| {
+                                let lo = pair[0] as u32;
+                                let hi = pair.get(1).map_or(0u32, |&w| w as u32);
+                                f32::from_bits(lo | (hi << 16))
+                            })
+                            .collect();
+                        tensors.entries.push((
+                            format!("qstate:{li}:{hi}"),
+                            vec![packed.len()],
+                            packed,
+                        ));
+                    }
+                }
             }
         }
         if let Some(row) = &self.prev_row {
             tensors.entries.push(("prev_row".to_string(), vec![row.len()], row.clone()));
         }
-        let header = obj(vec![
+        let mut header_fields = vec![
             ("session", s(&self.session)),
             ("pos", num(self.pos as f64)),
             ("has_prev_row", Json::Bool(self.prev_row.is_some())),
             ("fingerprint", self.fingerprint.to_json()),
             ("tokens_seen", Json::Arr(tokens_seen)),
             ("epochs", Json::Arr(epochs)),
-        ])
-        .to_string();
+        ];
+        if self.fingerprint.precision == StatePrecision::Bf16 {
+            header_fields.push(("scale_bits", Json::Arr(scale_bits)));
+        }
+        let header = obj(header_fields).to_string();
         let payload = tensors.to_bytes();
 
         let mut out = Vec::with_capacity(28 + header.len() + payload.len());
@@ -278,6 +340,11 @@ impl SessionSnapshot {
         };
         let tokens_seen = counts_of("tokens_seen")?;
         let epochs = counts_of("epochs")?;
+        let scale_bits = if fingerprint.precision == StatePrecision::Bf16 {
+            counts_of("scale_bits")?
+        } else {
+            Vec::new()
+        };
 
         let tensors = TensorFile::from_bytes(&bytes[header_end + 8..payload_end])
             .context("snapshot tensor payload")?;
@@ -288,20 +355,58 @@ impl SessionSnapshot {
             let m = fingerprint.kernels[li].m;
             let mut layer = Vec::with_capacity(fingerprint.heads);
             for hi in 0..fingerprint.heads {
-                let name = format!("state:{li}:{hi}");
-                let (shape, data) = tensors
-                    .get(&name)
-                    .ok_or_else(|| anyhow::anyhow!("snapshot is missing tensor {name}"))?;
-                if shape != [m, dh + 1].as_slice() {
-                    bail!("tensor {name} has shape {shape:?}, expected [{m}, {}]", dh + 1);
+                let flat = li * fingerprint.heads + hi;
+                match fingerprint.precision {
+                    StatePrecision::F32 => {
+                        let name = format!("state:{li}:{hi}");
+                        let (shape, data) = tensors
+                            .get(&name)
+                            .ok_or_else(|| anyhow::anyhow!("snapshot is missing tensor {name}"))?;
+                        if shape != [m, dh + 1].as_slice() {
+                            bail!(
+                                "tensor {name} has shape {shape:?}, expected [{m}, {}]",
+                                dh + 1
+                            );
+                        }
+                        layer.push(StreamState::from_parts(
+                            m,
+                            dh,
+                            Mat::from_vec(m, dh + 1, data.to_vec()),
+                            tokens_seen[flat],
+                            epochs[flat],
+                        ));
+                    }
+                    StatePrecision::Bf16 => {
+                        let name = format!("qstate:{li}:{hi}");
+                        let (shape, data) = tensors
+                            .get(&name)
+                            .ok_or_else(|| anyhow::anyhow!("snapshot is missing tensor {name}"))?;
+                        let len = m * (dh + 1);
+                        let packed_len = len.div_ceil(2);
+                        if shape != [packed_len].as_slice() {
+                            bail!("tensor {name} has shape {shape:?}, expected [{packed_len}]");
+                        }
+                        let mut words = Vec::with_capacity(len);
+                        for &v in data {
+                            let bits = v.to_bits();
+                            words.push((bits & 0xffff) as u16);
+                            if words.len() < len {
+                                words.push((bits >> 16) as u16);
+                            }
+                        }
+                        if words.len() != len {
+                            bail!("tensor {name} unpacked {} words, expected {len}", words.len());
+                        }
+                        layer.push(StreamState::from_quant_parts(
+                            m,
+                            dh,
+                            words,
+                            f32::from_bits(scale_bits[flat] as u32),
+                            tokens_seen[flat],
+                            epochs[flat],
+                        ));
+                    }
                 }
-                layer.push(StreamState::from_parts(
-                    m,
-                    dh,
-                    Mat::from_vec(m, dh + 1, data.to_vec()),
-                    tokens_seen[li * fingerprint.heads + hi],
-                    epochs[li * fingerprint.heads + hi],
-                ));
             }
             states.push(layer);
         }
@@ -371,6 +476,55 @@ mod tests {
             b.logprob.iter().map(|v| v.to_bits()).collect(),
         );
         assert_eq!(abits, bbits, "restored session diverged from the original");
+    }
+
+    #[test]
+    fn bf16_roundtrip_resumes_bit_for_bit_with_half_the_state_payload() {
+        let m = model(41);
+        let mut f32_scorer = ChunkScorer::new(m.clone()).unwrap();
+        let mut original =
+            ChunkScorer::new_with_precision(m.clone(), StatePrecision::Bf16).unwrap();
+        f32_scorer.advance(&tokens(37, 42)).unwrap();
+        original.advance(&tokens(37, 42)).unwrap();
+
+        let f32_bytes = SessionSnapshot::capture("q", &f32_scorer).unwrap().to_bytes();
+        let snap = SessionSnapshot::capture("q", &original).unwrap();
+        assert_eq!(snap.precision(), StatePrecision::Bf16);
+        let bytes = snap.to_bytes();
+        // the quantized payload halves the state tensors (header and
+        // context row are shared overhead)
+        let state_f32 = f32_scorer.state_bytes();
+        assert!(
+            f32_bytes.len() - bytes.len() >= state_f32 / 2 - 64,
+            "bf16 snapshot saves {} of {state_f32} state bytes",
+            f32_bytes.len() - bytes.len()
+        );
+
+        let mut restored = SessionSnapshot::from_bytes(&bytes)
+            .unwrap()
+            .into_scorer(m)
+            .unwrap();
+        assert_eq!(restored.precision(), StatePrecision::Bf16);
+        let next = tokens(23, 43);
+        let a = original.advance(&next).unwrap();
+        let b = restored.advance(&next).unwrap();
+        let (abits, bbits): (Vec<u32>, Vec<u32>) = (
+            a.logprob.iter().map(|v| v.to_bits()).collect(),
+            b.logprob.iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(abits, bbits, "restored bf16 session diverged from the original");
+    }
+
+    #[test]
+    fn fingerprint_embeds_the_precision_mode() {
+        let m = model(44);
+        let f = ChunkScorer::new(m.clone()).unwrap();
+        let q = ChunkScorer::new_with_precision(m, StatePrecision::Bf16).unwrap();
+        let fp_f = SessionSnapshot::capture("a", &f).unwrap().fingerprint;
+        let fp_q = SessionSnapshot::capture("a", &q).unwrap().fingerprint;
+        assert_ne!(fp_f, fp_q, "precision must distinguish otherwise-equal fingerprints");
+        assert_eq!(fp_f.precision, StatePrecision::F32);
+        assert_eq!(fp_q.precision, StatePrecision::Bf16);
     }
 
     #[test]

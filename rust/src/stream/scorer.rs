@@ -18,7 +18,7 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::protein::vocab::{AA_BASE, N_AA};
-use crate::stream::StreamState;
+use crate::stream::{StatePrecision, StreamState};
 use crate::tensor::Mat;
 use crate::train::NativeModel;
 
@@ -73,11 +73,37 @@ pub struct ChunkScorer {
 }
 
 impl ChunkScorer {
-    /// Start a stream over the given model. Errors unless the model is
-    /// streamable (unidirectional + FAVOR).
+    /// Start an f32 stream over the given model. Errors unless the model
+    /// is streamable (unidirectional + FAVOR).
     pub fn new(model: Arc<NativeModel>) -> Result<ChunkScorer> {
-        let states = model.make_stream_states()?;
+        ChunkScorer::new_with_precision(model, StatePrecision::F32)
+    }
+
+    /// Start a stream whose carried prefix sums use the given storage
+    /// precision ([`StatePrecision::Bf16`] halves the resident state).
+    pub fn new_with_precision(
+        model: Arc<NativeModel>,
+        precision: StatePrecision,
+    ) -> Result<ChunkScorer> {
+        let mut states = model.make_stream_states()?;
+        if precision != StatePrecision::F32 {
+            for layer in &mut states {
+                for st in layer.iter_mut() {
+                    *st = StreamState::with_precision(st.m(), st.d(), precision);
+                }
+            }
+        }
         Ok(ChunkScorer { model, states, prev_row: None, pos: 0 })
+    }
+
+    /// Storage precision of the carried states (they are uniform — mixed
+    /// precisions are rejected at construction).
+    pub fn precision(&self) -> StatePrecision {
+        self.states
+            .first()
+            .and_then(|layer| layer.first())
+            .map(StreamState::precision)
+            .unwrap_or_default()
     }
 
     /// The shared model this stream scores against.
@@ -144,6 +170,22 @@ impl ChunkScorer {
                 }
             }
         }
+        // the states must share one storage precision: a stream is
+        // either f32 or bf16, never a mixture
+        let precisions: Vec<StatePrecision> = states
+            .iter()
+            .flat_map(|layer| layer.iter())
+            .map(StreamState::precision)
+            .collect();
+        if let Some(&first) = precisions.first() {
+            if let Some(odd) = precisions.iter().find(|&&p| p != first) {
+                bail!(
+                    "snapshot mixes state precisions ({} and {})",
+                    first.name(),
+                    odd.name()
+                );
+            }
+        }
         if let Some(row) = &prev_row {
             if row.len() != model.vocab_size {
                 bail!(
@@ -165,7 +207,8 @@ impl ChunkScorer {
     }
 
     /// Resident bytes of the carried attention state — constant in the
-    /// streamed length (layers × heads × M × (d_h + 1) f32s).
+    /// streamed length (layers × heads × M × (d_h + 1) entries, 4 bytes
+    /// each under f32, 2 under bf16).
     pub fn state_bytes(&self) -> usize {
         self.states
             .iter()
@@ -383,6 +426,30 @@ mod tests {
             assert_eq!(scorer.state_bytes(), b0);
         }
         assert_eq!(scorer.tokens_seen(), 8 * 64);
+    }
+
+    #[test]
+    fn bf16_scorer_halves_state_and_tracks_f32_scores() {
+        let m = model();
+        let toks = tokens(80, 21);
+        let mut exact = ChunkScorer::new(m.clone()).unwrap();
+        let mut quant = ChunkScorer::new_with_precision(m, StatePrecision::Bf16).unwrap();
+        assert_eq!(exact.precision(), StatePrecision::F32);
+        assert_eq!(quant.precision(), StatePrecision::Bf16);
+        assert_eq!(quant.state_bytes() * 2, exact.state_bytes());
+
+        let mut worst = 0.0f32;
+        for chunk in toks.chunks(17) {
+            let se = exact.advance(chunk).unwrap();
+            let sq = quant.advance(chunk).unwrap();
+            for (a, b) in se.logprob.iter().zip(&sq.logprob) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        // documented envelope: per-token logprobs within 0.5 nats,
+        // typically far closer (see tests/prop_quant.rs for the
+        // cross-chunking/redraw/spill sweep)
+        assert!(worst < 0.5, "bf16 logprobs drifted {worst} nats from f32");
     }
 
     #[test]

@@ -29,6 +29,7 @@ use crate::persist::{Checkpointer, SpillTier};
 use crate::train::NativeModel;
 
 use super::scorer::{ChunkScorer, ChunkScores};
+use super::state::StatePrecision;
 
 /// Budget knobs for a [`SessionManager`].
 #[derive(Clone, Debug)]
@@ -51,17 +52,24 @@ pub struct SessionConfig {
     /// the eviction degrades to the loud context-destroying kind — the
     /// bounded-memory contract a slow disk must not be able to break
     pub spill_pending_limit: usize,
+    /// storage precision of every session's carried prefix sums;
+    /// [`StatePrecision::Bf16`] halves per-session residency (so ~2×
+    /// the sessions fit one byte budget) at a documented per-token
+    /// score tolerance. Snapshots embed the mode: a manager refuses to
+    /// adopt sessions captured under the other precision
+    pub precision: StatePrecision,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
         // 64 MiB of stream state, no session-count cap, no spill tier,
-        // unbounded write-back staging
+        // unbounded write-back staging, full-precision f32 state
         SessionConfig {
             max_state_bytes: 64 << 20,
             max_sessions: 0,
             spill_dir: None,
             spill_pending_limit: 0,
+            precision: StatePrecision::F32,
         }
     }
 }
@@ -78,6 +86,10 @@ pub struct SessionStats {
     pub active: usize,
     /// total resident carried-state bytes
     pub resident_bytes: usize,
+    /// steady-state resident bytes one session costs under the
+    /// configured [`SessionConfig::precision`] (bf16 halves the
+    /// attention-state share) — the budget's per-session charge
+    pub per_session_bytes: usize,
     /// sessions opened since startup
     pub opened: u64,
     /// sessions explicitly closed
@@ -214,8 +226,10 @@ impl SessionManager {
         // budget the *steady-state* residency (prefix sums + the carried
         // vocab-sized context row), which every live session reaches
         // after its first chunk — charging only the attention state
-        // undercounted by vocab×4 bytes per session
-        let probe = ChunkScorer::new(model.clone())?;
+        // undercounted by vocab×4 bytes per session. The probe uses the
+        // configured precision, so bf16 halves the per-session charge
+        // and the same byte budget admits ~2× the sessions
+        let probe = ChunkScorer::new_with_precision(model.clone(), cfg.precision)?;
         let per_session_bytes = probe.steady_state_bytes();
         let spill = match &cfg.spill_dir {
             Some(dir) => {
@@ -293,6 +307,7 @@ impl SessionManager {
         SessionStats {
             active: self.sessions.len(),
             resident_bytes: self.resident_bytes(),
+            per_session_bytes: self.per_session_bytes,
             opened: self.opened,
             closed: self.closed,
             evicted: self.evicted,
@@ -405,7 +420,8 @@ impl SessionManager {
                     )));
                     continue;
                 } else {
-                    match ChunkScorer::new(self.model.clone()) {
+                    match ChunkScorer::new_with_precision(self.model.clone(), self.cfg.precision)
+                    {
                         Ok(scorer) => {
                             self.sessions.insert(
                                 id.to_string(),
@@ -575,6 +591,13 @@ impl SessionManager {
                 .load_committed(id, &self.model)
                 .with_context(|| format!("rehydrating session '{id}'"))?,
         };
+        if scorer.precision() != self.cfg.precision {
+            bail!(
+                "spilled session '{id}' was captured with {} state, manager runs {}",
+                scorer.precision().name(),
+                self.cfg.precision.name()
+            );
+        }
         self.clock += 1;
         self.sessions.insert(
             id.to_string(),
@@ -796,7 +819,18 @@ impl SessionManager {
         }
         let mut adopted = Vec::with_capacity(ids.len());
         for id in &ids {
-            adopted.push((id.clone(), ck.load(id, &self.model)?));
+            let scorer = ck.load(id, &self.model)?;
+            if scorer.precision() != self.cfg.precision {
+                // f32 and bf16 snapshots refuse each other: an adopted
+                // stream must carry exactly the state representation the
+                // manager budgets and spills
+                bail!(
+                    "cannot restore '{id}': snapshot carries {} state, manager runs {}",
+                    scorer.precision().name(),
+                    self.cfg.precision.name()
+                );
+            }
+            adopted.push((id.clone(), scorer));
         }
         let n = adopted.len();
         for (id, scorer) in adopted {
@@ -945,6 +979,7 @@ mod tests {
             max_sessions: 2,
             spill_dir: None,
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(model(), cfg).unwrap();
         for (i, id) in ["a", "b", "c", "d"].iter().enumerate() {
@@ -1095,6 +1130,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
         let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
@@ -1136,6 +1172,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m.clone(), cfg).unwrap();
         let mut ref_mgr = SessionManager::new(m, SessionConfig::default()).unwrap();
@@ -1184,6 +1221,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(24, 190)).unwrap();
@@ -1216,6 +1254,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 90)).unwrap();
@@ -1246,6 +1285,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 2 * per,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         // hold the writer: parked snapshots accumulate instead of draining
@@ -1290,6 +1330,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 83)).unwrap();
@@ -1315,6 +1356,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 86)).unwrap();
@@ -1356,6 +1398,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(spill_dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut donor = SessionManager::new(m.clone(), cfg).unwrap();
         let (ca, cb) = (chunk(20, 90), chunk(20, 91));
@@ -1467,6 +1510,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(spill.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut mgr = SessionManager::new(m, cfg).unwrap();
         mgr.advance("a", &chunk(16, 150)).unwrap();
@@ -1518,6 +1562,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut first = SessionManager::new(m.clone(), cfg.clone()).unwrap();
         first.advance("a", &chunk(16, 102)).unwrap();
@@ -1560,6 +1605,7 @@ mod tests {
             max_sessions: 0,
             spill_dir: Some(spill.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut replica = SessionManager::new(m, cfg).unwrap();
         assert_eq!(replica.restore_from(&dir).unwrap(), 3);

@@ -13,17 +13,93 @@ use crate::favor::features::FeatureMap;
 use crate::favor::linear::STABILIZER;
 use crate::tensor::{axpy, Mat};
 
+/// Storage precision of a [`StreamState`]'s resident prefix sums.
+///
+/// `F32` keeps the running G^PS matrix in full f32 — bitwise identical
+/// to the historical behavior. `Bf16` stores it as bfloat16 (top 16
+/// bits of the f32, round-to-nearest-even), halving resident bytes per
+/// session; every chunk *accumulates* in f32 (the state is dequantized
+/// into an f32 scratch, advanced with the exact recurrence, and
+/// requantized once at the chunk boundary), so the only precision loss
+/// is one bf16 rounding of the sums per chunk. bf16 shares f32's 8-bit
+/// exponent, so no value-range rescaling is needed; the per-state
+/// `scale` records the max-abs magnitude at the last requantize for
+/// observability and snapshot integrity checks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StatePrecision {
+    /// Full-precision f32 prefix sums (default; historical behavior).
+    #[default]
+    F32,
+    /// bfloat16 storage with f32 chunk accumulation.
+    Bf16,
+}
+
+impl StatePrecision {
+    /// Canonical lowercase name, as accepted by [`Self::parse`].
+    pub fn name(self) -> &'static str {
+        match self {
+            StatePrecision::F32 => "f32",
+            StatePrecision::Bf16 => "bf16",
+        }
+    }
+
+    /// Parse a precision name (`"f32"` / `"bf16"`).
+    pub fn parse(s: &str) -> Option<StatePrecision> {
+        match s {
+            "f32" => Some(StatePrecision::F32),
+            "bf16" => Some(StatePrecision::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Resident bytes per stored prefix-sum entry.
+    pub fn bytes_per_entry(self) -> usize {
+        match self {
+            StatePrecision::F32 => 4,
+            StatePrecision::Bf16 => 2,
+        }
+    }
+}
+
+/// Encode an f32 as bfloat16 (round-to-nearest-even on the dropped
+/// mantissa bits). The carry from the rounding increment propagates
+/// correctly into the exponent across power-of-two boundaries.
+pub fn bf16_encode(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// Decode a bfloat16 back to f32 — exact (bf16 values are a subset of
+/// f32).
+pub fn bf16_decode(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
 /// Streaming state of one attention head: the running M×(d+1) prefix-sum
 /// matrix (value columns plus the fused ones-column for the denominator),
 /// tagged with the redraw epoch its sums were accumulated under.
+///
+/// The sums live either in full f32 (`state`) or, under
+/// [`StatePrecision::Bf16`], as bf16 words (`qstate`) that are expanded
+/// to f32 only for the duration of each [`Self::advance`] call.
 #[derive(Clone, Debug)]
 pub struct StreamState {
     /// number of random features M
     m: usize,
     /// value/head dimension d
     d: usize,
-    /// running G^PS, shape M×(d+1)
+    /// storage precision of the resident sums
+    precision: StatePrecision,
+    /// running G^PS, shape M×(d+1) — authoritative under `F32`, empty
+    /// under `Bf16`
     state: Mat,
+    /// bf16 words of G^PS, length M×(d+1) — authoritative under
+    /// `Bf16`, empty under `F32`
+    qstate: Vec<u16>,
+    /// max-abs of the sums at the last requantize (bf16 bookkeeping;
+    /// stays 0 under `F32`)
+    scale: f32,
     /// total rows consumed since creation/reset (cumulative across
     /// redraw epochs — epoch transitions do not rewind it)
     tokens_seen: u64,
@@ -32,10 +108,56 @@ pub struct StreamState {
     epoch: u64,
 }
 
+/// One chunk of the exact f32 recurrence over a dense prefix-sum
+/// matrix: `state += K'_i C_i^T` then `out_i = (Q'_i · G^PS)` row by
+/// row. Shared verbatim by both precisions — the bf16 path calls it on
+/// a dequantized scratch, so within a chunk the arithmetic is
+/// operation-for-operation identical to f32 mode.
+fn advance_dense(state: &mut Mat, qp: &Mat, kp: &Mat, v: &Mat, d: usize) -> Mat {
+    let l = qp.rows;
+    let mut out = Mat::zeros(l, d);
+    let mut buf = vec![0.0f32; d + 1];
+    for i in 0..l {
+        // state += K'_i C_i^T  (C_i = [V_i 1])
+        let krow = kp.row(i);
+        let vrow = v.row(i);
+        for (j, &kij) in krow.iter().enumerate() {
+            if kij != 0.0 {
+                let srow = &mut state.data[j * (d + 1)..(j + 1) * (d + 1)];
+                axpy(kij, vrow, &mut srow[..d]);
+                srow[d] += kij;
+            }
+        }
+        // out_i = (Q'_i · G^PS) renormalized by the ones-column
+        buf.fill(0.0);
+        let qrow = qp.row(i);
+        for (j, &qij) in qrow.iter().enumerate() {
+            if qij != 0.0 {
+                axpy(qij, &state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
+            }
+        }
+        let denom = buf[d] + STABILIZER;
+        for (o, &b) in out.row_mut(i).iter_mut().zip(&buf[..d]) {
+            *o = b / denom;
+        }
+    }
+    out
+}
+
 impl StreamState {
-    /// Fresh state for M features and value dimension d.
+    /// Fresh f32 state for M features and value dimension d.
     pub fn new(m: usize, d: usize) -> StreamState {
-        StreamState { m, d, state: Mat::zeros(m, d + 1), tokens_seen: 0, epoch: 0 }
+        StreamState::with_precision(m, d, StatePrecision::F32)
+    }
+
+    /// Fresh state for M features and value dimension d with the given
+    /// storage precision for the resident sums.
+    pub fn with_precision(m: usize, d: usize, precision: StatePrecision) -> StreamState {
+        let (state, qstate) = match precision {
+            StatePrecision::F32 => (Mat::zeros(m, d + 1), Vec::new()),
+            StatePrecision::Bf16 => (Mat::zeros(0, 0), vec![0u16; m * (d + 1)]),
+        };
+        StreamState { m, d, precision, state, qstate, scale: 0.0, tokens_seen: 0, epoch: 0 }
     }
 
     /// Number of random features M.
@@ -58,25 +180,56 @@ impl StreamState {
         self.epoch
     }
 
+    /// Storage precision of the resident prefix sums.
+    pub fn precision(&self) -> StatePrecision {
+        self.precision
+    }
+
+    /// Max-abs magnitude of the sums at the last bf16 requantize — the
+    /// per-state scale bookkeeping surfaced in snapshots and gauges.
+    /// Always 0 under [`StatePrecision::F32`].
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// The raw bf16 words of G^PS (row-major, M×(d+1)) — empty under
+    /// [`StatePrecision::F32`]. Read-only view for snapshot
+    /// serialization.
+    pub fn quant_state(&self) -> &[u16] {
+        &self.qstate
+    }
+
     /// Cross into a new redraw epoch: zero the prefix sums (they live in
     /// the previous draw's feature space — attention context restarts at
     /// the boundary) while the cumulative token count keeps running.
     /// Called by the model forward when a chunk segment enters `epoch`.
     pub fn reset_for_epoch(&mut self, epoch: u64) {
         self.state.data.fill(0.0);
+        self.qstate.fill(0);
+        self.scale = 0.0;
         self.epoch = epoch;
     }
 
-    /// The raw M×(d+1) prefix-sum matrix — read-only view for snapshot
-    /// serialization (`persist/snapshot.rs`).
-    pub fn matrix(&self) -> &Mat {
-        &self.state
+    /// The M×(d+1) prefix-sum matrix expanded to f32, whatever the
+    /// storage precision — owned copy for snapshot serialization
+    /// (`persist/snapshot.rs`) and diagnostics. Exact under `F32`; under
+    /// `Bf16` this is the exact f32 image of the stored bf16 words (the
+    /// decode is lossless).
+    pub fn dense(&self) -> Mat {
+        match self.precision {
+            StatePrecision::F32 => self.state.clone(),
+            StatePrecision::Bf16 => Mat::from_vec(
+                self.m,
+                self.d + 1,
+                self.qstate.iter().map(|&h| bf16_decode(h)).collect(),
+            ),
+        }
     }
 
-    /// Rebuild a state from snapshot parts: the M×(d+1) prefix-sum
+    /// Rebuild an f32 state from snapshot parts: the M×(d+1) prefix-sum
     /// matrix, the consumed-token count and the redraw epoch the sums
     /// were accumulated under. Inverse of reading
-    /// [`Self::matrix`]/[`Self::tokens_seen`]/[`Self::epoch`]; the
+    /// [`Self::dense`]/[`Self::tokens_seen`]/[`Self::epoch`]; the
     /// restored state continues the stream bit-for-bit where the
     /// captured one stopped.
     pub fn from_parts(m: usize, d: usize, state: Mat, tokens_seen: u64, epoch: u64) -> StreamState {
@@ -85,18 +238,56 @@ impl StreamState {
             (m, d + 1),
             "prefix-sum matrix must be M x (d+1)"
         );
-        StreamState { m, d, state, tokens_seen, epoch }
+        StreamState {
+            m,
+            d,
+            precision: StatePrecision::F32,
+            state,
+            qstate: Vec::new(),
+            scale: 0.0,
+            tokens_seen,
+            epoch,
+        }
+    }
+
+    /// Rebuild a bf16 state from snapshot parts: the raw bf16 words of
+    /// G^PS plus the recorded requantize scale. Inverse of reading
+    /// [`Self::quant_state`]/[`Self::scale`]; the restored state
+    /// continues the stream bit-for-bit where the captured bf16 state
+    /// stopped.
+    pub fn from_quant_parts(
+        m: usize,
+        d: usize,
+        qstate: Vec<u16>,
+        scale: f32,
+        tokens_seen: u64,
+        epoch: u64,
+    ) -> StreamState {
+        assert_eq!(qstate.len(), m * (d + 1), "bf16 prefix sums must be M x (d+1)");
+        StreamState {
+            m,
+            d,
+            precision: StatePrecision::Bf16,
+            state: Mat::zeros(0, 0),
+            qstate,
+            scale,
+            tokens_seen,
+            epoch,
+        }
     }
 
     /// Resident size of the carried state in bytes — constant in the
-    /// streamed length, the whole point of the subsystem.
+    /// streamed length, the whole point of the subsystem. Halves under
+    /// [`StatePrecision::Bf16`].
     pub fn state_bytes(&self) -> usize {
-        self.state.data.len() * std::mem::size_of::<f32>()
+        self.m * (self.d + 1) * self.precision.bytes_per_entry()
     }
 
     /// Forget everything and start a new stream.
     pub fn reset(&mut self) {
         self.state.data.fill(0.0);
+        self.qstate.fill(0);
+        self.scale = 0.0;
         self.tokens_seen = 0;
         self.epoch = 0;
     }
@@ -116,32 +307,26 @@ impl StreamState {
         assert_eq!(v.rows, l, "v rows != qp rows");
         assert_eq!(v.cols, d, "v dim != state d");
 
-        let mut out = Mat::zeros(l, d);
-        let mut buf = vec![0.0f32; d + 1];
-        for i in 0..l {
-            // state += K'_i C_i^T  (C_i = [V_i 1])
-            let krow = kp.row(i);
-            let vrow = v.row(i);
-            for (j, &kij) in krow.iter().enumerate() {
-                if kij != 0.0 {
-                    let srow = &mut self.state.data[j * (d + 1)..(j + 1) * (d + 1)];
-                    axpy(kij, vrow, &mut srow[..d]);
-                    srow[d] += kij;
+        let out = match self.precision {
+            StatePrecision::F32 => advance_dense(&mut self.state, qp, kp, v, d),
+            StatePrecision::Bf16 => {
+                // dequantize → exact f32 recurrence → requantize once at
+                // the chunk boundary (f32 accumulation, bf16 storage)
+                let mut scratch = Mat::from_vec(
+                    m,
+                    d + 1,
+                    self.qstate.iter().map(|&h| bf16_decode(h)).collect(),
+                );
+                let out = advance_dense(&mut scratch, qp, kp, v, d);
+                let mut max_abs = 0.0f32;
+                for (q, &x) in self.qstate.iter_mut().zip(&scratch.data) {
+                    max_abs = max_abs.max(x.abs());
+                    *q = bf16_encode(x);
                 }
+                self.scale = max_abs;
+                out
             }
-            // out_i = (Q'_i · G^PS) renormalized by the ones-column
-            buf.fill(0.0);
-            let qrow = qp.row(i);
-            for (j, &qij) in qrow.iter().enumerate() {
-                if qij != 0.0 {
-                    axpy(qij, &self.state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
-                }
-            }
-            let denom = buf[d] + STABILIZER;
-            for (o, &b) in out.row_mut(i).iter_mut().zip(&buf[..d]) {
-                *o = b / denom;
-            }
-        }
+        };
         self.tokens_seen += l as u64;
         out
     }
@@ -291,6 +476,107 @@ mod tests {
         assert_eq!(st.tokens_seen(), 20);
         st.reset();
         assert_eq!((st.epoch(), st.tokens_seen()), (0, 0));
+    }
+
+    #[test]
+    fn bf16_codec_roundtrips_and_rounds_to_nearest_even() {
+        // bf16-representable values roundtrip exactly
+        for v in [0.0f32, 1.0, -2.5, 0.15625, 3.0e20, -1.0e-20] {
+            let enc = bf16_encode(v);
+            assert_eq!(bf16_decode(enc).to_bits(), ((enc as u32) << 16));
+            assert_eq!(bf16_encode(bf16_decode(enc)), enc, "re-encode is stable");
+        }
+        // rounding error is bounded by half a bf16 ulp (2^-8 relative)
+        for i in 0..500 {
+            let v = (i as f32 * 0.731 - 180.0) * 1.37;
+            let rt = bf16_decode(bf16_encode(v));
+            assert!((rt - v).abs() <= v.abs() * (1.0 / 256.0), "v={v} rt={rt}");
+        }
+        // tie rounds to even mantissa: 1 + 2^-8 * 0.5 exactly between
+        // 1.0 and 1 + 2^-7 → even neighbor 1.0
+        let tie = f32::from_bits(0x3f80_8000);
+        assert_eq!(bf16_decode(bf16_encode(tie)), 1.0);
+    }
+
+    #[test]
+    fn bf16_state_halves_resident_bytes() {
+        let (d, m) = (8usize, 16usize);
+        let f32_state = StreamState::new(m, d);
+        let bf16_state = StreamState::with_precision(m, d, StatePrecision::Bf16);
+        assert_eq!(f32_state.precision(), StatePrecision::F32);
+        assert_eq!(bf16_state.precision(), StatePrecision::Bf16);
+        assert_eq!(f32_state.state_bytes(), m * (d + 1) * 4);
+        assert_eq!(bf16_state.state_bytes() * 2, f32_state.state_bytes());
+    }
+
+    #[test]
+    fn bf16_stream_tracks_f32_within_tolerance() {
+        let (l, d, m) = (64usize, 8usize, 16usize);
+        let mut rng = Pcg64::new(7);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, l, d, 0.5);
+        let k = rand_mat(&mut rng, l, d, 0.5);
+        let v = rand_mat(&mut rng, l, d, 1.0);
+        let (qp, kp) = (fm.apply(&q), fm.apply(&k));
+
+        let mut exact = StreamState::new(m, d);
+        let mut quant = StreamState::with_precision(m, d, StatePrecision::Bf16);
+        let mut worst = 0.0f32;
+        for lo in (0..l).step_by(9) {
+            let hi = (lo + 9).min(l);
+            let (qs, ks, vs) =
+                (qp.rows_slice(lo, hi), kp.rows_slice(lo, hi), v.rows_slice(lo, hi));
+            let oe = exact.advance(&qs, &ks, &vs);
+            let oq = quant.advance(&qs, &ks, &vs);
+            worst = worst.max(oe.max_abs_diff(&oq));
+        }
+        // bf16 has ~2^-8 relative mantissa precision; attention outputs
+        // are denominator-normalized so the per-chunk requantize error
+        // stays well inside a few bf16 ulps of the output magnitude
+        assert!(worst < 3e-2, "bf16 drifted too far from f32: {worst}");
+        assert!(quant.scale() > 0.0, "requantize records the max-abs scale");
+        assert_eq!(quant.tokens_seen(), l as u64);
+    }
+
+    #[test]
+    fn bf16_quant_parts_roundtrip_continues_bitwise() {
+        let (d, m) = (4usize, 8usize);
+        let mut rng = Pcg64::new(11);
+        let fm = FeatureMap::sample(FeatureKind::Relu, m, d, OrfMechanism::Regular, &mut rng);
+        let q = rand_mat(&mut rng, 20, d, 0.5);
+        let k = rand_mat(&mut rng, 20, d, 0.5);
+        let v = rand_mat(&mut rng, 20, d, 1.0);
+        let (qp, kp) = (fm.apply(&q), fm.apply(&k));
+
+        let mut st = StreamState::with_precision(m, d, StatePrecision::Bf16);
+        st.advance(
+            &qp.rows_slice(0, 10),
+            &kp.rows_slice(0, 10),
+            &v.rows_slice(0, 10),
+        );
+        let mut restored = StreamState::from_quant_parts(
+            m,
+            d,
+            st.quant_state().to_vec(),
+            st.scale(),
+            st.tokens_seen(),
+            st.epoch(),
+        );
+        assert_eq!(restored.state_bytes(), st.state_bytes());
+        let a = st.advance(
+            &qp.rows_slice(10, 20),
+            &kp.rows_slice(10, 20),
+            &v.rows_slice(10, 20),
+        );
+        let b = restored.advance(
+            &qp.rows_slice(10, 20),
+            &kp.rows_slice(10, 20),
+            &v.rows_slice(10, 20),
+        );
+        let ab: Vec<u32> = a.data.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "restored bf16 state must continue bit-for-bit");
+        assert_eq!(st.quant_state(), restored.quant_state());
     }
 
     #[test]

@@ -1,0 +1,103 @@
+//! Autotuned matmul blocking: picks the depth tile (`K_TILE`) for the
+//! ikj kernel from a handful of candidates measured on the actual
+//! machine, once per process, replacing the old fixed constant.
+//!
+//! Safe to tune freely: in the ikj kernel the tile loop is outermost
+//! and each output row accumulates over k in globally ascending order
+//! whatever the tile size, so *every* candidate produces bitwise
+//! identical results (pinned by `k_tile_choice_is_bitwise_invariant`).
+//! The sweep therefore only affects speed, never values.
+//!
+//! Overrides: `PERFORMER_K_TILE=<n>` pins the tile without measuring;
+//! `PERFORMER_AUTOTUNE=off` skips the sweep and uses the default.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::{matmul_rows_tiled, Mat};
+
+/// The pre-autotune default depth tile (also used when the sweep is
+/// disabled): keeps the streamed B-row working set inside L1/L2 while C
+/// rows accumulate.
+pub const DEFAULT_K_TILE: usize = 256;
+
+/// Tile candidates the sweep measures, smallest first.
+const CANDIDATES: [usize; 4] = [64, 128, 256, 512];
+
+/// Probe shape: deep enough in k (3 × the largest candidate) that the
+/// tiling actually matters, small enough that the one-off sweep costs
+/// single-digit milliseconds.
+const PROBE_M: usize = 48;
+const PROBE_K: usize = 1536;
+const PROBE_N: usize = 96;
+const PROBE_REPS: usize = 3;
+
+fn sweep() -> usize {
+    let a = Mat::from_fn(PROBE_M, PROBE_K, |i, j| ((i * 31 + j * 7) % 17) as f32 * 0.25 - 2.0);
+    let b = Mat::from_fn(PROBE_K, PROBE_N, |i, j| ((i + 3 * j) % 13) as f32 * 0.5 - 3.0);
+    let mut out = vec![0.0f32; PROBE_M * PROBE_N];
+    let mut best = (DEFAULT_K_TILE, f64::INFINITY);
+    for &tile in &CANDIDATES {
+        let mut t_min = f64::INFINITY;
+        for _ in 0..PROBE_REPS {
+            out.fill(0.0);
+            let t0 = Instant::now();
+            matmul_rows_tiled(&a, 0, PROBE_M, &b, &mut out, tile);
+            t_min = t_min.min(t0.elapsed().as_secs_f64());
+        }
+        if t_min < best.1 {
+            best = (tile, t_min);
+        }
+    }
+    best.0
+}
+
+/// The depth tile every matmul kernel blocks by: `PERFORMER_K_TILE` if
+/// set, else the measured best candidate (or [`DEFAULT_K_TILE`] under
+/// `PERFORMER_AUTOTUNE=off`). Swept once per process, then cached.
+pub fn k_tile() -> usize {
+    static TILE: OnceLock<usize> = OnceLock::new();
+    *TILE.get_or_init(|| {
+        if let Some(n) = std::env::var("PERFORMER_K_TILE")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return n;
+        }
+        if std::env::var("PERFORMER_AUTOTUNE").map(|v| v == "off").unwrap_or(false) {
+            return DEFAULT_K_TILE;
+        }
+        sweep()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_tile_is_a_candidate_or_override() {
+        let t = k_tile();
+        assert!(t > 0);
+        // stable across calls (cached)
+        assert_eq!(t, k_tile());
+    }
+
+    #[test]
+    fn k_tile_choice_is_bitwise_invariant() {
+        // the autotune safety property: every candidate tile (and the
+        // degenerate 1/huge tiles) yields bit-identical products
+        let a = Mat::from_fn(5, 700, |i, j| ((i * 13 + j * 5) % 23) as f32 * 0.37 - 3.1);
+        let b = Mat::from_fn(700, 6, |i, j| ((i * 3 + j) % 19) as f32 * 0.21 - 1.7);
+        let mut want = vec![0.0f32; 5 * 6];
+        matmul_rows_tiled(&a, 0, 5, &b, &mut want, DEFAULT_K_TILE);
+        for tile in [1usize, 64, 128, 512, 10_000] {
+            let mut got = vec![0.0f32; 5 * 6];
+            matmul_rows_tiled(&a, 0, 5, &b, &mut got, tile);
+            let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, wb, "tile={tile} changed bits");
+        }
+    }
+}

@@ -12,9 +12,22 @@
 //! into one (B·stride)×D matrix with per-sequence row counts, so the
 //! dense per-token work (LayerNorm, QKV, projections, FFN) of a whole
 //! batch runs as single fused matrix operations.
+//!
+//! Two submodules make the dense core fast without changing its
+//! contracts: [`simd`] (explicit AVX2/SSE2/NEON kernels behind the
+//! `simd` cargo feature, runtime-dispatched, serial kernels kept as the
+//! oracle) and [`autotune`] (the matmul depth tile is measured on the
+//! machine once per process instead of being a fixed constant — a
+//! bitwise-invariant choice, see its docs).
 
 use std::fmt;
 use std::sync::OnceLock;
+
+pub mod autotune;
+pub mod simd;
+
+pub use autotune::k_tile;
+pub use simd::{active_level, set_level_override, SimdLevel};
 
 /// Row-major 2-D matrix of f32.
 #[derive(Clone, PartialEq)]
@@ -143,19 +156,13 @@ impl Mat {
         Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| f(v)).collect())
     }
 
-    /// Row-wise softmax in place (numerically stable).
+    /// Row-wise softmax in place (numerically stable). Dispatches to the
+    /// vectorized exp path at the active [`simd`] level (the scalar
+    /// level keeps libm exp and is the tolerance oracle).
     pub fn softmax_rows(&mut self) {
+        let level = simd::active_level();
         for i in 0..self.rows {
-            let row = self.row_mut(i);
-            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-            let mut sum = 0.0;
-            for v in row.iter_mut() {
-                *v = (*v - mx).exp();
-                sum += *v;
-            }
-            for v in row.iter_mut() {
-                *v /= sum;
-            }
+            simd::softmax_row_at(level, self.row_mut(i));
         }
     }
 
@@ -197,34 +204,21 @@ impl Mat {
 }
 
 #[inline]
-/// Dense dot product (4-lane unrolled).
+/// Dense dot product, dispatched to the active [`simd`] level (serial:
+/// 4-lane unrolled accumulation, which lets LLVM vectorize without
+/// fast-math; vector levels re-associate and are tolerance-oracled).
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled accumulation: lets LLVM vectorize without fast-math
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot_at(simd::active_level(), a, b)
 }
 
-/// axpy: y += a * x
+/// axpy: y += a * x, dispatched to the active [`simd`] level. Bitwise
+/// identical at every level (the vector bodies use separate mul + add,
+/// never FMA), so every axpy-based matmul keeps its bitwise contracts.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy_at(simd::active_level(), alpha, x, y)
 }
 
 /// Worker-thread count for the parallel matmul: `PERFORMER_THREADS` if
@@ -247,27 +241,43 @@ pub fn matmul_threads() -> usize {
 /// one unbatched chunk through one dense layer).
 const PAR_WORK_THRESHOLD: usize = 4 << 20;
 
-/// Depth-tile for the serial kernel: keeps the streamed B-row working
-/// set inside L1/L2 while C rows accumulate.
-const K_TILE: usize = 256;
-
-/// ikj kernel over output rows [lo, hi), writing into `out_rows` (a
-/// `(hi-lo)×b.cols` row-major slab, pre-zeroed): streams B rows, writes
-/// C rows — cache-friendly for row-major data.
-fn matmul_rows(a: &Mat, lo: usize, hi: usize, b: &Mat, out_rows: &mut [f32]) {
+/// The ikj kernel at an explicit depth tile — the [`autotune`] sweep's
+/// probe and the bitwise-invariance tests call this directly; everything
+/// else goes through [`matmul_rows`]/[`matmul_into`], which block by the
+/// tuned [`k_tile`]. For any tile choice each output row accumulates
+/// over k in globally ascending order, so the tile never changes bits.
+pub fn matmul_rows_tiled(
+    a: &Mat,
+    lo: usize,
+    hi: usize,
+    b: &Mat,
+    out_rows: &mut [f32],
+    tile: usize,
+) {
     let n = b.cols;
-    for k0 in (0..a.cols).step_by(K_TILE) {
-        let k1 = (k0 + K_TILE).min(a.cols);
+    // one dispatch-level load hoisted out of the k/i loops
+    let level = simd::active_level();
+    for k0 in (0..a.cols).step_by(tile) {
+        let k1 = (k0 + tile).min(a.cols);
         for i in lo..hi {
             let arow = &a.row(i)[k0..k1];
             let orow = &mut out_rows[(i - lo) * n..(i - lo + 1) * n];
             for (k, &aik) in arow.iter().enumerate() {
                 if aik != 0.0 {
-                    axpy(aik, b.row(k0 + k), orow);
+                    simd::axpy_at(level, aik, b.row(k0 + k), orow);
                 }
             }
         }
     }
+}
+
+/// ikj kernel over output rows [lo, hi), writing into `out_rows` (a
+/// `(hi-lo)×b.cols` row-major slab, pre-zeroed): streams B rows, writes
+/// C rows — cache-friendly for row-major data. Depth-tiled by the
+/// autotuned [`k_tile`] so the streamed B-row working set stays in
+/// L1/L2 while C rows accumulate.
+fn matmul_rows(a: &Mat, lo: usize, hi: usize, b: &Mat, out_rows: &mut [f32]) {
+    matmul_rows_tiled(a, lo, hi, b, out_rows, autotune::k_tile())
 }
 
 /// out = A @ B into a preallocated buffer. Large products are row-tiled
@@ -359,14 +369,16 @@ pub fn matmul_block(
     assert_eq!((out.rows, out.cols), (row_hi - row_lo, b.cols));
     out.data.fill(0.0);
     let n = b.cols;
-    for k0 in (0..kdim).step_by(K_TILE) {
-        let k1 = (k0 + K_TILE).min(kdim);
+    let tile = autotune::k_tile();
+    let level = simd::active_level();
+    for k0 in (0..kdim).step_by(tile) {
+        let k1 = (k0 + tile).min(kdim);
         for i in row_lo..row_hi {
             let arow = &a.row(i)[col_lo + k0..col_lo + k1];
             let orow = &mut out.data[(i - row_lo) * n..(i - row_lo + 1) * n];
             for (k, &aik) in arow.iter().enumerate() {
                 if aik != 0.0 {
-                    axpy(aik, b.row(k0 + k), orow);
+                    simd::axpy_at(level, aik, b.row(k0 + k), orow);
                 }
             }
         }
@@ -377,12 +389,13 @@ pub fn matmul_block(
 pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows);
     let mut out = Mat::zeros(a.cols, b.cols);
+    let level = simd::active_level();
     for r in 0..a.rows {
         let arow = a.row(r);
         let brow = b.row(r);
         for (i, &ari) in arow.iter().enumerate() {
             if ari != 0.0 {
-                axpy(ari, brow, &mut out.data[i * b.cols..(i + 1) * b.cols]);
+                simd::axpy_at(level, ari, brow, &mut out.data[i * b.cols..(i + 1) * b.cols]);
             }
         }
     }
@@ -446,6 +459,26 @@ mod tests {
     }
 
     #[test]
+    fn dot_boundary_lengths() {
+        // audit of the serial 4-way unroll's tail (`for i in chunks*4..n`):
+        // the unrolled body covers 4*(n/4) elements and the tail loop the
+        // remaining n%4, so every length is summed exactly once. These
+        // boundary lengths (empty, shorter than one unroll, exactly one,
+        // one-past, mid-tail) pin that — and double as the oracle
+        // fixtures the SIMD dot is checked against in prop_simd.
+        for n in [0usize, 1, 3, 4, 5, 7] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 + 1.0) * 0.25).collect();
+            let y: Vec<f32> = (0..n).map(|i| (n - i) as f32 * 0.5 - 0.7).collect();
+            let naive: f64 =
+                x.iter().zip(&y).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let got = simd::dot_scalar(&x, &y) as f64;
+            assert!((got - naive).abs() < 1e-5, "n={n}: {got} vs {naive}");
+            // the public entry point agrees at whatever level is active
+            assert!((dot(&x, &y) as f64 - naive).abs() < 1e-5, "dispatched dot, n={n}");
+        }
+    }
+
+    #[test]
     fn matvec_consistent_with_matmul() {
         let a = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
         let x = vec![1.0, -1.0, 2.0, 0.5];
@@ -476,7 +509,8 @@ mod tests {
 
     #[test]
     fn k_tiled_kernel_matches_naive_for_deep_k() {
-        // a.cols > K_TILE exercises the depth-tiling loop
+        // a.cols > the smallest autotune candidate exercises the
+        // depth-tiling loop whatever tile the sweep picked
         let a = Mat::from_fn(3, 300, |i, j| ((i * 7 + j) % 5) as f32 - 2.0);
         let b = Mat::from_fn(300, 4, |i, j| ((i + j) % 3) as f32);
         let got = a.matmul(&b);

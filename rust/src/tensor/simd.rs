@@ -1,0 +1,841 @@
+//! Explicit SIMD kernels for the dense core, behind the `simd` cargo
+//! feature with runtime dispatch.
+//!
+//! Dispatch strategy: [`active_level`] resolves once per process to the
+//! widest instruction set the host supports (AVX2 → SSE2 on x86_64,
+//! NEON on aarch64, scalar otherwise or when the feature is off), with a
+//! `PERFORMER_SIMD` env override (`off`/`scalar`/`sse2`/`avx2`/`neon`)
+//! and an in-process [`set_level_override`] hook the benches use to
+//! measure SIMD-on vs SIMD-off on the same machine. Every kernel also
+//! has an explicit-level `_at` entry point so property tests can compare
+//! levels race-free regardless of the global setting.
+//!
+//! Oracle discipline (what the prop tests pin):
+//!
+//! * **axpy is bitwise-identical across levels.** The vector body uses a
+//!   separate multiply and add (never FMA), so each lane computes
+//!   `y[i] + alpha * x[i]` with exactly the two IEEE roundings the
+//!   scalar loop performs. Since every matmul path (`matmul_into`,
+//!   `matmul_block`, `matmul_at_b`, the streaming state advance) is
+//!   axpy-based with the k-accumulation order preserved, vectorizing
+//!   them changes no bits.
+//! * **dot re-associates** (per-lane partial sums + a horizontal
+//!   reduction), so it is held to a ULP-scaled tolerance against the
+//!   serial kernel, not bitwise equality.
+//! * **exp/softmax paths** use a Cephes-style degree-5 polynomial
+//!   ([`exp_poly`]) on the vector levels; the scalar level keeps libm
+//!   `exp` and serves as the tolerance oracle (the polynomial agrees
+//!   with libm to ~1 ulp of relative error over the clamped range).
+//!   Within one vectorized row the remainder lanes use the *same*
+//!   polynomial, so a row is internally consistent and identical inputs
+//!   produce identical rows within a build.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set level a kernel dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// portable serial kernels — the oracle the SIMD paths are tested
+    /// against, and the only level when the `simd` feature is off
+    Scalar,
+    /// x86_64 128-bit baseline (axpy/dot vectorized; exp stays scalar —
+    /// SSE2 has no packed round-to-nearest)
+    Sse2,
+    /// x86_64 256-bit lanes incl. the vectorized exp polynomial
+    Avx2,
+    /// aarch64 128-bit lanes incl. the vectorized exp polynomial
+    Neon,
+}
+
+impl SimdLevel {
+    /// Lower-case name (`scalar`/`sse2`/`avx2`/`neon`), as accepted by
+    /// the `PERFORMER_SIMD` env override.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Sse2 => "sse2",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            SimdLevel::Scalar => 1,
+            SimdLevel::Sse2 => 2,
+            SimdLevel::Avx2 => 3,
+            SimdLevel::Neon => 4,
+        }
+    }
+
+    fn from_code(v: u8) -> Option<SimdLevel> {
+        match v {
+            1 => Some(SimdLevel::Scalar),
+            2 => Some(SimdLevel::Sse2),
+            3 => Some(SimdLevel::Avx2),
+            4 => Some(SimdLevel::Neon),
+            _ => None,
+        }
+    }
+}
+
+/// Whether `level` can actually run on this build + host. Scalar is
+/// always supported; the vector levels need the `simd` feature, the
+/// matching architecture, and (for AVX2) a runtime CPUID check.
+pub fn supported(level: SimdLevel) -> bool {
+    match level {
+        SimdLevel::Scalar => true,
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => true,
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => is_x86_feature_detected!("avx2"),
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        SimdLevel::Neon => true,
+        #[allow(unreachable_patterns)]
+        _ => false,
+    }
+}
+
+/// Every level this build + host can run, widest last.
+pub fn supported_levels() -> Vec<SimdLevel> {
+    [SimdLevel::Scalar, SimdLevel::Sse2, SimdLevel::Neon, SimdLevel::Avx2]
+        .into_iter()
+        .filter(|&l| supported(l))
+        .collect()
+}
+
+fn hardware_level() -> SimdLevel {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdLevel::Avx2;
+        }
+        // SSE2 is part of the x86_64 baseline, no runtime check needed
+        return SimdLevel::Sse2;
+    }
+    #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+    {
+        // NEON is part of the aarch64 baseline
+        return SimdLevel::Neon;
+    }
+    #[allow(unreachable_code)]
+    SimdLevel::Scalar
+}
+
+fn detect() -> SimdLevel {
+    if let Ok(v) = std::env::var("PERFORMER_SIMD") {
+        let want = match v.to_ascii_lowercase().as_str() {
+            "off" | "scalar" => Some(SimdLevel::Scalar),
+            "sse2" => Some(SimdLevel::Sse2),
+            "avx2" => Some(SimdLevel::Avx2),
+            "neon" => Some(SimdLevel::Neon),
+            _ => None, // unknown value: fall through to detection
+        };
+        if let Some(l) = want {
+            if supported(l) {
+                return l;
+            }
+        }
+    }
+    hardware_level()
+}
+
+// 0 = no override; else SimdLevel::code()
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+static DETECTED: OnceLock<SimdLevel> = OnceLock::new();
+
+/// The level the argument-free kernel entry points dispatch to: the
+/// in-process override if set, else the detected level (env override or
+/// hardware probe, cached after first use).
+pub fn active_level() -> SimdLevel {
+    match SimdLevel::from_code(OVERRIDE.load(Ordering::Relaxed)) {
+        Some(l) => l,
+        None => *DETECTED.get_or_init(detect),
+    }
+}
+
+/// Force the dispatch level in-process (benches use this to time the
+/// same matmul SIMD-on vs SIMD-off); `None` restores detection. An
+/// unsupported request falls back to the detected level. Returns the
+/// level now active.
+pub fn set_level_override(level: Option<SimdLevel>) -> SimdLevel {
+    match level {
+        None => OVERRIDE.store(0, Ordering::Relaxed),
+        Some(l) => {
+            let eff = if supported(l) { l } else { *DETECTED.get_or_init(detect) };
+            OVERRIDE.store(eff.code(), Ordering::Relaxed);
+        }
+    }
+    active_level()
+}
+
+// ---------------------------------------------------------------------
+// axpy — bitwise-identical across levels (mul + add, never FMA)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn axpy_scalar(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y += alpha * x at an explicit dispatch level. Bitwise-identical to
+/// the scalar loop at every level (see the module docs).
+#[inline]
+pub fn axpy_at(level: SimdLevel, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    match level {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe { x86::axpy_sse2(alpha, x, y) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => unsafe { x86::axpy_avx2(alpha, x, y) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        SimdLevel::Neon => unsafe { neon::axpy_neon(alpha, x, y) },
+        _ => axpy_scalar(alpha, x, y),
+    }
+}
+
+// ---------------------------------------------------------------------
+// dot — re-associated, held to a ULP-scaled tolerance vs serial
+// ---------------------------------------------------------------------
+
+/// Serial 4-accumulator dot product — the tolerance oracle for the
+/// vector levels. The unrolled body covers `4 * (n / 4)` elements and
+/// the tail loop picks up exactly the remaining `n % 4` (audited +
+/// pinned by the boundary-length tests: 0, 1, 3, 4, 5, 7).
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Dense dot product at an explicit dispatch level.
+#[inline]
+pub fn dot_at(level: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match level {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Sse2 => unsafe { x86::dot_sse2(a, b) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => unsafe { x86::dot_avx2(a, b) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        SimdLevel::Neon => unsafe { neon::dot_neon(a, b) },
+        _ => dot_scalar(a, b),
+    }
+}
+
+// ---------------------------------------------------------------------
+// exp — Cephes-style degree-5 polynomial, mirrored lane-for-lane
+// ---------------------------------------------------------------------
+
+// Clamp range chosen so the exponent-bit reconstruction below never
+// leaves the normal range: n = round(x·log2 e) ∈ [-124, 126] and the
+// mantissa polynomial lands in [~0.7, ~1.42].
+const EXP_HI: f32 = 87.0;
+const EXP_LO: f32 = -86.0;
+const LOG2EF: f32 = 1.442_695_f32;
+const LN2_HI: f32 = 0.693_359_4;
+const LN2_LO: f32 = -2.121_944_4e-4;
+const EP0: f32 = 1.987_569_2e-4;
+const EP1: f32 = 1.398_2e-3;
+const EP2: f32 = 8.333_452e-3;
+const EP3: f32 = 4.166_579_6e-2;
+const EP4: f32 = 1.666_666_6e-1;
+const EP5: f32 = 5e-1;
+
+/// The scalar polynomial `exp` the vector levels mirror lane-for-lane
+/// (remainder lanes of a vectorized row use this, so a row is
+/// internally consistent). Input is clamped to `[-86, 87]`; agrees with
+/// libm `exp` to ~1e-7 relative over that range.
+#[inline]
+pub fn exp_poly(x: f32) -> f32 {
+    let x = x.clamp(EXP_LO, EXP_HI);
+    // round-ties-even matches the packed round-to-nearest instruction
+    let n = (x * LOG2EF).round_ties_even();
+    // two-part ln2 subtraction keeps the reduced argument accurate
+    let r = x - n * LN2_HI - n * LN2_LO;
+    let z = r * r;
+    let mut y = EP0;
+    y = y * r + EP1;
+    y = y * r + EP2;
+    y = y * r + EP3;
+    y = y * r + EP4;
+    y = y * r + EP5;
+    y = (y * z + r) + 1.0;
+    // scale by 2^n by adding n to the exponent bits
+    f32::from_bits((y.to_bits() as i32 + ((n as i32) << 23)) as u32)
+}
+
+// ---------------------------------------------------------------------
+// fused exp row kernel — scale * exp(min(v - sub, clamp)) + eps
+// ---------------------------------------------------------------------
+
+#[inline]
+fn fused_exp_scale_scalar(row: &mut [f32], sub: f32, clamp: f32, scale: f32, eps: f32) {
+    // libm exp: bitwise-identical to the pre-SIMD FAVOR+ positive map,
+    // and the tolerance oracle for the vector levels
+    for v in row.iter_mut() {
+        let t = (*v - sub).min(clamp);
+        *v = scale * t.exp() + eps;
+    }
+}
+
+#[cfg(any(
+    all(feature = "simd", target_arch = "x86_64"),
+    all(feature = "simd", target_arch = "aarch64")
+))]
+#[inline]
+fn fused_exp_scale_poly_tail(row: &mut [f32], sub: f32, clamp: f32, scale: f32, eps: f32) {
+    for v in row.iter_mut() {
+        let t = (*v - sub).min(clamp);
+        *v = scale * exp_poly(t) + eps;
+    }
+}
+
+/// In place over a row: `v ← scale * exp(min(v - sub, clamp)) + eps`, at
+/// an explicit dispatch level — the FAVOR+ positive map's inner loop
+/// (`sub` is the row-local max-stabilizer diag term) and the generic
+/// exp-kernel activation (`sub = 0`).
+pub fn fused_exp_scale_at(
+    level: SimdLevel,
+    row: &mut [f32],
+    sub: f32,
+    clamp: f32,
+    scale: f32,
+    eps: f32,
+) {
+    match level {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => unsafe { x86::fused_exp_scale_avx2(row, sub, clamp, scale, eps) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        SimdLevel::Neon => unsafe { neon::fused_exp_scale_neon(row, sub, clamp, scale, eps) },
+        // SSE2 has no packed round-to-nearest; keep the scalar oracle
+        _ => fused_exp_scale_scalar(row, sub, clamp, scale, eps),
+    }
+}
+
+/// [`fused_exp_scale_at`] at the process-wide [`active_level`].
+#[inline]
+pub fn fused_exp_scale(row: &mut [f32], sub: f32, clamp: f32, scale: f32, eps: f32) {
+    fused_exp_scale_at(active_level(), row, sub, clamp, scale, eps)
+}
+
+// ---------------------------------------------------------------------
+// row softmax — max-stabilized, vector exp + re-associated sum
+// ---------------------------------------------------------------------
+
+fn softmax_row_scalar(row: &mut [f32]) {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Numerically stable softmax over one row in place, at an explicit
+/// dispatch level. The vector levels use the polynomial exp and a
+/// re-associated sum, so this is tolerance-oracled against scalar.
+pub fn softmax_row_at(level: SimdLevel, row: &mut [f32]) {
+    match level {
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdLevel::Avx2 => unsafe { x86::softmax_row_avx2(row) },
+        #[cfg(all(feature = "simd", target_arch = "aarch64"))]
+        SimdLevel::Neon => unsafe { neon::softmax_row_neon(row) },
+        _ => softmax_row_scalar(row),
+    }
+}
+
+/// [`softmax_row_at`] at the process-wide [`active_level`].
+#[inline]
+pub fn softmax_row(row: &mut [f32]) {
+    softmax_row_at(active_level(), row)
+}
+
+// ---------------------------------------------------------------------
+// x86_64 kernels
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::*;
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn axpy_sse2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm_set1_ps(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = _mm_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm_loadu_ps(y.as_ptr().add(i));
+            // mul + add (never FMA): exactly the scalar loop's roundings
+            _mm_storeu_ps(y.as_mut_ptr().add(i), _mm_add_ps(vy, _mm_mul_ps(va, vx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0;
+        while i + 8 <= n {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i));
+            // mul + add (never FMA): exactly the scalar loop's roundings
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), _mm256_add_ps(vy, _mm256_mul_ps(va, vx)));
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn dot_sse2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = _mm_setzero_ps();
+        let mut acc1 = _mm_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            let p0 = _mm_mul_ps(_mm_loadu_ps(a.as_ptr().add(i)), _mm_loadu_ps(b.as_ptr().add(i)));
+            let p1 = _mm_mul_ps(
+                _mm_loadu_ps(a.as_ptr().add(i + 4)),
+                _mm_loadu_ps(b.as_ptr().add(i + 4)),
+            );
+            acc0 = _mm_add_ps(acc0, p0);
+            acc1 = _mm_add_ps(acc1, p1);
+            i += 8;
+        }
+        while i + 4 <= n {
+            let p = _mm_mul_ps(_mm_loadu_ps(a.as_ptr().add(i)), _mm_loadu_ps(b.as_ptr().add(i)));
+            acc0 = _mm_add_ps(acc0, p);
+            i += 4;
+        }
+        let acc = _mm_add_ps(acc0, acc1);
+        let s2 = _mm_add_ps(acc, _mm_movehl_ps(acc, acc));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+        let mut s = _mm_cvtss_f32(s1);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let p0 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            let p1 = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i + 8)),
+                _mm256_loadu_ps(b.as_ptr().add(i + 8)),
+            );
+            acc0 = _mm256_add_ps(acc0, p0);
+            acc1 = _mm256_add_ps(acc1, p1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let p = _mm256_mul_ps(
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            );
+            acc0 = _mm256_add_ps(acc0, p);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let hi = _mm256_extractf128_ps(acc, 1);
+        let lo = _mm256_castps256_ps128(acc);
+        let s4 = _mm_add_ps(lo, hi);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 1));
+        let mut s = _mm_cvtss_f32(s1);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Lane-wise [`exp_poly`]: same constants, same operation order
+    /// (separate mul/add, round-to-nearest-even), so each lane matches
+    /// the scalar polynomial bit for bit.
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp_avx2(v: __m256) -> __m256 {
+        let x = _mm256_min_ps(_mm256_max_ps(v, _mm256_set1_ps(EXP_LO)), _mm256_set1_ps(EXP_HI));
+        let n = _mm256_round_ps(
+            _mm256_mul_ps(x, _mm256_set1_ps(LOG2EF)),
+            _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC,
+        );
+        let r = _mm256_sub_ps(
+            _mm256_sub_ps(x, _mm256_mul_ps(n, _mm256_set1_ps(LN2_HI))),
+            _mm256_mul_ps(n, _mm256_set1_ps(LN2_LO)),
+        );
+        let z = _mm256_mul_ps(r, r);
+        let mut y = _mm256_set1_ps(EP0);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EP1));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EP2));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EP3));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EP4));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(EP5));
+        y = _mm256_add_ps(_mm256_add_ps(_mm256_mul_ps(y, z), r), _mm256_set1_ps(1.0));
+        let ni = _mm256_cvtps_epi32(n); // n is already integral
+        _mm256_castsi256_ps(_mm256_add_epi32(_mm256_castps_si256(y), _mm256_slli_epi32(ni, 23)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fused_exp_scale_avx2(row: &mut [f32], sub: f32, clamp: f32, scale: f32, eps: f32) {
+        let n = row.len();
+        let vs = _mm256_set1_ps(sub);
+        let vc = _mm256_set1_ps(clamp);
+        let vk = _mm256_set1_ps(scale);
+        let ve = _mm256_set1_ps(eps);
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(row.as_ptr().add(i));
+            let t = _mm256_min_ps(_mm256_sub_ps(v, vs), vc);
+            let r = _mm256_add_ps(_mm256_mul_ps(exp_avx2(t), vk), ve);
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        // remainder lanes use the same polynomial as the vector body
+        fused_exp_scale_poly_tail(&mut row[i..], sub, clamp, scale, eps);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn softmax_row_avx2(row: &mut [f32]) {
+        let n = row.len();
+        // row max
+        let mut i = 0;
+        let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+        while i + 8 <= n {
+            vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(row.as_ptr().add(i)));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+        let mut mx = lanes.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        while i < n {
+            mx = mx.max(row[i]);
+            i += 1;
+        }
+        // exp(v - mx) and sum
+        let vm = _mm256_set1_ps(mx);
+        let mut vsum = _mm256_setzero_ps();
+        i = 0;
+        while i + 8 <= n {
+            let e = exp_avx2(_mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(i)), vm));
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), e);
+            vsum = _mm256_add_ps(vsum, e);
+            i += 8;
+        }
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vsum);
+        let mut sum: f32 = lanes.iter().sum();
+        while i < n {
+            row[i] = exp_poly(row[i] - mx);
+            sum += row[i];
+            i += 1;
+        }
+        // normalize
+        let inv = _mm256_set1_ps(1.0);
+        let vsumv = _mm256_set1_ps(sum);
+        let vinv = _mm256_div_ps(inv, vsumv);
+        i = 0;
+        while i + 8 <= n {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(row.as_ptr().add(i)), vinv);
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        let sinv = _mm_cvtss_f32(_mm256_castps256_ps128(vinv));
+        while i < n {
+            row[i] *= sinv;
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// aarch64 kernels
+// ---------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "aarch64"))]
+mod neon {
+    use super::*;
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy_neon(alpha: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let vx = vld1q_f32(x.as_ptr().add(i));
+            let vy = vld1q_f32(y.as_ptr().add(i));
+            // mul + add (never FMA): exactly the scalar loop's roundings
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(vy, vmulq_f32(va, vx)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot_neon(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vaddq_f32(
+                acc0,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))),
+            );
+            acc1 = vaddq_f32(
+                acc1,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4))),
+            );
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vaddq_f32(
+                acc0,
+                vmulq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i))),
+            );
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Lane-wise [`exp_poly`] (same constants and operation order).
+    #[target_feature(enable = "neon")]
+    unsafe fn exp_neon(v: float32x4_t) -> float32x4_t {
+        let x = vminq_f32(vmaxq_f32(v, vdupq_n_f32(EXP_LO)), vdupq_n_f32(EXP_HI));
+        // round-to-nearest-even, matching the scalar round_ties_even
+        let n = vrndnq_f32(vmulq_f32(x, vdupq_n_f32(LOG2EF)));
+        let r = vsubq_f32(
+            vsubq_f32(x, vmulq_f32(n, vdupq_n_f32(LN2_HI))),
+            vmulq_f32(n, vdupq_n_f32(LN2_LO)),
+        );
+        let z = vmulq_f32(r, r);
+        let mut y = vdupq_n_f32(EP0);
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EP1));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EP2));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EP3));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EP4));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(EP5));
+        y = vaddq_f32(vaddq_f32(vmulq_f32(y, z), r), vdupq_n_f32(1.0));
+        let ni = vcvtq_s32_f32(n); // n is already integral
+        vreinterpretq_f32_s32(vaddq_s32(vreinterpretq_s32_f32(y), vshlq_n_s32(ni, 23)))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fused_exp_scale_neon(row: &mut [f32], sub: f32, clamp: f32, scale: f32, eps: f32) {
+        let n = row.len();
+        let vs = vdupq_n_f32(sub);
+        let vc = vdupq_n_f32(clamp);
+        let vk = vdupq_n_f32(scale);
+        let ve = vdupq_n_f32(eps);
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = vld1q_f32(row.as_ptr().add(i));
+            let t = vminq_f32(vsubq_f32(v, vs), vc);
+            let r = vaddq_f32(vmulq_f32(exp_neon(t), vk), ve);
+            vst1q_f32(row.as_mut_ptr().add(i), r);
+            i += 4;
+        }
+        // remainder lanes use the same polynomial as the vector body
+        fused_exp_scale_poly_tail(&mut row[i..], sub, clamp, scale, eps);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn softmax_row_neon(row: &mut [f32]) {
+        let n = row.len();
+        let mut i = 0;
+        let mut vmax = vdupq_n_f32(f32::NEG_INFINITY);
+        while i + 4 <= n {
+            vmax = vmaxq_f32(vmax, vld1q_f32(row.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut mx = vmaxvq_f32(vmax);
+        while i < n {
+            mx = mx.max(row[i]);
+            i += 1;
+        }
+        let vm = vdupq_n_f32(mx);
+        let mut vsum = vdupq_n_f32(0.0);
+        i = 0;
+        while i + 4 <= n {
+            let e = exp_neon(vsubq_f32(vld1q_f32(row.as_ptr().add(i)), vm));
+            vst1q_f32(row.as_mut_ptr().add(i), e);
+            vsum = vaddq_f32(vsum, e);
+            i += 4;
+        }
+        let mut sum = vaddvq_f32(vsum);
+        while i < n {
+            row[i] = exp_poly(row[i] - mx);
+            sum += row[i];
+            i += 1;
+        }
+        let sinv = 1.0 / sum;
+        let vinv = vdupq_n_f32(sinv);
+        i = 0;
+        while i + 4 <= n {
+            vst1q_f32(row.as_mut_ptr().add(i), vmulq_f32(vld1q_f32(row.as_ptr().add(i)), vinv));
+            i += 4;
+        }
+        while i < n {
+            row[i] *= sinv;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(n: usize, seed: u32) -> (Vec<f32>, Vec<f32>) {
+        let f = |i: usize, k: u32| ((i as u32 * 2654435761 + seed * k) % 1000) as f32 / 250.0 - 2.0;
+        ((0..n).map(|i| f(i, 1)).collect(), (0..n).map(|i| f(i, 7)).collect())
+    }
+
+    #[test]
+    fn axpy_bitwise_identical_across_levels() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 64, 100] {
+            let (x, y0) = vecs(n, 3);
+            let mut want = y0.clone();
+            axpy_at(SimdLevel::Scalar, 0.37, &x, &mut want);
+            for level in supported_levels() {
+                let mut got = y0.clone();
+                axpy_at(level, 0.37, &x, &mut got);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "axpy n={n} level={}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_within_ulp_scaled_tolerance_of_scalar() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 15, 16, 17, 33, 100, 257] {
+            let (a, b) = vecs(n, 11);
+            let want = dot_scalar(&a, &b);
+            // scale the tolerance by the magnitude actually summed
+            let mag: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            for level in supported_levels() {
+                let got = dot_at(level, &a, &b);
+                assert!(
+                    (got - want).abs() <= 1e-6 * mag + 1e-6,
+                    "dot n={n} level={}: {got} vs {want}",
+                    level.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exp_poly_tracks_libm() {
+        let mut worst = 0.0f32;
+        let mut x = -86.0f32;
+        while x < 87.0 {
+            let rel = (exp_poly(x) - x.exp()).abs() / x.exp();
+            worst = worst.max(rel);
+            x += 0.137;
+        }
+        assert!(worst < 2e-6, "exp_poly rel error {worst}");
+        assert_eq!(exp_poly(0.0), 1.0);
+    }
+
+    #[test]
+    fn fused_exp_scale_matches_formula_per_level() {
+        for n in [1usize, 5, 8, 13, 64] {
+            let (row0, _) = vecs(n, 5);
+            let (sub, clamp, scale, eps) = (0.4f32, 30.0f32, 0.125f32, 1e-6f32);
+            for level in supported_levels() {
+                let mut got = row0.clone();
+                fused_exp_scale_at(level, &mut got, sub, clamp, scale, eps);
+                for (g, v) in got.iter().zip(&row0) {
+                    let want = scale * (v - sub).min(clamp).exp() + eps;
+                    assert!(
+                        (g - want).abs() <= 1e-5 * want.abs() + 1e-9,
+                        "n={n} level={}: {g} vs {want}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_row_normalized_and_near_scalar_at_every_level() {
+        for n in [1usize, 4, 7, 8, 19, 64] {
+            let (row0, _) = vecs(n, 9);
+            let mut want = row0.clone();
+            softmax_row_at(SimdLevel::Scalar, &mut want);
+            for level in supported_levels() {
+                let mut got = row0.clone();
+                softmax_row_at(level, &mut got);
+                let s: f32 = got.iter().sum();
+                assert!((s - 1.0).abs() < 1e-5, "n={n} level={} sum {s}", level.name());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-5,
+                        "n={n} level={}: {g} vs {w}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    // NOTE: set_level_override flips a process-global; its round-trip
+    // test lives in the prop_simd integration binary (whose other tests
+    // all use the explicit-level `_at` entry points), not here, so the
+    // bitwise-pinned feature-map tests in this lib binary never race a
+    // mid-test level flip.
+    #[test]
+    fn scalar_level_is_always_supported_and_widest_last() {
+        assert!(supported(SimdLevel::Scalar));
+        let levels = supported_levels();
+        assert_eq!(levels.first(), Some(&SimdLevel::Scalar));
+        assert!(levels.contains(&active_level()));
+    }
+}

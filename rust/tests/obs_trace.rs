@@ -40,6 +40,7 @@ fn forced_churn_produces_a_balanced_loadable_trace() {
         max_sessions: 0,
         spill_dir: Some(dir.clone()),
         spill_pending_limit: 0,
+        ..Default::default()
     };
 
     let _ = trace::drain(); // shed anything an earlier test left behind

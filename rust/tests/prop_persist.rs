@@ -72,6 +72,7 @@ fn prop_spill_rehydrate_is_bitwise_transparent() {
             max_sessions: 0,
             spill_dir: Some(dir.clone()),
             spill_pending_limit: 0,
+            ..Default::default()
         };
         let mut spilling = SessionManager::new(model.clone(), cfg).unwrap();
         let mut reference = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();

@@ -1,0 +1,211 @@
+//! Property tests for the reduced-precision (bf16) stream state.
+//!
+//! The contract being pinned (see DESIGN.md §Dense-core SIMD + reduced
+//! precision): bf16 is a *storage* format — every advance dequantizes to
+//! f32 scratch, runs the exact f32 recurrence, and requantizes once per
+//! chunk boundary. So:
+//!
+//!   * bf16 vs f32 scores stay inside a documented envelope
+//!     (max |Δ logprob| < 0.5 nats, mean < 0.1) across random
+//!     chunkings and kernel-redraw epochs;
+//!   * *within* the bf16 mode everything stays bitwise: spill →
+//!     rehydrate → advance equals an uninterrupted bf16 session, and a
+//!     snapshot round-trip resumes bit-for-bit;
+//!   * a bf16 manager refuses f32 checkpoints and vice versa (the
+//!     fingerprint embeds the precision; the manager enforces policy);
+//!   * bf16 halves the per-session resident bytes reported by stats.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use performer::persist::SessionSnapshot;
+use performer::protein::vocab::{AA_BASE, N_AA};
+use performer::rng::Pcg64;
+use performer::stream::{
+    ChunkScorer, ChunkScores, SessionConfig, SessionManager, StatePrecision,
+};
+use performer::train::{NativeModel, SyntheticConfig};
+
+const CASES: u64 = 10;
+
+/// Same seeded-case harness as prop_stream/prop_persist: rerun any
+/// failure with the printed seed.
+fn forall(name: &str, f: impl Fn(&mut Pcg64)) {
+    for seed in 0..CASES {
+        let mut rng = Pcg64::new(0xbf16 ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+fn aa_tokens(rng: &mut Pcg64, n: usize) -> Vec<u8> {
+    (0..n).map(|_| AA_BASE + rng.below(N_AA) as u8).collect()
+}
+
+fn tempdir(tag: &str, seed: u64) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("pfrm_quant_{tag}_{seed}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn bits(s: &ChunkScores) -> Vec<u32> {
+    s.logprob.iter().map(|v| v.to_bits()).collect()
+}
+
+fn bf16_cfg() -> SessionConfig {
+    SessionConfig { precision: StatePrecision::Bf16, ..Default::default() }
+}
+
+/// A model with a live redraw schedule, so the sweeps cross kernel
+/// epochs (state resets + reaccumulation under fresh features).
+fn redraw_model(seed: u64) -> Arc<NativeModel> {
+    let mut rng = Pcg64::new(seed);
+    Arc::new(NativeModel::synthetic(
+        &SyntheticConfig { redraw_every: 48, ..Default::default() },
+        &mut rng,
+    ))
+}
+
+#[test]
+fn prop_bf16_scores_track_f32_inside_the_envelope() {
+    let model = redraw_model(8101);
+    forall("bf16 vs f32 logprobs inside envelope", |rng| {
+        let mut exact = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+        let mut quant = SessionManager::new(model.clone(), bf16_cfg()).unwrap();
+        let mut worst = 0.0f32;
+        let mut sum = 0.0f64;
+        let mut count = 0usize;
+        // random chunkings, long enough to cross several redraw epochs
+        for _ in 0..6 {
+            let chunk = aa_tokens(rng, 8 + rng.below(40));
+            let a = exact.advance("u", &chunk).unwrap();
+            let b = quant.advance("u", &chunk).unwrap();
+            assert_eq!(a.offset, b.offset);
+            for (x, y) in a.logprob.iter().zip(&b.logprob) {
+                let d = (x - y).abs();
+                worst = worst.max(d);
+                sum += d as f64;
+                count += 1;
+            }
+        }
+        let mean = sum / count.max(1) as f64;
+        assert!(worst < 0.5, "max |Δ logprob| {worst} outside the 0.5-nat envelope");
+        assert!(mean < 0.1, "mean |Δ logprob| {mean} outside the 0.1-nat envelope");
+    });
+}
+
+#[test]
+fn prop_bf16_spill_rehydrate_is_bitwise_transparent() {
+    let model = redraw_model(8102);
+    let per = SessionManager::new(model.clone(), bf16_cfg()).unwrap().per_session_bytes();
+    forall("bf16 spill -> rehydrate == uninterrupted bf16", |rng| {
+        let seed_tag = rng.below(1 << 30) as u64;
+        let dir = tempdir("spill", seed_tag);
+        // one-session budget: every session switch forces a spill
+        let cfg = SessionConfig {
+            max_state_bytes: per,
+            max_sessions: 0,
+            spill_dir: Some(dir.clone()),
+            spill_pending_limit: 0,
+            precision: StatePrecision::Bf16,
+            ..Default::default()
+        };
+        let mut spilling = SessionManager::new(model.clone(), cfg).unwrap();
+        let mut reference = SessionManager::new(model.clone(), bf16_cfg()).unwrap();
+        for _ in 0..3 {
+            for s in 0..2 {
+                let chunk = aa_tokens(rng, 1 + rng.below(32));
+                let id = format!("u{s}");
+                let a = spilling.advance(&id, &chunk).unwrap();
+                let b = reference.advance(&id, &chunk).unwrap();
+                assert_eq!(
+                    bits(&a),
+                    bits(&b),
+                    "session {id}: bf16 spilled path diverged from uninterrupted"
+                );
+            }
+        }
+        spilling.sync_spills().unwrap();
+        let st = spilling.stats();
+        assert!(st.spills > 0, "the schedule must actually force spills");
+        assert_eq!(st.spill_write_failures, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn prop_bf16_snapshot_roundtrip_resumes_bitwise() {
+    let model = redraw_model(8103);
+    forall("bf16 snapshot -> bytes -> scorer resumes exactly", |rng| {
+        let mut scorer =
+            ChunkScorer::new_with_precision(model.clone(), StatePrecision::Bf16).unwrap();
+        for _ in 0..1 + rng.below(3) {
+            scorer.advance(&aa_tokens(rng, 8 + rng.below(40))).unwrap();
+        }
+        let snap = SessionSnapshot::capture("q", &scorer).unwrap();
+        assert_eq!(snap.precision(), StatePrecision::Bf16);
+        let mut restored = SessionSnapshot::from_bytes(&snap.to_bytes())
+            .unwrap()
+            .into_scorer(model.clone())
+            .unwrap();
+        assert_eq!(restored.precision(), StatePrecision::Bf16);
+        let next = aa_tokens(rng, 1 + rng.below(24));
+        assert_eq!(
+            bits(&scorer.advance(&next).unwrap()),
+            bits(&restored.advance(&next).unwrap()),
+            "bf16 snapshot round-trip must resume bit-for-bit"
+        );
+    });
+}
+
+#[test]
+fn cross_precision_restore_is_refused_both_ways() {
+    let model = redraw_model(8104);
+    let mut rng = Pcg64::new(3);
+    for (donor_p, taker_p) in
+        [(StatePrecision::F32, StatePrecision::Bf16), (StatePrecision::Bf16, StatePrecision::F32)]
+    {
+        let dir = tempdir("xprec", donor_p.bytes_per_entry() as u64);
+        let donor_cfg = SessionConfig { precision: donor_p, ..Default::default() };
+        let mut donor = SessionManager::new(model.clone(), donor_cfg).unwrap();
+        donor.advance("a", &aa_tokens(&mut rng, 16)).unwrap();
+        donor.checkpoint_all(&dir).unwrap();
+
+        let taker_cfg = SessionConfig { precision: taker_p, ..Default::default() };
+        let mut taker = SessionManager::new(model.clone(), taker_cfg).unwrap();
+        let err = taker.restore_from(&dir).unwrap_err().to_string();
+        assert!(
+            err.contains(donor_p.name()) && err.contains(taker_p.name()),
+            "refusal must name both precisions, got: {err}"
+        );
+        assert!(taker.is_empty(), "a refused restore must adopt nothing");
+
+        // same-precision restore of the same checkpoint works
+        let ok_cfg = SessionConfig { precision: donor_p, ..Default::default() };
+        let mut ok = SessionManager::new(model.clone(), ok_cfg).unwrap();
+        assert_eq!(ok.restore_from(&dir).unwrap(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn bf16_halves_per_session_resident_bytes() {
+    let model = redraw_model(8105);
+    let mut rng = Pcg64::new(4);
+    let mut exact = SessionManager::new(model.clone(), SessionConfig::default()).unwrap();
+    let mut quant = SessionManager::new(model.clone(), bf16_cfg()).unwrap();
+    assert_eq!(
+        2 * quant.per_session_bytes(),
+        exact.per_session_bytes(),
+        "bf16 prefix sums must cost exactly half the f32 bytes"
+    );
+    let chunk = aa_tokens(&mut rng, 24);
+    exact.advance("u", &chunk).unwrap();
+    quant.advance("u", &chunk).unwrap();
+    let (se, sq) = (exact.stats(), quant.stats());
+    assert_eq!(2 * sq.per_session_bytes, se.per_session_bytes);
+    assert_eq!(2 * sq.resident_bytes, se.resident_bytes);
+}

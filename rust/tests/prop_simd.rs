@@ -1,0 +1,202 @@
+//! Property tests for the SIMD dense-core kernels: every vector level a
+//! build + host supports is compared against the serial oracle.
+//!
+//! Oracle discipline (mirrors `tensor::simd`'s module docs):
+//!   * `axpy` (and everything built on it — all matmul paths) is
+//!     **bitwise** identical across levels: mul + add per lane, never
+//!     FMA, k-order preserved;
+//!   * `dot` and the softmax sum re-associate the reduction, so they get
+//!     a **tolerance** oracle;
+//!   * the vector exp is a polynomial, not libm, so `fused_exp_scale`
+//!     and the softmax exponentials get a tolerance oracle too.
+//!
+//! The process-global dispatch override is mutated by exactly one test
+//! (`global_override_round_trip_and_matmul_paths`) — every other test
+//! uses the explicit-level `_at` entry points, which never read the
+//! global, so the default parallel test runner is race-free. This lives
+//! in its own integration binary (not the lib tests) for the same
+//! reason: lib tests pin bitwise behaviour at the active level and must
+//! not observe a transient override from a sibling thread.
+
+use performer::rng::Pcg64;
+use performer::tensor::simd::{
+    self, axpy_at, dot_at, fused_exp_scale_at, softmax_row_at, supported_levels,
+};
+use performer::tensor::{
+    active_level, matmul_at_b, matmul_block, matmul_rows_tiled, set_level_override, Mat,
+    SimdLevel,
+};
+
+/// Lengths that exercise every tail path: empty, sub-lane, one SSE2/NEON
+/// lane ± 1, one AVX2 lane ± 1, several lanes + ragged tail.
+const LENS: &[usize] = &[0, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 100, 257];
+
+fn gauss(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    rng.gaussian_vec(n)
+}
+
+#[test]
+fn axpy_is_bitwise_identical_across_levels() {
+    let mut rng = Pcg64::new(11);
+    for &n in LENS {
+        let x = gauss(&mut rng, n);
+        let y0 = gauss(&mut rng, n);
+        let alpha = rng.gaussian() as f32;
+        let mut want = y0.clone();
+        axpy_at(SimdLevel::Scalar, alpha, &x, &mut want);
+        for level in supported_levels() {
+            let mut got = y0.clone();
+            axpy_at(level, alpha, &x, &mut got);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "axpy n={n} level={} lane {i}: {w} vs {g}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dot_matches_serial_within_reduction_tolerance() {
+    let mut rng = Pcg64::new(12);
+    for &n in LENS {
+        let a = gauss(&mut rng, n);
+        let b = gauss(&mut rng, n);
+        let want = dot_at(SimdLevel::Scalar, &a, &b);
+        // re-associated sum: error scales with the absolute-value mass
+        let mass: f32 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+        let tol = 1e-6 * mass.max(1.0);
+        for level in supported_levels() {
+            let got = dot_at(level, &a, &b);
+            assert!(
+                (want - got).abs() <= tol,
+                "dot n={n} level={}: {want} vs {got} (tol {tol})",
+                level.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_exp_scale_matches_libm_oracle() {
+    let mut rng = Pcg64::new(13);
+    for &n in LENS {
+        // spread values across the interesting range incl. the clamp edge
+        let base: Vec<f32> =
+            (0..n).map(|_| rng.uniform_in(-30.0, 12.0) as f32).collect();
+        let (sub, clamp, scale, eps) = (1.5f32, 8.0f32, 0.37f32, 1e-6f32);
+        let mut want = base.clone();
+        fused_exp_scale_at(SimdLevel::Scalar, &mut want, sub, clamp, scale, eps);
+        for level in supported_levels() {
+            let mut got = base.clone();
+            fused_exp_scale_at(level, &mut got, sub, clamp, scale, eps);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                let tol = 2e-6 * w.abs().max(1e-6);
+                assert!(
+                    (w - g).abs() <= tol,
+                    "fused_exp n={n} level={} lane {i}: {w} vs {g}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn softmax_rows_normalize_and_match_serial() {
+    let mut rng = Pcg64::new(14);
+    for &n in LENS {
+        if n == 0 {
+            continue;
+        }
+        let base = gauss(&mut rng, n);
+        let mut want = base.clone();
+        softmax_row_at(SimdLevel::Scalar, &mut want);
+        for level in supported_levels() {
+            let mut got = base.clone();
+            softmax_row_at(level, &mut got);
+            let sum: f32 = got.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "softmax n={n} sums to {sum}");
+            for (w, g) in want.iter().zip(&got) {
+                assert!(
+                    (w - g).abs() <= 1e-5,
+                    "softmax n={n} level={}: {w} vs {g}",
+                    level.name()
+                );
+            }
+        }
+    }
+}
+
+/// The one test allowed to touch the process-global dispatch override.
+/// Covers the override round trip (set / unsupported fallback / clear)
+/// and, while each level is pinned, re-runs the matmul entry points —
+/// which read the global internally — against the scalar-pinned result.
+/// All matmul paths are axpy-based with preserved k-order, so they must
+/// be **bitwise** identical across levels and tile choices.
+#[test]
+fn global_override_round_trip_and_matmul_paths() {
+    let detected = set_level_override(None);
+    assert_eq!(active_level(), detected);
+
+    // scalar pin always holds
+    assert_eq!(set_level_override(Some(SimdLevel::Scalar)), SimdLevel::Scalar);
+
+    // an unsupported request falls back to the detected level
+    let foreign = if cfg!(target_arch = "x86_64") { SimdLevel::Neon } else { SimdLevel::Avx2 };
+    if !simd::supported(foreign) {
+        assert_eq!(set_level_override(Some(foreign)), detected);
+    }
+
+    // matmul bitwise invariance: pin scalar for the oracle, then compare
+    // every supported level and several depth tiles against it
+    let (m, k, n) = (13, 37, 9);
+    let mut rng = Pcg64::new(15);
+    let a = Mat::from_vec(m, k, rng.gaussian_vec(m * k));
+    let b = Mat::from_vec(k, n, rng.gaussian_vec(k * n));
+    // same row count as `a`, for the A^T @ B kernel
+    let c = Mat::from_vec(m, n, rng.gaussian_vec(m * n));
+    set_level_override(Some(SimdLevel::Scalar));
+    let want = a.matmul(&b);
+    let want_atb = matmul_at_b(&a, &c);
+    let mut want_blk = Mat::zeros(m - 2, n);
+    matmul_block(&a, 1, m - 1, 0, &b, &mut want_blk);
+
+    for level in supported_levels() {
+        set_level_override(Some(level));
+        let got = a.matmul(&b);
+        assert!(
+            want.data.iter().zip(&got.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "matmul not bitwise at level {}",
+            level.name()
+        );
+        for tile in [1usize, 5, 64, 512, 10_000] {
+            let mut tiled = vec![0.0f32; m * n];
+            matmul_rows_tiled(&a, 0, m, &b, &mut tiled, tile);
+            assert!(
+                want.data.iter().zip(&tiled).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "tiled matmul not bitwise at level {} tile {tile}",
+                level.name()
+            );
+        }
+        let got_atb = matmul_at_b(&a, &c);
+        assert!(
+            want_atb.data.iter().zip(&got_atb.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "matmul_at_b not bitwise at level {}",
+            level.name()
+        );
+        let mut got_blk = Mat::zeros(m - 2, n);
+        matmul_block(&a, 1, m - 1, 0, &b, &mut got_blk);
+        assert!(
+            want_blk.data.iter().zip(&got_blk.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "matmul_block not bitwise at level {}",
+            level.name()
+        );
+    }
+
+    // clearing the override restores detection
+    assert_eq!(set_level_override(None), detected);
+}
