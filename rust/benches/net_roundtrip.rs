@@ -1,0 +1,159 @@
+//! Wire-tier bench: what serving over TCP costs versus calling the
+//! coordinator in-process. One worker on loopback, one blocking
+//! client, the same seeded chunk schedule both ways — so the delta is
+//! exactly the frame codec + kernel round trip, not the model.
+//!
+//!   cargo bench --bench net_roundtrip            # full sweep
+//!   cargo bench --bench net_roundtrip -- --test  # smoke mode (CI)
+//!
+//! Exits non-zero if the wire path changes a single score bit — the
+//! transport must be invisible to the numbers. Writes BENCH_net.json
+//! (p50/p95 per-request latency and tokens/sec, both paths) for the
+//! perf trajectory.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use performer::benchlib::{fmt_secs, Report};
+use performer::coordinator::Coordinator;
+use performer::jsonx::{num, obj, s};
+use performer::net::{Client, Server, ServerConfig};
+use performer::protein::{Corpus, CorpusConfig};
+use performer::rng::Pcg64;
+use performer::runtime::EngineHandle;
+use performer::stream::SessionConfig;
+use performer::train::{NativeModel, SyntheticConfig};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn coordinator(pool: &str) -> anyhow::Result<Coordinator> {
+    let model = Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut Pcg64::new(0)));
+    let mut coord = Coordinator::new(EngineHandle::disconnected(std::env::temp_dir()));
+    coord.start_stream_pool(pool, model, SessionConfig::default())?;
+    Ok(coord)
+}
+
+/// `[round][session] -> tokens`, identical for both paths.
+fn schedule(rounds: usize, sessions: usize, chunk: usize) -> Vec<Vec<Vec<u8>>> {
+    let corpus = Corpus::generate(CorpusConfig::default());
+    let mut rng = Pcg64::new(42);
+    (0..rounds)
+        .map(|_| {
+            (0..sessions)
+                .map(|_| corpus.concat_stream(chunk, 1, &mut rng).pop().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--test") || std::env::var("STREAM_SMOKE").is_ok();
+    let (chunk, rounds, sessions) = if smoke {
+        (64usize, 4usize, 2usize)
+    } else {
+        (
+            env_usize("NET_CHUNK", 256),
+            env_usize("NET_ROUNDS", 24),
+            env_usize("NET_SESSIONS", 4),
+        )
+    };
+    let pool = "native";
+    let plan = schedule(rounds, sessions, chunk);
+    let total_tokens = (rounds * sessions * chunk) as f64;
+
+    // ---- in-process baseline: coordinator driven directly ----
+    let coord = coordinator(pool)?;
+    let mut local_lat = Vec::with_capacity(rounds * sessions);
+    let mut local_bits: Vec<u32> = Vec::new();
+    let t0 = Instant::now();
+    for round in &plan {
+        for (sid, tokens) in round.iter().enumerate() {
+            let t = Instant::now();
+            let resp = coord.stream_chunk(pool, &format!("user-{sid}"), tokens.clone())?;
+            local_lat.push(t.elapsed().as_secs_f64());
+            let scores = resp.scores.expect("chunk response carries scores");
+            local_bits.extend(scores.logprob.iter().map(|v| v.to_bits()));
+        }
+    }
+    let local_total = t0.elapsed().as_secs_f64();
+
+    // ---- the same schedule through a loopback TCP worker ----
+    let srv = Server::start(Arc::new(coordinator(pool)?), "127.0.0.1:0", ServerConfig::default())?;
+    let mut client = Client::connect(&srv.local_addr().to_string())?;
+    let mut wire_lat = Vec::with_capacity(rounds * sessions);
+    let mut wire_bits: Vec<u32> = Vec::new();
+    let t0 = Instant::now();
+    for round in &plan {
+        for (sid, tokens) in round.iter().enumerate() {
+            let t = Instant::now();
+            let scores = client.submit(pool, &format!("user-{sid}"), tokens)?;
+            wire_lat.push(t.elapsed().as_secs_f64());
+            wire_bits.extend(scores.logprob.iter().map(|v| v.to_bits()));
+        }
+    }
+    let wire_total = t0.elapsed().as_secs_f64();
+    assert_eq!(wire_bits, local_bits, "the wire path changed score bits");
+
+    local_lat.sort_by(|a, b| a.total_cmp(b));
+    wire_lat.sort_by(|a, b| a.total_cmp(b));
+    let (lp50, lp95) = (percentile(&local_lat, 0.50), percentile(&local_lat, 0.95));
+    let (wp50, wp95) = (percentile(&wire_lat, 0.50), percentile(&wire_lat, 0.95));
+    let local_tps = total_tokens / local_total.max(1e-12);
+    let wire_tps = total_tokens / wire_total.max(1e-12);
+
+    let mut rep = Report::new(
+        &format!(
+            "Wire round trip vs in-process — {sessions} session(s) x {rounds} rounds x \
+             {chunk} tokens"
+        ),
+        &["path", "p50", "p95", "tokens_per_s"],
+    );
+    rep.row(vec![
+        "in-process".into(),
+        fmt_secs(lp50),
+        fmt_secs(lp95),
+        format!("{local_tps:.0}"),
+    ]);
+    rep.row(vec![
+        "loopback TCP".into(),
+        fmt_secs(wp50),
+        fmt_secs(wp95),
+        format!("{wire_tps:.0}"),
+    ]);
+    println!("{}", rep.render());
+    println!(
+        "wire overhead: {:.2}x on p50 ({} -> {})\n",
+        wp50 / lp50.max(1e-12),
+        fmt_secs(lp50),
+        fmt_secs(wp50)
+    );
+
+    let json = obj(vec![
+        ("bench", s("net_roundtrip")),
+        ("mode", s(if smoke { "smoke" } else { "full" })),
+        ("chunk", num(chunk as f64)),
+        ("rounds", num(rounds as f64)),
+        ("sessions", num(sessions as f64)),
+        ("inproc_p50_secs", num(lp50)),
+        ("inproc_p95_secs", num(lp95)),
+        ("inproc_tokens_per_s", num(local_tps)),
+        ("wire_p50_secs", num(wp50)),
+        ("wire_p95_secs", num(wp95)),
+        ("wire_tokens_per_s", num(wire_tps)),
+        ("wire_overhead_p50_x", num(wp50 / lp50.max(1e-12))),
+    ]);
+    std::fs::write("BENCH_net.json", json.to_string() + "\n")?;
+    println!("wrote BENCH_net.json");
+    println!("PASS: loopback serving is bitwise-identical to in-process");
+    Ok(())
+}

@@ -273,6 +273,18 @@ impl Coordinator {
         self.stream_control(pool, StreamOp::CheckpointDelta(dir.to_path_buf()))
     }
 
+    /// Evacuate a stream pool: export every live session into `dir`
+    /// (exactly [`Self::checkpoint_all`]'s barrier semantics) and then
+    /// close them all, leaving the pool empty but running. After a
+    /// successful drain the sessions exist *only* in the export — the
+    /// peer that adopts it via [`Self::restore_from`] becomes their
+    /// sole owner, which is what makes the networked router's live
+    /// rebalance (and drain-on-shutdown) safe. Returns the number of
+    /// sessions exported.
+    pub fn drain_stream(&self, pool: &str, dir: &std::path::Path) -> Result<usize> {
+        self.stream_control(pool, StreamOp::Drain(dir.to_path_buf()))
+    }
+
     /// Adopt every session checkpointed in `dir` into a stream pool.
     /// All-or-nothing, and an id collision with a live session is an
     /// error. Returns the number of sessions adopted.

@@ -60,6 +60,11 @@ pub enum StreamOp {
     CheckpointDelta(PathBuf),
     /// adopt every session checkpointed in the directory
     RestoreFrom(PathBuf),
+    /// evacuate: snapshot every live session into the directory, then
+    /// close them all (same barrier semantics as
+    /// [`Self::CheckpointAll`]) — the migration hand-off the networked
+    /// router's live rebalance is built on
+    Drain(PathBuf),
 }
 
 /// One streaming request: the next chunk of a session's token stream, a
@@ -229,6 +234,10 @@ fn serve_stream_batch(batch: Vec<StreamRequest>, mgr: &mut SessionManager, metri
             StreamOp::RestoreFrom(dir) => {
                 flush_run(&mut run, &batch, mgr, &mut outcomes);
                 outcomes[i] = Outcome::Control(mgr.restore_from(dir));
+            }
+            StreamOp::Drain(dir) => {
+                flush_run(&mut run, &batch, mgr, &mut outcomes);
+                outcomes[i] = Outcome::Control(mgr.drain_to(dir));
             }
         }
     }

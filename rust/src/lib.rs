@@ -12,8 +12,11 @@
 //!   driver, serving router/batcher, synthetic protein data pipeline,
 //!   a native FAVOR implementation for analysis and benchmarking, the
 //!   `stream` subsystem for stateful chunked long-context inference,
-//!   and the `persist` subsystem that makes those sessions durable
-//!   (spill-to-disk eviction, checkpoint/restore migration).
+//!   the `persist` subsystem that makes those sessions durable
+//!   (spill-to-disk eviction, checkpoint/restore migration), and the
+//!   `net` subsystem that puts the whole thing on the wire (TCP frame
+//!   protocol, load-shedding server, shard router with live session
+//!   migration).
 //!
 //! See `DESIGN.md` for the system inventory; the experiment harness is
 //! the `xp` binary (`rust/src/bin/xp.rs`), which writes its measured
@@ -33,6 +36,7 @@ pub mod coordinator;
 pub mod favor;
 pub mod jsonx;
 pub mod linalg;
+pub mod net;
 pub mod obs;
 pub mod persist;
 pub mod protein;

@@ -1,0 +1,180 @@
+//! Blocking wire client: one `TcpStream`, one request in flight,
+//! typed wrappers over the [`Msg`] ops.
+//!
+//! The client transparently absorbs [`Msg::RetryAfter`] answers (the
+//! server's load-shed signal) by sleeping the hinted back-off and
+//! re-sending — bounded by [`Client::retries`]; set it to 0 to surface
+//! the shed as an error instead (the load-shed unit test does). A
+//! re-sent submit is safe because a shed request never reached the
+//! coordinator's queue, so the stream did not advance.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::stream::ChunkScores;
+
+use super::proto::{read_frame, write_frame, Msg};
+
+/// A blocking connection to a [`super::Server`] or [`super::Router`].
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+    /// how many `RetryAfter` answers to absorb before giving up
+    /// (0 = surface the first shed as an error)
+    pub retries: u32,
+    /// ceiling on the per-attempt back-off sleep, whatever the server
+    /// hints
+    pub max_backoff: Duration,
+}
+
+impl Client {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client {
+            stream,
+            next_id: 1,
+            retries: 8,
+            max_backoff: Duration::from_millis(250),
+        })
+    }
+
+    /// Connect, retrying for up to `timeout` — rides out a peer that
+    /// is still binding its listener (process start-up races in the
+    /// multi-process smoke).
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client> {
+        let t0 = Instant::now();
+        loop {
+            match Self::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if t0.elapsed() >= timeout => {
+                    return Err(e).with_context(|| format!("gave up on {addr} after {timeout:?}"))
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    /// Send one request and return its (id-checked) reply, absorbing
+    /// up to [`Self::retries`] `RetryAfter` answers.
+    pub fn call(&mut self, msg: &Msg) -> Result<Msg> {
+        let mut attempt = 0u32;
+        loop {
+            let id = self.next_id;
+            self.next_id += 1;
+            write_frame(&mut self.stream, id, msg)?;
+            let (rid, reply) = read_frame(&mut self.stream)?;
+            ensure!(rid == id, "peer answered request {rid}, expected {id}");
+            match reply {
+                Msg::RetryAfter { millis } if attempt < self.retries => {
+                    attempt += 1;
+                    std::thread::sleep(
+                        Duration::from_millis(u64::from(millis)).min(self.max_backoff),
+                    );
+                }
+                Msg::RetryAfter { millis } => bail!(
+                    "peer busy: shed {} attempt(s) of a {} (last retry-after hint {millis} ms)",
+                    attempt + 1,
+                    msg.name()
+                ),
+                other => return Ok(other),
+            }
+        }
+    }
+
+    /// Verify `pool` exists on the serving peer.
+    pub fn open(&mut self, pool: &str, session: &str) -> Result<()> {
+        let msg = Msg::Open { pool: pool.into(), session: session.into() };
+        self.call(&msg)?.into_ok().map(|_| ())
+    }
+
+    /// Score `tokens` as the session's next chunk.
+    pub fn submit(&mut self, pool: &str, session: &str, tokens: &[u8]) -> Result<ChunkScores> {
+        let msg =
+            Msg::Submit { pool: pool.into(), session: session.into(), tokens: tokens.to_vec() };
+        let (sid, scores) = self.call(&msg)?.into_chunk_scores()?;
+        ensure!(sid == session, "scores for session '{sid}', expected '{session}'");
+        Ok(scores)
+    }
+
+    /// End a stream, releasing its carried state on the server.
+    pub fn close(&mut self, pool: &str, session: &str) -> Result<()> {
+        let msg = Msg::Close { pool: pool.into(), session: session.into() };
+        self.call(&msg)?.into_ok().map(|_| ())
+    }
+
+    /// Export the pool's sessions to `dir` on the *server's*
+    /// filesystem; returns the sessions written.
+    pub fn checkpoint(&mut self, pool: &str, dir: &str, delta: bool) -> Result<usize> {
+        let msg = Msg::Checkpoint { pool: pool.into(), dir: dir.into(), delta };
+        Ok(self.call(&msg)?.into_ok()? as usize)
+    }
+
+    /// Adopt sessions from `dir` on the *server's* filesystem; returns
+    /// the sessions adopted.
+    pub fn restore(&mut self, pool: &str, dir: &str) -> Result<usize> {
+        let msg = Msg::Restore { pool: pool.into(), dir: dir.into() };
+        Ok(self.call(&msg)?.into_ok()? as usize)
+    }
+
+    /// Evacuate every live session of the pool into a `PFRMBNDL` blob;
+    /// returns (session count, bundle bytes).
+    pub fn drain_export(&mut self, pool: &str) -> Result<(u64, Vec<u8>)> {
+        match self.call(&Msg::DrainExport { pool: pool.into() })? {
+            Msg::Export { sessions, bundle } => Ok((sessions, bundle)),
+            Msg::Error { message } => bail!("server: {message}"),
+            other => bail!("expected an export frame, got {}", other.name()),
+        }
+    }
+
+    /// Hand a `PFRMBNDL` blob to the peer for adoption; returns the
+    /// sessions adopted.
+    pub fn restore_bundle(&mut self, pool: &str, bundle: Vec<u8>) -> Result<usize> {
+        let msg = Msg::RestoreBundle { pool: pool.into(), bundle };
+        Ok(self.call(&msg)?.into_ok()? as usize)
+    }
+
+    /// Ask a router to live-rebalance: drain shard `from` into shard
+    /// `to`; returns the sessions moved.
+    pub fn admin_drain(&mut self, pool: &str, from: u32, to: u32) -> Result<u64> {
+        self.call(&Msg::AdminDrain { pool: pool.into(), from, to })?.into_ok()
+    }
+
+    /// One-shot fill-mask through a batched pool; returns the filled
+    /// sequence plus `(position, token, probability)` predictions.
+    #[allow(clippy::type_complexity)]
+    pub fn fill_mask(
+        &mut self,
+        model: &str,
+        tokens: Vec<u8>,
+    ) -> Result<(Vec<u8>, Vec<(usize, u8, f32)>)> {
+        match self.call(&Msg::FillMask { model: model.into(), tokens })? {
+            Msg::Filled { filled, positions, tokens, probs } => {
+                let preds = positions
+                    .into_iter()
+                    .zip(tokens)
+                    .zip(probs)
+                    .map(|((p, t), pr)| (p as usize, t, pr))
+                    .collect();
+                Ok((filled, preds))
+            }
+            Msg::Error { message } => bail!("server: {message}"),
+            other => bail!("expected a filled frame, got {}", other.name()),
+        }
+    }
+}
+
+impl Msg {
+    /// Unwrap an [`Msg::Ok`] reply into its affected count.
+    fn into_ok(self) -> Result<u64> {
+        match self {
+            Msg::Ok { affected } => Ok(affected),
+            Msg::Error { message } => bail!("server: {message}"),
+            other => bail!("expected an ok frame, got {}", other.name()),
+        }
+    }
+}

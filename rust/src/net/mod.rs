@@ -1,0 +1,48 @@
+//! Networked sharded serving: the wire around the in-process
+//! [`crate::coordinator::Coordinator`].
+//!
+//! The paper's pitch is linear-time attention that makes long-context
+//! protein MLM *servable*; this subsystem is the serving tier that
+//! claim cashes out into. Four pieces, all dependency-free blocking
+//! `std::net` (the build image is offline — no async runtime, no HTTP
+//! crate):
+//!
+//! * [`proto`] — the `PFRMWIRE` frame codec: versioned, CRC32-checked
+//!   binary frames carrying the stream ops (open / submit-chunk /
+//!   scores / close / fill-mask) plus the control ops (checkpoint /
+//!   restore / drain), with the `PFRMSNAP` refuse-corruption
+//!   discipline;
+//! * [`server`] — [`Server`]: acceptor + bounded thread-per-connection
+//!   pool over one coordinator, with two-level admission control
+//!   (connection cap, [`InflightGate`]) answering overload with
+//!   explicit `RetryAfter` frames, `net_*` metrics and per-request
+//!   spans;
+//! * [`client`] — [`Client`]: blocking typed wrapper that absorbs
+//!   `RetryAfter` back-off, used by the CLI's wire mode, the router's
+//!   control plane, tests and benches alike;
+//! * [`router`] — [`Router`]: hashes session ids onto N workers over a
+//!   slot table and live-rebalances shards by draining a victim's
+//!   sessions (checkpoint-all + close) into a `PFRMBNDL` blob and
+//!   shipping it to a peer over the same protocol — clients never see
+//!   the move because the routing-table lock doubles as the migration
+//!   barrier.
+//!
+//! Because causal FAVOR compresses any prefix into a constant-size
+//! per-session state, "move this user to another machine" costs a few
+//! tens of kilobytes on the wire no matter how many tokens have
+//! streamed — the property that makes live migration practical at all.
+//!
+//! CLI surface: `performer serve addr=…` (worker), `performer route
+//! addr=… shards=…` (front), `performer stream addr=…` (client
+//! workload), `performer drain addr=… from=… to=…` (rebalance). See
+//! README §Serving over TCP and DESIGN.md §Networked serving.
+
+pub mod client;
+pub mod proto;
+pub mod router;
+pub mod server;
+
+pub use client::Client;
+pub use proto::{frame_bytes, frame_from_bytes, read_frame, write_frame, Msg, WIRE_VERSION};
+pub use router::{Router, RouterMetrics, RoutingTable, ROUTE_SLOTS};
+pub use server::{InflightGate, InflightPermit, NetMetrics, Server, ServerConfig};

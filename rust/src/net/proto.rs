@@ -1,0 +1,592 @@
+//! `PFRMWIRE` — the versioned binary frame codec of the networked
+//! serving tier.
+//!
+//! One frame per request or response, over a plain `TcpStream`:
+//!
+//! ```text
+//! "PFRMWIRE" | u32 version | u32 op | u64 request-id | u32 payload_len
+//! payload_len bytes of op-specific payload
+//! u32 CRC32 over header + payload
+//! ```
+//!
+//! All integers little-endian; floats travel as their IEEE-754 bit
+//! patterns, so scores survive the wire bit-for-bit (the CI smoke
+//! diffs score CSVs byte-identical across in-process vs networked
+//! runs). The codec follows the `PFRMSNAP` discipline: decode refuses
+//! truncation, trailing bytes, bad magic, unknown versions, absurd
+//! claimed lengths (checked against [`MAX_PAYLOAD`] *before* any
+//! allocation) and CRC mismatches outright — a frame either decodes to
+//! exactly what was sent or errors, never to a partial read.
+//!
+//! The request-id is echoed on the response frame, so a client can pin
+//! each answer to its question even through a forwarding router.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::persist::crc32;
+use crate::stream::ChunkScores;
+
+/// Magic prefix of every frame.
+pub const WIRE_MAGIC: &[u8; 8] = b"PFRMWIRE";
+
+/// Current wire protocol version.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Fixed frame header length: magic + version + op + request-id +
+/// payload length.
+pub const HEADER_LEN: usize = 8 + 4 + 4 + 8 + 4;
+
+/// Hard ceiling on a frame's payload — a corrupt or hostile length
+/// field is refused before any buffer is allocated. Sized to fit a
+/// full migration bundle of a busy shard with room to spare.
+pub const MAX_PAYLOAD: usize = 256 << 20;
+
+// op tags: requests
+const OP_OPEN: u32 = 1;
+const OP_SUBMIT: u32 = 2;
+const OP_CLOSE: u32 = 3;
+const OP_FILL_MASK: u32 = 4;
+const OP_CHECKPOINT: u32 = 5;
+const OP_RESTORE: u32 = 6;
+const OP_DRAIN_EXPORT: u32 = 7;
+const OP_RESTORE_BUNDLE: u32 = 8;
+const OP_ADMIN_DRAIN: u32 = 9;
+// op tags: responses
+const OP_OK: u32 = 100;
+const OP_SCORES: u32 = 101;
+const OP_FILLED: u32 = 102;
+const OP_EXPORT: u32 = 103;
+const OP_RETRY_AFTER: u32 = 104;
+const OP_ERROR: u32 = 105;
+
+/// Every message the wire carries — requests and responses share the
+/// frame format and differ only in op tag.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// request: verify a stream pool exists and the peer is serving
+    /// (a session is created lazily by its first [`Self::Submit`])
+    Open {
+        /// stream pool the session will live in
+        pool: String,
+        /// session id (advisory here; routing hashes it)
+        session: String,
+    },
+    /// request: score `tokens` as the session's next chunk
+    Submit {
+        /// stream pool the session lives in
+        pool: String,
+        /// session id
+        session: String,
+        /// the next chunk of the session's token stream
+        tokens: Vec<u8>,
+    },
+    /// request: end a stream, releasing its carried state
+    Close {
+        /// stream pool the session lives in
+        pool: String,
+        /// session id
+        session: String,
+    },
+    /// request: one-shot fill-mask inference through a batched pool
+    FillMask {
+        /// model pool (artifact tag) to run on
+        model: String,
+        /// token sequence with mask tokens to fill
+        tokens: Vec<u8>,
+    },
+    /// request: export a pool's sessions to a directory on the
+    /// *server's* filesystem (full or delta)
+    Checkpoint {
+        /// stream pool to export
+        pool: String,
+        /// server-side target directory
+        dir: String,
+        /// true = incremental (`checkpoint_delta`), false = full
+        delta: bool,
+    },
+    /// request: adopt sessions from a directory on the *server's*
+    /// filesystem
+    Restore {
+        /// stream pool to adopt into
+        pool: String,
+        /// server-side source directory
+        dir: String,
+    },
+    /// request: evacuate every live session and return them as a
+    /// `PFRMBNDL` blob (the migration hand-off; answered by
+    /// [`Self::Export`])
+    DrainExport {
+        /// stream pool to evacuate
+        pool: String,
+    },
+    /// request: adopt every session packed in a `PFRMBNDL` blob
+    RestoreBundle {
+        /// stream pool to adopt into
+        pool: String,
+        /// the bundle bytes ([`crate::persist::bundle_dir`])
+        bundle: Vec<u8>,
+    },
+    /// request (router only): live-rebalance — drain shard `from` and
+    /// migrate its sessions into shard `to`
+    AdminDrain {
+        /// stream pool on the workers
+        pool: String,
+        /// shard index to evacuate
+        from: u32,
+        /// shard index that adopts the sessions
+        to: u32,
+    },
+    /// response: generic success, with an op-specific count (sessions
+    /// exported/adopted/moved; 0 where meaningless)
+    Ok {
+        /// op-specific affected count
+        affected: u64,
+    },
+    /// response to [`Self::Submit`]: per-token scores for the chunk
+    Scores {
+        /// session the scores belong to
+        session: String,
+        /// stream offset of the chunk's first token
+        offset: u64,
+        /// per-token log-probability of the true token
+        logprob: Vec<f32>,
+        /// per-token argmax prediction
+        argmax: Vec<u8>,
+        /// per-token argmax probability
+        argmax_prob: Vec<f32>,
+    },
+    /// response to [`Self::FillMask`]
+    Filled {
+        /// the input with every answerable mask filled
+        filled: Vec<u8>,
+        /// filled positions, aligned with `tokens`/`probs`
+        positions: Vec<u32>,
+        /// predicted token per filled position
+        tokens: Vec<u8>,
+        /// prediction probability per filled position
+        probs: Vec<f32>,
+    },
+    /// response to [`Self::DrainExport`]: the evacuated sessions
+    Export {
+        /// how many sessions the bundle holds
+        sessions: u64,
+        /// `PFRMBNDL` blob ([`crate::persist::unbundle_into`] reads it)
+        bundle: Vec<u8>,
+    },
+    /// response: load-shed — the peer is over its admission limit;
+    /// retry after the given hint instead of queuing unboundedly
+    RetryAfter {
+        /// suggested client back-off before retrying
+        millis: u32,
+    },
+    /// response: the request failed
+    Error {
+        /// what went wrong
+        message: String,
+    },
+}
+
+impl Msg {
+    /// The message's op tag on the wire.
+    fn op(&self) -> u32 {
+        match self {
+            Msg::Open { .. } => OP_OPEN,
+            Msg::Submit { .. } => OP_SUBMIT,
+            Msg::Close { .. } => OP_CLOSE,
+            Msg::FillMask { .. } => OP_FILL_MASK,
+            Msg::Checkpoint { .. } => OP_CHECKPOINT,
+            Msg::Restore { .. } => OP_RESTORE,
+            Msg::DrainExport { .. } => OP_DRAIN_EXPORT,
+            Msg::RestoreBundle { .. } => OP_RESTORE_BUNDLE,
+            Msg::AdminDrain { .. } => OP_ADMIN_DRAIN,
+            Msg::Ok { .. } => OP_OK,
+            Msg::Scores { .. } => OP_SCORES,
+            Msg::Filled { .. } => OP_FILLED,
+            Msg::Export { .. } => OP_EXPORT,
+            Msg::RetryAfter { .. } => OP_RETRY_AFTER,
+            Msg::Error { .. } => OP_ERROR,
+        }
+    }
+
+    /// Human-readable op name, for error messages and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::Open { .. } => "open",
+            Msg::Submit { .. } => "submit",
+            Msg::Close { .. } => "close",
+            Msg::FillMask { .. } => "fill-mask",
+            Msg::Checkpoint { .. } => "checkpoint",
+            Msg::Restore { .. } => "restore",
+            Msg::DrainExport { .. } => "drain-export",
+            Msg::RestoreBundle { .. } => "restore-bundle",
+            Msg::AdminDrain { .. } => "admin-drain",
+            Msg::Ok { .. } => "ok",
+            Msg::Scores { .. } => "scores",
+            Msg::Filled { .. } => "filled",
+            Msg::Export { .. } => "export",
+            Msg::RetryAfter { .. } => "retry-after",
+            Msg::Error { .. } => "error",
+        }
+    }
+
+    /// Build a [`Self::Scores`] response from a scorer's chunk result.
+    pub fn from_scores(session: &str, s: &ChunkScores) -> Msg {
+        Msg::Scores {
+            session: session.to_string(),
+            offset: s.offset as u64,
+            logprob: s.logprob.clone(),
+            argmax: s.argmax.clone(),
+            argmax_prob: s.argmax_prob.clone(),
+        }
+    }
+
+    /// Unpack a [`Self::Scores`] response into the in-process score
+    /// type the rest of the stack speaks.
+    pub fn into_chunk_scores(self) -> Result<(String, ChunkScores)> {
+        match self {
+            Msg::Scores { session, offset, logprob, argmax, argmax_prob } => Ok((
+                session,
+                ChunkScores { offset: offset as usize, logprob, argmax, argmax_prob },
+            )),
+            Msg::Error { message } => bail!("server: {message}"),
+            other => bail!("expected a scores frame, got {}", other.name()),
+        }
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut e = Enc(Vec::new());
+        match self {
+            Msg::Open { pool, session } => {
+                e.str(pool);
+                e.str(session);
+            }
+            Msg::Submit { pool, session, tokens } => {
+                e.str(pool);
+                e.str(session);
+                e.bytes(tokens);
+            }
+            Msg::Close { pool, session } => {
+                e.str(pool);
+                e.str(session);
+            }
+            Msg::FillMask { model, tokens } => {
+                e.str(model);
+                e.bytes(tokens);
+            }
+            Msg::Checkpoint { pool, dir, delta } => {
+                e.str(pool);
+                e.str(dir);
+                e.0.push(u8::from(*delta));
+            }
+            Msg::Restore { pool, dir } => {
+                e.str(pool);
+                e.str(dir);
+            }
+            Msg::DrainExport { pool } => e.str(pool),
+            Msg::RestoreBundle { pool, bundle } => {
+                e.str(pool);
+                e.bytes(bundle);
+            }
+            Msg::AdminDrain { pool, from, to } => {
+                e.str(pool);
+                e.u32(*from);
+                e.u32(*to);
+            }
+            Msg::Ok { affected } => e.u64(*affected),
+            Msg::Scores { session, offset, logprob, argmax, argmax_prob } => {
+                e.str(session);
+                e.u64(*offset);
+                e.f32s(logprob);
+                e.bytes(argmax);
+                e.f32s(argmax_prob);
+            }
+            Msg::Filled { filled, positions, tokens, probs } => {
+                e.bytes(filled);
+                e.u32s(positions);
+                e.bytes(tokens);
+                e.f32s(probs);
+            }
+            Msg::Export { sessions, bundle } => {
+                e.u64(*sessions);
+                e.bytes(bundle);
+            }
+            Msg::RetryAfter { millis } => e.u32(*millis),
+            Msg::Error { message } => e.str(message),
+        }
+        e.0
+    }
+
+    fn decode(op: u32, payload: &[u8]) -> Result<Msg> {
+        let mut d = Dec { buf: payload };
+        let msg = match op {
+            OP_OPEN => Msg::Open { pool: d.str()?, session: d.str()? },
+            OP_SUBMIT => {
+                Msg::Submit { pool: d.str()?, session: d.str()?, tokens: d.bytes()? }
+            }
+            OP_CLOSE => Msg::Close { pool: d.str()?, session: d.str()? },
+            OP_FILL_MASK => Msg::FillMask { model: d.str()?, tokens: d.bytes()? },
+            OP_CHECKPOINT => {
+                Msg::Checkpoint { pool: d.str()?, dir: d.str()?, delta: d.u8()? != 0 }
+            }
+            OP_RESTORE => Msg::Restore { pool: d.str()?, dir: d.str()? },
+            OP_DRAIN_EXPORT => Msg::DrainExport { pool: d.str()? },
+            OP_RESTORE_BUNDLE => {
+                Msg::RestoreBundle { pool: d.str()?, bundle: d.bytes()? }
+            }
+            OP_ADMIN_DRAIN => {
+                Msg::AdminDrain { pool: d.str()?, from: d.u32()?, to: d.u32()? }
+            }
+            OP_OK => Msg::Ok { affected: d.u64()? },
+            OP_SCORES => Msg::Scores {
+                session: d.str()?,
+                offset: d.u64()?,
+                logprob: d.f32s()?,
+                argmax: d.bytes()?,
+                argmax_prob: d.f32s()?,
+            },
+            OP_FILLED => Msg::Filled {
+                filled: d.bytes()?,
+                positions: d.u32s()?,
+                tokens: d.bytes()?,
+                probs: d.f32s()?,
+            },
+            OP_EXPORT => Msg::Export { sessions: d.u64()?, bundle: d.bytes()? },
+            OP_RETRY_AFTER => Msg::RetryAfter { millis: d.u32()? },
+            OP_ERROR => Msg::Error { message: d.str()? },
+            other => bail!("unknown wire op {other}"),
+        };
+        d.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Encode one frame to bytes (header + payload + CRC32).
+pub fn frame_bytes(id: u64, msg: &Msg) -> Vec<u8> {
+    let payload = msg.encode_payload();
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + 4);
+    out.extend_from_slice(WIRE_MAGIC);
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.extend_from_slice(&msg.op().to_le_bytes());
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Write one frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, id: u64, msg: &Msg) -> Result<()> {
+    w.write_all(&frame_bytes(id, msg)).context("writing frame")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read exactly one frame. Errors on EOF mid-frame, bad magic, version
+/// mismatch, an over-[`MAX_PAYLOAD`] length claim (before allocating),
+/// CRC mismatch, or a payload that does not decode to exactly one
+/// message.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u64, Msg)> {
+    let mut header = [0u8; HEADER_LEN];
+    r.read_exact(&mut header).context("reading frame header")?;
+    ensure!(&header[..8] == WIRE_MAGIC, "bad frame magic: peer is not speaking PFRMWIRE");
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    ensure!(
+        version == WIRE_VERSION,
+        "unsupported wire version {version} (this build speaks {WIRE_VERSION})"
+    );
+    let op = u32::from_le_bytes(header[12..16].try_into().unwrap());
+    let id = u64::from_le_bytes(header[16..24].try_into().unwrap());
+    let len = u32::from_le_bytes(header[24..28].try_into().unwrap()) as usize;
+    ensure!(len <= MAX_PAYLOAD, "frame claims a {len}-byte payload, over the {MAX_PAYLOAD} cap");
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let mut crc_buf = [0u8; 4];
+    r.read_exact(&mut crc_buf).context("reading frame checksum")?;
+    let stored = u32::from_le_bytes(crc_buf);
+    let mut whole = Vec::with_capacity(HEADER_LEN + len);
+    whole.extend_from_slice(&header);
+    whole.extend_from_slice(&payload);
+    let actual = crc32(&whole);
+    ensure!(
+        stored == actual,
+        "frame checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+    );
+    let msg = Msg::decode(op, &payload)?;
+    Ok((id, msg))
+}
+
+/// Decode one frame from a byte slice, refusing trailing bytes — the
+/// strict entry point the property tests hammer.
+pub fn frame_from_bytes(bytes: &[u8]) -> Result<(u64, Msg)> {
+    let mut r = bytes;
+    let frame = read_frame(&mut r)?;
+    ensure!(r.is_empty(), "{} trailing bytes after the frame", r.len());
+    Ok(frame)
+}
+
+/// Little-endian payload writer. Vectors and strings are u32
+/// length-prefixed.
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.0.extend_from_slice(v);
+    }
+
+    fn str(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    fn u32s(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.u32(*x);
+        }
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            // bit pattern, not decimal: scores must survive bit-for-bit
+            self.u32(x.to_bits());
+        }
+    }
+}
+
+/// Strict little-endian payload reader: every read yields exactly the
+/// requested bytes or errors, claimed element counts are checked
+/// against the bytes actually present before allocating, and
+/// [`Dec::finish`] refuses leftovers.
+struct Dec<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let left = self.buf.len();
+        ensure!(left >= n, "payload truncated: wanted {n} bytes, {left} left");
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let raw = self.bytes()?;
+        String::from_utf8(raw).map_err(|_| anyhow::anyhow!("string field is not UTF-8"))
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        ensure!(n * 4 <= self.buf.len() + 3, "u32 vector claims {n} elements — truncated");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(n * 4 <= self.buf.len() + 3, "f32 vector claims {n} elements — truncated");
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_bits(self.u32()?));
+        }
+        Ok(out)
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure!(self.buf.is_empty(), "{} trailing bytes after the payload", self.buf.len());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_round_trips() {
+        let msgs = vec![
+            Msg::Open { pool: "native".into(), session: "user-0".into() },
+            Msg::Submit { pool: "native".into(), session: "u".into(), tokens: vec![1, 2, 3] },
+            Msg::Close { pool: "native".into(), session: "u".into() },
+            Msg::FillMask { model: "base".into(), tokens: vec![9, 9] },
+            Msg::Checkpoint { pool: "p".into(), dir: "/tmp/x".into(), delta: true },
+            Msg::Restore { pool: "p".into(), dir: "/tmp/x".into() },
+            Msg::DrainExport { pool: "p".into() },
+            Msg::RestoreBundle { pool: "p".into(), bundle: vec![0xde, 0xad] },
+            Msg::AdminDrain { pool: "p".into(), from: 0, to: 1 },
+            Msg::Ok { affected: 7 },
+            Msg::Scores {
+                session: "u".into(),
+                offset: 64,
+                logprob: vec![-0.5, f32::NEG_INFINITY],
+                argmax: vec![4, 5],
+                argmax_prob: vec![0.25, 1.0],
+            },
+            Msg::Filled {
+                filled: vec![1, 2],
+                positions: vec![1],
+                tokens: vec![7],
+                probs: vec![0.9],
+            },
+            Msg::Export { sessions: 2, bundle: vec![1; 32] },
+            Msg::RetryAfter { millis: 25 },
+            Msg::Error { message: "boom".into() },
+        ];
+        for (i, msg) in msgs.into_iter().enumerate() {
+            let bytes = frame_bytes(i as u64, &msg);
+            let (id, back) = frame_from_bytes(&bytes).unwrap();
+            assert_eq!(id, i as u64);
+            assert_eq!(back, msg);
+            // a re-encode of the decoded message is bitwise identical
+            assert_eq!(frame_bytes(id, &back), bytes);
+        }
+    }
+
+    #[test]
+    fn oversized_length_refused_before_allocation() {
+        let mut bytes = frame_bytes(1, &Msg::Ok { affected: 0 });
+        bytes[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+        let err = frame_from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("cap"), "wrong error: {err:#}");
+    }
+
+    #[test]
+    fn wrong_version_refused() {
+        let mut bytes = frame_bytes(1, &Msg::Ok { affected: 0 });
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = frame_from_bytes(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "wrong error: {err:#}");
+    }
+}

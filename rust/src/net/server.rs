@@ -1,0 +1,368 @@
+//! The worker-side TCP server: one acceptor plus a bounded
+//! thread-per-connection pool in front of a [`Coordinator`].
+//!
+//! Admission control happens at two gates, and both answer with an
+//! explicit [`Msg::RetryAfter`] frame instead of silently queuing:
+//!
+//! * **connection cap** (`max_conns`): a connection over the cap gets
+//!   one `RetryAfter` frame and is closed;
+//! * **inflight cap** (`max_inflight`): a [`Msg::Submit`] that cannot
+//!   take an [`InflightGate`] permit is shed — it never reaches the
+//!   coordinator's queue, so a shed request cannot advance a stream —
+//!   while already-admitted requests run to completion.
+//!
+//! Every request is span-traced (`net_request`) and counted in the
+//! coordinator's metrics registry under `net_*` (requests, sheds,
+//! errors, open connections, inflight, and a log2 latency histogram),
+//! so one Prometheus dump covers the wire tier and the serving core it
+//! fronts.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Coordinator;
+use crate::obs::{trace, Counter, Gauge, Histogram, MetricsRegistry};
+use crate::persist;
+
+use super::proto::{read_frame, write_frame, Msg};
+
+/// Tuning knobs of a [`Server`].
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// most simultaneous client connections; one over the cap is
+    /// answered `RetryAfter` and closed (0 = unbounded)
+    pub max_conns: usize,
+    /// most submit requests admitted past the [`InflightGate`] at once;
+    /// the rest are shed with `RetryAfter` (0 = unbounded)
+    pub max_inflight: usize,
+    /// back-off hint carried by every `RetryAfter` frame
+    pub retry_after_ms: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { max_conns: 64, max_inflight: 256, retry_after_ms: 25 }
+    }
+}
+
+/// The wire tier's instruments, registered under `net_*` in the
+/// coordinator's registry.
+pub struct NetMetrics {
+    /// requests answered (any op, any outcome)
+    pub requests: Counter,
+    /// requests shed with `RetryAfter` (inflight gate or connection cap)
+    pub sheds: Counter,
+    /// requests answered with an error frame
+    pub errors: Counter,
+    /// client connections currently open
+    pub conns: Gauge,
+    /// submit requests currently past the admission gate
+    pub inflight: Gauge,
+    /// per-request service latency, µs log2 buckets
+    pub latency_us: Histogram,
+}
+
+impl NetMetrics {
+    /// Instruments registered under `prefix_*` in `reg`.
+    pub fn registered(reg: &MetricsRegistry, prefix: &str) -> NetMetrics {
+        NetMetrics {
+            requests: reg.counter(&format!("{prefix}_requests_total")),
+            sheds: reg.counter(&format!("{prefix}_sheds_total")),
+            errors: reg.counter(&format!("{prefix}_errors_total")),
+            conns: reg.gauge(&format!("{prefix}_open_conns")),
+            inflight: reg.gauge(&format!("{prefix}_inflight")),
+            latency_us: reg.histogram(&format!("{prefix}_latency_us")),
+        }
+    }
+}
+
+/// Counting admission gate for in-flight submits: lock-free
+/// try-acquire, permit released on drop. A capacity of 0 means
+/// unbounded (the gate still counts, for the `net_inflight` gauge).
+pub struct InflightGate {
+    cap: usize,
+    cur: Arc<AtomicUsize>,
+    gauge: Gauge,
+}
+
+/// An admitted request's slot in the [`InflightGate`]; dropping it
+/// frees the slot.
+pub struct InflightPermit {
+    cur: Arc<AtomicUsize>,
+    gauge: Gauge,
+}
+
+impl InflightGate {
+    /// A gate admitting at most `cap` holders (0 = unbounded),
+    /// mirroring its occupancy into `gauge`.
+    pub fn new(cap: usize, gauge: Gauge) -> InflightGate {
+        InflightGate { cap, cur: Arc::new(AtomicUsize::new(0)), gauge }
+    }
+
+    /// Take a slot, or `None` when the gate is full — the caller sheds.
+    pub fn try_acquire(&self) -> Option<InflightPermit> {
+        let admitted = self
+            .cur
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                if self.cap != 0 && cur >= self.cap {
+                    None
+                } else {
+                    Some(cur + 1)
+                }
+            })
+            .is_ok();
+        if !admitted {
+            return None;
+        }
+        self.gauge.set(self.cur.load(Ordering::Relaxed) as u64);
+        Some(InflightPermit { cur: self.cur.clone(), gauge: self.gauge.clone() })
+    }
+}
+
+impl Drop for InflightPermit {
+    fn drop(&mut self) {
+        let before = self.cur.fetch_sub(1, Ordering::AcqRel);
+        self.gauge.set(before.saturating_sub(1) as u64);
+    }
+}
+
+/// A running TCP server over one [`Coordinator`]. Dropping it stops
+/// the acceptor; established connections drain on their own threads.
+pub struct Server {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    gate: Arc<InflightGate>,
+    metrics: Arc<NetMetrics>,
+}
+
+impl Server {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port — read
+    /// it back via [`Self::local_addr`]) and start serving `coord`.
+    pub fn start(coord: Arc<Coordinator>, addr: &str, cfg: ServerConfig) -> Result<Server> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding server to {addr}"))?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let metrics = Arc::new(NetMetrics::registered(&coord.registry(), "net"));
+        let gate = Arc::new(InflightGate::new(cfg.max_inflight, metrics.inflight.clone()));
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let accept_stop = stop.clone();
+        let accept_gate = gate.clone();
+        let accept_metrics = metrics.clone();
+        let acceptor = std::thread::Builder::new().name("net-accept".into()).spawn(move || {
+            let open = Arc::new(AtomicUsize::new(0));
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                if cfg.max_conns != 0 && open.load(Ordering::Acquire) >= cfg.max_conns {
+                    // over the connection cap: answer loudly, then close
+                    let mut s = stream;
+                    let retry = Msg::RetryAfter { millis: cfg.retry_after_ms };
+                    let _ = write_frame(&mut s, 0, &retry);
+                    accept_metrics.sheds.inc();
+                    continue;
+                }
+                open.fetch_add(1, Ordering::AcqRel);
+                accept_metrics.conns.set(open.load(Ordering::Relaxed) as u64);
+                let coord = coord.clone();
+                let gate = accept_gate.clone();
+                let metrics = accept_metrics.clone();
+                let open2 = open.clone();
+                let spawned = std::thread::Builder::new().name("net-conn".into()).spawn(
+                    move || {
+                        let _ = handle_conn(stream, &coord, &gate, &metrics, cfg.retry_after_ms);
+                        let before = open2.fetch_sub(1, Ordering::AcqRel);
+                        metrics.conns.set(before.saturating_sub(1) as u64);
+                    },
+                );
+                if spawned.is_err() {
+                    let before = open.fetch_sub(1, Ordering::AcqRel);
+                    accept_metrics.conns.set(before.saturating_sub(1) as u64);
+                }
+            }
+        })?;
+        Ok(Server { local_addr, stop, acceptor: Some(acceptor), gate, metrics })
+    }
+
+    /// The address the server actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The wire tier's instruments.
+    pub fn metrics(&self) -> Arc<NetMetrics> {
+        self.metrics.clone()
+    }
+
+    /// The submit admission gate — exposed so tests can saturate it
+    /// deterministically.
+    pub fn gate(&self) -> Arc<InflightGate> {
+        self.gate.clone()
+    }
+
+    /// Stop accepting new connections (established ones drain on their
+    /// own threads as clients hang up).
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // unblock the acceptor with one throwaway connection
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    coord: &Coordinator,
+    gate: &InflightGate,
+    metrics: &NetMetrics,
+    retry_after_ms: u32,
+) -> Result<()> {
+    // small frames answer promptly: scores shouldn't sit in Nagle
+    let _ = stream.set_nodelay(true);
+    loop {
+        // clean client hang-up and a garbled peer both end the
+        // connection; a desynced stream cannot be re-framed anyway
+        let Ok((id, msg)) = read_frame(&mut stream) else { break };
+        let t0 = Instant::now();
+        let reply = dispatch(coord, gate, metrics, retry_after_ms, msg);
+        metrics.requests.inc();
+        if matches!(reply, Msg::Error { .. }) {
+            metrics.errors.inc();
+        }
+        metrics.latency_us.observe_duration(t0.elapsed());
+        write_frame(&mut stream, id, &reply)?;
+    }
+    Ok(())
+}
+
+fn err(message: String) -> Msg {
+    Msg::Error { message }
+}
+
+fn dispatch(
+    coord: &Coordinator,
+    gate: &InflightGate,
+    metrics: &NetMetrics,
+    retry_after_ms: u32,
+    msg: Msg,
+) -> Msg {
+    let _span = trace::span("net_request");
+    match msg {
+        Msg::Open { pool, session: _ } => {
+            if coord.stream_pools().contains(&pool) {
+                Msg::Ok { affected: 0 }
+            } else {
+                err(format!("no stream pool '{pool}'"))
+            }
+        }
+        Msg::Submit { pool, session, tokens } => {
+            // load-shed *before* the coordinator's queue: a shed
+            // request never advances the stream, so the client can
+            // retry it verbatim
+            let Some(_permit) = gate.try_acquire() else {
+                metrics.sheds.inc();
+                return Msg::RetryAfter { millis: retry_after_ms };
+            };
+            match coord.stream_chunk(&pool, &session, tokens) {
+                Ok(resp) => match resp.scores {
+                    Some(s) => Msg::from_scores(&resp.session, &s),
+                    None => err("chunk response carried no scores".into()),
+                },
+                Err(e) => err(format!("{e:#}")),
+            }
+        }
+        Msg::Close { pool, session } => match coord.close_stream(&pool, &session) {
+            Ok(()) => Msg::Ok { affected: 0 },
+            Err(e) => err(format!("{e:#}")),
+        },
+        Msg::FillMask { model, tokens } => {
+            match coord.fill_mask_timeout(&model, tokens, Duration::from_secs(60)) {
+                Ok(resp) => Msg::Filled {
+                    positions: resp.predictions.iter().map(|(p, _, _)| *p as u32).collect(),
+                    tokens: resp.predictions.iter().map(|(_, t, _)| *t).collect(),
+                    probs: resp.predictions.iter().map(|(_, _, p)| *p).collect(),
+                    filled: resp.filled,
+                },
+                Err(e) => err(format!("{e:#}")),
+            }
+        }
+        Msg::Checkpoint { pool, dir, delta } => {
+            let res = if delta {
+                coord.checkpoint_delta(&pool, Path::new(&dir))
+            } else {
+                coord.checkpoint_all(&pool, Path::new(&dir))
+            };
+            match res {
+                Ok(n) => Msg::Ok { affected: n as u64 },
+                Err(e) => err(format!("{e:#}")),
+            }
+        }
+        Msg::Restore { pool, dir } => match coord.restore_from(&pool, Path::new(&dir)) {
+            Ok(n) => Msg::Ok { affected: n as u64 },
+            Err(e) => err(format!("{e:#}")),
+        },
+        Msg::DrainExport { pool } => {
+            let dir = scratch_dir("drain");
+            let reply = match drain_export(coord, &pool, &dir) {
+                Ok(m) => m,
+                Err(e) => err(format!("{e:#}")),
+            };
+            let _ = std::fs::remove_dir_all(&dir);
+            reply
+        }
+        Msg::RestoreBundle { pool, bundle } => {
+            let dir = scratch_dir("adopt");
+            let reply = match adopt_bundle(coord, &pool, &bundle, &dir) {
+                Ok(n) => Msg::Ok { affected: n as u64 },
+                Err(e) => err(format!("{e:#}")),
+            };
+            let _ = std::fs::remove_dir_all(&dir);
+            reply
+        }
+        Msg::AdminDrain { .. } => {
+            err("admin-drain is a router op; this peer is a worker".into())
+        }
+        other => err(format!("unexpected {} frame from a client", other.name())),
+    }
+}
+
+/// Evacuate the pool through a scratch export directory and pack the
+/// result for the wire.
+fn drain_export(coord: &Coordinator, pool: &str, dir: &Path) -> Result<Msg> {
+    let sessions = coord.drain_stream(pool, dir)? as u64;
+    let bundle = persist::bundle_dir(dir)?;
+    Ok(Msg::Export { sessions, bundle })
+}
+
+/// Unpack a shipped bundle into a scratch directory and adopt it.
+fn adopt_bundle(coord: &Coordinator, pool: &str, bundle: &[u8], dir: &Path) -> Result<usize> {
+    persist::unbundle_into(bundle, dir)?;
+    coord.restore_from(pool, dir)
+}
+
+/// A unique scratch directory per migration op (pid + monotonic
+/// counter), so concurrent drains never collide.
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    let n = NONCE.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("pfrm_net_{tag}_{}_{n}", std::process::id()))
+}

@@ -1,0 +1,237 @@
+//! Checkpoint directories as single self-verifying byte blobs, for
+//! shipping a migration export over the wire.
+//!
+//! A [`crate::persist::Checkpointer`] export is a directory: a
+//! `manifest.json` plus one `PFRMSNAP` file per session. Live session
+//! migration between processes (`net::router`'s drain/rebalance path)
+//! needs that directory to travel over a TCP connection as one payload,
+//! so this module defines the `PFRMBNDL` envelope:
+//!
+//! ```text
+//! "PFRMBNDL" | u32 version | u32 file_count
+//!   file_count x ( u32 name_len | name | u64 data_len | data )
+//! u32 CRC32 over everything above
+//! ```
+//!
+//! All integers little-endian. The same refuse-don't-guess discipline as
+//! `PFRMSNAP` applies: [`unbundle_into`] rejects truncation, trailing
+//! bytes, bad magic/version/CRC and path-escaping file names outright,
+//! and the unpacked directory is then re-validated by opening its
+//! manifest (which checks every snapshot's length + CRC32 again) before
+//! any session is adopted from it.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::checkpointer::{write_atomic, Checkpointer};
+use super::snapshot::crc32;
+
+/// Magic prefix of a checkpoint bundle.
+pub const BUNDLE_MAGIC: &[u8; 8] = b"PFRMBNDL";
+
+/// Current bundle envelope version.
+pub const BUNDLE_VERSION: u32 = 1;
+
+/// Hard ceiling on the number of files a bundle may claim — refuses
+/// absurd headers before any allocation happens.
+pub const MAX_BUNDLE_FILES: u32 = 1 << 20;
+
+/// Longest file name a bundle entry may carry.
+pub const MAX_BUNDLE_NAME: u32 = 4096;
+
+const MANIFEST: &str = "manifest.json";
+
+/// Pack a committed checkpoint directory (manifest + every snapshot it
+/// references) into one `PFRMBNDL` blob. The directory is validated
+/// through [`Checkpointer::open`] first, so a torn or half-written
+/// export refuses to ship instead of poisoning the receiving shard.
+pub fn bundle_dir(dir: &Path) -> Result<Vec<u8>> {
+    let ck = Checkpointer::open(dir)
+        .with_context(|| format!("bundling checkpoint at {}", dir.display()))?;
+    let mut names = vec![MANIFEST.to_string()];
+    for id in ck.ids() {
+        let rec = ck.record(&id).expect("listed id has a record");
+        names.push(rec.file.clone());
+    }
+    let mut out = Vec::new();
+    out.extend_from_slice(BUNDLE_MAGIC);
+    out.extend_from_slice(&BUNDLE_VERSION.to_le_bytes());
+    out.extend_from_slice(&(names.len() as u32).to_le_bytes());
+    for name in &names {
+        let data = std::fs::read(dir.join(name))
+            .with_context(|| format!("reading {name} for bundling"))?;
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&data);
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    Ok(out)
+}
+
+/// Unpack a `PFRMBNDL` blob into `dir` (created if missing) and
+/// re-validate the result by opening its manifest. Returns the number
+/// of sessions the unpacked checkpoint holds. Any corruption — bad
+/// magic, unknown version, truncation, trailing bytes, CRC mismatch,
+/// or a file name that would escape `dir` — is a hard error and
+/// nothing half-unpacked is left behind as a valid checkpoint (the
+/// manifest is only readable if every byte survived).
+pub fn unbundle_into(bytes: &[u8], dir: &Path) -> Result<usize> {
+    ensure!(bytes.len() >= BUNDLE_MAGIC.len() + 12, "bundle truncated: {} bytes", bytes.len());
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let actual = crc32(body);
+    ensure!(
+        stored == actual,
+        "bundle checksum mismatch (stored {stored:#010x}, computed {actual:#010x})"
+    );
+    let mut r = Reader { buf: body };
+    let magic = r.take(BUNDLE_MAGIC.len())?;
+    ensure!(magic == BUNDLE_MAGIC, "not a PFRMBNDL bundle");
+    let version = r.u32()?;
+    ensure!(
+        version == BUNDLE_VERSION,
+        "unsupported bundle version {version} (this build reads {BUNDLE_VERSION})"
+    );
+    let count = r.u32()?;
+    ensure!(count <= MAX_BUNDLE_FILES, "bundle claims {count} files — refusing");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating bundle target {}", dir.display()))?;
+    for _ in 0..count {
+        let name_len = r.u32()?;
+        ensure!(name_len <= MAX_BUNDLE_NAME, "bundle file name of {name_len} bytes — refusing");
+        let name = std::str::from_utf8(r.take(name_len as usize)?)
+            .context("bundle file name is not UTF-8")?
+            .to_string();
+        // names must stay inside the target directory
+        if name.is_empty() || name.contains('/') || name.contains('\\') || name.contains("..") {
+            bail!("bundle file name '{name}' would escape the target directory");
+        }
+        let data_len = r.u64()?;
+        ensure!(
+            data_len <= r.buf.len() as u64,
+            "bundle entry '{name}' claims {data_len} bytes, only {} remain",
+            r.buf.len()
+        );
+        let data = r.take(data_len as usize)?;
+        write_atomic(&dir.join(&name), data)
+            .with_context(|| format!("unpacking bundle entry '{name}'"))?;
+    }
+    ensure!(r.buf.is_empty(), "{} trailing bytes after the bundle's last entry", r.buf.len());
+    let ck = Checkpointer::open(dir).context("validating the unpacked bundle")?;
+    Ok(ck.len())
+}
+
+/// Strict little-endian cursor: every read either yields exactly the
+/// requested bytes or errors.
+struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.buf.len() >= n, "bundle truncated: wanted {n} bytes, {} left", self.buf.len());
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        Ok(head)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::stream::ChunkScorer;
+    use crate::train::{NativeModel, SyntheticConfig};
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("pfrm_bundle_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_export(dir: &Path) -> Arc<NativeModel> {
+        let model =
+            Arc::new(NativeModel::synthetic(&SyntheticConfig::default(), &mut Pcg64::new(0)));
+        let mut ck = Checkpointer::create(dir).unwrap();
+        for id in ["user-0", "user-1"] {
+            let mut scorer = ChunkScorer::new(model.clone()).unwrap();
+            scorer.advance(&[1, 2, 3, 4, 5, 6, 7, 8]).unwrap();
+            ck.save(id, &scorer).unwrap();
+        }
+        model
+    }
+
+    #[test]
+    fn roundtrip_restores_identical_files() {
+        let src = tmp("src");
+        let dst = tmp("dst");
+        sample_export(&src);
+        let blob = bundle_dir(&src).unwrap();
+        let n = unbundle_into(&blob, &dst).unwrap();
+        assert_eq!(n, 2);
+        for name in std::fs::read_dir(&src).unwrap() {
+            let name = name.unwrap().file_name();
+            let a = std::fs::read(src.join(&name)).unwrap();
+            let b = std::fs::read(dst.join(&name)).unwrap();
+            assert_eq!(a, b, "{name:?} changed across the bundle round trip");
+        }
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&dst);
+    }
+
+    #[test]
+    fn corruption_refuses() {
+        let src = tmp("corrupt");
+        sample_export(&src);
+        let blob = bundle_dir(&src).unwrap();
+        // truncation at every prefix boundary class
+        for cut in [0, 7, 12, 16, blob.len() / 2, blob.len() - 1] {
+            let dst = tmp("corrupt_out");
+            assert!(unbundle_into(&blob[..cut], &dst).is_err(), "cut at {cut} decoded");
+        }
+        // a single flipped bit anywhere fails the CRC
+        for pos in [0, 9, blob.len() / 3, blob.len() - 2] {
+            let mut bad = blob.clone();
+            bad[pos] ^= 0x40;
+            let dst = tmp("corrupt_out");
+            assert!(unbundle_into(&bad, &dst).is_err(), "flip at {pos} decoded");
+        }
+        // trailing garbage is not tolerated
+        let mut long = blob.clone();
+        long.push(0);
+        assert!(unbundle_into(&long, &tmp("corrupt_out")).is_err());
+        let _ = std::fs::remove_dir_all(&src);
+        let _ = std::fs::remove_dir_all(&tmp("corrupt_out"));
+    }
+
+    #[test]
+    fn escaping_names_refuse() {
+        // hand-craft a bundle whose single entry tries to escape
+        let mut body = Vec::new();
+        body.extend_from_slice(BUNDLE_MAGIC);
+        body.extend_from_slice(&BUNDLE_VERSION.to_le_bytes());
+        body.extend_from_slice(&1u32.to_le_bytes());
+        let name = b"../evil";
+        body.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        body.extend_from_slice(name);
+        body.extend_from_slice(&0u64.to_le_bytes());
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let err = unbundle_into(&body, &tmp("escape")).unwrap_err();
+        assert!(format!("{err:#}").contains("escape"), "wrong error: {err:#}");
+    }
+}

@@ -27,6 +27,10 @@
 //!   on an fsync; in-flight spills stay resident-readable until their
 //!   write commits, and rehydration of one short-circuits to the
 //!   resident copy;
+//! * [`bundle`] — the `PFRMBNDL` envelope packing a whole export
+//!   directory (manifest + snapshots) into one checksummed byte blob,
+//!   so the networked serving tier (`net::router`) can ship a shard's
+//!   sessions over TCP during a live drain/rebalance;
 //! * the migration + export APIs on `coordinator::Coordinator`
 //!   (`checkpoint_all` / `checkpoint_delta` / `restore_from`), which
 //!   let a warm replica adopt another coordinator's sessions and let a
@@ -36,10 +40,12 @@
 //! See DESIGN.md §Durable session persistence for the byte-level format,
 //! the write-back protocol and the delta-manifest generation scheme.
 
+pub mod bundle;
 pub mod checkpointer;
 pub mod snapshot;
 pub mod spill;
 
+pub use bundle::{bundle_dir, unbundle_into, BUNDLE_VERSION};
 pub use checkpointer::{Checkpointer, SnapshotRecord};
 pub use snapshot::{crc32, ModelFingerprint, SessionSnapshot, SNAPSHOT_VERSION};
 pub use spill::{SpillCounters, SpillTier};

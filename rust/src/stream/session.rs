@@ -685,6 +685,29 @@ impl SessionManager {
         Ok(written)
     }
 
+    /// Evacuate the manager: snapshot every live session into `dir`
+    /// ([`Self::checkpoint_all`]) and then close them all, leaving the
+    /// manager empty. This is the migration hand-off — after a
+    /// successful drain the sessions live *only* in the export, so the
+    /// peer that adopts it (`restore_from`) becomes their sole owner
+    /// and no stale copy can keep serving here. Returns the number of
+    /// sessions exported.
+    pub fn drain_to(&mut self, dir: &Path) -> Result<usize> {
+        let _span = trace::span("drain_to");
+        let written = self.checkpoint_all(dir)?;
+        // the export is durable; release everything it captured
+        // (resident, spill-pending and committed-spill sessions alike)
+        let mut ids: BTreeSet<String> = self.sessions.keys().cloned().collect();
+        if let Some(tier) = &self.spill {
+            ids.extend(tier.pending_ids());
+            ids.extend(tier.committed_ids());
+        }
+        for id in ids {
+            self.close(&id);
+        }
+        Ok(written)
+    }
+
     /// Incremental export: bring `dir` (a previous [`Self::checkpoint_all`]
     /// or `checkpoint_delta` target, or an empty directory) up to date
     /// with the sessions live now, re-snapshotting **only the dirty

@@ -1,0 +1,162 @@
+//! Property tests for the `PFRMWIRE` frame codec: seeded-random frames
+//! round-trip bitwise; truncated, bit-flipped, oversized-length,
+//! wrong-version and trailing-garbage frames all refuse to decode —
+//! with an error, never a panic or a partial read.
+
+use performer::net::{frame_bytes, frame_from_bytes, Msg};
+use performer::rng::Pcg64;
+
+fn rand_string(rng: &mut Pcg64, max: usize) -> String {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| char::from(b'a' + rng.below(26) as u8)).collect()
+}
+
+fn rand_bytes(rng: &mut Pcg64, max: usize) -> Vec<u8> {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| rng.below(256) as u8).collect()
+}
+
+fn rand_f32s(rng: &mut Pcg64, max: usize) -> Vec<f32> {
+    // arbitrary bit patterns (NaNs included): the codec carries bits,
+    // not values, so even a NaN must survive bit-for-bit
+    let n = rng.below(max + 1);
+    (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+}
+
+fn rand_u32s(rng: &mut Pcg64, max: usize) -> Vec<u32> {
+    let n = rng.below(max + 1);
+    (0..n).map(|_| rng.next_u64() as u32).collect()
+}
+
+fn rand_msg(rng: &mut Pcg64) -> Msg {
+    match rng.below(15) {
+        0 => Msg::Open { pool: rand_string(rng, 12), session: rand_string(rng, 24) },
+        1 => Msg::Submit {
+            pool: rand_string(rng, 12),
+            session: rand_string(rng, 24),
+            tokens: rand_bytes(rng, 64),
+        },
+        2 => Msg::Close { pool: rand_string(rng, 12), session: rand_string(rng, 24) },
+        3 => Msg::FillMask { model: rand_string(rng, 12), tokens: rand_bytes(rng, 64) },
+        4 => Msg::Checkpoint {
+            pool: rand_string(rng, 12),
+            dir: rand_string(rng, 40),
+            delta: rng.below(2) == 1,
+        },
+        5 => Msg::Restore { pool: rand_string(rng, 12), dir: rand_string(rng, 40) },
+        6 => Msg::DrainExport { pool: rand_string(rng, 12) },
+        7 => Msg::RestoreBundle { pool: rand_string(rng, 12), bundle: rand_bytes(rng, 128) },
+        8 => Msg::AdminDrain {
+            pool: rand_string(rng, 12),
+            from: rng.below(8) as u32,
+            to: rng.below(8) as u32,
+        },
+        9 => Msg::Ok { affected: rng.next_u64() },
+        10 => Msg::Scores {
+            session: rand_string(rng, 24),
+            offset: rng.next_u64() >> 32,
+            logprob: rand_f32s(rng, 32),
+            argmax: rand_bytes(rng, 32),
+            argmax_prob: rand_f32s(rng, 32),
+        },
+        11 => Msg::Filled {
+            filled: rand_bytes(rng, 48),
+            positions: rand_u32s(rng, 16),
+            tokens: rand_bytes(rng, 16),
+            probs: rand_f32s(rng, 16),
+        },
+        12 => Msg::Export { sessions: rng.next_u64() >> 48, bundle: rand_bytes(rng, 128) },
+        13 => Msg::RetryAfter { millis: rng.next_u64() as u32 },
+        _ => Msg::Error { message: rand_string(rng, 60) },
+    }
+}
+
+/// Bit patterns compare equal even where `==` would not (NaN floats),
+/// so round-trip equality is checked on the re-encoded bytes.
+fn assert_bitwise_roundtrip(id: u64, msg: &Msg) {
+    let bytes = frame_bytes(id, msg);
+    let (rid, back) = frame_from_bytes(&bytes)
+        .unwrap_or_else(|e| panic!("frame for {} failed to decode: {e:#}", msg.name()));
+    assert_eq!(rid, id);
+    assert_eq!(frame_bytes(rid, &back), bytes, "{} re-encode differs", msg.name());
+}
+
+#[test]
+fn random_frames_roundtrip_bitwise() {
+    let mut rng = Pcg64::new(0x5eed_0001);
+    for i in 0..500 {
+        let msg = rand_msg(&mut rng);
+        assert_bitwise_roundtrip(i, &msg);
+    }
+}
+
+#[test]
+fn every_truncation_refuses_without_panic() {
+    let mut rng = Pcg64::new(7);
+    for _ in 0..20 {
+        let msg = rand_msg(&mut rng);
+        let bytes = frame_bytes(9, &msg);
+        for cut in 0..bytes.len() {
+            assert!(
+                frame_from_bytes(&bytes[..cut]).is_err(),
+                "{cut}-byte prefix of a {}-byte {} frame decoded",
+                bytes.len(),
+                msg.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_bitflip_refuses() {
+    let mut rng = Pcg64::new(11);
+    for _ in 0..10 {
+        let msg = rand_msg(&mut rng);
+        let bytes = frame_bytes(3, &msg);
+        for pos in 0..bytes.len() {
+            for bit in [0x01u8, 0x80u8] {
+                let mut bad = bytes.clone();
+                bad[pos] ^= bit;
+                assert!(
+                    frame_from_bytes(&bad).is_err(),
+                    "flip of bit {bit:#04x} at byte {pos} in a {} frame decoded",
+                    msg.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_length_claim_refuses_before_allocating() {
+    let bytes = frame_bytes(1, &Msg::Ok { affected: 1 });
+    // claim a payload far over MAX_PAYLOAD; decode must refuse on the
+    // header alone (if it tried to allocate first, this test would OOM
+    // long before it failed)
+    let mut bad = bytes;
+    bad[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+    let err = frame_from_bytes(&bad).unwrap_err();
+    assert!(format!("{err:#}").contains("cap"), "wrong refusal: {err:#}");
+}
+
+#[test]
+fn wrong_version_and_magic_refuse() {
+    let good = frame_bytes(1, &Msg::RetryAfter { millis: 1 });
+    let mut wrong_version = good.clone();
+    wrong_version[8..12].copy_from_slice(&2u32.to_le_bytes());
+    let err = frame_from_bytes(&wrong_version).unwrap_err();
+    assert!(format!("{err:#}").contains("version"), "wrong refusal: {err:#}");
+
+    let mut wrong_magic = good;
+    wrong_magic[0] = b'X';
+    let err = frame_from_bytes(&wrong_magic).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "wrong refusal: {err:#}");
+}
+
+#[test]
+fn trailing_garbage_refuses() {
+    let mut bytes = frame_bytes(1, &Msg::Ok { affected: 0 });
+    bytes.push(0);
+    assert!(frame_from_bytes(&bytes).is_err());
+    assert!(frame_from_bytes(&[]).is_err());
+}
