@@ -233,6 +233,24 @@ impl Coordinator {
             .collect()
     }
 
+    /// Submit many chunk requests as one wave and wait for all of them —
+    /// the in-process analogue of the wire's `SubmitBatch`: the requests
+    /// land in the queue together, fuse into batched forwards, and the
+    /// responses come back in submission order. One failed request fails
+    /// the call (use [`Self::submit_chunks`] for per-request status).
+    pub fn stream_chunks(
+        &self,
+        pool: &str,
+        reqs: Vec<(String, Vec<u8>)>,
+    ) -> Result<Vec<StreamResponse>> {
+        let rxs = self.submit_chunks(pool, reqs)?;
+        rxs.into_iter()
+            .map(|rx| {
+                into_result(rx.recv().map_err(|_| anyhow!("stream worker dropped response"))?)
+            })
+            .collect()
+    }
+
     /// Submit a chunk and wait for its scores.
     pub fn stream_chunk(
         &self,

@@ -1,26 +1,96 @@
-//! Blocking wire client: one `TcpStream`, one request in flight,
-//! typed wrappers over the [`Msg`] ops.
+//! Wire clients: a multiplexed [`PipelinedClient`] that keeps up to
+//! `depth` requests outstanding on one `TcpStream`, and the blocking
+//! [`Client`] — now just a depth-1 wrapper over it.
 //!
-//! The client transparently absorbs [`Msg::RetryAfter`] answers (the
-//! server's load-shed signal) by sleeping the hinted back-off and
-//! re-sending — bounded by [`Client::retries`]; set it to 0 to surface
-//! the shed as an error instead (the load-shed unit test does). A
-//! re-sent submit is safe because a shed request never reached the
-//! coordinator's queue, so the stream did not advance.
+//! Pipelining rides the request-id already in every `PFRMWIRE` frame
+//! header: the writer stamps each request with a fresh id, a dedicated
+//! reader thread matches reply frames back to their callers by id, so
+//! replies may complete **out of order** without ever mis-routing. The
+//! send window is the only flow control — [`PipelinedClient::send`]
+//! blocks while `depth` requests are outstanding, so a slow peer
+//! backpressures the caller instead of growing an unbounded queue.
+//!
+//! Both clients transparently absorb [`Msg::RetryAfter`] answers (the
+//! server's load-shed signal) by sleeping a **jittered** back-off and
+//! re-sending — bounded by [`PipelinedClient::retries`]; set it to 0 to
+//! surface the shed as an error instead (the load-shed unit test
+//! does). A re-sent submit is safe because a shed request never
+//! reached the coordinator's queue, so the stream did not advance. The
+//! jitter is deterministic per session (seeded from the session-id
+//! hash and the attempt number, no ambient entropy), spreading shed
+//! clients over [0.5, 1.5)× the hint so they don't re-arrive in
+//! lockstep and shed again as one thundering herd.
+//!
+//! Ordering caveat: the server admits a connection's requests in
+//! arrival order, so two pipelined chunks of the **same** session stay
+//! ordered — *unless* the first is shed and retried after the second
+//! was already admitted. Callers that pipeline therefore keep at most
+//! one outstanding chunk per session (pipelining *across* sessions,
+//! as the CLI's `depth=` mode and the bench do).
 
-use std::net::TcpStream;
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::rng::{fnv1a64, Pcg64};
 use crate::stream::ChunkScores;
 
-use super::proto::{read_frame, write_frame, Msg};
+use super::proto::{read_frame, write_frame, Msg, ScoreEntry};
 
-/// A blocking connection to a [`super::Server`] or [`super::Router`].
-pub struct Client {
-    stream: TcpStream,
+/// State shared between a [`PipelinedClient`]'s writer half and its
+/// reader thread.
+struct PipeShared {
+    state: Mutex<PipeState>,
+    cv: Condvar,
+}
+
+struct PipeState {
+    /// reply slots of the outstanding requests, keyed by request-id
+    waiters: HashMap<u64, Sender<Result<Msg, String>>>,
+    /// requests sent and not yet answered (== waiters.len(), tracked
+    /// separately so the send window check is one compare)
+    outstanding: usize,
+    /// set when the connection died; every later send refuses fast
+    dead: Option<String>,
+}
+
+/// A handle to one in-flight request; [`Pending::wait`] blocks until
+/// its reply arrives (in whatever order the peer answers).
+pub struct Pending {
+    rx: Receiver<Result<Msg, String>>,
+    id: u64,
+}
+
+impl Pending {
+    /// The request-id this reply will arrive under.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the reply for *this* request arrives.
+    pub fn wait(self) -> Result<Msg> {
+        match self.rx.recv() {
+            Ok(Ok(msg)) => Ok(msg),
+            Ok(Err(reason)) => bail!("connection lost awaiting request {}: {reason}", self.id),
+            Err(_) => bail!("connection closed before request {} was answered", self.id),
+        }
+    }
+}
+
+/// A multiplexed connection to a [`super::Server`] or
+/// [`super::Router`]: up to `depth` requests outstanding, replies
+/// matched by request-id on a reader thread.
+pub struct PipelinedClient {
+    writer: TcpStream,
     next_id: u64,
+    depth: usize,
+    shared: Arc<PipeShared>,
+    reader: Option<JoinHandle<()>>,
     /// how many `RetryAfter` answers to absorb before giving up
     /// (0 = surface the first shed as an error)
     pub retries: u32,
@@ -29,15 +99,33 @@ pub struct Client {
     pub max_backoff: Duration,
 }
 
-impl Client {
-    /// Connect to `addr` (`host:port`).
-    pub fn connect(addr: &str) -> Result<Client> {
-        let stream =
+impl PipelinedClient {
+    /// Connect to `addr` (`host:port`) with a send window of `depth`
+    /// outstanding requests (clamped to at least 1).
+    pub fn connect(addr: &str, depth: usize) -> Result<PipelinedClient> {
+        let writer =
             TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-        let _ = stream.set_nodelay(true);
-        Ok(Client {
-            stream,
+        let _ = writer.set_nodelay(true);
+        let read_half = writer.try_clone().context("cloning stream for the reader")?;
+        let shared = Arc::new(PipeShared {
+            state: Mutex::new(PipeState {
+                waiters: HashMap::new(),
+                outstanding: 0,
+                dead: None,
+            }),
+            cv: Condvar::new(),
+        });
+        let reader_shared = shared.clone();
+        let reader = std::thread::Builder::new()
+            .name("net-client-reader".into())
+            .spawn(move || reader_loop(read_half, &reader_shared))
+            .context("spawning client reader thread")?;
+        Ok(PipelinedClient {
+            writer,
             next_id: 1,
+            depth: depth.max(1),
+            shared,
+            reader: Some(reader),
             retries: 8,
             max_backoff: Duration::from_millis(250),
         })
@@ -46,10 +134,10 @@ impl Client {
     /// Connect, retrying for up to `timeout` — rides out a peer that
     /// is still binding its listener (process start-up races in the
     /// multi-process smoke).
-    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client> {
+    pub fn connect_retry(addr: &str, timeout: Duration, depth: usize) -> Result<PipelinedClient> {
         let t0 = Instant::now();
         loop {
-            match Self::connect(addr) {
+            match Self::connect(addr, depth) {
                 Ok(c) => return Ok(c),
                 Err(e) if t0.elapsed() >= timeout => {
                     return Err(e).with_context(|| format!("gave up on {addr} after {timeout:?}"))
@@ -59,22 +147,53 @@ impl Client {
         }
     }
 
-    /// Send one request and return its (id-checked) reply, absorbing
-    /// up to [`Self::retries`] `RetryAfter` answers.
+    /// The send window (most requests outstanding at once).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Issue one request without waiting for its reply. Blocks while
+    /// the send window is full; returns the [`Pending`] handle whose
+    /// [`Pending::wait`] yields this request's reply — even if the
+    /// peer answers other requests first.
+    pub fn send(&mut self, msg: &Msg) -> Result<Pending> {
+        let id = self.next_id;
+        let (tx, rx) = channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            loop {
+                if let Some(reason) = &st.dead {
+                    bail!("connection lost: {reason}");
+                }
+                if st.outstanding < self.depth {
+                    break;
+                }
+                st = self.shared.cv.wait(st).unwrap();
+            }
+            st.outstanding += 1;
+            st.waiters.insert(id, tx);
+        }
+        self.next_id += 1;
+        if let Err(e) = write_frame(&mut self.writer, id, msg) {
+            let mut st = self.shared.state.lock().unwrap();
+            st.waiters.remove(&id);
+            st.outstanding = st.outstanding.saturating_sub(1);
+            self.shared.cv.notify_all();
+            return Err(e);
+        }
+        Ok(Pending { rx, id })
+    }
+
+    /// Send one request and block for its reply, absorbing up to
+    /// [`Self::retries`] `RetryAfter` answers with jittered back-off.
     pub fn call(&mut self, msg: &Msg) -> Result<Msg> {
+        let key = retry_key(msg).to_string();
         let mut attempt = 0u32;
         loop {
-            let id = self.next_id;
-            self.next_id += 1;
-            write_frame(&mut self.stream, id, msg)?;
-            let (rid, reply) = read_frame(&mut self.stream)?;
-            ensure!(rid == id, "peer answered request {rid}, expected {id}");
-            match reply {
+            match self.send(msg)?.wait()? {
                 Msg::RetryAfter { millis } if attempt < self.retries => {
                     attempt += 1;
-                    std::thread::sleep(
-                        Duration::from_millis(u64::from(millis)).min(self.max_backoff),
-                    );
+                    std::thread::sleep(self.backoff(millis, &key, attempt));
                 }
                 Msg::RetryAfter { millis } => bail!(
                     "peer busy: shed {} attempt(s) of a {} (last retry-after hint {millis} ms)",
@@ -86,19 +205,95 @@ impl Client {
         }
     }
 
+    /// Complete a pipelined submit issued via [`Self::send`]: wait for
+    /// `pending`, absorbing `RetryAfter` sheds by re-sending the same
+    /// chunk (safe — a shed never reached the coordinator's queue, so
+    /// the stream did not advance) with jittered back-off.
+    pub fn finish_submit(
+        &mut self,
+        pool: &str,
+        session: &str,
+        tokens: &[u8],
+        pending: Pending,
+    ) -> Result<ChunkScores> {
+        let mut attempt = 0u32;
+        let mut p = pending;
+        loop {
+            match p.wait()? {
+                Msg::RetryAfter { millis } if attempt < self.retries => {
+                    attempt += 1;
+                    std::thread::sleep(self.backoff(millis, session, attempt));
+                    p = self.send(&Msg::Submit {
+                        pool: pool.into(),
+                        session: session.into(),
+                        tokens: tokens.to_vec(),
+                    })?;
+                }
+                Msg::RetryAfter { millis } => bail!(
+                    "peer busy: shed {} attempt(s) of a submit (last retry-after hint \
+                     {millis} ms)",
+                    attempt + 1
+                ),
+                other => {
+                    let (sid, scores) = other.into_chunk_scores()?;
+                    ensure!(sid == session, "scores for session '{sid}', expected '{session}'");
+                    return Ok(scores);
+                }
+            }
+        }
+    }
+
+    /// The jittered back-off before retry `attempt`: the server's hint
+    /// (capped at [`Self::max_backoff`]) scaled by a deterministic
+    /// per-session factor in [0.5, 1.5) — shed clients de-lockstep
+    /// without any ambient entropy.
+    fn backoff(&self, hint_ms: u32, key: &str, attempt: u32) -> Duration {
+        let base = Duration::from_millis(u64::from(hint_ms)).min(self.max_backoff);
+        let seed = fnv1a64(key.as_bytes())
+            ^ u64::from(attempt).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let mut rng = Pcg64::new(seed);
+        base.mul_f64(0.5 + rng.uniform())
+    }
+
     /// Verify `pool` exists on the serving peer.
     pub fn open(&mut self, pool: &str, session: &str) -> Result<()> {
         let msg = Msg::Open { pool: pool.into(), session: session.into() };
         self.call(&msg)?.into_ok().map(|_| ())
     }
 
-    /// Score `tokens` as the session's next chunk.
+    /// Score `tokens` as the session's next chunk (blocking).
     pub fn submit(&mut self, pool: &str, session: &str, tokens: &[u8]) -> Result<ChunkScores> {
         let msg =
             Msg::Submit { pool: pool.into(), session: session.into(), tokens: tokens.to_vec() };
         let (sid, scores) = self.call(&msg)?.into_chunk_scores()?;
         ensure!(sid == session, "scores for session '{sid}', expected '{session}'");
         Ok(scores)
+    }
+
+    /// Score many sessions' next chunks in one frame and one fused
+    /// coordinator wave; returns one [`ScoreEntry`] per entry, in
+    /// submission order (failures are per-entry). A whole-frame shed is
+    /// absorbed like any other `RetryAfter` — the batch is admitted
+    /// all-or-nothing, so a re-send never double-advances a stream.
+    pub fn submit_batch(
+        &mut self,
+        pool: &str,
+        entries: Vec<(String, Vec<u8>)>,
+    ) -> Result<Vec<ScoreEntry>> {
+        let n = entries.len();
+        let msg = Msg::SubmitBatch { pool: pool.into(), entries };
+        match self.call(&msg)? {
+            Msg::ScoresBatch { entries } => {
+                ensure!(
+                    entries.len() == n,
+                    "submit-batch sent {n} entries but got {} back",
+                    entries.len()
+                );
+                Ok(entries)
+            }
+            Msg::Error { message } => bail!("server: {message}"),
+            other => bail!("expected a scores-batch frame, got {}", other.name()),
+        }
     }
 
     /// End a stream, releasing its carried state on the server.
@@ -165,6 +360,98 @@ impl Client {
             Msg::Error { message } => bail!("server: {message}"),
             other => bail!("expected a filled frame, got {}", other.name()),
         }
+    }
+}
+
+impl Drop for PipelinedClient {
+    fn drop(&mut self) {
+        // wake the reader out of its blocking read, then join it
+        let _ = self.writer.shutdown(Shutdown::Both);
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// The reader half: match every reply frame to its waiter by
+/// request-id. On any read error (including clean shutdown) every
+/// still-outstanding request is completed with the failure reason and
+/// the connection is marked dead, so no caller blocks forever.
+fn reader_loop(mut stream: TcpStream, shared: &PipeShared) {
+    let reason = loop {
+        match read_frame(&mut stream) {
+            Ok((id, msg)) => {
+                let mut st = shared.state.lock().unwrap();
+                let Some(tx) = st.waiters.remove(&id) else {
+                    // a reply nothing asked for: the framing is
+                    // desynced; nothing after it can be trusted
+                    break format!("peer answered unknown request id {id}");
+                };
+                st.outstanding = st.outstanding.saturating_sub(1);
+                shared.cv.notify_all();
+                drop(st);
+                // a waiter that gave up just drops its receiver; fine
+                let _ = tx.send(Ok(msg));
+            }
+            Err(e) => break format!("{e:#}"),
+        }
+    };
+    let mut st = shared.state.lock().unwrap();
+    for (_, tx) in st.waiters.drain() {
+        let _ = tx.send(Err(reason.clone()));
+    }
+    st.outstanding = 0;
+    st.dead = Some(reason);
+    shared.cv.notify_all();
+}
+
+/// The jitter key of a request: its session where it has one (so a
+/// client's sessions de-lockstep independently), the op name otherwise.
+fn retry_key(msg: &Msg) -> &str {
+    match msg {
+        Msg::Open { session, .. }
+        | Msg::Submit { session, .. }
+        | Msg::Close { session, .. } => session,
+        Msg::SubmitBatch { entries, .. } => {
+            entries.first().map_or("batch", |(session, _)| session)
+        }
+        other => other.name(),
+    }
+}
+
+/// A blocking connection to a [`super::Server`] or [`super::Router`]:
+/// a [`PipelinedClient`] pinned to depth 1, kept as the simple
+/// call-and-wait interface the CLI's control ops, the router's
+/// migration plane, and the tests use. Derefs to [`PipelinedClient`],
+/// so every typed helper (and the `retries`/`max_backoff` knobs) is
+/// available directly.
+pub struct Client {
+    inner: PipelinedClient,
+}
+
+impl Client {
+    /// Connect to `addr` (`host:port`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        Ok(Client { inner: PipelinedClient::connect(addr, 1)? })
+    }
+
+    /// Connect, retrying for up to `timeout`.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client> {
+        Ok(Client { inner: PipelinedClient::connect_retry(addr, timeout, 1)? })
+    }
+}
+
+impl std::ops::Deref for Client {
+    type Target = PipelinedClient;
+
+    fn deref(&self) -> &PipelinedClient {
+        &self.inner
+    }
+}
+
+impl std::ops::DerefMut for Client {
+    fn deref_mut(&mut self) -> &mut PipelinedClient {
+        &mut self.inner
     }
 }
 

@@ -9,23 +9,34 @@
 //!
 //! * [`proto`] — the `PFRMWIRE` frame codec: versioned, CRC32-checked
 //!   binary frames carrying the stream ops (open / submit-chunk /
-//!   scores / close / fill-mask) plus the control ops (checkpoint /
+//!   scores / close / fill-mask), the batched submit
+//!   ([`Msg::SubmitBatch`]/[`Msg::ScoresBatch`]: many sessions' chunks
+//!   in one frame, per-entry status) plus the control ops (checkpoint /
 //!   restore / drain), with the `PFRMSNAP` refuse-corruption
 //!   discipline;
 //! * [`server`] — [`Server`]: acceptor + bounded thread-per-connection
-//!   pool over one coordinator, with two-level admission control
-//!   (connection cap, [`InflightGate`]) answering overload with
-//!   explicit `RetryAfter` frames, `net_*` metrics and per-request
-//!   spans;
-//! * [`client`] — [`Client`]: blocking typed wrapper that absorbs
-//!   `RetryAfter` back-off, used by the CLI's wire mode, the router's
-//!   control plane, tests and benches alike;
+//!   pool over one coordinator. The read loop never blocks on the
+//!   model: submits are enqueued and completed out-of-line, so one
+//!   pipelined connection fills a whole fused wave. Two-level
+//!   admission control (connection cap, [`InflightGate`]) answers
+//!   overload with explicit `RetryAfter` frames; `net_*` metrics and
+//!   per-request spans;
+//! * [`client`] — [`PipelinedClient`]: multiplexes up to `depth`
+//!   outstanding requests over one socket, matching replies by the
+//!   frame header's request-id on a reader thread (out-of-order
+//!   completion safe); absorbs `RetryAfter` with deterministic
+//!   per-session jittered back-off. [`Client`] is its depth-1 blocking
+//!   wrapper, kept for control planes and simple callers;
 //! * [`router`] — [`Router`]: hashes session ids onto N workers over a
-//!   slot table and live-rebalances shards by draining a victim's
-//!   sessions (checkpoint-all + close) into a `PFRMBNDL` blob and
-//!   shipping it to a peer over the same protocol — clients never see
-//!   the move because the routing-table lock doubles as the migration
-//!   barrier.
+//!   slot table, forwards through a shared checkout/checkin
+//!   [`BackendPool`] (capped idle connections, stale reap,
+//!   evict-on-error with one fresh retry), and coalesces same-shard
+//!   submits arriving within a batch window into `SubmitBatch`
+//!   forwards. Live-rebalance drains a victim's sessions
+//!   (checkpoint-all + close) into a `PFRMBNDL` blob and ships it to a
+//!   peer over the same protocol — clients never see the move because
+//!   per-shard in-flight counters give the drain a barrier over every
+//!   admitted forward.
 //!
 //! Because causal FAVOR compresses any prefix into a constant-size
 //! per-session state, "move this user to another machine" costs a few
@@ -42,7 +53,11 @@ pub mod proto;
 pub mod router;
 pub mod server;
 
-pub use client::Client;
-pub use proto::{frame_bytes, frame_from_bytes, read_frame, write_frame, Msg, WIRE_VERSION};
-pub use router::{Router, RouterMetrics, RoutingTable, ROUTE_SLOTS};
+pub use client::{Client, Pending, PipelinedClient};
+pub use proto::{
+    frame_bytes, frame_from_bytes, read_frame, write_frame, Msg, ScoreEntry, WIRE_VERSION,
+};
+pub use router::{
+    BackendPool, Router, RouterConfig, RouterMetrics, RoutingTable, ROUTE_SLOTS,
+};
 pub use server::{InflightGate, InflightPermit, NetMetrics, Server, ServerConfig};

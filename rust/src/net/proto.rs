@@ -19,7 +19,12 @@
 //! exactly what was sent or errors, never to a partial read.
 //!
 //! The request-id is echoed on the response frame, so a client can pin
-//! each answer to its question even through a forwarding router.
+//! each answer to its question even through a forwarding router — and
+//! it is what makes pipelining safe: [`super::PipelinedClient`] keeps
+//! many requests outstanding and matches replies by id, whatever order
+//! they complete in. [`Msg::SubmitBatch`]/[`Msg::ScoresBatch`] go one
+//! further and carry many sessions' chunks in a single frame, so one
+//! round trip feeds one fused coordinator wave.
 
 use std::io::{Read, Write};
 
@@ -53,6 +58,7 @@ const OP_RESTORE: u32 = 6;
 const OP_DRAIN_EXPORT: u32 = 7;
 const OP_RESTORE_BUNDLE: u32 = 8;
 const OP_ADMIN_DRAIN: u32 = 9;
+const OP_SUBMIT_BATCH: u32 = 10;
 // op tags: responses
 const OP_OK: u32 = 100;
 const OP_SCORES: u32 = 101;
@@ -60,6 +66,90 @@ const OP_FILLED: u32 = 102;
 const OP_EXPORT: u32 = 103;
 const OP_RETRY_AFTER: u32 = 104;
 const OP_ERROR: u32 = 105;
+const OP_SCORES_BATCH: u32 = 106;
+
+// per-entry tags inside a scores-batch payload
+const ENTRY_SCORES: u8 = 0;
+const ENTRY_FAILED: u8 = 1;
+
+/// One entry of a [`Msg::ScoresBatch`] reply: a session's chunk either
+/// scored or failed. Status is **per entry** so one bad session cannot
+/// poison the rest of the batch — its siblings still carry scores.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScoreEntry {
+    /// the entry's chunk was scored
+    Scores {
+        /// session the scores belong to
+        session: String,
+        /// stream offset of the chunk's first token
+        offset: u64,
+        /// per-token log-probability of the true token
+        logprob: Vec<f32>,
+        /// per-token argmax prediction
+        argmax: Vec<u8>,
+        /// per-token argmax probability
+        argmax_prob: Vec<f32>,
+    },
+    /// the entry failed; sibling entries are unaffected
+    Failed {
+        /// session whose chunk failed
+        session: String,
+        /// what went wrong
+        message: String,
+    },
+}
+
+impl ScoreEntry {
+    /// Build a scored entry from a scorer's chunk result.
+    pub fn from_scores(session: &str, s: &ChunkScores) -> ScoreEntry {
+        ScoreEntry::Scores {
+            session: session.to_string(),
+            offset: s.offset as u64,
+            logprob: s.logprob.clone(),
+            argmax: s.argmax.clone(),
+            argmax_prob: s.argmax_prob.clone(),
+        }
+    }
+
+    /// Build a failed entry.
+    pub fn failed(session: &str, message: impl Into<String>) -> ScoreEntry {
+        ScoreEntry::Failed { session: session.to_string(), message: message.into() }
+    }
+
+    /// The session this entry answers.
+    pub fn session(&self) -> &str {
+        match self {
+            ScoreEntry::Scores { session, .. } | ScoreEntry::Failed { session, .. } => session,
+        }
+    }
+
+    /// Unpack into the in-process score type, or the entry's error.
+    pub fn into_chunk_scores(self) -> Result<(String, ChunkScores)> {
+        match self {
+            ScoreEntry::Scores { session, offset, logprob, argmax, argmax_prob } => Ok((
+                session,
+                ChunkScores { offset: offset as usize, logprob, argmax, argmax_prob },
+            )),
+            ScoreEntry::Failed { session, message } => {
+                bail!("server: session '{session}': {message}")
+            }
+        }
+    }
+
+    /// The single-request reply message carrying the same outcome
+    /// (the router uses this to fan a coalesced batch reply back out
+    /// to the individual clients it merged).
+    pub fn into_msg(self) -> Msg {
+        match self {
+            ScoreEntry::Scores { session, offset, logprob, argmax, argmax_prob } => {
+                Msg::Scores { session, offset, logprob, argmax, argmax_prob }
+            }
+            ScoreEntry::Failed { session, message } => {
+                Msg::Error { message: format!("session '{session}': {message}") }
+            }
+        }
+    }
+}
 
 /// Every message the wire carries — requests and responses share the
 /// frame format and differ only in op tag.
@@ -128,6 +218,18 @@ pub enum Msg {
         /// the bundle bytes ([`crate::persist::bundle_dir`])
         bundle: Vec<u8>,
     },
+    /// request: score many sessions' next chunks in **one** frame and
+    /// one coordinator wave — the round trip amortizes across the
+    /// batch, and distinct sessions fuse into one batched forward pass.
+    /// Answered by [`Self::ScoresBatch`] with per-entry status (or one
+    /// whole-frame [`Self::RetryAfter`] when the peer sheds the batch —
+    /// all-or-nothing, so a shed never advances any entry's stream).
+    SubmitBatch {
+        /// stream pool the sessions live in
+        pool: String,
+        /// `(session, tokens)` — the next chunk per session, in order
+        entries: Vec<(String, Vec<u8>)>,
+    },
     /// request (router only): live-rebalance — drain shard `from` and
     /// migrate its sessions into shard `to`
     AdminDrain {
@@ -175,6 +277,12 @@ pub enum Msg {
         /// `PFRMBNDL` blob ([`crate::persist::unbundle_into`] reads it)
         bundle: Vec<u8>,
     },
+    /// response to [`Self::SubmitBatch`]: one [`ScoreEntry`] per
+    /// submitted entry, in submission order
+    ScoresBatch {
+        /// per-entry outcome, aligned with the request's entries
+        entries: Vec<ScoreEntry>,
+    },
     /// response: load-shed — the peer is over its admission limit;
     /// retry after the given hint instead of queuing unboundedly
     RetryAfter {
@@ -200,6 +308,7 @@ impl Msg {
             Msg::Restore { .. } => OP_RESTORE,
             Msg::DrainExport { .. } => OP_DRAIN_EXPORT,
             Msg::RestoreBundle { .. } => OP_RESTORE_BUNDLE,
+            Msg::SubmitBatch { .. } => OP_SUBMIT_BATCH,
             Msg::AdminDrain { .. } => OP_ADMIN_DRAIN,
             Msg::Ok { .. } => OP_OK,
             Msg::Scores { .. } => OP_SCORES,
@@ -207,6 +316,7 @@ impl Msg {
             Msg::Export { .. } => OP_EXPORT,
             Msg::RetryAfter { .. } => OP_RETRY_AFTER,
             Msg::Error { .. } => OP_ERROR,
+            Msg::ScoresBatch { .. } => OP_SCORES_BATCH,
         }
     }
 
@@ -221,6 +331,7 @@ impl Msg {
             Msg::Restore { .. } => "restore",
             Msg::DrainExport { .. } => "drain-export",
             Msg::RestoreBundle { .. } => "restore-bundle",
+            Msg::SubmitBatch { .. } => "submit-batch",
             Msg::AdminDrain { .. } => "admin-drain",
             Msg::Ok { .. } => "ok",
             Msg::Scores { .. } => "scores",
@@ -228,6 +339,7 @@ impl Msg {
             Msg::Export { .. } => "export",
             Msg::RetryAfter { .. } => "retry-after",
             Msg::Error { .. } => "error",
+            Msg::ScoresBatch { .. } => "scores-batch",
         }
     }
 
@@ -289,6 +401,14 @@ impl Msg {
                 e.str(pool);
                 e.bytes(bundle);
             }
+            Msg::SubmitBatch { pool, entries } => {
+                e.str(pool);
+                e.u32(entries.len() as u32);
+                for (session, tokens) in entries {
+                    e.str(session);
+                    e.bytes(tokens);
+                }
+            }
             Msg::AdminDrain { pool, from, to } => {
                 e.str(pool);
                 e.u32(*from);
@@ -314,6 +434,26 @@ impl Msg {
             }
             Msg::RetryAfter { millis } => e.u32(*millis),
             Msg::Error { message } => e.str(message),
+            Msg::ScoresBatch { entries } => {
+                e.u32(entries.len() as u32);
+                for entry in entries {
+                    match entry {
+                        ScoreEntry::Scores { session, offset, logprob, argmax, argmax_prob } => {
+                            e.0.push(ENTRY_SCORES);
+                            e.str(session);
+                            e.u64(*offset);
+                            e.f32s(logprob);
+                            e.bytes(argmax);
+                            e.f32s(argmax_prob);
+                        }
+                        ScoreEntry::Failed { session, message } => {
+                            e.0.push(ENTRY_FAILED);
+                            e.str(session);
+                            e.str(message);
+                        }
+                    }
+                }
+            }
         }
         e.0
     }
@@ -335,6 +475,17 @@ impl Msg {
             OP_RESTORE_BUNDLE => {
                 Msg::RestoreBundle { pool: d.str()?, bundle: d.bytes()? }
             }
+            OP_SUBMIT_BATCH => {
+                let pool = d.str()?;
+                let n = d.u32()? as usize;
+                // every entry needs at least its two length prefixes
+                ensure!(n * 8 <= d.buf.len() + 7, "submit-batch claims {n} entries — truncated");
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push((d.str()?, d.bytes()?));
+                }
+                Msg::SubmitBatch { pool, entries }
+            }
             OP_ADMIN_DRAIN => {
                 Msg::AdminDrain { pool: d.str()?, from: d.u32()?, to: d.u32()? }
             }
@@ -355,6 +506,28 @@ impl Msg {
             OP_EXPORT => Msg::Export { sessions: d.u64()?, bundle: d.bytes()? },
             OP_RETRY_AFTER => Msg::RetryAfter { millis: d.u32()? },
             OP_ERROR => Msg::Error { message: d.str()? },
+            OP_SCORES_BATCH => {
+                let n = d.u32()? as usize;
+                // every entry carries at least its one-byte status tag
+                ensure!(n <= d.buf.len(), "scores-batch claims {n} entries — truncated");
+                let mut entries = Vec::with_capacity(n);
+                for _ in 0..n {
+                    entries.push(match d.u8()? {
+                        ENTRY_SCORES => ScoreEntry::Scores {
+                            session: d.str()?,
+                            offset: d.u64()?,
+                            logprob: d.f32s()?,
+                            argmax: d.bytes()?,
+                            argmax_prob: d.f32s()?,
+                        },
+                        ENTRY_FAILED => {
+                            ScoreEntry::Failed { session: d.str()?, message: d.str()? }
+                        }
+                        tag => bail!("unknown scores-batch entry tag {tag}"),
+                    });
+                }
+                Msg::ScoresBatch { entries }
+            }
             other => bail!("unknown wire op {other}"),
         };
         d.finish()?;
@@ -563,6 +736,27 @@ mod tests {
             Msg::Export { sessions: 2, bundle: vec![1; 32] },
             Msg::RetryAfter { millis: 25 },
             Msg::Error { message: "boom".into() },
+            Msg::SubmitBatch {
+                pool: "native".into(),
+                entries: vec![
+                    ("user-0".into(), vec![1, 2, 3]),
+                    ("user-1".into(), vec![]),
+                ],
+            },
+            Msg::SubmitBatch { pool: "p".into(), entries: vec![] },
+            Msg::ScoresBatch {
+                entries: vec![
+                    ScoreEntry::Scores {
+                        session: "user-0".into(),
+                        offset: 128,
+                        logprob: vec![-0.25, f32::NEG_INFINITY],
+                        argmax: vec![3, 4],
+                        argmax_prob: vec![0.5, 0.75],
+                    },
+                    ScoreEntry::Failed { session: "user-1".into(), message: "boom".into() },
+                ],
+            },
+            Msg::ScoresBatch { entries: vec![] },
         ];
         for (i, msg) in msgs.into_iter().enumerate() {
             let bytes = frame_bytes(i as u64, &msg);

@@ -8,24 +8,46 @@
 //! `slot % n_shards`). Rebalancing rewrites slot entries, never the
 //! hash — so sessions that are not being moved keep their placement.
 //!
-//! **Rebalance** (`admin-drain from to`) is a barrier + migrate + flip:
-//! forwards hold the routing table's read lock *across the whole
-//! backend round trip*, so the drain's write lock acquires only once
-//! every in-flight request has been answered — the victim's export is
-//! then guaranteed to capture every chunk the router ever admitted for
-//! it. Under the write lock the router asks the victim to
-//! [`Msg::DrainExport`] (checkpoint-all + close, answered as one
-//! `PFRMBNDL` blob), ships the blob to the target via
-//! [`Msg::RestoreBundle`], and only then rewrites the victim's slots —
-//! an atomic flip from the clients' point of view. If the target
-//! refuses the bundle, the router restores it back into the victim, so
-//! a failed rebalance strands no sessions. Drain-on-shutdown is the
-//! same path: evacuate the shard, then kill the process.
+//! **Forwarding** goes through a shared [`BackendPool`]: backend
+//! connections are checked out per forward and checked back in after,
+//! capped per address with stale-idle reaping — so a thousand client
+//! connections share a handful of worker sockets instead of opening
+//! one each. A frame error on a pooled connection evicts it and
+//! retries once on a fresh dial before the client sees an error.
+//!
+//! **Coalescing**: same-shard [`Msg::Submit`]s that arrive within a
+//! short batch window are merged into one [`Msg::SubmitBatch`] forward
+//! (per-entry replies fan back out to the individual clients), so N
+//! concurrent clients cost the backend one round trip and one fused
+//! wave instead of N. The read loops never block on a backend: submit
+//! replies complete on per-connection completer threads in whatever
+//! order the shards answer, tagged by request-id.
+//!
+//! **Rebalance** (`admin-drain from to`) is a barrier + migrate + flip.
+//! Every forward **registers** with its shard — a per-shard in-flight
+//! counter incremented under the routing table's read lock, released
+//! when the backend answers. The drain takes the table's write lock
+//! (so no new forward can resolve a shard) and then waits for the
+//! victim's counter to reach zero: every admitted request — including
+//! those parked in a coalescing window — has been answered before the
+//! export begins, so the victim's bundle captures every chunk the
+//! router ever admitted for it. The counter replaces PR 8's
+//! read-lock-held-across-the-round-trip barrier with the same
+//! guarantee at a fraction of the contention: the read lock is now
+//! held only for the table lookup, not the backend round trip. Under
+//! the write lock the router asks the victim to [`Msg::DrainExport`]
+//! (checkpoint-all + close, answered as one `PFRMBNDL` blob), ships
+//! the blob to the target via [`Msg::RestoreBundle`], and only then
+//! rewrites the victim's slots — an atomic flip from the clients'
+//! point of view. If the target refuses the bundle, the router
+//! restores it back into the victim, so a failed rebalance strands no
+//! sessions.
 
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -35,11 +57,15 @@ use crate::obs::{Counter, Histogram, MetricsRegistry};
 use crate::rng::fnv1a64;
 
 use super::client::Client;
-use super::proto::{read_frame, write_frame, Msg};
+use super::proto::{read_frame, write_frame, Msg, ScoreEntry};
 
 /// Number of routing slots sessions hash onto. Plenty for tens of
 /// shards while keeping the table trivially small.
 pub const ROUTE_SLOTS: usize = 64;
+
+/// Most pending submit replies per client connection before its read
+/// loop stops draining the socket (mirrors the server's bound).
+const MAX_CONN_INFLIGHT: usize = 64;
 
 /// The slot table: which shard serves which slice of session space.
 pub struct RoutingTable {
@@ -92,6 +118,35 @@ impl RoutingTable {
     }
 }
 
+/// Tuning knobs of a [`Router`].
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// most idle backend connections kept per worker address; a
+    /// checkin over the cap closes the socket instead
+    pub pool_size: usize,
+    /// idle age beyond which a pooled connection is reaped at checkout
+    /// instead of reused
+    pub idle_max: Duration,
+    /// most same-shard submits coalesced into one `SubmitBatch`
+    /// forward (1 disables coalescing; default matches the worker's
+    /// fused-wave width)
+    pub max_coalesce: usize,
+    /// how long the coalescer holds a window open for same-shard
+    /// company after its first submit
+    pub coalesce_window: Duration,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            pool_size: 4,
+            idle_max: Duration::from_secs(30),
+            max_coalesce: crate::coordinator::STREAM_MAX_BATCH,
+            coalesce_window: Duration::from_millis(1),
+        }
+    }
+}
+
 /// The router's own instruments (it runs in its own process, so it has
 /// its own registry rather than a coordinator's).
 pub struct RouterMetrics {
@@ -103,15 +158,225 @@ pub struct RouterMetrics {
     pub errors: Counter,
     /// end-to-end forward latency (client frame in → reply out), µs
     pub latency_us: Histogram,
+    /// backend connections dialed
+    pub pool_dials: Counter,
+    /// forwards served on a reused pooled connection
+    pub pool_reuses: Counter,
+    /// pooled connections evicted (frame error or stale idle)
+    pub pool_evictions: Counter,
+    /// submits merged into a coalesced `SubmitBatch` forward
+    pub coalesced: Counter,
+    /// coalesced `SubmitBatch` frames forwarded
+    pub batches: Counter,
 }
 
 impl RouterMetrics {
-    fn registered(reg: &MetricsRegistry) -> RouterMetrics {
+    /// Instruments registered under `route_*` in `reg`.
+    pub fn registered(reg: &MetricsRegistry) -> RouterMetrics {
         RouterMetrics {
             forwarded: reg.counter("route_forwarded_total"),
             drains: reg.counter("route_drains_total"),
             errors: reg.counter("route_errors_total"),
             latency_us: reg.histogram("route_latency_us"),
+            pool_dials: reg.counter("route_pool_dials_total"),
+            pool_reuses: reg.counter("route_pool_reuses_total"),
+            pool_evictions: reg.counter("route_pool_evictions_total"),
+            coalesced: reg.counter("route_coalesced_total"),
+            batches: reg.counter("route_batches_total"),
+        }
+    }
+}
+
+/// Shared checkout/checkin pool of backend worker connections: capped
+/// idle list per address, stale-idle reap at checkout, and
+/// evict + one fresh retry on frame errors — a dead pooled socket
+/// costs a reconnect, never a client-visible error.
+pub struct BackendPool {
+    idle: Mutex<HashMap<String, Vec<(TcpStream, Instant)>>>,
+    cap: usize,
+    idle_max: Duration,
+    metrics: Arc<RouterMetrics>,
+}
+
+impl BackendPool {
+    /// An empty pool keeping at most `cap` idle connections per
+    /// address, reaping those idle longer than `idle_max`.
+    pub fn new(cap: usize, idle_max: Duration, metrics: Arc<RouterMetrics>) -> BackendPool {
+        BackendPool { idle: Mutex::new(HashMap::new()), cap, idle_max, metrics }
+    }
+
+    /// A connection to `addr`: the freshest non-stale idle one, else a
+    /// new dial. Stale idles encountered on the way are dropped.
+    fn checkout(&self, addr: &str) -> Result<TcpStream> {
+        {
+            let mut idle = self.idle.lock().unwrap();
+            if let Some(conns) = idle.get_mut(addr) {
+                while let Some((conn, since)) = conns.pop() {
+                    if since.elapsed() > self.idle_max {
+                        // too old to trust: the peer may have closed it
+                        self.metrics.pool_evictions.inc();
+                        continue;
+                    }
+                    self.metrics.pool_reuses.inc();
+                    return Ok(conn);
+                }
+            }
+        }
+        self.dial(addr)
+    }
+
+    fn dial(&self, addr: &str) -> Result<TcpStream> {
+        let conn =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        let _ = conn.set_nodelay(true);
+        self.metrics.pool_dials.inc();
+        Ok(conn)
+    }
+
+    /// Return a healthy connection for reuse; over-cap checkins close
+    /// the socket instead.
+    fn checkin(&self, addr: &str, conn: TcpStream) {
+        let mut idle = self.idle.lock().unwrap();
+        let conns = idle.entry(addr.to_string()).or_default();
+        if conns.len() < self.cap {
+            conns.push((conn, Instant::now()));
+        }
+    }
+
+    /// Round-trip one frame to `addr` and return the reply. A frame
+    /// error on the first (possibly pooled) connection evicts it and
+    /// retries exactly once on a fresh dial; only a second failure
+    /// reaches the caller as an error frame.
+    pub fn forward(&self, addr: &str, msg: &Msg) -> Msg {
+        // backend-side ids come from one process-wide sequence: replies
+        // on a pooled connection can never be attributed to the wrong
+        // forward even if a stale reply were ever left behind
+        static BACKEND_ID: AtomicU64 = AtomicU64::new(1);
+        for fresh in [false, true] {
+            let id = BACKEND_ID.fetch_add(1, Ordering::Relaxed);
+            let conn = if fresh { self.dial(addr) } else { self.checkout(addr) };
+            let mut conn = match conn {
+                Ok(c) => c,
+                Err(_) if !fresh => continue,
+                Err(e) => {
+                    return Msg::Error { message: format!("shard {addr} unreachable: {e:#}") }
+                }
+            };
+            match round_trip(&mut conn, id, msg) {
+                Ok(reply) => {
+                    self.checkin(addr, conn);
+                    return reply;
+                }
+                Err(_) if !fresh => {
+                    // the pooled socket was dead or desynced: drop it
+                    // (eviction) and retry once on a fresh dial
+                    self.metrics.pool_evictions.inc();
+                }
+                Err(e) => {
+                    return Msg::Error { message: format!("shard {addr} unreachable: {e:#}") }
+                }
+            }
+        }
+        unreachable!("the fresh attempt either returned or errored")
+    }
+}
+
+fn round_trip(conn: &mut TcpStream, id: u64, msg: &Msg) -> Result<Msg> {
+    write_frame(conn, id, msg)?;
+    let (rid, reply) = read_frame(conn)?;
+    ensure!(rid == id, "backend answered request {rid}, expected {id}");
+    Ok(reply)
+}
+
+/// Per-shard in-flight counter: forwards register while admitted, the
+/// drain waits for zero. See the module docs for the barrier argument.
+struct ShardInflight {
+    n: Mutex<usize>,
+    cv: Condvar,
+}
+
+/// RAII registration of one forward with its shard's counter.
+struct InflightGuard {
+    shard: Arc<ShardInflight>,
+}
+
+impl InflightGuard {
+    fn enter(shard: &Arc<ShardInflight>) -> InflightGuard {
+        *shard.n.lock().unwrap() += 1;
+        InflightGuard { shard: shard.clone() }
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        let mut n = self.shard.n.lock().unwrap();
+        *n = n.saturating_sub(1);
+        if *n == 0 {
+            self.shard.cv.notify_all();
+        }
+    }
+}
+
+/// One submit parked in a shard's coalescing window.
+struct CoalesceEntry {
+    pool: String,
+    session: String,
+    tokens: Vec<u8>,
+    reply: Sender<Msg>,
+    /// keeps the forward registered with its shard until answered —
+    /// a drain's barrier covers entries still parked in the window
+    _guard: InflightGuard,
+}
+
+/// Everything a connection thread needs, shared router-wide.
+struct Shared {
+    table: RwLock<RoutingTable>,
+    /// one counter per shard index, fixed at start
+    inflight: Vec<Arc<ShardInflight>>,
+    pool: BackendPool,
+    /// one coalescer worker per backend address, spawned lazily;
+    /// cleared on shutdown so the workers exit
+    coalescers: Mutex<HashMap<String, Sender<CoalesceEntry>>>,
+    cfg: RouterConfig,
+    metrics: Arc<RouterMetrics>,
+}
+
+impl Shared {
+    /// Resolve a key's shard and register the forward with it, under
+    /// one read-lock acquisition — the admission point the drain
+    /// barrier is defined against.
+    fn admit(&self, key: &str) -> (String, InflightGuard) {
+        let t = self.table.read().unwrap();
+        let shard = t.shard_of(key);
+        let guard = InflightGuard::enter(&self.inflight[shard]);
+        (t.addr_of(shard).to_string(), guard)
+    }
+
+    /// The coalescer feeding `addr`, spawned on first use.
+    fn coalescer(self: &Arc<Self>, addr: &str) -> Result<Sender<CoalesceEntry>> {
+        let mut map = self.coalescers.lock().unwrap();
+        if let Some(tx) = map.get(addr) {
+            return Ok(tx.clone());
+        }
+        let (tx, rx) = channel();
+        let shared = self.clone();
+        let addr_owned = addr.to_string();
+        std::thread::Builder::new()
+            .name("route-coalesce".into())
+            .spawn(move || coalesce_loop(&rx, &addr_owned, &shared))
+            .context("spawning a coalescer")?;
+        map.insert(addr.to_string(), tx.clone());
+        Ok(tx)
+    }
+
+    /// Wait until shard `shard` has zero registered forwards. Called
+    /// with the table's write lock held, so no new forward can
+    /// register while we wait.
+    fn wait_idle(&self, shard: usize) {
+        let s = &self.inflight[shard];
+        let mut n = s.n.lock().unwrap();
+        while *n > 0 {
+            n = s.cv.wait(n).unwrap();
         }
     }
 }
@@ -121,38 +386,58 @@ pub struct Router {
     local_addr: SocketAddr,
     stop: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
-    metrics: Arc<RouterMetrics>,
+    shared: Arc<Shared>,
     registry: Arc<MetricsRegistry>,
 }
 
 impl Router {
     /// Bind `addr` and route sessions across `shards` (worker
-    /// addresses).
+    /// addresses) with default tuning.
     pub fn start(addr: &str, shards: Vec<String>) -> Result<Router> {
-        let table = Arc::new(RwLock::new(RoutingTable::new(shards)?));
+        Self::start_with(addr, shards, RouterConfig::default())
+    }
+
+    /// Bind `addr` and route sessions across `shards` with explicit
+    /// tuning.
+    pub fn start_with(addr: &str, shards: Vec<String>, cfg: RouterConfig) -> Result<Router> {
+        let table = RoutingTable::new(shards)?;
+        let n_shards = table.n_shards();
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding router to {addr}"))?;
         let local_addr = listener.local_addr().context("reading bound address")?;
         let registry = Arc::new(MetricsRegistry::new());
         let metrics = Arc::new(RouterMetrics::registered(&registry));
+        let shared = Arc::new(Shared {
+            table: RwLock::new(table),
+            inflight: (0..n_shards)
+                .map(|_| Arc::new(ShardInflight { n: Mutex::new(0), cv: Condvar::new() }))
+                .collect(),
+            pool: BackendPool::new(
+                cfg.pool_size.max(1),
+                cfg.idle_max,
+                metrics.clone(),
+            ),
+            coalescers: Mutex::new(HashMap::new()),
+            cfg,
+            metrics,
+        });
         let stop = Arc::new(AtomicBool::new(false));
 
         let accept_stop = stop.clone();
-        let accept_metrics = metrics.clone();
+        let accept_shared = shared.clone();
         let acceptor = std::thread::Builder::new().name("route-accept".into()).spawn(move || {
             for stream in listener.incoming() {
                 if accept_stop.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                let table = table.clone();
-                let metrics = accept_metrics.clone();
+                let shared = accept_shared.clone();
                 let _ = std::thread::Builder::new()
                     .name("route-conn".into())
-                    .spawn(move || handle_conn(stream, &table, &metrics));
+                    .spawn(move || handle_conn(stream, &shared));
             }
         })?;
-        Ok(Router { local_addr, stop, acceptor: Some(acceptor), metrics, registry })
+        Ok(Router { local_addr, stop, acceptor: Some(acceptor), shared, registry })
     }
 
     /// The address the router actually bound (resolves port 0).
@@ -162,7 +447,7 @@ impl Router {
 
     /// The router's instruments.
     pub fn metrics(&self) -> Arc<RouterMetrics> {
-        self.metrics.clone()
+        self.shared.metrics.clone()
     }
 
     /// The router's metrics registry (for a Prometheus dump).
@@ -170,7 +455,8 @@ impl Router {
         self.registry.clone()
     }
 
-    /// Stop accepting new connections.
+    /// Stop accepting new connections and retire the coalescer
+    /// workers.
     pub fn shutdown(&mut self) {
         if self.stop.swap(true, Ordering::SeqCst) {
             return;
@@ -179,6 +465,8 @@ impl Router {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
+        // dropping the senders ends each coalescer's recv loop
+        self.shared.coalescers.lock().unwrap().clear();
     }
 }
 
@@ -188,107 +476,308 @@ impl Drop for Router {
     }
 }
 
-fn handle_conn(
-    mut stream: TcpStream,
-    table: &RwLock<RoutingTable>,
-    metrics: &RouterMetrics,
-) {
+/// One submit's pending reply, as seen by the completer thread.
+enum RouteJob {
+    /// a plain forwarded submit
+    One { id: u64, rx: Receiver<Msg>, t0: Instant },
+    /// a client `SubmitBatch` split per-entry across shards and
+    /// reassembled in order
+    Batch { id: u64, entries: Vec<(String, Receiver<Msg>)>, t0: Instant },
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Arc<Shared>) {
     let _ = stream.set_nodelay(true);
-    // backend connections are cached per worker address for the
-    // lifetime of this client connection
-    let mut backends: HashMap<String, TcpStream> = HashMap::new();
+    let Ok(write_half) = stream.try_clone() else { return };
+    let writer = Arc::new(Mutex::new(write_half));
+    let (jobs_tx, jobs_rx) = sync_channel::<RouteJob>(MAX_CONN_INFLIGHT);
+    let completer = {
+        let writer = writer.clone();
+        let metrics = shared.metrics.clone();
+        std::thread::Builder::new().name("route-complete".into()).spawn(move || {
+            for job in jobs_rx {
+                finish_job(job, &writer, &metrics);
+            }
+        })
+    };
+    let Ok(completer) = completer else { return };
     loop {
         let Ok((id, msg)) = read_frame(&mut stream) else { break };
         let t0 = Instant::now();
-        let reply = match &msg {
-            Msg::Open { session, .. }
-            | Msg::Submit { session, .. }
-            | Msg::Close { session, .. } => {
-                // hold the read lock across the round trip: a drain's
-                // write lock then waits for every in-flight forward —
-                // that is the rebalance barrier
-                let guard = table.read().unwrap();
-                let addr = guard.addr_of(guard.shard_of(session)).to_string();
-                metrics.forwarded.inc();
-                forward(&mut backends, &addr, id, &msg)
+        match msg {
+            Msg::Submit { pool, session, tokens } => {
+                shared.metrics.forwarded.inc();
+                let (addr, guard) = shared.admit(&session);
+                let (reply_tx, reply_rx) = channel();
+                let entry = CoalesceEntry {
+                    pool,
+                    session,
+                    tokens,
+                    reply: reply_tx,
+                    _guard: guard,
+                };
+                enqueue_entry(shared, &addr, entry);
+                if jobs_tx.send(RouteJob::One { id, rx: reply_rx, t0 }).is_err() {
+                    break;
+                }
+            }
+            Msg::SubmitBatch { pool, entries } => {
+                // split per-entry across shards; every entry registers
+                // with its shard under ONE read-lock acquisition, so a
+                // concurrent drain either sees all of them or none
+                let mut parked = Vec::with_capacity(entries.len());
+                let mut slots = Vec::with_capacity(entries.len());
+                {
+                    let t = shared.table.read().unwrap();
+                    for (session, tokens) in entries {
+                        shared.metrics.forwarded.inc();
+                        let shard = t.shard_of(&session);
+                        let guard = InflightGuard::enter(&shared.inflight[shard]);
+                        let addr = t.addr_of(shard).to_string();
+                        let (reply_tx, reply_rx) = channel();
+                        slots.push((session.clone(), reply_rx));
+                        parked.push((
+                            addr,
+                            CoalesceEntry {
+                                pool: pool.clone(),
+                                session,
+                                tokens,
+                                reply: reply_tx,
+                                _guard: guard,
+                            },
+                        ));
+                    }
+                }
+                for (addr, entry) in parked {
+                    enqueue_entry(shared, &addr, entry);
+                }
+                if jobs_tx.send(RouteJob::Batch { id, entries: slots, t0 }).is_err() {
+                    break;
+                }
+            }
+            Msg::Open { ref session, .. } | Msg::Close { ref session, .. } => {
+                let (addr, _guard) = shared.admit(session);
+                let reply = shared.pool.forward(&addr, &msg);
+                shared.metrics.forwarded.inc();
+                if finish_inline(shared, &writer, id, &reply, t0).is_err() {
+                    break;
+                }
             }
             // no session to hash: pin by model name so repeat requests
             // hit the same worker's warm pool
-            Msg::FillMask { model, .. } => {
-                let guard = table.read().unwrap();
-                let addr = guard.addr_of(guard.shard_of(model)).to_string();
-                metrics.forwarded.inc();
-                forward(&mut backends, &addr, id, &msg)
+            Msg::FillMask { ref model, .. } => {
+                let (addr, _guard) = shared.admit(model);
+                let reply = shared.pool.forward(&addr, &msg);
+                shared.metrics.forwarded.inc();
+                if finish_inline(shared, &writer, id, &reply, t0).is_err() {
+                    break;
+                }
             }
             Msg::AdminDrain { pool, from, to } => {
-                match drain(table, pool, *from as usize, *to as usize) {
+                let reply = match drain(shared, &pool, from as usize, to as usize) {
                     Ok(moved) => {
-                        metrics.drains.inc();
+                        shared.metrics.drains.inc();
                         Msg::Ok { affected: moved }
                     }
                     Err(e) => Msg::Error { message: format!("{e:#}") },
+                };
+                if finish_inline(shared, &writer, id, &reply, t0).is_err() {
+                    break;
                 }
             }
-            other => Msg::Error {
-                message: format!("router cannot route a {} frame", other.name()),
-            },
-        };
-        if matches!(reply, Msg::Error { .. }) {
-            metrics.errors.inc();
+            other => {
+                let reply = Msg::Error {
+                    message: format!("router cannot route a {} frame", other.name()),
+                };
+                if finish_inline(shared, &writer, id, &reply, t0).is_err() {
+                    break;
+                }
+            }
         }
-        metrics.latency_us.observe_duration(t0.elapsed());
-        if write_frame(&mut stream, id, &reply).is_err() {
-            break;
-        }
+    }
+    drop(jobs_tx);
+    let _ = completer.join();
+}
+
+/// Hand one submit to its shard's coalescer; a coalescer that cannot
+/// be reached answers the entry with an error instead of dropping it.
+fn enqueue_entry(shared: &Arc<Shared>, addr: &str, entry: CoalesceEntry) {
+    let sent = match shared.coalescer(addr) {
+        Ok(tx) => tx.send(entry).map_err(|e| e.0),
+        Err(_) => Err(entry),
+    };
+    if let Err(entry) = sent {
+        let _ = entry.reply.send(Msg::Error {
+            message: format!("router lost its forwarding lane to {addr}"),
+        });
     }
 }
 
-/// Forward one frame to a worker and relay its reply (including
-/// `RetryAfter` — backpressure propagates to the client untouched). A
-/// dead cached connection is dropped and retried once fresh.
-fn forward(backends: &mut HashMap<String, TcpStream>, addr: &str, id: u64, msg: &Msg) -> Msg {
-    for fresh in [false, true] {
-        if fresh {
-            backends.remove(addr);
-        }
-        match try_forward(backends, addr, id, msg) {
-            Ok(reply) => return reply,
-            Err(_) if !fresh => continue,
-            Err(e) => return Msg::Error { message: format!("shard {addr} unreachable: {e:#}") },
-        }
-    }
-    unreachable!("the fresh attempt either returned or errored")
-}
-
-fn try_forward(
-    backends: &mut HashMap<String, TcpStream>,
-    addr: &str,
+/// Write an inline (non-pipelined) reply and record its metrics.
+fn finish_inline(
+    shared: &Arc<Shared>,
+    writer: &Mutex<TcpStream>,
     id: u64,
-    msg: &Msg,
-) -> Result<Msg> {
-    if !backends.contains_key(addr) {
-        let s = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
-        let _ = s.set_nodelay(true);
-        backends.insert(addr.to_string(), s);
+    reply: &Msg,
+    t0: Instant,
+) -> Result<()> {
+    if matches!(reply, Msg::Error { .. }) {
+        shared.metrics.errors.inc();
     }
-    let s = backends.get_mut(addr).expect("just inserted");
-    write_frame(s, id, msg)?;
-    let (rid, reply) = read_frame(s)?;
-    ensure!(rid == id, "shard {addr} answered request {rid}, expected {id}");
-    Ok(reply)
+    shared.metrics.latency_us.observe_duration(t0.elapsed());
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, id, reply)
 }
 
-/// Live rebalance under the table's write lock: export the victim,
-/// adopt into the target, flip the slots. See the module docs for the
-/// barrier argument and the failure-rollback contract.
-fn drain(table: &RwLock<RoutingTable>, pool: &str, from: usize, to: usize) -> Result<u64> {
-    let mut t = table.write().unwrap();
+/// Complete one pending submit reply on the completer thread.
+fn finish_job(job: RouteJob, writer: &Mutex<TcpStream>, metrics: &RouterMetrics) {
+    match job {
+        RouteJob::One { id, rx, t0 } => {
+            let reply = rx.recv().unwrap_or(Msg::Error {
+                message: "router dropped the forwarded request".into(),
+            });
+            if matches!(reply, Msg::Error { .. }) {
+                metrics.errors.inc();
+            }
+            metrics.latency_us.observe_duration(t0.elapsed());
+            let mut w = writer.lock().unwrap();
+            let _ = write_frame(&mut *w, id, &reply);
+        }
+        RouteJob::Batch { id, entries, t0 } => {
+            let entries: Vec<ScoreEntry> = entries
+                .into_iter()
+                .map(|(session, rx)| match rx.recv() {
+                    Ok(Msg::Scores { session, offset, logprob, argmax, argmax_prob }) => {
+                        ScoreEntry::Scores { session, offset, logprob, argmax, argmax_prob }
+                    }
+                    Ok(Msg::Error { message }) => ScoreEntry::failed(&session, message),
+                    // a whole-batch client retry cannot be offered once
+                    // entries span shards (some may have served);
+                    // surface the shed per-entry instead
+                    Ok(Msg::RetryAfter { millis }) => ScoreEntry::failed(
+                        &session,
+                        format!("shard busy (retry-after hint {millis} ms)"),
+                    ),
+                    Ok(other) => ScoreEntry::failed(
+                        &session,
+                        format!("unexpected {} reply to a submit", other.name()),
+                    ),
+                    Err(_) => {
+                        ScoreEntry::failed(&session, "router dropped the forwarded request")
+                    }
+                })
+                .collect();
+            if entries.iter().any(|e| matches!(e, ScoreEntry::Failed { .. })) {
+                metrics.errors.inc();
+            }
+            metrics.latency_us.observe_duration(t0.elapsed());
+            let mut w = writer.lock().unwrap();
+            let _ = write_frame(&mut *w, id, &Msg::ScoresBatch { entries });
+        }
+    }
+}
+
+/// One shard's coalescer: batch same-shard submits arriving within the
+/// window, forward one frame, fan the per-entry replies back out.
+fn coalesce_loop(rx: &Receiver<CoalesceEntry>, addr: &str, shared: &Arc<Shared>) {
+    let window = shared.cfg.coalesce_window;
+    let cap = shared.cfg.max_coalesce.max(1);
+    while let Ok(first) = rx.recv() {
+        let mut batch = vec![first];
+        let deadline = Instant::now() + window;
+        while batch.len() < cap {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(left) {
+                Ok(entry) => batch.push(entry),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        flush_window(addr, batch, shared);
+    }
+}
+
+/// Forward one coalescing window: group by stream pool (order
+/// preserved within a group), single entries as plain submits, groups
+/// as one `SubmitBatch`, and distribute the per-entry outcomes.
+fn flush_window(addr: &str, batch: Vec<CoalesceEntry>, shared: &Arc<Shared>) {
+    let mut groups: Vec<(String, Vec<CoalesceEntry>)> = Vec::new();
+    for entry in batch {
+        match groups.iter_mut().find(|(pool, _)| *pool == entry.pool) {
+            Some((_, v)) => v.push(entry),
+            None => groups.push((entry.pool.clone(), vec![entry])),
+        }
+    }
+    for (pool, entries) in groups {
+        if entries.len() == 1 {
+            let entry = &entries[0];
+            let msg = Msg::Submit {
+                pool,
+                session: entry.session.clone(),
+                tokens: entry.tokens.clone(),
+            };
+            let reply = shared.pool.forward(addr, &msg);
+            let _ = entry.reply.send(reply);
+            continue;
+        }
+        shared.metrics.batches.inc();
+        shared.metrics.coalesced.add(entries.len() as u64);
+        let frame = Msg::SubmitBatch {
+            pool,
+            entries: entries
+                .iter()
+                .map(|e| (e.session.clone(), e.tokens.clone()))
+                .collect(),
+        };
+        match shared.pool.forward(addr, &frame) {
+            Msg::ScoresBatch { entries: replies } if replies.len() == entries.len() => {
+                for (entry, outcome) in entries.iter().zip(replies) {
+                    let _ = entry.reply.send(outcome.into_msg());
+                }
+            }
+            // a whole-frame shed or error answered the *batch*: every
+            // merged client gets it verbatim — the worker's batch
+            // admission is all-or-nothing, so none of them advanced
+            whole @ (Msg::RetryAfter { .. } | Msg::Error { .. }) => {
+                for entry in &entries {
+                    let _ = entry.reply.send(whole.clone());
+                }
+            }
+            other => {
+                let msg = Msg::Error {
+                    message: format!("unexpected {} reply to a submit-batch", other.name()),
+                };
+                for entry in &entries {
+                    let _ = entry.reply.send(msg.clone());
+                }
+            }
+        }
+    }
+}
+
+/// Live rebalance: write-lock the table (no new forward resolves),
+/// wait the victim's in-flight counter down to zero (every admitted
+/// forward answered — the barrier), export the victim, adopt into the
+/// target, flip the slots. See the module docs for the full argument
+/// and the failure-rollback contract.
+fn drain(shared: &Arc<Shared>, pool: &str, from: usize, to: usize) -> Result<u64> {
+    let mut t = shared.table.write().unwrap();
     ensure!(from != to, "drain source and target are both shard {from}");
     let n = t.n_shards();
     ensure!(from < n && to < n, "shard index out of range (have {n} shards)");
     let victim = t.addr_of(from).to_string();
     let target = t.addr_of(to).to_string();
 
+    // the barrier: every forward admitted before the write lock —
+    // including submits still parked in a coalescing window, which
+    // hold their registration until answered — completes before the
+    // export below runs
+    shared.wait_idle(from);
+
+    // the migration control plane uses its own dedicated connection:
+    // pooled data-plane sockets stay untouched
     let mut vc = Client::connect_retry(&victim, Duration::from_secs(5))
         .with_context(|| format!("reaching drain victim shard {from}"))?;
     let (sessions, bundle) = vc
@@ -344,5 +833,28 @@ mod tests {
         assert_eq!(RoutingTable::slot_of("user-1"), 20);
         assert_eq!(t.shard_of("user-0"), 1);
         assert_eq!(t.shard_of("user-1"), 0);
+    }
+
+    #[test]
+    fn inflight_guard_counts_and_wakes() {
+        let shard = Arc::new(ShardInflight { n: Mutex::new(0), cv: Condvar::new() });
+        let g1 = InflightGuard::enter(&shard);
+        let g2 = InflightGuard::enter(&shard);
+        assert_eq!(*shard.n.lock().unwrap(), 2);
+        drop(g1);
+        assert_eq!(*shard.n.lock().unwrap(), 1);
+        // wait_idle must return once the last guard drops
+        let waiter = {
+            let shard = shard.clone();
+            std::thread::spawn(move || {
+                let mut n = shard.n.lock().unwrap();
+                while *n > 0 {
+                    n = shard.cv.wait(n).unwrap();
+                }
+            })
+        };
+        drop(g2);
+        waiter.join().unwrap();
+        assert_eq!(*shard.n.lock().unwrap(), 0);
     }
 }

@@ -1,6 +1,22 @@
 //! The worker-side TCP server: one acceptor plus a bounded
 //! thread-per-connection pool in front of a [`Coordinator`].
 //!
+//! **Pipelined dispatch.** A connection's read loop never blocks on
+//! the coordinator: a [`Msg::Submit`] (or [`Msg::SubmitBatch`]) is
+//! admitted, enqueued on the coordinator, and handed — as a pending
+//! reply receiver — to a per-connection completer thread that writes
+//! replies in completion order, tagged with their request-ids. One
+//! wire connection can therefore keep a whole fused wave in flight:
+//! a pipelined client's burst of submits lands in the coordinator's
+//! queue together and batches exactly like in-process
+//! `submit_chunks`. Per-connection in-flight is bounded
+//! (`max_conn_inflight`); when the bound is hit the read loop blocks,
+//! which backpressures the client through TCP instead of queueing
+//! unboundedly. Control ops (checkpoint / drain / restore …) are
+//! dispatched inline on the read loop — they are queue barriers on the
+//! coordinator anyway, and their replies interleave safely because ids
+//! disambiguate.
+//!
 //! Admission control happens at two gates, and both answer with an
 //! explicit [`Msg::RetryAfter`] frame instead of silently queuing:
 //!
@@ -9,28 +25,32 @@
 //! * **inflight cap** (`max_inflight`): a [`Msg::Submit`] that cannot
 //!   take an [`InflightGate`] permit is shed — it never reaches the
 //!   coordinator's queue, so a shed request cannot advance a stream —
-//!   while already-admitted requests run to completion.
+//!   while already-admitted requests run to completion. A
+//!   [`Msg::SubmitBatch`] takes one permit **per entry,
+//!   all-or-nothing**: a shed batch provably advanced no entry, so the
+//!   client may re-send the whole frame verbatim.
 //!
 //! Every request is span-traced (`net_request`) and counted in the
 //! coordinator's metrics registry under `net_*` (requests, sheds,
-//! errors, open connections, inflight, and a log2 latency histogram),
-//! so one Prometheus dump covers the wire tier and the serving core it
-//! fronts.
+//! errors, open connections, inflight, batches, and a log2 latency
+//! histogram), so one Prometheus dump covers the wire tier and the
+//! serving core it fronts.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, StreamResponse};
 use crate::obs::{trace, Counter, Gauge, Histogram, MetricsRegistry};
 use crate::persist;
 
-use super::proto::{read_frame, write_frame, Msg};
+use super::proto::{read_frame, write_frame, Msg, ScoreEntry};
 
 /// Tuning knobs of a [`Server`].
 #[derive(Clone, Debug)]
@@ -43,11 +63,19 @@ pub struct ServerConfig {
     pub max_inflight: usize,
     /// back-off hint carried by every `RetryAfter` frame
     pub retry_after_ms: u32,
+    /// most pending submit replies per connection before its read loop
+    /// stops draining the socket (TCP backpressure; min 1)
+    pub max_conn_inflight: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { max_conns: 64, max_inflight: 256, retry_after_ms: 25 }
+        ServerConfig {
+            max_conns: 64,
+            max_inflight: 256,
+            retry_after_ms: 25,
+            max_conn_inflight: 32,
+        }
     }
 }
 
@@ -66,6 +94,10 @@ pub struct NetMetrics {
     pub inflight: Gauge,
     /// per-request service latency, µs log2 buckets
     pub latency_us: Histogram,
+    /// submit-batch frames served
+    pub batches: Counter,
+    /// individual entries carried by submit-batch frames
+    pub batch_entries: Counter,
 }
 
 impl NetMetrics {
@@ -78,6 +110,8 @@ impl NetMetrics {
             conns: reg.gauge(&format!("{prefix}_open_conns")),
             inflight: reg.gauge(&format!("{prefix}_inflight")),
             latency_us: reg.histogram(&format!("{prefix}_latency_us")),
+            batches: reg.counter(&format!("{prefix}_batches_total")),
+            batch_entries: reg.counter(&format!("{prefix}_batch_entries_total")),
         }
     }
 }
@@ -177,9 +211,10 @@ impl Server {
                 let gate = accept_gate.clone();
                 let metrics = accept_metrics.clone();
                 let open2 = open.clone();
+                let conn_cfg = cfg.clone();
                 let spawned = std::thread::Builder::new().name("net-conn".into()).spawn(
                     move || {
-                        let _ = handle_conn(stream, &coord, &gate, &metrics, cfg.retry_after_ms);
+                        let _ = handle_conn(stream, &coord, &gate, &metrics, &conn_cfg);
                         let before = open2.fetch_sub(1, Ordering::AcqRel);
                         metrics.conns.set(before.saturating_sub(1) as u64);
                     },
@@ -229,42 +264,232 @@ impl Drop for Server {
     }
 }
 
+/// A submit admitted by the read loop, pending on the coordinator:
+/// the completer thread waits its receiver(s) and writes the reply.
+enum PendingJob {
+    /// one [`Msg::Submit`]
+    One {
+        id: u64,
+        session: String,
+        rx: Receiver<StreamResponse>,
+        _permit: InflightPermit,
+        t0: Instant,
+    },
+    /// one [`Msg::SubmitBatch`]: per-entry receivers, one reply frame
+    Batch {
+        id: u64,
+        entries: Vec<(String, Receiver<StreamResponse>)>,
+        _permits: Vec<InflightPermit>,
+        t0: Instant,
+    },
+}
+
 fn handle_conn(
     mut stream: TcpStream,
     coord: &Coordinator,
     gate: &InflightGate,
-    metrics: &NetMetrics,
-    retry_after_ms: u32,
+    metrics: &Arc<NetMetrics>,
+    cfg: &ServerConfig,
 ) -> Result<()> {
     // small frames answer promptly: scores shouldn't sit in Nagle
     let _ = stream.set_nodelay(true);
+    // replies go through a mutex-shared clone of the socket: the read
+    // loop answers sheds/control ops directly while the completer
+    // thread writes submit replies as they finish — frames stay atomic
+    // under the lock, ids keep the interleaving unambiguous
+    let writer = Arc::new(Mutex::new(
+        stream.try_clone().context("cloning the connection for replies")?,
+    ));
+    let (jobs_tx, jobs_rx) = sync_channel::<PendingJob>(cfg.max_conn_inflight.max(1));
+    let completer = {
+        let writer = writer.clone();
+        let metrics = metrics.clone();
+        std::thread::Builder::new()
+            .name("net-complete".into())
+            .spawn(move || {
+                for job in jobs_rx {
+                    complete_job(job, &writer, &metrics);
+                }
+            })
+            .context("spawning the reply completer")?
+    };
     loop {
         // clean client hang-up and a garbled peer both end the
         // connection; a desynced stream cannot be re-framed anyway
         let Ok((id, msg)) = read_frame(&mut stream) else { break };
         let t0 = Instant::now();
-        let reply = dispatch(coord, gate, metrics, retry_after_ms, msg);
-        metrics.requests.inc();
-        if matches!(reply, Msg::Error { .. }) {
-            metrics.errors.inc();
+        match msg {
+            Msg::Submit { pool, session, tokens } => {
+                let _span = trace::span("net_request");
+                // load-shed *before* the coordinator's queue: a shed
+                // request never advances the stream, so the client can
+                // retry it verbatim
+                let Some(permit) = gate.try_acquire() else {
+                    metrics.sheds.inc();
+                    metrics.requests.inc();
+                    let shed = Msg::RetryAfter { millis: cfg.retry_after_ms };
+                    if write_locked(&writer, id, &shed).is_err() {
+                        break;
+                    }
+                    continue;
+                };
+                match coord.submit_chunk(&pool, &session, tokens) {
+                    Ok(rx) => {
+                        let job = PendingJob::One { id, session, rx, _permit: permit, t0 };
+                        if jobs_tx.send(job).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        drop(permit);
+                        metrics.requests.inc();
+                        metrics.errors.inc();
+                        if write_locked(&writer, id, &err(format!("{e:#}"))).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            Msg::SubmitBatch { pool, entries } => {
+                let _span = trace::span("net_request");
+                metrics.batches.inc();
+                metrics.batch_entries.add(entries.len() as u64);
+                // one permit per entry, all-or-nothing: a shed batch
+                // provably advanced no entry's stream, so the whole
+                // frame is safe to re-send verbatim
+                let mut permits = Vec::with_capacity(entries.len());
+                for _ in &entries {
+                    match gate.try_acquire() {
+                        Some(p) => permits.push(p),
+                        None => break,
+                    }
+                }
+                if permits.len() < entries.len() {
+                    drop(permits);
+                    metrics.sheds.inc();
+                    metrics.requests.inc();
+                    let shed = Msg::RetryAfter { millis: cfg.retry_after_ms };
+                    if write_locked(&writer, id, &shed).is_err() {
+                        break;
+                    }
+                    continue;
+                }
+                let sessions: Vec<String> =
+                    entries.iter().map(|(session, _)| session.clone()).collect();
+                // submit_chunks lands the whole batch in the worker's
+                // queue together, so distinct sessions fuse into one
+                // batched forward wave
+                match coord.submit_chunks(&pool, entries) {
+                    Ok(rxs) => {
+                        let entries = sessions.into_iter().zip(rxs).collect();
+                        let job = PendingJob::Batch { id, entries, _permits: permits, t0 };
+                        if jobs_tx.send(job).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        drop(permits);
+                        metrics.requests.inc();
+                        metrics.errors.inc();
+                        if write_locked(&writer, id, &err(format!("{e:#}"))).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            other => {
+                // control ops stay on the read loop: they are queue
+                // barriers on the coordinator, and the pending submits
+                // ahead of them were already enqueued in order
+                let reply = dispatch(coord, other);
+                metrics.requests.inc();
+                if matches!(reply, Msg::Error { .. }) {
+                    metrics.errors.inc();
+                }
+                metrics.latency_us.observe_duration(t0.elapsed());
+                if write_locked(&writer, id, &reply).is_err() {
+                    break;
+                }
+            }
         }
-        metrics.latency_us.observe_duration(t0.elapsed());
-        write_frame(&mut stream, id, &reply)?;
     }
+    // closing the jobs channel lets the completer drain and exit
+    drop(jobs_tx);
+    let _ = completer.join();
     Ok(())
+}
+
+/// Write one reply frame under the shared writer lock.
+fn write_locked(writer: &Mutex<TcpStream>, id: u64, msg: &Msg) -> Result<()> {
+    let mut w = writer.lock().unwrap();
+    write_frame(&mut *w, id, msg)
+}
+
+/// Turn one coordinator response into the per-entry wire outcome.
+fn response_entry(session: &str, got: Result<StreamResponse, String>) -> ScoreEntry {
+    match got {
+        Ok(resp) => match (resp.error, resp.scores) {
+            (None, Some(s)) => ScoreEntry::from_scores(&resp.session, &s),
+            (Some(e), _) => ScoreEntry::failed(session, e),
+            (None, None) => ScoreEntry::failed(session, "chunk response carried no scores"),
+        },
+        Err(e) => ScoreEntry::failed(session, e),
+    }
+}
+
+/// Complete one pending submit: wait for the coordinator, write the
+/// reply frame. Write errors are ignored — the read loop notices the
+/// dead socket on its side and tears the connection down.
+fn complete_job(job: PendingJob, writer: &Mutex<TcpStream>, metrics: &NetMetrics) {
+    match job {
+        PendingJob::One { id, session, rx, _permit, t0 } => {
+            let got = rx.recv().map_err(|_| "stream worker dropped response".to_string());
+            let reply = match response_entry(&session, got).into_msg() {
+                // surface the entry error without the per-session
+                // prefix a batch needs: single submits already know
+                // their session
+                Msg::Error { message } => {
+                    let stripped = message
+                        .strip_prefix(&format!("session '{session}': "))
+                        .map(str::to_string)
+                        .unwrap_or(message);
+                    err(stripped)
+                }
+                scores => scores,
+            };
+            metrics.requests.inc();
+            if matches!(reply, Msg::Error { .. }) {
+                metrics.errors.inc();
+            }
+            metrics.latency_us.observe_duration(t0.elapsed());
+            let _ = write_locked(writer, id, &reply);
+        }
+        PendingJob::Batch { id, entries, _permits, t0 } => {
+            let entries: Vec<ScoreEntry> = entries
+                .into_iter()
+                .map(|(session, rx)| {
+                    let got =
+                        rx.recv().map_err(|_| "stream worker dropped response".to_string());
+                    response_entry(&session, got)
+                })
+                .collect();
+            metrics.requests.inc();
+            if entries.iter().any(|e| matches!(e, ScoreEntry::Failed { .. })) {
+                metrics.errors.inc();
+            }
+            metrics.latency_us.observe_duration(t0.elapsed());
+            let _ = write_locked(writer, id, &Msg::ScoresBatch { entries });
+        }
+    }
 }
 
 fn err(message: String) -> Msg {
     Msg::Error { message }
 }
 
-fn dispatch(
-    coord: &Coordinator,
-    gate: &InflightGate,
-    metrics: &NetMetrics,
-    retry_after_ms: u32,
-    msg: Msg,
-) -> Msg {
+/// Inline dispatch of the non-submit ops (submits go through the
+/// pipelined path in `handle_conn`).
+fn dispatch(coord: &Coordinator, msg: Msg) -> Msg {
     let _span = trace::span("net_request");
     match msg {
         Msg::Open { pool, session: _ } => {
@@ -272,22 +497,6 @@ fn dispatch(
                 Msg::Ok { affected: 0 }
             } else {
                 err(format!("no stream pool '{pool}'"))
-            }
-        }
-        Msg::Submit { pool, session, tokens } => {
-            // load-shed *before* the coordinator's queue: a shed
-            // request never advances the stream, so the client can
-            // retry it verbatim
-            let Some(_permit) = gate.try_acquire() else {
-                metrics.sheds.inc();
-                return Msg::RetryAfter { millis: retry_after_ms };
-            };
-            match coord.stream_chunk(&pool, &session, tokens) {
-                Ok(resp) => match resp.scores {
-                    Some(s) => Msg::from_scores(&resp.session, &s),
-                    None => err("chunk response carried no scores".into()),
-                },
-                Err(e) => err(format!("{e:#}")),
             }
         }
         Msg::Close { pool, session } => match coord.close_stream(&pool, &session) {

@@ -1,0 +1,345 @@
+//! The pipelined wire path, end to end over real loopback sockets:
+//!
+//!   * a mock server that answers in a seeded-SHUFFLED order proves the
+//!     client routes every out-of-order reply to the caller that issued
+//!     it (matched by frame request-id, fuzzed across rounds);
+//!   * a depth-8 [`PipelinedClient`] and a one-frame [`Msg::SubmitBatch`]
+//!     both reproduce the blocking client's per-token scores **bitwise**;
+//!   * one failed entry inside a batch (empty chunk) answers as
+//!     [`ScoreEntry::Failed`] without poisoning its neighbours or the
+//!     session's subsequent chunks;
+//!   * a live `admin_drain` migration under a pipelining client keeps
+//!     every score bit-exact;
+//!   * a [`BackendPool`] whose pooled connection dies mid-idle evicts it
+//!     and retries the forward once on a fresh dial — the caller never
+//!     sees the dead socket.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+use performer::coordinator::Coordinator;
+use performer::net::{
+    read_frame, write_frame, BackendPool, Client, Msg, PipelinedClient, Router, RouterMetrics,
+    ScoreEntry, Server, ServerConfig,
+};
+use performer::obs::MetricsRegistry;
+use performer::protein::Corpus;
+use performer::rng::Pcg64;
+use performer::runtime::EngineHandle;
+use performer::stream::SessionConfig;
+use performer::train::{NativeModel, SyntheticConfig};
+
+const POOL: &str = "native";
+const CHUNK: usize = 24;
+const ROUNDS: usize = 6;
+const SESSIONS: usize = 4;
+
+fn model() -> Arc<NativeModel> {
+    let cfg = SyntheticConfig::default();
+    Arc::new(NativeModel::synthetic(&cfg, &mut Pcg64::new(0)))
+}
+
+fn coordinator() -> Result<Coordinator> {
+    let mut coord = Coordinator::new(EngineHandle::disconnected(std::env::temp_dir()));
+    coord.start_stream_pool(POOL, model(), SessionConfig::default())?;
+    Ok(coord)
+}
+
+fn worker() -> Result<Server> {
+    Server::start(Arc::new(coordinator()?), "127.0.0.1:0", ServerConfig::default())
+}
+
+/// The CLI's seeded workload: `[round][session] -> chunk tokens`.
+fn schedule() -> Vec<Vec<Vec<u8>>> {
+    let corpus = Corpus::generate(Default::default());
+    let mut rng = Pcg64::new(42);
+    (0..ROUNDS)
+        .map(|_| {
+            (0..SESSIONS)
+                .map(|_| corpus.concat_stream(CHUNK, 1, &mut rng).pop().unwrap())
+                .collect()
+        })
+        .collect()
+}
+
+/// Per-session `(offset, bits)` ground truth from the blocking client —
+/// what every pipelined/batched path must reproduce exactly.
+fn blocking_bits() -> Result<Vec<Vec<(usize, u32)>>> {
+    let srv = worker()?;
+    let mut client = Client::connect(&srv.local_addr().to_string())?;
+    let mut bits = vec![Vec::new(); SESSIONS];
+    for round in schedule() {
+        for (s, tokens) in round.into_iter().enumerate() {
+            let scores = client.submit(POOL, &format!("user-{s}"), &tokens)?;
+            push_scores(&mut bits, s, &scores);
+        }
+    }
+    Ok(bits)
+}
+
+fn push_scores(bits: &mut [Vec<(usize, u32)>], s: usize, scores: &performer::stream::ChunkScores) {
+    for (p, lp) in scores.logprob.iter().enumerate() {
+        bits[s].push((scores.offset + p, lp.to_bits()));
+    }
+}
+
+/// Seeded Fisher–Yates: the shuffled completion order is reproducible.
+fn shuffle<T>(items: &mut [T], rng: &mut Pcg64) {
+    for i in (1..items.len()).rev() {
+        items.swap(i, rng.below(i + 1));
+    }
+}
+
+#[test]
+fn out_of_order_replies_route_to_their_callers() -> Result<()> {
+    const WAVE: usize = 8;
+    const WAVES: usize = 20;
+
+    // mock server: read a wave of frames, answer it in a seeded-random
+    // order, echoing each request's id into the reply payload (offset)
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let server = std::thread::spawn(move || -> Result<()> {
+        let (mut conn, _) = listener.accept()?;
+        let mut rng = Pcg64::new(0xd150_4de4);
+        for _ in 0..WAVES {
+            let mut wave = Vec::with_capacity(WAVE);
+            for _ in 0..WAVE {
+                wave.push(read_frame(&mut conn)?);
+            }
+            shuffle(&mut wave, &mut rng);
+            for (id, msg) in wave {
+                let Msg::Submit { session, .. } = msg else {
+                    anyhow::bail!("mock server expected submits only");
+                };
+                let reply = Msg::Scores {
+                    session,
+                    offset: id,
+                    logprob: vec![f32::from_bits(id as u32)],
+                    argmax: vec![0],
+                    argmax_prob: vec![0.0],
+                };
+                write_frame(&mut conn, id, &reply)?;
+            }
+        }
+        Ok(())
+    });
+
+    let mut client = PipelinedClient::connect(&addr.to_string(), WAVE)?;
+    for _ in 0..WAVES {
+        let mut pendings = Vec::with_capacity(WAVE);
+        for i in 0..WAVE {
+            let msg = Msg::Submit {
+                pool: POOL.into(),
+                session: format!("s-{i}"),
+                tokens: vec![1, 2, 3],
+            };
+            pendings.push((format!("s-{i}"), client.send(&msg)?));
+        }
+        // replies arrive shuffled; each must surface on its own handle
+        for (expect_session, pending) in pendings {
+            let id = pending.id();
+            match pending.wait()? {
+                Msg::Scores { session, offset, logprob, .. } => {
+                    assert_eq!(session, expect_session, "reply for the wrong caller");
+                    assert_eq!(offset, id, "request id {id} got reply {offset}");
+                    assert_eq!(logprob[0].to_bits(), id as u32);
+                }
+                other => panic!("expected scores, got {}", other.name()),
+            }
+        }
+    }
+    drop(client);
+    server.join().expect("mock server panicked")?;
+    Ok(())
+}
+
+#[test]
+fn pipelined_depth8_is_bitwise_identical_to_blocking() -> Result<()> {
+    let baseline = blocking_bits()?;
+
+    let srv = worker()?;
+    let mut client = PipelinedClient::connect(&srv.local_addr().to_string(), 8)?;
+    let mut bits = vec![Vec::new(); SESSIONS];
+    for round in schedule() {
+        // the whole round goes out before any reply is awaited; rounds
+        // stay synchronized so each session has one chunk in flight
+        let mut pendings = Vec::with_capacity(SESSIONS);
+        for (s, tokens) in round.iter().enumerate() {
+            let msg = Msg::Submit {
+                pool: POOL.into(),
+                session: format!("user-{s}"),
+                tokens: tokens.clone(),
+            };
+            pendings.push(client.send(&msg)?);
+        }
+        for ((s, tokens), pending) in round.iter().enumerate().zip(pendings) {
+            let scores = client.finish_submit(POOL, &format!("user-{s}"), tokens, pending)?;
+            push_scores(&mut bits, s, &scores);
+        }
+    }
+    assert_eq!(bits, baseline, "pipelining changed score bits");
+    Ok(())
+}
+
+#[test]
+fn submit_batch_is_bitwise_identical_to_blocking() -> Result<()> {
+    let baseline = blocking_bits()?;
+
+    let srv = worker()?;
+    let mut client = Client::connect(&srv.local_addr().to_string())?;
+    let mut bits = vec![Vec::new(); SESSIONS];
+    for round in schedule() {
+        let entries: Vec<(String, Vec<u8>)> = round
+            .into_iter()
+            .enumerate()
+            .map(|(s, tokens)| (format!("user-{s}"), tokens))
+            .collect();
+        let replies = client.submit_batch(POOL, entries)?;
+        assert_eq!(replies.len(), SESSIONS);
+        for (s, entry) in replies.into_iter().enumerate() {
+            let (sid, scores) = entry.into_chunk_scores()?;
+            assert_eq!(sid, format!("user-{s}"), "batch replies out of order");
+            push_scores(&mut bits, s, &scores);
+        }
+    }
+    assert_eq!(bits, baseline, "batched submits changed score bits");
+    assert!(srv.metrics().batches.get() >= ROUNDS as u64);
+    assert!(srv.metrics().batch_entries.get() >= (ROUNDS * SESSIONS) as u64);
+    Ok(())
+}
+
+#[test]
+fn one_failed_batch_entry_does_not_poison_the_rest() -> Result<()> {
+    let srv = worker()?;
+    let mut client = Client::connect(&srv.local_addr().to_string())?;
+    let plan = schedule();
+    let good0 = plan[0][0].clone();
+    let good1 = plan[0][1].clone();
+
+    // the middle entry is an empty chunk — a per-entry error, not a
+    // frame error: its neighbours must score normally
+    let replies = client.submit_batch(
+        POOL,
+        vec![
+            ("user-a".into(), good0.clone()),
+            ("user-bad".into(), Vec::new()),
+            ("user-b".into(), good1.clone()),
+        ],
+    )?;
+    assert_eq!(replies.len(), 3);
+    match &replies[1] {
+        ScoreEntry::Failed { session, message } => {
+            assert_eq!(session, "user-bad");
+            assert!(message.contains("empty chunk"), "unexpected message: {message}");
+        }
+        other => panic!("expected the empty chunk to fail, got {:?}", other.session()),
+    }
+    let (sid, first) = replies[0].clone().into_chunk_scores()?;
+    assert_eq!(sid, "user-a");
+    assert_eq!(first.offset, 0);
+    let (sid, _) = replies[2].clone().into_chunk_scores()?;
+    assert_eq!(sid, "user-b");
+
+    // the surviving sessions keep streaming: offsets advanced past the
+    // first chunk, unaffected by the failed neighbour
+    let second = client.submit(POOL, "user-a", &good1)?;
+    assert_eq!(second.offset, good0.len());
+    Ok(())
+}
+
+#[test]
+fn live_drain_under_pipelining_keeps_scores_bit_exact() -> Result<()> {
+    let baseline = blocking_bits()?;
+
+    let w0 = worker()?;
+    let w1 = worker()?;
+    let mut router = Router::start(
+        "127.0.0.1:0",
+        vec![w0.local_addr().to_string(), w1.local_addr().to_string()],
+    )?;
+    let raddr = router.local_addr().to_string();
+
+    let mut client = PipelinedClient::connect(&raddr, 4)?;
+    let mut bits = vec![Vec::new(); SESSIONS];
+    for (round_no, round) in schedule().into_iter().enumerate() {
+        if round_no == ROUNDS / 2 {
+            // live-migrate shard 0's sessions into shard 1 mid-soak,
+            // from a second control connection while the pipelined
+            // client keeps streaming the very next round
+            let mut admin = Client::connect(&raddr)?;
+            admin.admin_drain(POOL, 0, 1)?;
+        }
+        let mut pendings = Vec::with_capacity(SESSIONS);
+        for (s, tokens) in round.iter().enumerate() {
+            let msg = Msg::Submit {
+                pool: POOL.into(),
+                session: format!("user-{s}"),
+                tokens: tokens.clone(),
+            };
+            pendings.push(client.send(&msg)?);
+        }
+        for ((s, tokens), pending) in round.iter().enumerate().zip(pendings) {
+            let scores = client.finish_submit(POOL, &format!("user-{s}"), tokens, pending)?;
+            push_scores(&mut bits, s, &scores);
+        }
+    }
+    assert_eq!(bits, baseline, "a live drain under pipelining changed score bits");
+    assert_eq!(router.metrics().drains.get(), 1);
+    router.shutdown();
+    Ok(())
+}
+
+#[test]
+fn pool_evicts_dead_connection_and_retries_on_fresh_dial() -> Result<()> {
+    // mock backend: the first connection serves exactly one round trip
+    // and then hangs up; the second serves until the listener drops
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let backend = std::thread::spawn(move || -> Result<()> {
+        let (mut first, _) = listener.accept()?;
+        let (id, _) = read_frame(&mut first)?;
+        write_frame(&mut first, id, &Msg::Ok { affected: 1 })?;
+        drop(first); // the pooled connection dies while idle
+
+        let (mut second, _) = listener.accept()?;
+        for _ in 0..2 {
+            let (id, _) = read_frame(&mut second)?;
+            write_frame(&mut second, id, &Msg::Ok { affected: 2 })?;
+        }
+        Ok(())
+    });
+
+    let registry = MetricsRegistry::new();
+    let metrics = Arc::new(RouterMetrics::registered(&registry));
+    let pool = BackendPool::new(4, Duration::from_secs(30), metrics.clone());
+    let probe = Msg::Open { pool: POOL.into(), session: "x".into() };
+
+    // first forward dials, succeeds, and checks the connection in
+    match pool.forward(&addr, &probe) {
+        Msg::Ok { affected } => assert_eq!(affected, 1),
+        other => panic!("first forward failed: {}", other.name()),
+    }
+    // give the backend a moment to actually close the pooled socket
+    std::thread::sleep(Duration::from_millis(50));
+
+    // second forward checks out the dead connection, hits a frame
+    // error, evicts it, and succeeds on a fresh dial — invisibly
+    match pool.forward(&addr, &probe) {
+        Msg::Ok { affected } => assert_eq!(affected, 2),
+        other => panic!("forward after eviction failed: {}", other.name()),
+    }
+    assert!(metrics.pool_evictions.get() >= 1, "the dead connection was not evicted");
+    assert_eq!(metrics.pool_dials.get(), 2, "expected exactly one retry dial");
+
+    // the fresh connection went back into the pool and is reused
+    match pool.forward(&addr, &probe) {
+        Msg::Ok { affected } => assert_eq!(affected, 2),
+        other => panic!("pooled reuse failed: {}", other.name()),
+    }
+    assert!(metrics.pool_reuses.get() >= 1);
+    backend.join().expect("mock backend panicked")?;
+    Ok(())
+}

@@ -3,7 +3,7 @@
 //! wrong-version and trailing-garbage frames all refuse to decode —
 //! with an error, never a panic or a partial read.
 
-use performer::net::{frame_bytes, frame_from_bytes, Msg};
+use performer::net::{frame_bytes, frame_from_bytes, Msg, ScoreEntry};
 use performer::rng::Pcg64;
 
 fn rand_string(rng: &mut Pcg64, max: usize) -> String {
@@ -28,8 +28,22 @@ fn rand_u32s(rng: &mut Pcg64, max: usize) -> Vec<u32> {
     (0..n).map(|_| rng.next_u64() as u32).collect()
 }
 
+fn rand_entry(rng: &mut Pcg64) -> ScoreEntry {
+    if rng.below(2) == 0 {
+        ScoreEntry::Scores {
+            session: rand_string(rng, 24),
+            offset: rng.next_u64() >> 32,
+            logprob: rand_f32s(rng, 32),
+            argmax: rand_bytes(rng, 32),
+            argmax_prob: rand_f32s(rng, 32),
+        }
+    } else {
+        ScoreEntry::Failed { session: rand_string(rng, 24), message: rand_string(rng, 40) }
+    }
+}
+
 fn rand_msg(rng: &mut Pcg64) -> Msg {
-    match rng.below(15) {
+    match rng.below(17) {
         0 => Msg::Open { pool: rand_string(rng, 12), session: rand_string(rng, 24) },
         1 => Msg::Submit {
             pool: rand_string(rng, 12),
@@ -67,6 +81,19 @@ fn rand_msg(rng: &mut Pcg64) -> Msg {
         },
         12 => Msg::Export { sessions: rng.next_u64() >> 48, bundle: rand_bytes(rng, 128) },
         13 => Msg::RetryAfter { millis: rng.next_u64() as u32 },
+        14 => Msg::SubmitBatch {
+            pool: rand_string(rng, 12),
+            entries: {
+                let n = rng.below(5);
+                (0..n).map(|_| (rand_string(rng, 24), rand_bytes(rng, 64))).collect()
+            },
+        },
+        15 => Msg::ScoresBatch {
+            entries: {
+                let n = rng.below(5);
+                (0..n).map(|_| rand_entry(rng)).collect()
+            },
+        },
         _ => Msg::Error { message: rand_string(rng, 60) },
     }
 }
