@@ -33,6 +33,28 @@ pub struct TrainConfig {
     pub resample_every: usize,
     /// path to save/load the training checkpoint
     pub checkpoint: Option<String>,
+    /// SLiM chunk length L_c in tokens (0 = chunked training off).
+    /// With `synthetic` this trains a native stack chunk-by-chunk; with
+    /// an artifact it reroutes `TrainState` through the native path
+    pub chunked: usize,
+    /// train a fully native synthetic Performer stack (no artifacts,
+    /// no PJRT) — the SLiM path's self-contained mode
+    pub synthetic: bool,
+    /// sequence length per row for synthetic native training
+    pub seq_len: usize,
+    /// batch size for synthetic native training
+    pub batch: usize,
+    /// Adam learning rate for the native chunked trainer
+    pub lr: f64,
+    /// kernel redraw period in tokens for the synthetic stack (0 =
+    /// never) — chunk boundaries align to it automatically
+    pub redraw: usize,
+    /// carried/checkpointed stream-state precision: "f32" | "bf16"
+    pub precision: String,
+    /// run a second full-sequence (chunk_len = 0) trainer from the same
+    /// init and data, and fail unless per-step losses agree — the
+    /// chunked-vs-oracle smoke check CI runs
+    pub check_full: bool,
     /// synthetic corpus parameters
     pub corpus: CorpusConfig,
 }
@@ -48,6 +70,14 @@ impl Default for TrainConfig {
             seed: 0,
             resample_every: 0,
             checkpoint: None,
+            chunked: 0,
+            synthetic: false,
+            seq_len: 128,
+            batch: 4,
+            lr: 1e-3,
+            redraw: 0,
+            precision: "f32".into(),
+            check_full: false,
             corpus: CorpusConfig::default(),
         }
     }
@@ -104,6 +134,14 @@ impl TrainConfig {
             "seed" => self.seed = val.as_f64()? as u64,
             "resample_every" => self.resample_every = val.as_usize()?,
             "checkpoint" => self.checkpoint = Some(val.as_str()?.to_string()),
+            "chunked" => self.chunked = val.as_usize()?,
+            "synthetic" => self.synthetic = val.as_usize()? != 0,
+            "seq_len" => self.seq_len = val.as_usize()?,
+            "batch" => self.batch = val.as_usize()?,
+            "lr" => self.lr = val.as_f64()?,
+            "redraw" => self.redraw = val.as_usize()?,
+            "precision" => self.precision = val.as_str()?.to_string(),
+            "check_full" => self.check_full = val.as_usize()? != 0,
             _ => {
                 if !apply_corpus_key(&mut self.corpus, key, val)? {
                     bail!("unknown train config key '{key}'");
@@ -200,6 +238,32 @@ mod tests {
         assert_eq!(cfg.steps, 500);
         assert_eq!(cfg.artifact, "tiny_relu_bid");
         assert!((cfg.corpus.sub_rate - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_keys_parse() {
+        let cfg = TrainConfig::from_sources(
+            None,
+            &[
+                "synthetic=1".into(),
+                "chunked=24".into(),
+                "seq_len=96".into(),
+                "batch=2".into(),
+                "lr=0.002".into(),
+                "redraw=32".into(),
+                "precision=bf16".into(),
+                "check_full=1".into(),
+            ],
+        )
+        .unwrap();
+        assert!(cfg.synthetic);
+        assert_eq!(cfg.chunked, 24);
+        assert_eq!(cfg.seq_len, 96);
+        assert_eq!(cfg.batch, 2);
+        assert!((cfg.lr - 0.002).abs() < 1e-12);
+        assert_eq!(cfg.redraw, 32);
+        assert_eq!(cfg.precision, "bf16");
+        assert!(cfg.check_full);
     }
 
     #[test]

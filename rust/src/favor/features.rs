@@ -220,6 +220,159 @@ impl FeatureMap {
         z
     }
 
+    /// Reverse-mode gradient of [`Self::apply_block`]: given the
+    /// cotangent `dphi` (block_rows × M) of the features the forward
+    /// produced for rows `[row_lo, row_hi)` / columns
+    /// `[col_lo, col_lo+d)` of `x`, *accumulate* `dL/dx` into the same
+    /// block of `dx` (which must share `x`'s shape).
+    ///
+    /// The pre-activations `z = X_block·Wᵀ` are recomputed with the
+    /// forward's own kernel ([`crate::tensor::matmul_block`]) rather
+    /// than taped, so the chunk backward only stores features it needs
+    /// for the attention recurrence. W and b are kernel draws, not
+    /// trained parameters — there is no dW/db output. Clamped regions
+    /// ([`EXP_CLAMP`] in Positive/Exp) get the exact zero subgradient of
+    /// the clamp, and the row-level ‖x‖² terms of the Softmax/Positive
+    /// renormalizers contribute their `x`-direction component.
+    pub fn vjp_block(
+        &self,
+        x: &Mat,
+        row_lo: usize,
+        row_hi: usize,
+        col_lo: usize,
+        dphi: &Mat,
+        dx: &mut Mat,
+    ) {
+        let m = self.m();
+        let rows = row_hi - row_lo;
+        assert_eq!((dphi.rows, dphi.cols), (rows, m), "dphi shape mismatch");
+        assert_eq!((dx.rows, dx.cols), (x.rows, x.cols), "dx must mirror x");
+        assert!(col_lo + self.d <= x.cols, "column block exceeds input width");
+
+        // recompute the pre-activations exactly as the forward did
+        let wt = self.w.t();
+        let mut z = Mat::zeros(rows, m);
+        matmul_block(x, row_lo, row_hi, col_lo, &wt, &mut z);
+
+        // turn z into dz in place; xcoef[i] scales the extra x-direction
+        // term the row-level renormalizers contribute
+        let mut xcoef = vec![0.0f32; rows];
+        match self.kind {
+            FeatureKind::Softmax => {
+                let scale = (2.0 / m as f32).sqrt();
+                let r = 2.0 * (self.d as f32).sqrt();
+                for i in 0..rows {
+                    let xr = &x.row(row_lo + i)[col_lo..col_lo + self.d];
+                    let norm_sq: f32 = xr.iter().map(|v| v * v).sum();
+                    let diag = (norm_sq / r).exp();
+                    let mut csum = 0.0f32;
+                    for j in 0..m {
+                        let v = z.at(i, j) + self.b[j];
+                        let dp = dphi.at(i, j);
+                        csum += dp * scale * v.cos();
+                        *z.at_mut(i, j) = -dp * diag * scale * v.sin();
+                    }
+                    // phi = D·s·cos(v), D = exp(‖x‖²/r) ⇒ the D path
+                    // adds (2D/r)·Σ_j dphi_j·s·cos(v_j) in the x direction
+                    xcoef[i] = 2.0 * diag / r * csum;
+                }
+            }
+            FeatureKind::Positive => {
+                let scale = 1.0 / (m as f32).sqrt();
+                let r = 2.0 * (self.d as f32).sqrt();
+                for i in 0..rows {
+                    let xr = &x.row(row_lo + i)[col_lo..col_lo + self.d];
+                    let norm_sq: f32 = xr.iter().map(|v| v * v).sum();
+                    let diag = norm_sq / r;
+                    let mut msum = 0.0f32;
+                    for j in 0..m {
+                        let g = z.at(i, j) - diag;
+                        // exact subgradient of min(·, EXP_CLAMP): zero
+                        // wherever the stabilizer clamp engaged
+                        let dm = if g < EXP_CLAMP {
+                            dphi.at(i, j) * scale * g.exp()
+                        } else {
+                            0.0
+                        };
+                        msum += dm;
+                        *z.at_mut(i, j) = dm;
+                    }
+                    // g_j = z_j − ‖x‖²/r ⇒ the shared diag subtracts
+                    // (2/r)·Σ_j dm_j in the x direction
+                    xcoef[i] = -2.0 / r * msum;
+                }
+            }
+            FeatureKind::Exp => {
+                let scale = 1.0 / (m as f32).sqrt();
+                for v in &mut z.data {
+                    *v = if *v < EXP_CLAMP { scale * v.exp() } else { 0.0 };
+                }
+                for (zv, dp) in z.data.iter_mut().zip(&dphi.data) {
+                    *zv *= dp;
+                }
+            }
+            kind => {
+                let scale = 1.0 / (m as f32).sqrt();
+                for (zv, dp) in z.data.iter_mut().zip(&dphi.data) {
+                    let t = *zv;
+                    let fprime = match kind {
+                        FeatureKind::Relu => {
+                            if t > 0.0 {
+                                1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        FeatureKind::Sigmoid => {
+                            let s = 1.0 / (1.0 + (-t).exp());
+                            s * (1.0 - s)
+                        }
+                        FeatureKind::Abs => {
+                            if t > 0.0 {
+                                1.0
+                            } else if t < 0.0 {
+                                -1.0
+                            } else {
+                                0.0
+                            }
+                        }
+                        FeatureKind::Gelu => {
+                            let u = 0.7978845608 * (t + 0.044715 * t * t * t);
+                            let th = u.tanh();
+                            0.5 * (1.0 + th)
+                                + 0.5
+                                    * t
+                                    * (1.0 - th * th)
+                                    * 0.7978845608
+                                    * (1.0 + 3.0 * 0.044715 * t * t)
+                        }
+                        FeatureKind::Cos => -t.sin(),
+                        FeatureKind::Tanh => {
+                            let th = t.tanh();
+                            1.0 - th * th
+                        }
+                        FeatureKind::Identity => 1.0,
+                        // handled above
+                        FeatureKind::Softmax | FeatureKind::Positive | FeatureKind::Exp => {
+                            unreachable!()
+                        }
+                    };
+                    *zv = dp * scale * fprime;
+                }
+            }
+        }
+
+        // dx_block += dz·W (+ the renormalizer x terms)
+        let dxb = z.matmul(&self.w);
+        for i in 0..rows {
+            let xr = x.row(row_lo + i)[col_lo..col_lo + self.d].to_vec();
+            let dr = &mut dx.row_mut(row_lo + i)[col_lo..col_lo + self.d];
+            for (j, g) in dr.iter_mut().enumerate() {
+                *g += dxb.at(i, j) + xcoef[i] * xr[j];
+            }
+        }
+    }
+
     /// The post-projection activation pass shared by [`Self::apply`] and
     /// [`Self::apply_block`]: z already holds X_block · Wᵀ; row i of z
     /// corresponds to `x.row(row_lo + i)[col_lo..col_lo+d]`.
@@ -457,6 +610,82 @@ mod tests {
         }
         assert_eq!(FeatureKind::parse("positive"), Some(FeatureKind::Positive));
         assert!(FeatureKind::parse("nope").is_none());
+    }
+
+    /// Finite-difference check of `vjp_block` for every feature kind.
+    /// Inputs are resampled (deterministically) until every
+    /// pre-activation sits away from the piecewise boundaries
+    /// (ReLU/Abs kink at 0, the EXP_CLAMP ceiling), so the central
+    /// difference never straddles a subgradient switch.
+    #[test]
+    fn vjp_block_matches_finite_differences() {
+        let (l, d, m) = (5usize, 6usize, 16usize);
+        let (row_lo, col_lo) = (1usize, 3usize);
+        let eps = 1e-3f32;
+        for (ki, &kind) in FeatureKind::ALL.iter().enumerate() {
+            let mut rng = Pcg64::new(100 + ki as u64);
+            let fm = FeatureMap::sample(kind, m, d, OrfMechanism::Regular, &mut rng);
+            // a ±eps nudge of one input moves any z by at most eps·max|w|
+            let wmax = fm.w.data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+            let margin = 2.0 * eps * wmax + 1e-2;
+            let mut x = None;
+            for t in 0..200u64 {
+                let cand = Mat::from_vec(
+                    l + 2,
+                    12,
+                    rng.fork(t).gaussian_vec((l + 2) * 12).iter().map(|v| v * 0.5).collect(),
+                );
+                let blk = Mat::from_fn(l, d, |i, j| cand.at(row_lo + i, col_lo + j));
+                let z = blk.matmul(&fm.w.t());
+                if z.data.iter().all(|&v| v.abs() > margin && (EXP_CLAMP - v).abs() > margin) {
+                    x = Some(cand);
+                    break;
+                }
+            }
+            let x = x.unwrap_or_else(|| panic!("{kind:?}: no boundary-free input in 200 draws"));
+            let dphi = Mat::from_vec(l, m, rng.gaussian_vec(l * m));
+
+            let mut dx = Mat::zeros(x.rows, x.cols);
+            fm.vjp_block(&x, row_lo, row_lo + l, col_lo, &dphi, &mut dx);
+
+            let probe = |xp: &Mat| -> f64 {
+                let phi = fm.apply_block(xp, row_lo, row_lo + l, col_lo);
+                phi.data.iter().zip(&dphi.data).map(|(&p, &d)| p as f64 * d as f64).sum()
+            };
+            for i in 0..l {
+                for j in 0..d {
+                    let mut hi = x.clone();
+                    *hi.at_mut(row_lo + i, col_lo + j) += eps;
+                    let mut lo = x.clone();
+                    *lo.at_mut(row_lo + i, col_lo + j) -= eps;
+                    let fd = (probe(&hi) - probe(&lo)) / (2.0 * eps as f64);
+                    let an = dx.at(row_lo + i, col_lo + j) as f64;
+                    let tol = 2e-3 + 2e-2 * fd.abs().max(an.abs());
+                    assert!(
+                        (fd - an).abs() <= tol,
+                        "{kind:?} d x[{i}][{j}]: fd {fd} vs analytic {an}"
+                    );
+                }
+            }
+            // entries outside the block are never written
+            for i in 0..x.rows {
+                for j in 0..x.cols {
+                    let inside =
+                        (row_lo..row_lo + l).contains(&i) && (col_lo..col_lo + d).contains(&j);
+                    assert!(inside || dx.at(i, j) == 0.0, "{kind:?}: wrote outside block");
+                }
+            }
+            // vjp_block accumulates: a second pass doubles the block
+            let mut dx2 = dx.clone();
+            fm.vjp_block(&x, row_lo, row_lo + l, col_lo, &dphi, &mut dx2);
+            for i in 0..l {
+                for j in 0..d {
+                    let once = dx.at(row_lo + i, col_lo + j);
+                    let twice = dx2.at(row_lo + i, col_lo + j);
+                    assert!((twice - 2.0 * once).abs() <= 1e-6 * once.abs().max(1.0));
+                }
+            }
+        }
     }
 
     #[test]

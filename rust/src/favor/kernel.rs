@@ -260,6 +260,40 @@ impl AttentionKernel {
     }
 }
 
+/// The next redraw boundary strictly after stream position `pos`
+/// across a whole layer stack: the minimum over every kernel's own
+/// [`AttentionKernel::next_boundary`] (None = no kernel redraws). Both
+/// the streamed forward (`NativeModel::forward_chunk_batch`) and the
+/// SLiM chunked trainer split their segments here, which is the
+/// alignment rule that keeps chunked == single-shot exact under
+/// redrawing.
+pub fn stack_next_boundary(kernels: &[AttentionKernel], pos: u64) -> Option<u64> {
+    kernels.iter().filter_map(|k| k.next_boundary(pos)).min()
+}
+
+/// Split the span `[pos, pos+len)` of stream positions into
+/// epoch-aligned segments: maximal runs that no kernel's redraw
+/// schedule cuts, returned as `(start, end)` offsets **relative to the
+/// span**. Concatenated they cover the span exactly; every segment is
+/// non-empty. An empty span yields no segments.
+pub fn epoch_aligned_segments(
+    kernels: &[AttentionKernel],
+    pos: u64,
+    len: usize,
+) -> Vec<(usize, usize)> {
+    let mut segs = Vec::new();
+    let mut cur = 0usize;
+    while cur < len {
+        let end = match stack_next_boundary(kernels, pos + cur as u64) {
+            Some(boundary) => ((boundary - pos) as usize).min(len),
+            None => len,
+        };
+        segs.push((cur, end));
+        cur = end;
+    }
+    segs
+}
+
 /// A kernel handle featurizes with its **epoch-0 draw**, always: the
 /// generic estimators are stateless full-sequence views with no stream
 /// position, so there is no epoch to select. On a kernel with a live
@@ -299,6 +333,28 @@ mod tests {
         let never = AttentionKernel::new(cfg(0), 8);
         assert_eq!(never.epoch_of(1 << 40), 0);
         assert_eq!(never.next_boundary(1 << 40), None);
+    }
+
+    #[test]
+    fn epoch_aligned_segments_cut_at_every_schedule() {
+        // two schedules, 6 and 10: cuts land on multiples of either
+        let kernels =
+            vec![AttentionKernel::new(cfg(6), 8), AttentionKernel::new(cfg(10), 8)];
+        let segs = epoch_aligned_segments(&kernels, 4, 20);
+        // span [4, 24): boundaries at 6, 10, 12, 18, 20 → relative cuts
+        assert_eq!(segs, vec![(0, 2), (2, 6), (6, 8), (8, 14), (14, 16), (16, 20)]);
+        // segments tile the span exactly
+        let mut cur = 0;
+        for &(a, b) in &segs {
+            assert_eq!(a, cur);
+            assert!(b > a);
+            cur = b;
+        }
+        assert_eq!(cur, 20);
+        // no schedule → one segment; empty span → none
+        let none = vec![AttentionKernel::new(cfg(0), 8)];
+        assert_eq!(epoch_aligned_segments(&none, 7, 5), vec![(0, 5)]);
+        assert!(epoch_aligned_segments(&kernels, 0, 0).is_empty());
     }
 
     #[test]

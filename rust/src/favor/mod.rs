@@ -21,7 +21,9 @@ pub mod lsh;
 pub use analysis::{attention_matrix_exact, attention_matrix_favor, l1_error, output_error, raw_attention_matrix_favor};
 pub use exact::{exact_attention, identity_attention};
 pub use features::{FeatureKind, FeatureMap};
-pub use kernel::{AttentionKernel, Featurizer, KernelConfig};
+pub use kernel::{
+    epoch_aligned_segments, stack_next_boundary, AttentionKernel, Featurizer, KernelConfig,
+};
 pub use linear::{favor_attention, favor_bidirectional, favor_unidirectional};
 pub use lsh::{lsh_attention, LshConfig};
 

@@ -28,7 +28,7 @@ pub mod sweep;
 
 pub use scorer::{ChunkScorer, ChunkScores};
 pub use session::{DeltaStats, SessionConfig, SessionManager, SessionStats};
-pub use state::{FavorStream, StatePrecision, StreamState};
+pub use state::{advance_vjp, AdvanceGrads, FavorStream, StatePrecision, StreamState};
 pub use sweep::{
     chunked_latency_point, fused_throughput_point, sweep_totals, FusedPoint, SweepPoint,
 };

@@ -11,7 +11,7 @@
 
 use crate::favor::features::FeatureMap;
 use crate::favor::linear::STABILIZER;
-use crate::tensor::{axpy, Mat};
+use crate::tensor::{axpy, dot, Mat};
 
 /// Storage precision of a [`StreamState`]'s resident prefix sums.
 ///
@@ -142,6 +142,140 @@ fn advance_dense(state: &mut Mat, qp: &Mat, kp: &Mat, v: &Mat, d: usize) -> Mat 
         }
     }
     out
+}
+
+/// Gradients of one [`advance_vjp`] call: cotangents of the chunk's
+/// mapped features/values and of the entry prefix sums.
+pub struct AdvanceGrads {
+    /// dL/dphi(Q) for the chunk (L×M)
+    pub dqp: Mat,
+    /// dL/dphi(K) for the chunk (L×M)
+    pub dkp: Mat,
+    /// dL/dV for the chunk (L×d)
+    pub dv: Mat,
+    /// dL/dG^PS at chunk entry (M×(d+1)) — the "d-state out" that flows
+    /// into the preceding chunk's backward, mirroring state in/state out
+    pub dstate_in: Mat,
+}
+
+/// Reverse-mode gradient of one chunk of the prefix-sum recurrence (the
+/// SLiM chunk-local backward): given the *entry* state `state_in` (the
+/// dense f32 image [`StreamState::dense`] captured at the chunk
+/// boundary), the chunk's inputs, the cotangent `dout` of the chunk's
+/// attention outputs and the cotangent `dstate_out` of the chunk's *end*
+/// state (zeros for the final chunk; the previous call's `dstate_in` for
+/// any other), produce the input cotangents and the entry-state
+/// cotangent.
+///
+/// Two sweeps, O(M(d+1)) resident memory beyond the chunk itself:
+///   * forward sweep re-runs the exact recurrence from `state_in`
+///     (operation-for-operation [`StreamState::advance`]'s arithmetic),
+///     producing per-row `du_i` — the cotangent of the un-normalized row
+///     aggregate `u_i = q'_i · G^PS_i` — and `dqp_i = G^PS_i · du_i`,
+///     which only need the *current* state;
+///   * reverse sweep carries the running state cotangent `dS` from
+///     `dstate_out` back down: row i adds its `q'_i ⊗ du_i` contribution,
+///     then reads off `dkp_i = dS · [v_i 1]` and `dv_i = k'_iᵀ dS` before
+///     passing `dS` unchanged across the `S_i = S_{i−1} + …` update.
+///
+/// No per-row state trajectory is stored — only `du` (L×(d+1)) — which
+/// is what keeps the chunked backward's footprint linear in the chunk,
+/// not the stream.
+pub fn advance_vjp(
+    state_in: &Mat,
+    qp: &Mat,
+    kp: &Mat,
+    v: &Mat,
+    dout: &Mat,
+    dstate_out: &Mat,
+) -> AdvanceGrads {
+    let l = qp.rows;
+    let m = qp.cols;
+    let d = v.cols;
+    assert_eq!((state_in.rows, state_in.cols), (m, d + 1), "state_in must be M x (d+1)");
+    assert_eq!((dstate_out.rows, dstate_out.cols), (m, d + 1), "dstate_out must be M x (d+1)");
+    assert_eq!((kp.rows, kp.cols), (l, m), "kp shape mismatch");
+    assert_eq!(v.rows, l, "v rows != qp rows");
+    assert_eq!((dout.rows, dout.cols), (l, d), "dout shape mismatch");
+
+    let mut dqp = Mat::zeros(l, m);
+    let mut dkp = Mat::zeros(l, m);
+    let mut dv = Mat::zeros(l, d);
+    let mut du = Mat::zeros(l, d + 1);
+
+    // ---- forward sweep: recompute S_i, emit du_i and dqp_i -------------
+    let mut state = state_in.clone();
+    let mut buf = vec![0.0f32; d + 1];
+    for i in 0..l {
+        // identical update arithmetic to `advance_dense`
+        let krow = kp.row(i);
+        let vrow = v.row(i);
+        for (j, &kij) in krow.iter().enumerate() {
+            if kij != 0.0 {
+                let srow = &mut state.data[j * (d + 1)..(j + 1) * (d + 1)];
+                axpy(kij, vrow, &mut srow[..d]);
+                srow[d] += kij;
+            }
+        }
+        buf.fill(0.0);
+        let qrow = qp.row(i);
+        for (j, &qij) in qrow.iter().enumerate() {
+            if qij != 0.0 {
+                axpy(qij, &state.data[j * (d + 1)..(j + 1) * (d + 1)], &mut buf);
+            }
+        }
+        let denom = buf[d] + STABILIZER;
+        // out_i[j] = u_i[j]/denom, denom = u_i[d] + STABILIZER:
+        //   du_i[j] = dout_i[j]/denom            (j < d)
+        //   du_i[d] = −Σ_j dout_i[j]·out_i[j]/denom
+        let dorow = dout.row(i);
+        let durow = du.row_mut(i);
+        let mut dd = 0.0f32;
+        for j in 0..d {
+            durow[j] = dorow[j] / denom;
+            dd += dorow[j] * (buf[j] / denom);
+        }
+        durow[d] = -dd / denom;
+        // dqp_i[j] = S_i.row(j) · du_i  (needs only the current state;
+        // NOT gated on qij == 0 — the gradient at a zero input is still
+        // the gradient)
+        let dqrow = dqp.row_mut(i);
+        for (j, dq) in dqrow.iter_mut().enumerate() {
+            *dq = dot(&state.data[j * (d + 1)..(j + 1) * (d + 1)], durow);
+        }
+    }
+
+    // ---- reverse sweep: carry dS down, emit dkp_i and dv_i -------------
+    let mut dstate = dstate_out.clone();
+    for i in (0..l).rev() {
+        // S_i fed both out_i (via u_i = q'_i·S_i) and S_{i+1}:
+        //   dS_i = dS_{i+1} + q'_i ⊗ du_i
+        let qrow = qp.row(i);
+        let durow = du.row(i);
+        for (j, &qij) in qrow.iter().enumerate() {
+            if qij != 0.0 {
+                axpy(qij, durow, &mut dstate.data[j * (d + 1)..(j + 1) * (d + 1)]);
+            }
+        }
+        // S_i = S_{i−1} + k'_i [v_i 1]ᵀ:
+        //   dkp_i[j] = dS_i.row(j)[..d]·v_i + dS_i.row(j)[d]
+        //   dv_i    += Σ_j k'_ij · dS_i.row(j)[..d]
+        //   dS_{i−1} = dS_i  (pass-through)
+        let vrow = v.row(i);
+        let krow = kp.row(i);
+        let dkrow = dkp.row_mut(i);
+        let dvrow = dv.row_mut(i);
+        for j in 0..m {
+            let dsrow = &dstate.data[j * (d + 1)..(j + 1) * (d + 1)];
+            dkrow[j] = dot(&dsrow[..d], vrow) + dsrow[d];
+            let kij = krow[j];
+            if kij != 0.0 {
+                axpy(kij, &dsrow[..d], dvrow);
+            }
+        }
+    }
+
+    AdvanceGrads { dqp, dkp, dv, dstate_in: dstate }
 }
 
 impl StreamState {
@@ -577,6 +711,120 @@ mod tests {
         let bb: Vec<u32> = b.data.iter().map(|v| v.to_bits()).collect();
         assert_eq!(ab, bb, "restored bf16 state must continue bit-for-bit");
         assert_eq!(st.quant_state(), restored.quant_state());
+    }
+
+    /// Scalar objective for the finite-difference probes: a fixed random
+    /// weighting of every output entry plus every end-state entry, so
+    /// both cotangent inputs of the VJP are exercised at once.
+    fn probe_loss(
+        state_in: &Mat,
+        qp: &Mat,
+        kp: &Mat,
+        v: &Mat,
+        wout: &Mat,
+        wstate: &Mat,
+    ) -> f64 {
+        let d = v.cols;
+        let mut st = StreamState::from_parts(qp.cols, d, state_in.clone(), 0, 0);
+        let out = st.advance(qp, kp, v);
+        let mut acc = 0.0f64;
+        for (o, w) in out.data.iter().zip(&wout.data) {
+            acc += (*o as f64) * (*w as f64);
+        }
+        for (s, w) in st.dense().data.iter().zip(&wstate.data) {
+            acc += (*s as f64) * (*w as f64);
+        }
+        acc
+    }
+
+    #[test]
+    fn advance_vjp_matches_finite_differences() {
+        let (l, d, m) = (6usize, 3usize, 5usize);
+        let mut rng = Pcg64::new(21);
+        // strictly positive features keep the recurrence smooth (no ReLU
+        // kinks under the FD probe) — the shapes FAVOR+ actually produces
+        let mk = |rng: &mut Pcg64, r: usize, c: usize, lo: f32| {
+            Mat::from_vec(r, c, rng.gaussian_vec(r * c).iter().map(|v| v.abs() * 0.4 + lo).collect())
+        };
+        let qp = mk(&mut rng, l, m, 0.05);
+        let kp = mk(&mut rng, l, m, 0.05);
+        let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let state_in = mk(&mut rng, m, d + 1, 0.0);
+        let wout = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let wstate = Mat::from_vec(m, d + 1, rng.gaussian_vec(m * (d + 1)));
+
+        let g = advance_vjp(&state_in, &qp, &kp, &v, &wout, &wstate);
+
+        let eps = 1e-3f32;
+        let check = |which: &str, base: &Mat, grad: &Mat, perturb: &dyn Fn(&Mat) -> f64| {
+            for idx in 0..base.data.len() {
+                let mut hi = base.clone();
+                hi.data[idx] += eps;
+                let mut lo = base.clone();
+                lo.data[idx] -= eps;
+                let fd = (perturb(&hi) - perturb(&lo)) / (2.0 * eps as f64);
+                let an = grad.data[idx] as f64;
+                assert!(
+                    (fd - an).abs() <= 1e-3 + 0.02 * fd.abs().max(an.abs()),
+                    "{which}[{idx}]: fd {fd} vs analytic {an}"
+                );
+            }
+        };
+        check("dqp", &qp, &g.dqp, &|qpx| probe_loss(&state_in, qpx, &kp, &v, &wout, &wstate));
+        check("dkp", &kp, &g.dkp, &|kpx| probe_loss(&state_in, &qp, kpx, &v, &wout, &wstate));
+        check("dv", &v, &g.dv, &|vx| probe_loss(&state_in, &qp, &kp, vx, &wout, &wstate));
+        check("dstate_in", &state_in, &g.dstate_in, &|sx| {
+            probe_loss(sx, &qp, &kp, &v, &wout, &wstate)
+        });
+    }
+
+    #[test]
+    fn advance_vjp_chains_across_chunk_boundary() {
+        // backprop through [0,cut) + [cut,l) with the d-state handoff
+        // must equal backprop through the single chunk [0,l)
+        let (l, d, m, cut) = (10usize, 4usize, 6usize, 4usize);
+        let mut rng = Pcg64::new(22);
+        let mk = |rng: &mut Pcg64, r: usize, c: usize| {
+            Mat::from_vec(r, c, rng.gaussian_vec(r * c).iter().map(|v| v.abs() * 0.3 + 0.02).collect())
+        };
+        let qp = mk(&mut rng, l, m);
+        let kp = mk(&mut rng, l, m);
+        let v = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let dout = Mat::from_vec(l, d, rng.gaussian_vec(l * d));
+        let zero_state = Mat::zeros(m, d + 1);
+
+        let whole = advance_vjp(&zero_state, &qp, &kp, &v, &dout, &Mat::zeros(m, d + 1));
+
+        // the boundary state is the recurrence run over the head chunk
+        let mut st = StreamState::new(m, d);
+        st.advance(&qp.rows_slice(0, cut), &kp.rows_slice(0, cut), &v.rows_slice(0, cut));
+        let mid = st.dense();
+        let tail = advance_vjp(
+            &mid,
+            &qp.rows_slice(cut, l),
+            &kp.rows_slice(cut, l),
+            &v.rows_slice(cut, l),
+            &dout.rows_slice(cut, l),
+            &Mat::zeros(m, d + 1),
+        );
+        let head = advance_vjp(
+            &zero_state,
+            &qp.rows_slice(0, cut),
+            &kp.rows_slice(0, cut),
+            &v.rows_slice(0, cut),
+            &dout.rows_slice(0, cut),
+            &tail.dstate_in,
+        );
+
+        let glue = |a: &Mat, b: &Mat| {
+            let mut data = a.data.clone();
+            data.extend_from_slice(&b.data);
+            Mat::from_vec(l, a.cols, data)
+        };
+        assert!(glue(&head.dqp, &tail.dqp).max_abs_diff(&whole.dqp) < 1e-5);
+        assert!(glue(&head.dkp, &tail.dkp).max_abs_diff(&whole.dkp) < 1e-5);
+        assert!(glue(&head.dv, &tail.dv).max_abs_diff(&whole.dv) < 1e-5);
+        assert!(head.dstate_in.max_abs_diff(&whole.dstate_in) < 1e-5);
     }
 
     #[test]

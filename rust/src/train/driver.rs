@@ -18,6 +18,8 @@ use crate::rng::Pcg64;
 use crate::runtime::{Engine, Executable, HostValue, Role, TensorFile};
 
 use super::curve::Curve;
+use super::native_model::NativeModel;
+use super::slim::{ChunkedTrainConfig, NativeTrainer};
 
 /// Which data split a batch is drawn from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -118,6 +120,11 @@ pub struct TrainState {
     pub param_names: Vec<String>,
     /// names of the feature slots (artifact order)
     pub feature_names: Vec<String>,
+    /// native SLiM chunked trainer, when enabled: train/eval steps
+    /// route through it instead of the AOT executables, with params and
+    /// Adam moments mirrored back into the artifact slots after every
+    /// step so checkpoints and transplant keep working unchanged
+    pub chunked: Option<NativeTrainer>,
 }
 
 impl TrainState {
@@ -174,7 +181,98 @@ impl TrainState {
             features,
             param_names,
             feature_names,
+            chunked: None,
         })
+    }
+
+    /// Switch this state's train/eval steps to the native SLiM chunked
+    /// path (`train::slim`): builds a [`NativeModel`] from the
+    /// artifact's metadata plus the current host params/features, and
+    /// adopts the current Adam moments and step counter so training
+    /// resumes exactly where the AOT path left it. Requires a causal
+    /// FAVOR artifact.
+    pub fn enable_chunked(&mut self, cfg: ChunkedTrainConfig, lr: f32) -> Result<()> {
+        let lookup = |name: &str| -> Option<Vec<f32>> {
+            if let Some(i) = self.param_names.iter().position(|n| n == name) {
+                return Some(self.params[i].clone());
+            }
+            self.feature_names
+                .iter()
+                .position(|n| n == name)
+                .map(|i| self.features[i].clone())
+        };
+        let model = NativeModel::from_weights(&self.train_exe.meta, &lookup)?;
+        let tag = format!("{}-slim", self.tag);
+        let trainer = NativeTrainer::new(model, cfg, lr, &tag)?;
+        self.chunked = Some(trainer);
+        self.sync_chunked_from_host();
+        Ok(())
+    }
+
+    /// Push the host-slot params, Adam moments and step counter into
+    /// the chunked trainer (no-op when chunked mode is off). Called
+    /// after checkpoint restore and weight transplant so the native
+    /// model never drifts from the artifact slots.
+    pub fn sync_chunked_from_host(&mut self) {
+        let Some(mut trainer) = self.chunked.take() else { return };
+        for (name, slot) in trainer.model_mut().param_slots_mut() {
+            if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                if self.params[i].len() == slot.len() {
+                    slot.copy_from_slice(&self.params[i]);
+                }
+            }
+        }
+        let (ms, vs) = trainer.opt_slots_mut();
+        for (name, slot) in ms {
+            if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                if self.opt_m[i].len() == slot.len() {
+                    slot.copy_from_slice(&self.opt_m[i]);
+                }
+            }
+        }
+        for (name, slot) in vs {
+            if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                if self.opt_v[i].len() == slot.len() {
+                    slot.copy_from_slice(&self.opt_v[i]);
+                }
+            }
+        }
+        trainer.set_step(self.step);
+        self.chunked = Some(trainer);
+    }
+
+    /// One SLiM step through the native trainer, mirroring its params,
+    /// moments and step counter back into the artifact slots.
+    fn chunked_train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let mut trainer = self.chunked.take().expect("chunked trainer enabled");
+        let res = trainer.train_step(batch);
+        if res.is_ok() {
+            for (name, data) in trainer.model().param_slots() {
+                if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                    if self.params[i].len() == data.len() {
+                        self.params[i].copy_from_slice(data);
+                    }
+                }
+            }
+            let (ms, vs) = trainer.opt_slots();
+            for (name, data) in ms {
+                if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                    if self.opt_m[i].len() == data.len() {
+                        self.opt_m[i].copy_from_slice(data);
+                    }
+                }
+            }
+            for (name, data) in vs {
+                if let Some(i) = self.param_names.iter().position(|n| *n == name) {
+                    if self.opt_v[i].len() == data.len() {
+                        self.opt_v[i].copy_from_slice(data);
+                    }
+                }
+            }
+            self.step = trainer.step();
+        }
+        self.chunked = Some(trainer);
+        res
     }
 
     /// A generator matching this artifact's shapes.
@@ -191,7 +289,11 @@ impl TrainState {
     }
 
     /// Execute one train step; updates state in place, returns (loss, acc).
+    /// Routes through the native SLiM trainer when chunked mode is on.
     pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        if self.chunked.is_some() {
+            return self.chunked_train_step(batch);
+        }
         let meta = &self.train_exe.meta;
         let mut inputs: Vec<HostValue> = Vec::with_capacity(meta.inputs.len());
         // artifact input order: params, m, v, step, features, tokens,
@@ -247,6 +349,9 @@ impl TrainState {
 
     /// Evaluate (loss, acc) on one batch without updating state.
     pub fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        if let Some(trainer) = &self.chunked {
+            return trainer.eval_step(batch);
+        }
         let exe = self
             .eval_exe
             .as_ref()
@@ -285,6 +390,11 @@ impl TrainState {
     /// Resample the FAVOR projection features natively (paper Sec. 4.2's
     /// redrawing strategy): regenerates W (and b) with matching shapes.
     pub fn resample_features(&mut self, rng: &mut Pcg64) -> Result<()> {
+        if self.chunked.is_some() {
+            // the native kernels redraw on their own epoch schedule;
+            // swapping the host feature slots under them would desync
+            return Ok(());
+        }
         let meta = &self.train_exe.meta;
         let attention = meta.config.attention.clone();
         if !attention.starts_with("favor-") {
@@ -330,6 +440,7 @@ impl TrainState {
                 }
             }
         }
+        self.sync_chunked_from_host();
         copied
     }
 
@@ -374,6 +485,67 @@ impl TrainState {
         if let Some((_, s)) = tf.get("step") {
             self.step = s[0];
         }
+        self.sync_chunked_from_host();
+        Ok(())
+    }
+}
+
+/// Anything [`run_training`] can drive: the AOT-artifact
+/// [`TrainState`] or the fully native SLiM [`NativeTrainer`].
+pub trait TrainStep {
+    /// tag used in logs and curve records
+    fn tag(&self) -> &str;
+    /// one optimizer step; returns (loss, acc)
+    fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)>;
+    /// (loss, acc) on one batch without updating state
+    fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)>;
+    /// whether [`Self::eval_step`] is available
+    fn supports_eval(&self) -> bool;
+    /// redraw FAVOR features (no-op where the kernel schedule owns it)
+    fn resample_features(&mut self, rng: &mut Pcg64) -> Result<()>;
+}
+
+impl TrainStep for TrainState {
+    fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        TrainState::train_step(self, batch)
+    }
+
+    fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        TrainState::eval_step(self, batch)
+    }
+
+    fn supports_eval(&self) -> bool {
+        self.eval_exe.is_some() || self.chunked.is_some()
+    }
+
+    fn resample_features(&mut self, rng: &mut Pcg64) -> Result<()> {
+        TrainState::resample_features(self, rng)
+    }
+}
+
+impl TrainStep for NativeTrainer {
+    fn tag(&self) -> &str {
+        NativeTrainer::tag(self)
+    }
+
+    fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        NativeTrainer::train_step(self, batch)
+    }
+
+    fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        NativeTrainer::eval_step(self, batch)
+    }
+
+    fn supports_eval(&self) -> bool {
+        true
+    }
+
+    fn resample_features(&mut self, _rng: &mut Pcg64) -> Result<()> {
+        // the kernel redraw schedule (redraw_every) owns feature draws
         Ok(())
     }
 }
@@ -395,13 +567,15 @@ pub struct LoopOptions {
 }
 
 /// Run the training loop per the options; returns the recorded curve.
-pub fn run_training(
-    state: &mut TrainState,
+/// Generic over [`TrainStep`], so the same loop drives AOT-artifact
+/// training and native SLiM chunked training.
+pub fn run_training<S: TrainStep>(
+    state: &mut S,
     gen: &mut DataGen,
     opts: &LoopOptions,
     seed: u64,
 ) -> Result<Curve> {
-    let mut curve = Curve::new(&state.tag);
+    let mut curve = Curve::new(state.tag());
     let mut rng = Pcg64::new(seed ^ 0xabcdef);
     let t0 = std::time::Instant::now();
     for step in 1..=opts.steps {
@@ -414,16 +588,25 @@ pub fn run_training(
         if !opts.quiet && (step % opts.log_every == 0 || step == 1) {
             eprintln!(
                 "[{}] step {step}/{} loss {loss:.4} acc {acc:.3} ({:.2} s/step)",
-                state.tag,
+                state.tag(),
                 opts.steps,
                 t0.elapsed().as_secs_f64() / step as f64
             );
         }
-        if state.eval_exe.is_some() && opts.eval_every > 0 && step % opts.eval_every == 0 {
-            let (vl, va) = state.evaluate(gen, Split::Valid, opts.eval_batches)?;
+        if state.supports_eval() && opts.eval_every > 0 && step % opts.eval_every == 0 {
+            let mut vl = 0.0f64;
+            let mut va = 0.0f64;
+            for _ in 0..opts.eval_batches {
+                let b = gen.next_batch(Split::Valid);
+                let (l, a) = state.eval_step(&b)?;
+                vl += l as f64;
+                va += a as f64;
+            }
+            let n = opts.eval_batches.max(1) as f64;
+            let (vl, va) = (vl / n, va / n);
             curve.push_valid(step, vl, va);
             if !opts.quiet {
-                eprintln!("[{}]   valid loss {vl:.4} acc {va:.3}", state.tag);
+                eprintln!("[{}]   valid loss {vl:.4} acc {va:.3}", state.tag());
             }
         }
     }

@@ -1,11 +1,19 @@
 //! Training orchestration: the AOT train-step driver, data streaming,
 //! curve recording, checkpoints and weight transplant (for the Fig. 3
-//! backward-compatibility experiment).
+//! backward-compatibility experiment) — plus the fully native SLiM
+//! chunked trainer (`slim`), which runs forward and backward in
+//! fixed-size chunks over the streaming prefix-sum states for
+//! sub-linear-in-length activation memory.
 
 pub mod curve;
 pub mod native_model;
 pub mod driver;
+pub mod slim;
 
 pub use curve::{Curve, Point};
-pub use native_model::{NativeAttention, NativeModel, SyntheticConfig};
-pub use driver::{run_training, DataGen, LoopOptions, Split, TrainState};
+pub use native_model::{ChunkTape, NativeAttention, NativeModel, ParamGrads, SyntheticConfig};
+pub use driver::{run_training, DataGen, LoopOptions, Split, TrainState, TrainStep};
+pub use slim::{
+    chunked_loss, chunked_loss_and_grad, plan_segments, ChunkedOutcome, ChunkedTrainConfig,
+    MemStats, NativeTrainer, RecomputePolicy,
+};

@@ -21,8 +21,8 @@ use crate::linalg::OrfMechanism;
 use crate::obs::trace;
 use crate::rng::Pcg64;
 use crate::runtime::{ArtifactMeta, Role};
-use crate::stream::StreamState;
-use crate::tensor::{Batch, Mat};
+use crate::stream::{advance_vjp, StatePrecision, StreamState};
+use crate::tensor::{matmul_at_b, Batch, Mat};
 
 /// A dense layer (w: in×out, b: out).
 struct Dense {
@@ -412,7 +412,7 @@ impl NativeModel {
         let NativeAttention::Favor(kernels) = &self.attention else {
             return None;
         };
-        kernels.iter().filter_map(|k| k.next_boundary(pos)).min()
+        crate::favor::kernel::stack_next_boundary(kernels, pos)
     }
 
     /// The per-layer attention kernels (None for exact/identity models).
@@ -633,6 +633,16 @@ impl NativeModel {
     /// Fresh per-layer, per-head streaming attention states for
     /// [`NativeModel::forward_chunk`].
     pub fn make_stream_states(&self) -> Result<Vec<Vec<StreamState>>> {
+        self.make_stream_states_with(StatePrecision::F32)
+    }
+
+    /// [`Self::make_stream_states`] with an explicit storage precision
+    /// for the carried prefix sums (the SLiM trainer exposes this so
+    /// chunked training can run on bf16 boundary checkpoints).
+    pub fn make_stream_states_with(
+        &self,
+        precision: StatePrecision,
+    ) -> Result<Vec<Vec<StreamState>>> {
         let NativeAttention::Favor(kernels) = &self.attention else {
             bail!("streaming requires FAVOR attention (exact has no constant-size state)");
         };
@@ -642,7 +652,11 @@ impl NativeModel {
         let dh = self.d_model / self.n_heads;
         Ok(kernels
             .iter()
-            .map(|k| (0..self.n_heads).map(|_| StreamState::new(k.m(), dh)).collect())
+            .map(|k| {
+                (0..self.n_heads)
+                    .map(|_| StreamState::with_precision(k.m(), dh, precision))
+                    .collect()
+            })
             .collect())
     }
 
@@ -859,6 +873,588 @@ impl NativeModel {
     }
 }
 
+/// Gradient of [`gelu`]: d/dx [0.5·x·(1 + tanh(u(x)))] with
+/// u = 0.7978845608·(x + 0.044715·x³).
+fn gelu_prime(x: f32) -> f32 {
+    let u = 0.7978845608 * (x + 0.044715 * x * x * x);
+    let th = u.tanh();
+    0.5 * (1.0 + th) + 0.5 * x * (1.0 - th * th) * 0.7978845608 * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+/// Accumulate the column sums of `dy` into `acc` (the bias gradient of
+/// a dense layer: b broadcasts over rows, so db = Σ_rows dy).
+fn colsum_into(dy: &Mat, acc: &mut [f32]) {
+    for i in 0..dy.rows {
+        for (a, v) in acc.iter_mut().zip(dy.row(i)) {
+            *a += *v;
+        }
+    }
+}
+
+/// Reverse-mode LayerNorm: recompute mu/var/inv from the saved input
+/// (bitwise the same expressions as [`LayerNorm::apply`]), accumulate
+/// dg/db, return dx.
+fn layernorm_vjp(ln: &LayerNorm, x: &Mat, dy: &Mat, dg: &mut [f32], db: &mut [f32]) -> Mat {
+    let mut dx = Mat::zeros(x.rows, x.cols);
+    let n = x.cols as f32;
+    for i in 0..x.rows {
+        let xr = x.row(i);
+        let dyr = dy.row(i);
+        let mu = xr.iter().sum::<f32>() / n;
+        let var = xr.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..x.cols {
+            let xhat = (xr[j] - mu) * inv;
+            dg[j] += dyr[j] * xhat;
+            db[j] += dyr[j];
+            let dxhat = dyr[j] * ln.g[j];
+            m1 += dxhat;
+            m2 += dxhat * xhat;
+        }
+        m1 /= n;
+        m2 /= n;
+        let dxr = dx.row_mut(i);
+        for j in 0..xr.len() {
+            let xhat = (xr[j] - mu) * inv;
+            dxr[j] = inv * (dyr[j] * ln.g[j] - m1 - xhat * m2);
+        }
+    }
+    dx
+}
+
+/// Gradient slots for one transformer layer, mirroring [`Layer`].
+struct LayerGrads {
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    qkv_w: Mat,
+    qkv_b: Vec<f32>,
+    proj_w: Mat,
+    proj_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    ff1_w: Mat,
+    ff1_b: Vec<f32>,
+    ff2_w: Mat,
+    ff2_b: Vec<f32>,
+}
+
+/// Parameter-gradient buffers mirroring a [`NativeModel`]'s trainable
+/// parameters (embeddings, every layer, the final norm). The FAVOR
+/// feature maps are kernel draws, not parameters — they have no slot.
+///
+/// [`Self::slots`]/[`Self::slots_mut`] expose the buffers as
+/// `(artifact name, flat data)` pairs in the same canonical order as
+/// [`NativeModel::param_slots`], so an optimizer (or a checkpoint
+/// writer) can zip the two without knowing the layout.
+pub struct ParamGrads {
+    embed: Mat,
+    layers: Vec<LayerGrads>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+}
+
+impl ParamGrads {
+    /// Zero-initialized gradient buffers shaped like `model`'s
+    /// parameters.
+    pub fn zeros_like(model: &NativeModel) -> ParamGrads {
+        ParamGrads {
+            embed: Mat::zeros(model.embed.rows, model.embed.cols),
+            layers: model
+                .layers
+                .iter()
+                .map(|l| LayerGrads {
+                    ln1_g: vec![0.0; l.ln1.g.len()],
+                    ln1_b: vec![0.0; l.ln1.b.len()],
+                    qkv_w: Mat::zeros(l.qkv.w.rows, l.qkv.w.cols),
+                    qkv_b: vec![0.0; l.qkv.b.len()],
+                    proj_w: Mat::zeros(l.proj.w.rows, l.proj.w.cols),
+                    proj_b: vec![0.0; l.proj.b.len()],
+                    ln2_g: vec![0.0; l.ln2.g.len()],
+                    ln2_b: vec![0.0; l.ln2.b.len()],
+                    ff1_w: Mat::zeros(l.ff1.w.rows, l.ff1.w.cols),
+                    ff1_b: vec![0.0; l.ff1.b.len()],
+                    ff2_w: Mat::zeros(l.ff2.w.rows, l.ff2.w.cols),
+                    ff2_b: vec![0.0; l.ff2.b.len()],
+                })
+                .collect(),
+            lnf_g: vec![0.0; model.lnf.g.len()],
+            lnf_b: vec![0.0; model.lnf.b.len()],
+        }
+    }
+
+    /// Reset every slot to zero (start of a fresh accumulation).
+    pub fn zero(&mut self) {
+        for (_, slot) in self.slots_mut() {
+            slot.fill(0.0);
+        }
+    }
+
+    /// Multiply every slot by `c` (e.g. loss-normalization folded in
+    /// after accumulation).
+    pub fn scale(&mut self, c: f32) {
+        for (_, slot) in self.slots_mut() {
+            for v in slot.iter_mut() {
+                *v *= c;
+            }
+        }
+    }
+
+    /// Largest absolute entry across every slot (diagnostics / tests).
+    pub fn max_abs(&self) -> f32 {
+        self.slots()
+            .iter()
+            .flat_map(|(_, s)| s.iter())
+            .fold(0.0f32, |a, v| a.max(v.abs()))
+    }
+
+    /// `(artifact name, flat gradient data)` pairs in canonical order.
+    pub fn slots(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![("embed".to_string(), &self.embed.data)];
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |leaf: &str| format!("layers/{i}/{leaf}");
+            out.push((p("ln1/g"), &l.ln1_g));
+            out.push((p("ln1/b"), &l.ln1_b));
+            out.push((p("qkv/w"), &l.qkv_w.data));
+            out.push((p("qkv/b"), &l.qkv_b));
+            out.push((p("proj/w"), &l.proj_w.data));
+            out.push((p("proj/b"), &l.proj_b));
+            out.push((p("ln2/g"), &l.ln2_g));
+            out.push((p("ln2/b"), &l.ln2_b));
+            out.push((p("ff1/w"), &l.ff1_w.data));
+            out.push((p("ff1/b"), &l.ff1_b));
+            out.push((p("ff2/w"), &l.ff2_w.data));
+            out.push((p("ff2/b"), &l.ff2_b));
+        }
+        out.push(("lnf/g".to_string(), &self.lnf_g));
+        out.push(("lnf/b".to_string(), &self.lnf_b));
+        out
+    }
+
+    /// Mutable [`Self::slots`], same names, same order.
+    pub fn slots_mut(&mut self) -> Vec<(String, &mut [f32])> {
+        let mut out: Vec<(String, &mut [f32])> =
+            vec![("embed".to_string(), &mut self.embed.data)];
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            let p = |leaf: &str| format!("layers/{i}/{leaf}");
+            out.push((p("ln1/g"), &mut l.ln1_g));
+            out.push((p("ln1/b"), &mut l.ln1_b));
+            out.push((p("qkv/w"), &mut l.qkv_w.data));
+            out.push((p("qkv/b"), &mut l.qkv_b));
+            out.push((p("proj/w"), &mut l.proj_w.data));
+            out.push((p("proj/b"), &mut l.proj_b));
+            out.push((p("ln2/g"), &mut l.ln2_g));
+            out.push((p("ln2/b"), &mut l.ln2_b));
+            out.push((p("ff1/w"), &mut l.ff1_w.data));
+            out.push((p("ff1/b"), &mut l.ff1_b));
+            out.push((p("ff2/w"), &mut l.ff2_w.data));
+            out.push((p("ff2/b"), &mut l.ff2_b));
+        }
+        out.push(("lnf/g".to_string(), &mut self.lnf_g));
+        out.push(("lnf/b".to_string(), &mut self.lnf_b));
+        out
+    }
+}
+
+/// One transformer layer's saved forward intermediates (see
+/// [`ChunkTape`]).
+struct LayerTape {
+    normed1: Mat,
+    qkv: Mat,
+    head_outs: Mat,
+    x_mid: Mat,
+    normed2: Mat,
+    hmid_pre: Mat,
+}
+
+/// Saved activations for ONE epoch-aligned chunk of a streamed forward
+/// ([`NativeModel::forward_chunk_tape`]) — everything the reverse sweep
+/// ([`NativeModel::backward_chunk`]) needs, and nothing longer than the
+/// chunk: O(L_chunk · layers · (d + d_ff)) floats plus the M×(d+1)
+/// entry state per (sequence, layer, head). Feature projections
+/// (phi_q/phi_k/v) and the attention recurrence internals are
+/// *recomputed* in the backward from the saved QKV stack, so they never
+/// rest on the tape.
+pub struct ChunkTape {
+    lens: Vec<usize>,
+    stride: usize,
+    offset: usize,
+    /// per-layer redraw epoch the chunk ran under
+    epochs: Vec<u64>,
+    tokens: Vec<Vec<u8>>,
+    /// residual-stream stacks: entry to each layer, then the final x
+    xs: Vec<Mat>,
+    layers: Vec<LayerTape>,
+    /// dense f32 image of each head's prefix-sum state at chunk entry
+    states_in: Vec<Vec<Vec<Mat>>>,
+}
+
+impl ChunkTape {
+    /// Resident bytes of the saved activations (the quantity the SLiM
+    /// memory bench series tracks): every taped matrix plus the entry
+    /// states and token bytes.
+    pub fn bytes(&self) -> usize {
+        let mat = |m: &Mat| m.data.len() * std::mem::size_of::<f32>();
+        let mut total: usize = self.xs.iter().map(mat).sum();
+        for lt in &self.layers {
+            total += mat(&lt.normed1)
+                + mat(&lt.qkv)
+                + mat(&lt.head_outs)
+                + mat(&lt.x_mid)
+                + mat(&lt.normed2)
+                + mat(&lt.hmid_pre);
+        }
+        for seq in &self.states_in {
+            for layer in seq {
+                total += layer.iter().map(mat).sum::<usize>();
+            }
+        }
+        total + self.tokens.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// Global stream position of the chunk's first token.
+    pub fn offset(&self) -> usize {
+        self.offset
+    }
+}
+
+impl NativeModel {
+    /// Trainable parameters as `(artifact name, flat data)` pairs —
+    /// same names and order as [`ParamGrads::slots`], and the same
+    /// names `from_weights`/checkpoints use.
+    pub fn param_slots(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![("embed".to_string(), &self.embed.data)];
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |leaf: &str| format!("layers/{i}/{leaf}");
+            out.push((p("ln1/g"), &l.ln1.g));
+            out.push((p("ln1/b"), &l.ln1.b));
+            out.push((p("qkv/w"), &l.qkv.w.data));
+            out.push((p("qkv/b"), &l.qkv.b));
+            out.push((p("proj/w"), &l.proj.w.data));
+            out.push((p("proj/b"), &l.proj.b));
+            out.push((p("ln2/g"), &l.ln2.g));
+            out.push((p("ln2/b"), &l.ln2.b));
+            out.push((p("ff1/w"), &l.ff1.w.data));
+            out.push((p("ff1/b"), &l.ff1.b));
+            out.push((p("ff2/w"), &l.ff2.w.data));
+            out.push((p("ff2/b"), &l.ff2.b));
+        }
+        out.push(("lnf/g".to_string(), &self.lnf.g));
+        out.push(("lnf/b".to_string(), &self.lnf.b));
+        out
+    }
+
+    /// Mutable [`Self::param_slots`] (the optimizer's write path).
+    /// Invalidates the cached [`Self::weights_digest`] — mutated
+    /// weights are a different model.
+    pub fn param_slots_mut(&mut self) -> Vec<(String, &mut [f32])> {
+        self.digest = std::sync::OnceLock::new();
+        let mut out: Vec<(String, &mut [f32])> =
+            vec![("embed".to_string(), &mut self.embed.data)];
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            let p = |leaf: &str| format!("layers/{i}/{leaf}");
+            out.push((p("ln1/g"), &mut l.ln1.g));
+            out.push((p("ln1/b"), &mut l.ln1.b));
+            out.push((p("qkv/w"), &mut l.qkv.w.data));
+            out.push((p("qkv/b"), &mut l.qkv.b));
+            out.push((p("proj/w"), &mut l.proj.w.data));
+            out.push((p("proj/b"), &mut l.proj.b));
+            out.push((p("ln2/g"), &mut l.ln2.g));
+            out.push((p("ln2/b"), &mut l.ln2.b));
+            out.push((p("ff1/w"), &mut l.ff1.w.data));
+            out.push((p("ff1/b"), &mut l.ff1.b));
+            out.push((p("ff2/w"), &mut l.ff2.w.data));
+            out.push((p("ff2/b"), &mut l.ff2.b));
+        }
+        out.push(("lnf/g".to_string(), &mut self.lnf.g));
+        out.push(("lnf/b".to_string(), &mut self.lnf.b));
+        out
+    }
+
+    /// Streamed forward over ONE epoch-aligned segment that also
+    /// records a [`ChunkTape`] for [`Self::backward_chunk`]. Produces
+    /// logits bitwise-identical to [`Self::forward_chunk_batch`] over
+    /// the same segment (op-for-op the same arithmetic), advancing
+    /// `states` in place exactly as the streaming path does.
+    ///
+    /// `offset` is the global stream position of every sequence's first
+    /// token (training batches advance in lockstep). The segment must
+    /// not cross any kernel's redraw boundary, and every carried state
+    /// must already sit in the segment's epoch — the caller (the SLiM
+    /// segment planner) splits at [`crate::favor::epoch_aligned_segments`]
+    /// and applies `reset_for_epoch` first, exactly like the streaming
+    /// path's per-segment loop.
+    pub fn forward_chunk_tape(
+        &self,
+        seqs: &[&[u8]],
+        offset: usize,
+        states: &mut [&mut [Vec<StreamState>]],
+    ) -> Result<(Vec<Mat>, ChunkTape)> {
+        let NativeAttention::Favor(kernels) = &self.attention else {
+            bail!("chunked training requires FAVOR attention");
+        };
+        if self.direction != Direction::Unidirectional {
+            bail!("chunked training requires a unidirectional (causal) model");
+        }
+        if seqs.len() != states.len() {
+            bail!("batch arity mismatch: {} seqs, {} states", seqs.len(), states.len());
+        }
+        let max_len = seqs.iter().map(|s| s.len()).max().unwrap_or(0);
+        if let Some(b) = crate::favor::kernel::stack_next_boundary(kernels, offset as u64) {
+            if (offset + max_len) as u64 > b {
+                bail!(
+                    "tape segment [{offset}, {}) crosses the redraw boundary at {b}: \
+                     split at epoch_aligned_segments first",
+                    offset + max_len
+                );
+            }
+        }
+        let epochs: Vec<u64> = kernels.iter().map(|k| k.epoch_of(offset as u64)).collect();
+        for (s, st) in states.iter().enumerate() {
+            if st.len() != self.layers.len() || st.iter().any(|l| l.len() != self.n_heads) {
+                bail!(
+                    "stream state shape mismatch: expected {} layers x {} heads",
+                    self.layers.len(),
+                    self.n_heads
+                );
+            }
+            for (li, layer) in st.iter().enumerate() {
+                for hs in layer {
+                    if hs.epoch() != epochs[li] {
+                        bail!(
+                            "seq {s} layer {li}: state epoch {} != segment epoch {}: \
+                             reset_for_epoch before taping",
+                            hs.epoch(),
+                            epochs[li]
+                        );
+                    }
+                }
+            }
+        }
+
+        // mirror of forward_batch_inner, capturing what the reverse
+        // sweep replays
+        let bsz = seqs.len();
+        let d = self.d_model;
+        let h = self.n_heads;
+        let dh = d / h;
+        let scale = (d as f32).sqrt();
+        let lens: Vec<usize> = seqs.iter().map(|s| s.len()).collect();
+        let mut batch = Batch::zeros(&lens, d);
+        let stride = batch.stride;
+        for (s, tokens) in seqs.iter().enumerate() {
+            let pos = positions_from(offset, tokens.len(), d);
+            let (lo, _) = batch.seq_rows(s);
+            for (i, &tok) in tokens.iter().enumerate() {
+                let row = batch.data.row_mut(lo + i);
+                let erow = self.embed.row(tok as usize);
+                let prow = pos.row(i);
+                for j in 0..d {
+                    row[j] = erow[j] * scale + prow[j];
+                }
+            }
+        }
+        let mut x = batch.data;
+
+        let nl = self.layers.len();
+        let mut states_in: Vec<Vec<Vec<Mat>>> =
+            (0..bsz).map(|_| (0..nl).map(|_| Vec::with_capacity(h)).collect()).collect();
+        let mut xs: Vec<Mat> = Vec::with_capacity(nl + 1);
+        let mut ltapes: Vec<LayerTape> = Vec::with_capacity(nl);
+        for (li, layer) in self.layers.iter().enumerate() {
+            xs.push(x.clone());
+            let normed1 = layer.ln1.apply(&x);
+            let qkv = layer.qkv.apply(&normed1);
+            let mut head_outs = Mat::zeros(x.rows, d);
+            let fm = kernels[li].map_for_epoch(epochs[li]);
+            for s in 0..bsz {
+                let row_lo = s * stride;
+                let l = lens[s];
+                for head in 0..h {
+                    let hv = HeadView { qkv: &qkv, row_lo, len: l, d, dh, head };
+                    let st = &mut states[s][li][head];
+                    states_in[s][li].push(st.dense());
+                    let qp = hv.phi_q(&fm);
+                    let kp = hv.phi_k(&fm);
+                    let out = st.advance(&qp, &kp, &hv.v());
+                    for i in 0..l {
+                        head_outs.row_mut(row_lo + i)[head * dh..(head + 1) * dh]
+                            .copy_from_slice(out.row(i));
+                    }
+                }
+            }
+            x.add_assign(&layer.proj.apply(&head_outs));
+            let x_mid = x.clone();
+            let normed2 = layer.ln2.apply(&x);
+            let hmid_pre = layer.ff1.apply(&normed2);
+            let mut hmid = hmid_pre.clone();
+            for v in &mut hmid.data {
+                *v = gelu(*v);
+            }
+            x.add_assign(&layer.ff2.apply(&hmid));
+            ltapes.push(LayerTape { normed1, qkv, head_outs, x_mid, normed2, hmid_pre });
+        }
+        xs.push(x.clone());
+        let xf = self.lnf.apply(&x);
+        let logits_all = Batch { data: xf.matmul(&self.embed.t()), stride, lens: lens.clone() };
+        let logits = (0..bsz).map(|s| logits_all.seq_mat(s)).collect();
+        let tape = ChunkTape {
+            lens,
+            stride,
+            offset,
+            epochs,
+            tokens: seqs.iter().map(|s| s.to_vec()).collect(),
+            xs,
+            layers: ltapes,
+            states_in,
+        };
+        Ok((logits, tape))
+    }
+
+    /// Reverse sweep over one taped chunk: accumulate parameter
+    /// gradients into `grads` given the logit cotangents `dlogits`
+    /// (per sequence, len×vocab) and the cotangents `dstates` of each
+    /// head's *end-of-chunk* prefix-sum state. On return, `dstates`
+    /// holds the cotangents of each head's *entry* state — the d-state
+    /// in / d-state out mirror of the forward's state in / state out —
+    /// which the caller chains into the preceding chunk's backward
+    /// (zeroing it across a redraw-epoch reset, where the forward
+    /// discarded the carried sums).
+    pub fn backward_chunk(
+        &self,
+        tape: &ChunkTape,
+        dlogits: &[Mat],
+        dstates: &mut [Vec<Vec<Mat>>],
+        grads: &mut ParamGrads,
+    ) -> Result<()> {
+        let NativeAttention::Favor(kernels) = &self.attention else {
+            bail!("chunked training requires FAVOR attention");
+        };
+        let bsz = tape.lens.len();
+        if dlogits.len() != bsz || dstates.len() != bsz {
+            bail!(
+                "batch arity mismatch: tape has {bsz} seqs, {} dlogits, {} dstates",
+                dlogits.len(),
+                dstates.len()
+            );
+        }
+        let d = self.d_model;
+        let h = self.n_heads;
+        let dh = d / h;
+        let stride = tape.stride;
+        let vocab = self.vocab_size;
+        let rows = stride * bsz;
+
+        // stack the per-sequence logit cotangents into the fused batch
+        // layout; padding rows stay zero and contribute zero gradient
+        let mut dlog = Mat::zeros(rows, vocab);
+        for s in 0..bsz {
+            if dlogits[s].rows != tape.lens[s] || dlogits[s].cols != vocab {
+                bail!(
+                    "seq {s}: dlogits is {}x{}, expected {}x{vocab}",
+                    dlogits[s].rows,
+                    dlogits[s].cols,
+                    tape.lens[s]
+                );
+            }
+            for i in 0..tape.lens[s] {
+                dlog.row_mut(s * stride + i).copy_from_slice(dlogits[s].row(i));
+            }
+        }
+
+        // logits = lnf(x_last)·embedᵀ — the tied embedding gets both
+        // the logit-side and (below) the input-side gradient
+        let x_last = tape.xs.last().expect("tape has layer entries");
+        let xf = self.lnf.apply(x_last);
+        grads.embed.add_assign(&matmul_at_b(&dlog, &xf));
+        let dxf = dlog.matmul(&self.embed);
+        let mut dx = layernorm_vjp(&self.lnf, x_last, &dxf, &mut grads.lnf_g, &mut grads.lnf_b);
+
+        for (li, layer) in self.layers.iter().enumerate().rev() {
+            let lt = &tape.layers[li];
+            let lg = &mut grads.layers[li];
+
+            // MLP block: x_out = x_mid + ff2(gelu(ff1(ln2(x_mid))))
+            let mut hpost = lt.hmid_pre.clone();
+            for v in &mut hpost.data {
+                *v = gelu(*v);
+            }
+            lg.ff2_w.add_assign(&matmul_at_b(&hpost, &dx));
+            colsum_into(&dx, &mut lg.ff2_b);
+            let mut dhmid = dx.matmul(&layer.ff2.w.t());
+            for (g, z) in dhmid.data.iter_mut().zip(&lt.hmid_pre.data) {
+                *g *= gelu_prime(*z);
+            }
+            lg.ff1_w.add_assign(&matmul_at_b(&lt.normed2, &dhmid));
+            colsum_into(&dhmid, &mut lg.ff1_b);
+            let dnormed2 = dhmid.matmul(&layer.ff1.w.t());
+            let mut dx_mid =
+                layernorm_vjp(&layer.ln2, &lt.x_mid, &dnormed2, &mut lg.ln2_g, &mut lg.ln2_b);
+            dx_mid.add_assign(&dx); // residual skip
+
+            // attention block: x_mid = x_in + proj(head_outs)
+            lg.proj_w.add_assign(&matmul_at_b(&lt.head_outs, &dx_mid));
+            colsum_into(&dx_mid, &mut lg.proj_b);
+            let dhead_outs = dx_mid.matmul(&layer.proj.w.t());
+            let mut d_qkv = Mat::zeros(rows, 3 * d);
+            let fm = kernels[li].map_for_epoch(tape.epochs[li]);
+            for s in 0..bsz {
+                let row_lo = s * stride;
+                let l = tape.lens[s];
+                for head in 0..h {
+                    // recompute phi_q/phi_k/v from the taped QKV stack
+                    // (bitwise the forward's own featurization)
+                    let hv = HeadView { qkv: &lt.qkv, row_lo, len: l, d, dh, head };
+                    let qp = hv.phi_q(&fm);
+                    let kp = hv.phi_k(&fm);
+                    let v = hv.v();
+                    let dout = slice_head(&dhead_outs, row_lo, l, head * dh, dh);
+                    let g = advance_vjp(
+                        &tape.states_in[s][li][head],
+                        &qp,
+                        &kp,
+                        &v,
+                        &dout,
+                        &dstates[s][li][head],
+                    );
+                    dstates[s][li][head] = g.dstate_in;
+                    fm.vjp_block(&lt.qkv, row_lo, row_lo + l, head * dh, &g.dqp, &mut d_qkv);
+                    fm.vjp_block(&lt.qkv, row_lo, row_lo + l, d + head * dh, &g.dkp, &mut d_qkv);
+                    for i in 0..l {
+                        let col = 2 * d + head * dh;
+                        let dst = &mut d_qkv.row_mut(row_lo + i)[col..col + dh];
+                        for (a, b) in dst.iter_mut().zip(g.dv.row(i)) {
+                            *a += *b;
+                        }
+                    }
+                }
+            }
+            lg.qkv_w.add_assign(&matmul_at_b(&lt.normed1, &d_qkv));
+            colsum_into(&d_qkv, &mut lg.qkv_b);
+            let dnormed1 = d_qkv.matmul(&layer.qkv.w.t());
+            let mut dx0 =
+                layernorm_vjp(&layer.ln1, &tape.xs[li], &dnormed1, &mut lg.ln1_g, &mut lg.ln1_b);
+            dx0.add_assign(&dx_mid); // residual skip
+            dx = dx0;
+        }
+
+        // input rows: x0 = embed[tok]·√d + positions (positions carry
+        // no parameters)
+        let scale = (d as f32).sqrt();
+        for (s, toks) in tape.tokens.iter().enumerate() {
+            for (i, &tok) in toks.iter().enumerate() {
+                let row = dx.row(s * stride + i);
+                let erow = grads.embed.row_mut(tok as usize);
+                for j in 0..d {
+                    erow[j] += scale * row[j];
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1028,6 +1624,152 @@ mod tests {
         // fail loudly instead of mixing feature spaces
         let err = model.forward_chunk(&toks[..8], 0, &mut states).unwrap_err();
         assert!(format!("{err:#}").contains("epoch"), "{err:#}");
+    }
+
+    #[test]
+    fn param_slots_and_grad_slots_agree() {
+        let mut rng = Pcg64::new(61);
+        let model = NativeModel::synthetic(&SyntheticConfig::default(), &mut rng);
+        let grads = ParamGrads::zeros_like(&model);
+        let ps = model.param_slots();
+        let gs = grads.slots();
+        assert_eq!(ps.len(), gs.len());
+        for ((pn, pd), (gn, gd)) in ps.iter().zip(gs.iter()) {
+            assert_eq!(pn, gn, "slot order diverged");
+            assert_eq!(pd.len(), gd.len(), "slot {pn} shape diverged");
+        }
+        // the artifact names from_weights expects are all present
+        let names: Vec<&str> = ps.iter().map(|(n, _)| n.as_str()).collect();
+        for want in ["embed", "layers/0/qkv/w", "layers/1/ff2/b", "lnf/g", "lnf/b"] {
+            assert!(names.contains(&want), "missing canonical slot {want}");
+        }
+    }
+
+    #[test]
+    fn param_slots_mut_invalidates_digest() {
+        let mut rng = Pcg64::new(62);
+        let mut model = NativeModel::synthetic(&SyntheticConfig::default(), &mut rng);
+        let before = model.weights_digest();
+        model.param_slots_mut()[0].1[0] += 1.0;
+        assert_ne!(before, model.weights_digest(), "mutated weights must re-digest");
+    }
+
+    #[test]
+    fn forward_chunk_tape_matches_streamed_forward_bitwise() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let mut rng = Pcg64::new(63);
+        let cfg = SyntheticConfig { redraw_every: 16, ..Default::default() };
+        let model = NativeModel::synthetic(&cfg, &mut rng);
+        let toks: Vec<u8> = (0..32).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+
+        let mut streamed = model.make_stream_states().unwrap();
+        let mut taped = model.make_stream_states().unwrap();
+
+        // epoch 0 segment [0, 16), then epoch 1 segment [16, 32)
+        for (lo, hi) in [(0usize, 16usize), (16, 32)] {
+            let expect = model.forward_chunk(&toks[lo..hi], lo, &mut streamed).unwrap();
+            for layer in taped.iter_mut() {
+                for st in layer.iter_mut() {
+                    let epoch = (lo / 16) as u64;
+                    if st.epoch() < epoch {
+                        st.reset_for_epoch(epoch);
+                    }
+                }
+            }
+            let mut refs = [taped.as_mut_slice()];
+            let (logits, tape) =
+                model.forward_chunk_tape(&[&toks[lo..hi]], lo, &mut refs).unwrap();
+            assert_eq!(logits[0].data, expect.data, "tape forward diverged at [{lo},{hi})");
+            assert!(tape.bytes() > 0);
+            assert_eq!(tape.offset(), lo);
+        }
+
+        // crossing a redraw boundary must refuse
+        let mut fresh = model.make_stream_states().unwrap();
+        let mut refs = [fresh.as_mut_slice()];
+        let err = model.forward_chunk_tape(&[&toks[..20]], 0, &mut refs).unwrap_err();
+        assert!(format!("{err:#}").contains("boundary"), "{err:#}");
+    }
+
+    /// Directional finite-difference check of the whole chunk backward:
+    /// perturb every parameter along a random direction and compare the
+    /// probe-loss slope against the accumulated analytic gradients.
+    /// Sigmoid features keep every op smooth, so the central difference
+    /// is trustworthy.
+    #[test]
+    fn backward_chunk_matches_directional_finite_difference() {
+        use crate::protein::vocab::{AA_BASE, N_AA};
+        let cfg = SyntheticConfig {
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 12,
+            n_features: 8,
+            kind: FeatureKind::Sigmoid,
+            ..Default::default()
+        };
+        let mut rng = Pcg64::new(7);
+        let model = NativeModel::synthetic(&cfg, &mut rng);
+        let l = 9usize;
+        let toks: Vec<u8> = (0..l).map(|_| AA_BASE + rng.below(N_AA) as u8).collect();
+        let w = Mat::from_vec(
+            l,
+            model.vocab_size,
+            rng.gaussian_vec(l * model.vocab_size).iter().map(|v| v * 0.05).collect(),
+        );
+
+        // analytic gradients through tape + backward (zero end-state
+        // cotangent: the probe loss reads logits only)
+        let mut grads = ParamGrads::zeros_like(&model);
+        let mut states = model.make_stream_states().unwrap();
+        let mut refs = [states.as_mut_slice()];
+        let (logits, tape) = model.forward_chunk_tape(&[toks.as_slice()], 0, &mut refs).unwrap();
+        let dh = model.d_model / model.n_heads;
+        let mut dstates = vec![model
+            .kernels()
+            .unwrap()
+            .iter()
+            .map(|k| (0..model.n_heads).map(|_| Mat::zeros(k.m(), dh + 1)).collect())
+            .collect::<Vec<Vec<Mat>>>()];
+        model.backward_chunk(&tape, &[w.clone()], &mut dstates, &mut grads).unwrap();
+        let base: f64 =
+            logits[0].data.iter().zip(&w.data).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!(base.is_finite());
+
+        let n_params: usize = model.param_slots().iter().map(|(_, s)| s.len()).sum();
+        let dir = Pcg64::new(99).gaussian_vec(n_params);
+        let an: f64 = {
+            let mut k = 0usize;
+            let mut acc = 0.0f64;
+            for (_, slot) in grads.slots() {
+                for v in slot {
+                    acc += *v as f64 * dir[k] as f64;
+                    k += 1;
+                }
+            }
+            acc
+        };
+
+        let eps = 1e-3f32;
+        let probe = |delta: f32| -> f64 {
+            let mut m2 = NativeModel::synthetic(&cfg, &mut Pcg64::new(7));
+            let mut k = 0usize;
+            for (_, slot) in m2.param_slots_mut() {
+                for v in slot.iter_mut() {
+                    *v += delta * dir[k];
+                    k += 1;
+                }
+            }
+            let mut st = m2.make_stream_states().unwrap();
+            let out = m2.forward_chunk(&toks, 0, &mut st).unwrap();
+            out.data.iter().zip(&w.data).map(|(&a, &b)| a as f64 * b as f64).sum()
+        };
+        let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+        let tol = 2e-3 + 2e-2 * fd.abs().max(an.abs());
+        assert!(
+            (fd - an).abs() <= tol,
+            "directional derivative: fd {fd} vs analytic {an} (base loss {base})"
+        );
     }
 
     #[test]

@@ -1,0 +1,589 @@
+//! Sub-linear-memory chunked training (SLiM).
+//!
+//! "Sub-Linear Memory: How to Make Performers SLiM" observes that the
+//! causal-FAVOR prefix-sum decomposition — the same one the streaming
+//! scorer exploits for inference (`stream::StreamState`,
+//! `NativeModel::forward_chunk_batch`) — admits a chunked
+//! forward+backward: run the forward in fixed-size chunks carrying only
+//! the M×(d+1) prefix sums across boundaries, checkpoint the boundary
+//! states (not the activations), then sweep the chunks in reverse,
+//! recomputing each chunk's activations right before its backward and
+//! chaining the attention-state cotangent (d-state in / d-state out)
+//! across boundaries. Peak activation memory is O(L_chunk), independent
+//! of sequence length; the O(L/L_chunk) boundary checkpoints are
+//! constant-size states, orders of magnitude smaller.
+//!
+//! Segments are **epoch-aligned**: chunk cuts are the union of the
+//! fixed chunk grid and every layer kernel's redraw boundaries
+//! ([`crate::favor::epoch_aligned_segments`]), the exact alignment rule
+//! the streaming forward uses, so chunked training sees bit-for-bit the
+//! forward the full-sequence (single-segment) path computes. Where the
+//! forward reset a layer's carried sums at an epoch boundary, the
+//! backward zeroes that layer's state cotangent across the same
+//! boundary — gradients cannot flow through a reset.
+//!
+//! The full-sequence gradient oracle is this same code with
+//! `chunk_len = 0` (one segment covering the sequence), which is what
+//! `rust/tests/prop_train.rs` pins chunked runs against.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::favor::kernel::epoch_aligned_segments;
+use crate::protein::Batch;
+use crate::runtime::TensorFile;
+use crate::stream::{StatePrecision, StreamState};
+use crate::tensor::Mat;
+
+use super::native_model::{NativeModel, ParamGrads};
+
+/// What the backward sweep does about chunk activations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecomputePolicy {
+    /// recompute each chunk's activations from its boundary state
+    /// during the reverse sweep (O(L_chunk) peak activation memory —
+    /// the SLiM scheme)
+    Recompute,
+    /// keep every chunk's tape from the forward pass (O(L) activation
+    /// memory, one forward — the speed/memory trade's other corner,
+    /// and bitwise identical to `Recompute` since the recomputed
+    /// forward replays the same arithmetic)
+    Retain,
+}
+
+/// Configuration for chunked (SLiM) training.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedTrainConfig {
+    /// chunk length L_c (0 = one segment over the whole sequence — the
+    /// full-sequence oracle; redraw boundaries still split segments)
+    pub chunk_len: usize,
+    /// recompute vs retain chunk activations in the backward sweep
+    pub policy: RecomputePolicy,
+    /// storage precision of the carried/checkpointed prefix sums
+    pub precision: StatePrecision,
+}
+
+impl Default for ChunkedTrainConfig {
+    fn default() -> Self {
+        ChunkedTrainConfig {
+            chunk_len: 0,
+            policy: RecomputePolicy::Recompute,
+            precision: StatePrecision::F32,
+        }
+    }
+}
+
+/// Activation-memory accounting for one chunked loss+grad call —
+/// analytic byte counts of what the sweep keeps resident, the series
+/// `benches/train_memory.rs` records.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemStats {
+    /// peak resident activation bytes: chunk tape(s) + the segment's
+    /// logit cotangents + the carried state cotangents
+    pub peak_activation_bytes: usize,
+    /// total bytes of cloned boundary states (the O(L/L_c) checkpoint
+    /// term; zero under [`RecomputePolicy::Retain`])
+    pub boundary_state_bytes: usize,
+    /// bytes of the per-(seq, layer, head) state cotangents
+    pub dstate_bytes: usize,
+    /// epoch-aligned segments the sequence was split into
+    pub segments: usize,
+}
+
+/// Result of one chunked loss+gradient evaluation.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedOutcome {
+    /// weighted mean cross-entropy over the batch
+    pub loss: f32,
+    /// weighted token accuracy over the batch
+    pub acc: f32,
+    /// total loss weight of the batch
+    pub w_total: f32,
+    /// memory accounting for this call
+    pub mem: MemStats,
+}
+
+/// The epoch-aligned segment plan for sequences of length `l` starting
+/// at stream position 0: cut at every multiple of `chunk_len` (0 =
+/// no fixed grid) **and** at every kernel redraw boundary. Returns
+/// `(start, end)` position pairs tiling `[0, l)`.
+pub fn plan_segments(model: &NativeModel, l: usize, chunk_len: usize) -> Result<Vec<(usize, usize)>> {
+    let Some(kernels) = model.kernels() else {
+        bail!("chunked training requires FAVOR attention");
+    };
+    let mut segs = Vec::new();
+    for (a, b) in epoch_aligned_segments(kernels, 0, l) {
+        let mut cur = a;
+        while cur < b {
+            let end = if chunk_len == 0 { b } else { ((cur / chunk_len + 1) * chunk_len).min(b) };
+            segs.push((cur, end));
+            cur = end;
+        }
+    }
+    Ok(segs)
+}
+
+/// Weighted cross-entropy + accuracy + logit cotangents for the rows
+/// `[lo, hi)` of sequence `s` of the batch. Returns the weighted loss
+/// and accuracy *sums* (caller divides by `w_total`); `dlogits` rows
+/// are already scaled by `w_i / w_total` so the chunk backward can
+/// consume them directly.
+fn loss_and_dlogits(
+    logits: &Mat,
+    batch: &Batch,
+    s: usize,
+    lo: usize,
+    w_total: f32,
+) -> (f64, f64, Mat) {
+    let vocab = logits.cols;
+    let mut dl = Mat::zeros(logits.rows, vocab);
+    let mut loss = 0.0f64;
+    let mut acc = 0.0f64;
+    for i in 0..logits.rows {
+        let idx = s * batch.l + lo + i;
+        let w = batch.weights[idx];
+        if w == 0.0 {
+            continue;
+        }
+        let y = batch.targets[idx] as usize;
+        let row = logits.row(i);
+        // numerically stable logsumexp in f64 (association-stable
+        // across chunkings: per-row, not per-segment)
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+        let mut sum = 0.0f64;
+        for &v in row {
+            sum += ((v - mx) as f64).exp();
+        }
+        let lse = mx as f64 + sum.ln();
+        loss += w as f64 * (lse - row[y] as f64);
+        let top = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if top == y {
+            acc += w as f64;
+        }
+        let scale = w / w_total;
+        let dr = dl.row_mut(i);
+        for (j, g) in dr.iter_mut().enumerate() {
+            let p = (((row[j] - mx) as f64).exp() / sum) as f32;
+            *g = scale * (p - if j == y { 1.0 } else { 0.0 });
+        }
+    }
+    (loss, acc, dl)
+}
+
+fn batch_rows(batch: &Batch) -> Result<Vec<Vec<u8>>> {
+    let mut rows = Vec::with_capacity(batch.b);
+    for s in 0..batch.b {
+        let mut row = Vec::with_capacity(batch.l);
+        for i in 0..batch.l {
+            let t = batch.tokens[s * batch.l + i];
+            if !(0..=255).contains(&t) {
+                bail!("token id {t} out of the native vocab range");
+            }
+            row.push(t as u8);
+        }
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+fn zero_dstates(model: &NativeModel, bsz: usize) -> Vec<Vec<Vec<Mat>>> {
+    let dh = model.d_model / model.n_heads;
+    let kernels = model.kernels().expect("FAVOR model");
+    (0..bsz)
+        .map(|_| {
+            kernels
+                .iter()
+                .map(|k| (0..model.n_heads).map(|_| Mat::zeros(k.m(), dh + 1)).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// Evaluation-only chunked forward: weighted (loss, acc) of one batch
+/// at O(L_chunk) activation memory, no tapes, no gradients.
+pub fn chunked_loss(
+    model: &NativeModel,
+    batch: &Batch,
+    cfg: &ChunkedTrainConfig,
+) -> Result<(f32, f32)> {
+    let seqs = batch_rows(batch)?;
+    let segments = plan_segments(model, batch.l, cfg.chunk_len)?;
+    let w_total: f32 = batch.weights.iter().map(|&w| w as f64).sum::<f64>() as f32;
+    if w_total <= 0.0 {
+        bail!("batch has zero loss weight");
+    }
+    let mut states: Vec<Vec<Vec<StreamState>>> =
+        (0..batch.b).map(|_| model.make_stream_states_with(cfg.precision)).collect::<Result<_>>()?;
+    let mut loss = 0.0f64;
+    let mut acc = 0.0f64;
+    for &(lo, hi) in &segments {
+        align_states_to(model, &mut states, lo)?;
+        let segs: Vec<&[u8]> = seqs.iter().map(|r| &r[lo..hi]).collect();
+        let offsets = vec![lo; batch.b];
+        let mut refs: Vec<&mut [Vec<StreamState>]> =
+            states.iter_mut().map(|s| s.as_mut_slice()).collect();
+        let logits = model.forward_chunk_batch(&segs, &offsets, &mut refs)?;
+        for (s, lg) in logits.iter().enumerate() {
+            let (l, a, _) = loss_and_dlogits(lg, batch, s, lo, w_total);
+            loss += l;
+            acc += a;
+        }
+    }
+    Ok(((loss / w_total as f64) as f32, (acc / w_total as f64) as f32))
+}
+
+/// Advance every carried state into the epoch of stream position `pos`
+/// — the same reset rule `forward_chunk_batch` applies per segment.
+fn align_states_to(
+    model: &NativeModel,
+    states: &mut [Vec<Vec<StreamState>>],
+    pos: usize,
+) -> Result<()> {
+    let kernels = model.kernels().expect("FAVOR model");
+    for st in states.iter_mut() {
+        for (li, kernel) in kernels.iter().enumerate() {
+            let epoch = kernel.epoch_of(pos as u64);
+            for hs in st[li].iter_mut() {
+                if hs.epoch() > epoch {
+                    bail!(
+                        "layer {li} state is at epoch {} past segment epoch {epoch}",
+                        hs.epoch()
+                    );
+                }
+                if hs.epoch() < epoch {
+                    hs.reset_for_epoch(epoch);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One chunked loss + gradient evaluation over a batch: SLiM forward
+/// (boundary-state checkpoints), reverse recompute-and-backward sweep,
+/// gradients accumulated into `grads` (zeroed first). With
+/// `chunk_len = 0` this runs one segment per redraw epoch — the
+/// full-sequence oracle the property tests compare against.
+pub fn chunked_loss_and_grad(
+    model: &NativeModel,
+    batch: &Batch,
+    cfg: &ChunkedTrainConfig,
+    grads: &mut ParamGrads,
+) -> Result<ChunkedOutcome> {
+    grads.zero();
+    let seqs = batch_rows(batch)?;
+    let segments = plan_segments(model, batch.l, cfg.chunk_len)?;
+    let kernels = model.kernels().expect("FAVOR model");
+    let w_total: f32 = batch.weights.iter().map(|&w| w as f64).sum::<f64>() as f32;
+    if w_total <= 0.0 {
+        bail!("batch has zero loss weight");
+    }
+
+    // ---- pass 1: forward over the segments, carrying prefix sums ----
+    // Under Recompute we checkpoint each segment's entry states and run
+    // the tape-free streaming forward; under Retain we keep the tapes
+    // (and the logit cotangents) so the reverse sweep replays nothing.
+    let mut states: Vec<Vec<Vec<StreamState>>> =
+        (0..batch.b).map(|_| model.make_stream_states_with(cfg.precision)).collect::<Result<_>>()?;
+    let mut loss = 0.0f64;
+    let mut acc = 0.0f64;
+    let mut checkpoints: Vec<Vec<Vec<Vec<StreamState>>>> = Vec::new(); // [segment][seq]
+    let mut retained: Vec<(super::native_model::ChunkTape, Vec<Mat>)> = Vec::new();
+    let mut boundary_state_bytes = 0usize;
+    let mut seg_tape_bytes: Vec<usize> = Vec::with_capacity(segments.len());
+    for &(lo, hi) in &segments {
+        align_states_to(model, &mut states, lo)?;
+        let segs: Vec<&[u8]> = seqs.iter().map(|r| &r[lo..hi]).collect();
+        let mut refs: Vec<&mut [Vec<StreamState>]> =
+            states.iter_mut().map(|s| s.as_mut_slice()).collect();
+        match cfg.policy {
+            RecomputePolicy::Recompute => {
+                // boundary checkpoint: clone the (possibly quantized)
+                // entry states — restoring replays the forward exactly
+                let snap: Vec<Vec<Vec<StreamState>>> =
+                    (0..batch.b).map(|s| refs[s].to_vec()).collect();
+                boundary_state_bytes += snap
+                    .iter()
+                    .flat_map(|s| s.iter())
+                    .flat_map(|l| l.iter())
+                    .map(StreamState::state_bytes)
+                    .sum::<usize>();
+                checkpoints.push(snap);
+                let offsets = vec![lo; batch.b];
+                let logits = model.forward_chunk_batch(&segs, &offsets, &mut refs)?;
+                let mut tape_bytes = 0usize;
+                for (s, lg) in logits.iter().enumerate() {
+                    let (l, a, _) = loss_and_dlogits(lg, batch, s, lo, w_total);
+                    loss += l;
+                    acc += a;
+                    tape_bytes += lg.data.len() * std::mem::size_of::<f32>();
+                }
+                seg_tape_bytes.push(tape_bytes);
+            }
+            RecomputePolicy::Retain => {
+                let (logits, tape) = model.forward_chunk_tape(&segs, lo, &mut refs)?;
+                let mut dls = Vec::with_capacity(batch.b);
+                for (s, lg) in logits.iter().enumerate() {
+                    let (l, a, dl) = loss_and_dlogits(lg, batch, s, lo, w_total);
+                    loss += l;
+                    acc += a;
+                    dls.push(dl);
+                }
+                seg_tape_bytes.push(
+                    tape.bytes()
+                        + dls.iter().map(|d| d.data.len() * 4).sum::<usize>(),
+                );
+                retained.push((tape, dls));
+            }
+        }
+    }
+
+    // ---- pass 2: reverse sweep, chaining the state cotangents ----
+    let mut dstates = zero_dstates(model, batch.b);
+    let dstate_bytes: usize = dstates
+        .iter()
+        .flat_map(|s| s.iter())
+        .flat_map(|l| l.iter())
+        .map(|m| m.data.len() * std::mem::size_of::<f32>())
+        .sum();
+    let mut peak = 0usize;
+    for (t, &(lo, hi)) in segments.iter().enumerate().rev() {
+        let (tape, dls, resident) = match cfg.policy {
+            RecomputePolicy::Recompute => {
+                // restore the boundary checkpoint and replay the chunk
+                // with a tape — bitwise the pass-1 forward
+                let mut snap = std::mem::take(&mut checkpoints[t]);
+                let segs: Vec<&[u8]> = seqs.iter().map(|r| &r[lo..hi]).collect();
+                let mut refs: Vec<&mut [Vec<StreamState>]> =
+                    snap.iter_mut().map(|s| s.as_mut_slice()).collect();
+                let (logits, tape) = model.forward_chunk_tape(&segs, lo, &mut refs)?;
+                let mut dls = Vec::with_capacity(batch.b);
+                for (s, lg) in logits.iter().enumerate() {
+                    let (_, _, dl) = loss_and_dlogits(lg, batch, s, lo, w_total);
+                    dls.push(dl);
+                }
+                let resident = tape.bytes()
+                    + dls.iter().map(|d| d.data.len() * 4).sum::<usize>()
+                    + dstate_bytes;
+                (tape, dls, resident)
+            }
+            RecomputePolicy::Retain => {
+                let (tape, dls) = retained.pop().expect("one retained tape per segment");
+                // everything retained is resident at once
+                let resident = seg_tape_bytes.iter().sum::<usize>() + dstate_bytes;
+                (tape, dls, resident)
+            }
+        };
+        peak = peak.max(resident);
+        model.backward_chunk(&tape, &dls, &mut dstates, grads)?;
+        // where the forward reset a layer's carried sums entering this
+        // segment, no gradient flows into the previous epoch's state
+        if t > 0 {
+            let prev = segments[t - 1].0;
+            for (li, kernel) in kernels.iter().enumerate() {
+                if kernel.epoch_of(lo as u64) != kernel.epoch_of(prev as u64) {
+                    for ds in dstates.iter_mut() {
+                        for m in ds[li].iter_mut() {
+                            m.data.fill(0.0);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    Ok(ChunkedOutcome {
+        loss: (loss / w_total as f64) as f32,
+        acc: (acc / w_total as f64) as f32,
+        w_total,
+        mem: MemStats {
+            peak_activation_bytes: peak,
+            boundary_state_bytes,
+            dstate_bytes,
+            segments: segments.len(),
+        },
+    })
+}
+
+/// A fully native trainer over a [`NativeModel`]: SLiM chunked
+/// loss+grad plus a host Adam step, with checkpoints in the exact
+/// `PFRMTENS` layout `TrainState::save_checkpoint` writes
+/// (`param:{name}` / `opt_m:{name}` / `opt_v:{name}` / `step`), so
+/// chunked runs restore through the same tooling. FAVOR feature draws
+/// are deterministic kernel schedules, not parameters — they are not
+/// checkpointed.
+pub struct NativeTrainer {
+    model: NativeModel,
+    cfg: ChunkedTrainConfig,
+    grads: ParamGrads,
+    opt_m: ParamGrads,
+    opt_v: ParamGrads,
+    step: f32,
+    lr: f32,
+    tag: String,
+    last_mem: Option<MemStats>,
+}
+
+impl NativeTrainer {
+    /// Wrap a streamable model for chunked training.
+    pub fn new(model: NativeModel, cfg: ChunkedTrainConfig, lr: f32, tag: &str) -> Result<Self> {
+        if !model.is_streamable() {
+            bail!("chunked training requires a causal FAVOR model");
+        }
+        let grads = ParamGrads::zeros_like(&model);
+        let opt_m = ParamGrads::zeros_like(&model);
+        let opt_v = ParamGrads::zeros_like(&model);
+        Ok(NativeTrainer {
+            model,
+            cfg,
+            grads,
+            opt_m,
+            opt_v,
+            step: 0.0,
+            lr,
+            tag: tag.to_string(),
+            last_mem: None,
+        })
+    }
+
+    /// The wrapped model.
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Mutable model access (weight sync from a `TrainState`).
+    pub fn model_mut(&mut self) -> &mut NativeModel {
+        &mut self.model
+    }
+
+    /// The chunking configuration.
+    pub fn config(&self) -> &ChunkedTrainConfig {
+        &self.cfg
+    }
+
+    /// Optimizer step counter.
+    pub fn step(&self) -> f32 {
+        self.step
+    }
+
+    /// Overwrite the optimizer step counter (checkpoint sync).
+    pub fn set_step(&mut self, step: f32) {
+        self.step = step;
+    }
+
+    /// Memory accounting of the most recent `train_step`.
+    pub fn last_mem(&self) -> Option<&MemStats> {
+        self.last_mem.as_ref()
+    }
+
+    /// Adam first/second moments as named slots (checkpoint sync).
+    pub fn opt_slots(&self) -> (Vec<(String, &[f32])>, Vec<(String, &[f32])>) {
+        (self.opt_m.slots(), self.opt_v.slots())
+    }
+
+    /// Mutable [`Self::opt_slots`].
+    pub fn opt_slots_mut(
+        &mut self,
+    ) -> (Vec<(String, &mut [f32])>, Vec<(String, &mut [f32])>) {
+        (self.opt_m.slots_mut(), self.opt_v.slots_mut())
+    }
+
+    /// One SLiM train step: chunked loss+grad, then a bias-corrected
+    /// Adam update (β₁ 0.9, β₂ 0.999, ε 1e-8). Returns (loss, acc).
+    pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let outcome = chunked_loss_and_grad(&self.model, batch, &self.cfg, &mut self.grads)?;
+        if !outcome.loss.is_finite() {
+            bail!("{}: non-finite chunked loss at step {}", self.tag, self.step);
+        }
+        self.last_mem = Some(outcome.mem);
+        self.step += 1.0;
+        let t = self.step;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let c1 = 1.0 - b1.powf(t);
+        let c2 = 1.0 - b2.powf(t);
+        let lr = self.lr;
+        for (((pn, p), (gn, g)), ((mn, m), (vn, v))) in self
+            .model
+            .param_slots_mut()
+            .into_iter()
+            .zip(self.grads.slots())
+            .zip(self.opt_m.slots_mut().into_iter().zip(self.opt_v.slots_mut()))
+        {
+            debug_assert!(pn == gn && pn == mn && pn == vn, "slot order diverged");
+            for k in 0..p.len() {
+                let gk = g[k];
+                m[k] = b1 * m[k] + (1.0 - b1) * gk;
+                v[k] = b2 * v[k] + (1.0 - b2) * gk * gk;
+                let mhat = m[k] / c1;
+                let vhat = v[k] / c2;
+                p[k] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        Ok((outcome.loss, outcome.acc))
+    }
+
+    /// (loss, acc) of one batch without updating anything.
+    pub fn eval_step(&self, batch: &Batch) -> Result<(f32, f32)> {
+        chunked_loss(&self.model, batch, &self.cfg)
+    }
+
+    /// Save params + Adam moments + step in `TrainState`'s checkpoint
+    /// layout.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        let mut tf = TensorFile::default();
+        for (name, data) in self.model.param_slots() {
+            tf.entries.push((format!("param:{name}"), vec![data.len()], data.to_vec()));
+        }
+        for (name, data) in self.opt_m.slots() {
+            tf.entries.push((format!("opt_m:{name}"), vec![data.len()], data.to_vec()));
+        }
+        for (name, data) in self.opt_v.slots() {
+            tf.entries.push((format!("opt_v:{name}"), vec![data.len()], data.to_vec()));
+        }
+        tf.entries.push(("step".into(), vec![], vec![self.step]));
+        tf.write(path)
+    }
+
+    /// Restore a checkpoint written by [`Self::save_checkpoint`] (or by
+    /// `TrainState::save_checkpoint` for a matching architecture).
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let tf = TensorFile::read(path)?;
+        for (name, slot) in self.model.param_slots_mut() {
+            if let Some((_, data)) = tf.get(&format!("param:{name}")) {
+                if data.len() != slot.len() {
+                    bail!("checkpoint param {name}: {} values, expected {}", data.len(), slot.len());
+                }
+                slot.copy_from_slice(data);
+            }
+        }
+        for (name, slot) in self.opt_m.slots_mut() {
+            if let Some((_, data)) = tf.get(&format!("opt_m:{name}")) {
+                if data.len() == slot.len() {
+                    slot.copy_from_slice(data);
+                }
+            }
+        }
+        for (name, slot) in self.opt_v.slots_mut() {
+            if let Some((_, data)) = tf.get(&format!("opt_v:{name}")) {
+                if data.len() == slot.len() {
+                    slot.copy_from_slice(data);
+                }
+            }
+        }
+        if let Some((_, s)) = tf.get("step") {
+            self.step = s[0];
+        }
+        Ok(())
+    }
+
+    /// Tag used in logs and error messages.
+    pub fn tag(&self) -> &str {
+        &self.tag
+    }
+}

@@ -1,0 +1,237 @@
+//! Property tests for sub-linear-memory chunked training (SLiM).
+//!
+//! The gradient oracle is the full-sequence path: `chunked_loss_and_grad`
+//! with `chunk_len = 0` runs one segment per redraw epoch (one segment
+//! total without redraws) through the very same forward/backward code.
+//! Chunked runs must reproduce its loss and per-parameter gradients up
+//! to float reassociation across chunk boundaries — and bitwise when
+//! the chunking degenerates to a single segment.
+
+use performer::favor::FeatureKind;
+use performer::protein::{lm_batch, Batch};
+use performer::rng::Pcg64;
+use performer::stream::StatePrecision;
+use performer::train::{
+    chunked_loss_and_grad, plan_segments, ChunkedTrainConfig, DataGen, NativeModel, NativeTrainer,
+    ParamGrads, RecomputePolicy, Split, SyntheticConfig,
+};
+
+fn synth(d: usize, h: usize, nl: usize, dff: usize, m: usize, redraw: u64) -> SyntheticConfig {
+    SyntheticConfig {
+        d_model: d,
+        n_heads: h,
+        n_layers: nl,
+        d_ff: dff,
+        n_features: m,
+        kind: FeatureKind::Relu,
+        redraw_every: redraw,
+        ..SyntheticConfig::default()
+    }
+}
+
+/// Random all-real-token LM batch (ragged rows exercise zero-weight
+/// padding in the last column via `lm_batch` itself).
+fn random_batch(b: usize, l: usize, seed: u64) -> Batch {
+    let mut rng = Pcg64::new(seed);
+    let windows: Vec<Vec<u8>> = (0..b)
+        .map(|_| (0..l).map(|_| (4 + rng.below(25)) as u8).collect())
+        .collect();
+    lm_batch(&windows, l)
+}
+
+/// Per-parameter tolerance oracle: every gradient slot of `got` must
+/// match `want` within `atol + rtol * max|want slot|` elementwise.
+fn assert_grads_close(want: &ParamGrads, got: &ParamGrads, rtol: f32, atol: f32, ctx: &str) {
+    for ((name_w, w), (name_g, g)) in want.slots().iter().zip(got.slots().iter()) {
+        assert_eq!(name_w, name_g, "{ctx}: slot order diverged");
+        assert_eq!(w.len(), g.len(), "{ctx}: slot {name_w} length");
+        let scale = w.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let tol = atol + rtol * scale;
+        for (k, (&x, &y)) in w.iter().zip(g.iter()).enumerate() {
+            assert!(
+                (x - y).abs() <= tol,
+                "{ctx}: {name_w}[{k}] full {x:.6e} vs chunked {y:.6e} (tol {tol:.3e})"
+            );
+        }
+    }
+}
+
+fn run(
+    model: &NativeModel,
+    batch: &Batch,
+    cfg: &ChunkedTrainConfig,
+) -> (f32, ParamGrads, usize) {
+    let mut grads = ParamGrads::zeros_like(model);
+    let out = chunked_loss_and_grad(model, batch, cfg, &mut grads).expect("loss+grad");
+    (out.loss, grads, out.mem.segments)
+}
+
+#[test]
+fn chunked_gradients_match_full_sequence_oracle() {
+    // (d, heads, layers, d_ff, M, L, B, redraw_every, chunk_len):
+    // chunk lengths cover 1, L, and non-dividing L_c; one geometry
+    // forces mid-sequence redraw boundaries on top of the chunk grid.
+    let geometries: [(usize, usize, usize, usize, usize, usize, usize, u64, usize); 4] = [
+        (16, 2, 2, 24, 12, 24, 2, 0, 5),
+        (16, 2, 1, 24, 12, 12, 1, 0, 1),
+        (16, 2, 2, 24, 12, 20, 2, 8, 6),
+        (8, 1, 1, 16, 8, 16, 2, 0, 16),
+    ];
+    for (ti, &(d, h, nl, dff, m, l, b, redraw, lc)) in geometries.iter().enumerate() {
+        let syn = synth(d, h, nl, dff, m, redraw);
+        let model = NativeModel::synthetic(&syn, &mut Pcg64::new(40 + ti as u64));
+        let batch = random_batch(b, l, 90 + ti as u64);
+        let full = ChunkedTrainConfig::default();
+        let (loss_f, g_full, _) = run(&model, &batch, &full);
+        let chunked = ChunkedTrainConfig { chunk_len: lc, ..full };
+        let (loss_c, g_chunk, segments) = run(&model, &batch, &chunked);
+        let expected_segments = plan_segments(&model, l, lc).unwrap().len();
+        assert_eq!(segments, expected_segments, "geometry {ti}: segment count");
+        if lc < l || redraw > 0 {
+            assert!(segments > 1, "geometry {ti} should actually chunk");
+        }
+        assert!(
+            (loss_f - loss_c).abs() <= 1e-5 * (1.0 + loss_f.abs()),
+            "geometry {ti}: loss full {loss_f} vs chunked {loss_c}"
+        );
+        // chunking only reassociates float sums; deltas stay tiny
+        assert_grads_close(&g_full, &g_chunk, 1e-3, 1e-5, &format!("geometry {ti}"));
+    }
+}
+
+#[test]
+fn chunked_gradients_bf16_states_match_bf16_oracle() {
+    // with bf16 carried sums, the chunked run and the bf16 full-sequence
+    // run quantize identically token-by-token (boundary clones preserve
+    // the quantized image), so they still agree to reassociation
+    for (ti, lc) in [3usize, 7].into_iter().enumerate() {
+        let syn = synth(16, 2, 2, 24, 12, 0);
+        let model = NativeModel::synthetic(&syn, &mut Pcg64::new(70 + ti as u64));
+        let batch = random_batch(2, 18, 170 + ti as u64);
+        let bf16 = ChunkedTrainConfig {
+            precision: StatePrecision::Bf16,
+            ..ChunkedTrainConfig::default()
+        };
+        let (loss_f, g_full, _) = run(&model, &batch, &bf16);
+        let chunked = ChunkedTrainConfig { chunk_len: lc, ..bf16 };
+        let (loss_c, g_chunk, segs) = run(&model, &batch, &chunked);
+        assert!(segs > 1);
+        assert!(
+            (loss_f - loss_c).abs() <= 1e-5 * (1.0 + loss_f.abs()),
+            "bf16 chunk {lc}: loss full {loss_f} vs chunked {loss_c}"
+        );
+        assert_grads_close(&g_full, &g_chunk, 1e-3, 1e-5, &format!("bf16 chunk {lc}"));
+    }
+}
+
+#[test]
+fn single_chunk_degenerate_is_bitwise_identical() {
+    // chunk_len >= L with no redraws plans exactly one segment — the
+    // same execution as the full-sequence oracle, so every gradient is
+    // bit-for-bit equal, not merely close
+    let syn = synth(16, 2, 2, 24, 12, 0);
+    let model = NativeModel::synthetic(&syn, &mut Pcg64::new(11));
+    let batch = random_batch(2, 14, 211);
+    let full = ChunkedTrainConfig::default();
+    let (loss_f, g_full, seg_f) = run(&model, &batch, &full);
+    let one = ChunkedTrainConfig { chunk_len: 14, ..full };
+    let (loss_c, g_chunk, seg_c) = run(&model, &batch, &one);
+    assert_eq!(seg_f, 1);
+    assert_eq!(seg_c, 1);
+    assert_eq!(loss_f.to_bits(), loss_c.to_bits());
+    for ((name, w), (_, g)) in g_full.slots().iter().zip(g_chunk.slots().iter()) {
+        for (k, (&x, &y)) in w.iter().zip(g.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}[{k}] not bitwise equal");
+        }
+    }
+}
+
+#[test]
+fn retain_matches_recompute_bitwise() {
+    // Retain keeps the pass-1 tapes; Recompute replays each chunk from
+    // its boundary checkpoint. The replay is the same arithmetic, so
+    // the two policies must agree bit-for-bit.
+    let syn = synth(16, 2, 2, 24, 12, 8);
+    let model = NativeModel::synthetic(&syn, &mut Pcg64::new(23));
+    let batch = random_batch(2, 20, 223);
+    let rec = ChunkedTrainConfig { chunk_len: 6, ..ChunkedTrainConfig::default() };
+    let (loss_r, g_rec, _) = run(&model, &batch, &rec);
+    let ret = ChunkedTrainConfig { policy: RecomputePolicy::Retain, ..rec };
+    let (loss_t, g_ret, _) = run(&model, &batch, &ret);
+    assert_eq!(loss_r.to_bits(), loss_t.to_bits());
+    for ((name, w), (_, g)) in g_rec.slots().iter().zip(g_ret.slots().iter()) {
+        for (k, (&x, &y)) in w.iter().zip(g.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}[{k}]: retain != recompute");
+        }
+    }
+}
+
+#[test]
+fn plan_segments_cut_at_chunk_grid_and_redraw_boundaries() {
+    let syn = synth(16, 2, 2, 24, 12, 8);
+    let model = NativeModel::synthetic(&syn, &mut Pcg64::new(31));
+    let segs = plan_segments(&model, 20, 6).unwrap();
+    // cuts at multiples of 6 (chunk grid) and 8 (redraw), tiling [0,20)
+    assert_eq!(segs, vec![(0, 6), (6, 8), (8, 12), (12, 16), (16, 18), (18, 20)]);
+    let full = plan_segments(&model, 20, 0).unwrap();
+    assert_eq!(full, vec![(0, 8), (8, 16), (16, 20)]);
+}
+
+#[test]
+fn trainer_checkpoint_roundtrip_resumes_identical_curve() {
+    // satellite: mid-run checkpoint interplay with chunked mode — a
+    // trainer restored from step 3's checkpoint must replay steps 4..6
+    // to bitwise-identical losses (params, Adam moments and the step
+    // counter all round-trip)
+    let syn = synth(16, 2, 1, 24, 12, 0);
+    let cfg = ChunkedTrainConfig { chunk_len: 5, ..ChunkedTrainConfig::default() };
+    let batches: Vec<Batch> = (0..6).map(|i| random_batch(2, 15, 300 + i)).collect();
+    let path = std::env::temp_dir().join("performer_prop_train_ckpt.bin");
+
+    let model = NativeModel::synthetic(&syn, &mut Pcg64::new(47));
+    let mut a = NativeTrainer::new(model, cfg, 1e-3, "a").unwrap();
+    for b in &batches[..3] {
+        a.train_step(b).unwrap();
+    }
+    a.save_checkpoint(&path).unwrap();
+    let tail_a: Vec<f32> =
+        batches[3..].iter().map(|b| a.train_step(b).unwrap().0).collect();
+
+    // different init on purpose: the checkpoint must fully determine it
+    let model = NativeModel::synthetic(&syn, &mut Pcg64::new(48));
+    let mut b = NativeTrainer::new(model, cfg, 1e-3, "b").unwrap();
+    b.load_checkpoint(&path).unwrap();
+    assert_eq!(b.step(), 3.0);
+    let tail_b: Vec<f32> =
+        batches[3..].iter().map(|bt| b.train_step(bt).unwrap().0).collect();
+    for (i, (x, y)) in tail_a.iter().zip(&tail_b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "resumed step {} loss diverged", 4 + i);
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn datagen_streams_are_bitwise_deterministic() {
+    // satellite: same corpus + seed => two independent generators
+    // produce bitwise-identical batch streams, per split, under
+    // interleaved draws from other splits
+    let corpus = std::sync::Arc::new(performer::protein::Corpus::generate(Default::default()));
+    let mut g1 = DataGen::new(corpus.clone(), 32, 3, true, false, 77);
+    let mut g2 = DataGen::new(corpus.clone(), 32, 3, true, false, 77);
+    // interleave: split streams must be independent of draw order
+    let _ = g1.next_batch(Split::Valid);
+    let _ = g1.next_batch(Split::Ood);
+    let a1 = g1.next_batch(Split::Train);
+    let _ = g2.next_batch(Split::Test);
+    let a2 = g2.next_batch(Split::Train);
+    assert_eq!(a1.tokens, a2.tokens);
+    assert_eq!(a1.targets, a2.targets);
+    assert_eq!(a1.weights, a2.weights);
+    let b1 = g1.next_batch(Split::Train);
+    let b2 = g2.next_batch(Split::Train);
+    assert_eq!(b1.tokens, b2.tokens);
+    assert_ne!(a1.tokens, b1.tokens, "stream should advance");
+    let mut g3 = DataGen::new(corpus, 32, 3, true, false, 78);
+    let a3 = g3.next_batch(Split::Train);
+    assert_ne!(a1.tokens, a3.tokens, "different seed should differ");
+}
